@@ -1,0 +1,55 @@
+//! Compression-design sweep: one-shot GQSA across the (sparsity, group,
+//! bits) design space on the trained checkpoint — the exploration a
+//! practitioner runs before committing to a config (Fig. 8 territory,
+//! but from the rust API alone; the optimized points come from the
+//! python BQPO/E2E-OQP pipeline).
+//!
+//!   cargo run --release --example compress_sweep
+
+use gqsa::bench::tables::{f2, Table};
+use gqsa::bench::Workbench;
+
+fn main() -> anyhow::Result<()> {
+    let art = Workbench::default_dir();
+    if !art.join("models/tiny-llama.fp.bin").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let mut wb = Workbench::new(art);
+
+    let mut t = Table::new(
+        "one-shot GQSA design sweep — tiny-llama (ppl wiki_syn, weight MB, decode ms/128tok)",
+        &["spec", "ppl", "MB", "ms"],
+    );
+    let fp = wb.variant("tiny-llama", "fp")?;
+    let base_ppl = wb.ppl(&fp, "wiki_syn", 4)?;
+    t.row(vec![
+        "fp32".into(),
+        f2(base_ppl),
+        format!("{:.2}", fp.weight_bytes() as f64 / 1048576.0),
+        format!("{:.1}", wb.decode_latency_ms(&fp, 15, 128)?),
+    ]);
+
+    for spec in [
+        "oneshot:s30:g16:b4",
+        "oneshot:s50:g16:b4",
+        "oneshot:s70:g16:b4",
+        "oneshot:s50:g8:b4",
+        "oneshot:s50:g32:b4",
+        "oneshot:s50:g16:b8",
+        "oneshot:s50:g16:b2",
+    ] {
+        let m = wb.variant("tiny-llama", spec)?;
+        let ppl = wb.ppl(&m, "wiki_syn", 4)?;
+        let ms = wb.decode_latency_ms(&m, 15, 128)?;
+        t.row(vec![
+            spec.into(),
+            f2(ppl),
+            format!("{:.2}", m.weight_bytes() as f64 / 1048576.0),
+            format!("{ms:.1}"),
+        ]);
+    }
+    t.note("one-shot (no BQPO/E2E-OQP) — the optimized artifacts recover several ppl points on top");
+    t.emit(wb.results_dir(), "compress_sweep")?;
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the GQSA pipeline end-to-end on synthetic weights —
+//! no artifacts needed.
+//!
+//!   cargo run --release --example quickstart
+
+use gqsa::gqs::gemv::gqs_gemv;
+use gqsa::gqs::gemv_dense::dense_gemv;
+use gqsa::gqs::layer::GqsLayer;
+use gqsa::sparse::group_prune::group_prune;
+use gqsa::sparse::saliency::SaliencyMetric;
+use gqsa::util::{Mat, XorShift};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dense linear layer (N x K), like one projection of an LLM.
+    let (n, k, group) = (512usize, 512usize, 16usize);
+    let mut rng = XorShift::new(7);
+    let w = Mat::randn(n, k, &mut rng);
+
+    // 2. Calibration stats: here a synthetic activation Hessian.
+    let x_calib = Mat::randn(256, k, &mut rng);
+    let hess = x_calib.transpose().matmul(&x_calib);
+
+    // 3. Group pruning (paper §3.2): keep the top 50% of 1xG groups per
+    //    row by the Hessian saliency metric (Eq. 4)...
+    let mask = group_prune(&w, Some(&hess), SaliencyMetric::Hessian, group, 0.5);
+    println!("sparsity: {:.1}%", mask.sparsity() * 100.0);
+
+    // 4. ...then 4-bit per-group quantization into BSR storage.
+    let layer = GqsLayer::encode(&w, &mask, 4);
+    println!(
+        "storage: {} KB  (fp32 dense would be {} KB -> {:.1}x compression)",
+        layer.storage_bytes() / 1024,
+        n * k * 4 / 1024,
+        (n * k * 4) as f64 / layer.storage_bytes() as f64
+    );
+
+    // 5. The sparse-quantized GEMV (the paper's GQSKernel, CPU port).
+    let x = rng.normal_vec(k);
+    let mut y_gqs = vec![0.0f32; n];
+    let mut y_ref = vec![0.0f32; n];
+    let mut scratch = Vec::new();
+    gqs_gemv(&layer, &x, &mut y_gqs, &mut scratch);
+    dense_gemv(&mask.apply(&w), &x, &mut y_ref);
+
+    let err: f32 = y_gqs
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    println!("max |gqs - dense(masked)| = {err:.4} (4-bit quantization error)");
+
+    // 6. Relative speed vs dense.
+    let bench = gqsa::bench::Bench::quick("gemv");
+    let t_gqs = bench.run(|| gqs_gemv(&layer, &x, &mut y_gqs, &mut scratch));
+    let t_dense = bench.run(|| dense_gemv(&w, &x, &mut y_ref));
+    println!(
+        "gqs gemv {:.1} us vs dense {:.1} us -> {:.2}x",
+        t_gqs.mean_us(),
+        t_dense.mean_us(),
+        t_dense.mean_us() / t_gqs.mean_us()
+    );
+    Ok(())
+}

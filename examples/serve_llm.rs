@@ -1,0 +1,96 @@
+//! End-to-end serving driver (DESIGN.md "end-to-end validation"):
+//! loads the trained tiny-llama checkpoint compressed with GQSA
+//! (BQPO+E2E-OQP artifacts from `make artifacts`), serves a batch of
+//! requests through the continuous-batching coordinator on both the
+//! rust-native engine and (if the HLO artifact exists) the PJRT backend,
+//! and reports latency/throughput. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//!   cargo run --release --example serve_llm
+
+use std::time::Instant;
+
+use gqsa::bench::Workbench;
+use gqsa::coordinator::backend::PjrtBackend;
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request, Server};
+use gqsa::model::tokenizer::ByteTokenizer;
+use gqsa::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let art = Workbench::default_dir();
+    if !art.join("models/tiny-llama.w4s50g16.gqsa").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let tok = ByteTokenizer;
+
+    // --- native backend through the threaded server ---
+    println!("== native GQS engine (W4S50%, BQPO+E2E-OQP) ==");
+    let art2 = art.clone();
+    let srv = Server::start(move || {
+        let mut wb = Workbench::new(art2);
+        let model = wb.variant("tiny-llama", "gqsa:w4s50g16")?;
+        let cfg = model.cfg.clone();
+        EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: 4, prefill_chunk: 16, kv_capacity: 160 },
+        )
+    });
+    let prompts = ["the ", "ba duke ", "we saw a ", "once there was "];
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, p) in prompts.iter().cycle().take(12).enumerate() {
+        let c = srv.client();
+        let prompt = tok.encode(p);
+        handles.push(std::thread::spawn(move || {
+            c.generate(Request::new(i as u64, prompt, 48))
+        }));
+    }
+    let mut total = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let resp = h.join().unwrap()?;
+        total += resp.tokens.len();
+        if i < 4 {
+            println!(
+                "  [{}] {:?} -> {:?} (ttft {:.1} ms)",
+                resp.id,
+                prompts[i % prompts.len()],
+                tok.decode(&resp.tokens[..resp.tokens.len().min(32)]),
+                resp.timing.ttft_us as f64 / 1000.0
+            );
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("  {}", srv.client().metrics_report()?);
+    println!("  {total} tokens in {secs:.2}s -> {:.1} tok/s\n", total as f64 / secs);
+    srv.shutdown();
+
+    // --- PJRT backend (the AOT jax path), single stream ---
+    if art.join("hlo/tiny-llama.decode_gqs.w4s50g16.hlo.txt").exists() {
+        println!("== PJRT backend (AOT Pallas decode artifact) ==");
+        let rt = Runtime::cpu()?;
+        let artifact = rt.load(art.join("hlo"), "tiny-llama.decode_gqs.w4s50g16")?;
+        let wb = Workbench::new(art.clone());
+        let cfg = wb.fp("tiny-llama")?.config.clone();
+        let mut engine = EngineCore::new(
+            Backend::Pjrt(PjrtBackend::new(artifact)?),
+            &cfg,
+            EngineConfig { max_batch: 1, prefill_chunk: 16, kv_capacity: 160 },
+        )?;
+        let t0 = Instant::now();
+        engine.submit(Request::new(0, tok.encode("the "), 32));
+        let out = engine.run_to_completion()?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!("  {:?} -> {:?}", "the ", tok.decode(&out[0].tokens));
+        println!(
+            "  {} tokens in {:.2}s -> {:.1} tok/s (interpret-mode Pallas on CPU PJRT)",
+            out[0].tokens.len(),
+            secs,
+            out[0].tokens.len() as f64 / secs
+        );
+    } else {
+        println!("(PJRT decode artifact missing — run `make artifacts`)");
+    }
+    Ok(())
+}

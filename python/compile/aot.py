@@ -1,0 +1,232 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For each requested artifact we emit three files under artifacts/hlo/:
+
+  <name>.hlo.txt        — the HLO module
+  <name>.inputs.bin     — GQTB container with the *weight* inputs, named
+                          in000..inNNN in exact HLO parameter order
+  <name>.manifest.json  — input/output schema: how many leading weight
+                          params, then the runtime params (tokens / token,
+                          pos, kv) with shapes+dtypes, and output arity.
+
+The Rust side (`rust/src/runtime/`) loads all three, creates the weight
+literals once at startup, and appends the runtime literals per call —
+Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common, model
+from .common import ART, FAMILIES, ModelConfig
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(a) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+
+
+def _emit(name: str, lowered, weight_arrays: list[np.ndarray], runtime_params: list[dict],
+          outputs: list[dict]) -> None:
+    out_dir = ART / "hlo"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    text = to_hlo_text(lowered)
+    (out_dir / f"{name}.hlo.txt").write_text(text)
+    tensors = {f"in{i:03d}": np.asarray(a) for i, a in enumerate(weight_arrays)}
+    common.save_tensors(out_dir / f"{name}.inputs.bin", tensors)
+    manifest = {
+        "name": name,
+        "n_weight_inputs": len(weight_arrays),
+        "runtime_params": runtime_params,
+        "outputs": outputs,
+        "hlo_chars": len(text),
+    }
+    (out_dir / f"{name}.manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] {name}: {len(text)} chars, {len(weight_arrays)} weight inputs")
+
+
+def _load_fp(family: str):
+    tensors, meta = common.load_tensors(ART / "models" / f"{family}.fp.bin")
+    cfg = ModelConfig.from_json(meta["config"])
+    return cfg, tensors
+
+
+def _load_gqs_layers(family: str, tag: str):
+    """Rebuild padded-kernel GQSWeights from a .gqsa BSR container."""
+    tensors, meta = common.load_tensors(ART / "models" / f"{family}.{tag}.gqsa")
+    cfg = ModelConfig.from_json(meta["config"])
+    bits, group = meta["bits"], meta["group"]
+    layers: dict[str, ref.GQSWeights] = {}
+    dense = {}
+    for n in list(tensors):
+        if n.endswith(".row_ptr"):
+            base = n[: -len(".row_ptr")]
+            rp = tensors[base + ".row_ptr"]
+            cols = tensors[base + ".cols"]
+            qpacked = tensors[base + ".qvals"]
+            scales = tensors[base + ".scales"]
+            zeros = tensors[base + ".zeros"]
+            nrows = len(rp) - 1
+            # unpack nibbles
+            if bits == 4:
+                lo = (qpacked & 0xF).astype(np.float32)
+                hi = (qpacked >> 4).astype(np.float32)
+                codes = np.empty(qpacked.size * 2, np.float32)
+                codes[0::2], codes[1::2] = lo, hi
+            elif bits == 8:
+                codes = qpacked.astype(np.float32)
+            else:
+                raise ValueError(bits)
+            codes = codes[: rp[-1] * group].reshape(rp[-1], group)
+            counts = np.diff(rp)
+            mg = max(int(counts.max()), 1)
+            ng_total = None
+            qv = np.zeros((nrows, mg, group), np.float32)
+            sc = np.zeros((nrows, mg), np.float32)
+            zp = np.zeros((nrows, mg), np.float32)
+            gi = np.zeros((nrows, mg), np.int32)
+            mask_cols = []
+            for r in range(nrows):
+                a, b = rp[r], rp[r + 1]
+                c = b - a
+                qv[r, :c] = codes[a:b]
+                sc[r, :c] = scales[a:b]
+                zp[r, :c] = zeros[a:b].astype(np.float32)
+                gi[r, :c] = cols[a:b]
+                mask_cols.append(cols[a:b])
+            # Infer K from the model config by matching layer name at use time;
+            # here we derive NG from max col + 1 is unsafe — store via meta.
+            layers[base] = (qv, sc, zp, gi)
+        elif not any(n.endswith(s) for s in (".cols", ".qvals", ".scales", ".zeros")):
+            dense[n] = tensors[n]
+    return cfg, dense, layers, bits, group
+
+
+def _gqs_from_padded(padded, k_in: int, bits: int, group: int) -> ref.GQSWeights:
+    qv, sc, zp, gi = padded
+    n, mg, g = qv.shape
+    ng = k_in // group
+    mask = np.zeros((n, ng), dtype=bool)  # reconstructed; only used for accounting
+    return ref.GQSWeights(jnp.asarray(qv), jnp.asarray(sc), jnp.asarray(zp),
+                          jnp.asarray(gi), jnp.asarray(mask), bits, group, k_in)
+
+
+def emit_prefill_dense(family: str, seq_len: int) -> None:
+    cfg, tensors = _load_fp(family)
+    names = sorted(tensors)
+    arrays = [tensors[n] for n in names]
+
+    def fn(weights, tokens):
+        p = dict(zip(names, weights))
+        return (model.forward(cfg, p, tokens),)
+
+    specs = ([_spec(a) for a in arrays], jax.ShapeDtypeStruct((seq_len,), jnp.int32))
+    lowered = jax.jit(fn).lower(specs[0], specs[1])
+    _emit(f"{family}.prefill{seq_len}", lowered, arrays,
+          [{"name": "tokens", "shape": [seq_len], "dtype": "i32"}],
+          [{"name": "logits", "shape": [seq_len, cfg.vocab], "dtype": "f32"}])
+
+
+def emit_decode_dense(family: str, t_max: int) -> None:
+    cfg, tensors = _load_fp(family)
+    names = sorted(tensors)
+    arrays = [tensors[n] for n in names]
+    kv_shape = (cfg.n_layers, 2, cfg.n_heads, t_max, cfg.head_dim)
+
+    def fn(weights, token, pos, kv):
+        p = dict(zip(names, weights))
+        logits, new_kv = model.decode_step(cfg, p, token, pos, kv)
+        return (logits, new_kv)
+
+    lowered = jax.jit(fn).lower(
+        [_spec(a) for a in arrays],
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+    )
+    _emit(f"{family}.decode", lowered, arrays,
+          [{"name": "token", "shape": [], "dtype": "i32"},
+           {"name": "pos", "shape": [], "dtype": "i32"},
+           {"name": "kv", "shape": list(kv_shape), "dtype": "f32"}],
+          [{"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+           {"name": "kv", "shape": list(kv_shape), "dtype": "f32"}])
+
+
+def emit_decode_gqs(family: str, tag: str, t_max: int) -> None:
+    """Decode step with the Pallas GQS GEMV kernel on every linear."""
+    cfg, dense, padded_layers, bits, group = _load_gqs_layers(family, tag)
+    # K for each layer from the dense model config
+    kmap = {}
+    for n in model.linear_names(cfg):
+        if "mlp.w3" in n:
+            kmap[n] = cfg.d_ff
+        else:
+            kmap[n] = cfg.d_model
+    dnames = sorted(dense)
+    lnames = sorted(padded_layers)
+    arrays: list[np.ndarray] = [dense[n] for n in dnames]
+    for n in lnames:
+        arrays.extend(np.asarray(a) for a in padded_layers[n])
+    kv_shape = (cfg.n_layers, 2, cfg.n_heads, t_max, cfg.head_dim)
+
+    def fn(weights, token, pos, kv):
+        p = dict(zip(dnames, weights[: len(dnames)]))
+        layers = {}
+        off = len(dnames)
+        for i, n in enumerate(lnames):
+            qv, sc, zp, gi = weights[off + 4 * i : off + 4 * i + 4]
+            k_in = kmap[n]
+            layers[n] = ref.GQSWeights(qv, sc, zp, gi, jnp.zeros((1, 1), bool), bits, group, k_in)
+        logits, new_kv = model.decode_step_gqs(cfg, p, token, pos, kv, layers)
+        return (logits, new_kv)
+
+    lowered = jax.jit(fn).lower(
+        [_spec(a) for a in arrays],
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+    )
+    _emit(f"{family}.decode_gqs.{tag}", lowered, arrays,
+          [{"name": "token", "shape": [], "dtype": "i32"},
+           {"name": "pos", "shape": [], "dtype": "i32"},
+           {"name": "kv", "shape": list(kv_shape), "dtype": "f32"}],
+          [{"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+           {"name": "kv", "shape": list(kv_shape), "dtype": "f32"}])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="tiny-llama")
+    ap.add_argument("--prefill-len", type=int, default=16)
+    ap.add_argument("--t-max", type=int, default=288)
+    ap.add_argument("--gqs-tag", default="w4s50g16")
+    ap.add_argument("--skip-gqs", action="store_true")
+    args = ap.parse_args()
+    emit_prefill_dense(args.family, args.prefill_len)
+    emit_decode_dense(args.family, args.t_max)
+    if not args.skip_gqs:
+        emit_decode_gqs(args.family, args.gqs_tag, args.t_max)
+
+
+if __name__ == "__main__":
+    main()

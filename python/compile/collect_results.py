@@ -1,0 +1,27 @@
+"""Paste artifacts/results/*.txt into EXPERIMENTS.md §Measured.
+
+Run after `gqsa bench-table all`; idempotent (replaces the MEASURED
+block each time).
+"""
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[2]
+RESULTS = ROOT / "artifacts" / "results"
+EXP = ROOT / "EXPERIMENTS.md"
+
+def main():
+    parts = []
+    if RESULTS.exists():
+        for p in sorted(RESULTS.glob("*.txt")):
+            parts.append(f"#### {p.stem}\n```\n{p.read_text().rstrip()}\n```\n")
+    blob = "<!-- MEASURED -->\n\n" + "\n".join(parts) if parts else "<!-- MEASURED -->\n\n(no results yet)"
+    text = EXP.read_text()
+    head, _, tail = text.partition("<!-- MEASURED -->")
+    # keep everything after the next "---" section break following the marker
+    rest = tail.split("\n---\n", 1)
+    suffix = ("\n---\n" + rest[1]) if len(rest) > 1 else ""
+    EXP.write_text(head + blob + suffix)
+    print(f"pasted {len(parts)} result tables into EXPERIMENTS.md")
+
+if __name__ == "__main__":
+    main()

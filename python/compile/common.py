@@ -1,0 +1,173 @@
+"""Shared build-time utilities: the GQTB tensor container, model configs.
+
+The GQTB binary container is the python<->rust interchange for weights,
+compressed (.gqsa) models, corpora and logs. Layout (little-endian):
+
+    magic   b"GQTB"
+    u32     version (1)
+    u32     ntensors
+    per tensor:
+        u16  name_len, name bytes (utf-8)
+        u8   dtype  (0=f32, 1=i32, 2=u8, 3=i8, 4=u16, 5=i64)
+        u8   ndim
+        u64  dims[ndim]
+        u64  nbytes
+        raw  bytes
+
+A tensor named ``__meta__`` (dtype u8) holds a UTF-8 JSON blob with
+free-form metadata (model config, compression settings, ...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import time
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"GQTB"
+VERSION = 1
+
+_DTYPES = {
+    0: np.float32,
+    1: np.int32,
+    2: np.uint8,
+    3: np.int8,
+    4: np.uint16,
+    5: np.int64,
+}
+_DTYPE_IDS = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def save_tensors(path: str | Path, tensors: dict[str, np.ndarray], meta: dict | None = None) -> None:
+    """Write a GQTB container. ``meta`` is stored as the __meta__ tensor."""
+    items = dict(tensors)
+    if meta is not None:
+        items["__meta__"] = np.frombuffer(json.dumps(meta).encode("utf-8"), dtype=np.uint8).copy()
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(items)))
+        for name, arr in items.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            if arr.dtype == np.bool_:
+                arr = arr.astype(np.uint8)
+            dt = _DTYPE_IDS.get(arr.dtype)
+            if dt is None:
+                raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}Q", *arr.shape))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load_tensors(path: str | Path) -> tuple[dict[str, np.ndarray], dict]:
+    """Read a GQTB container; returns (tensors, meta)."""
+    tensors: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"bad magic in {path}"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(n):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            tensors[name] = np.frombuffer(raw, dtype=_DTYPES[dt]).reshape(dims).copy()
+    meta = {}
+    if "__meta__" in tensors:
+        meta = json.loads(tensors.pop("__meta__").tobytes().decode("utf-8"))
+    return tensors, meta
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    """Tiny transformer family config (see DESIGN.md §Hardware-Adaptation)."""
+
+    family: str
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 1088
+    pos: str = "rope"        # "rope" | "learned"
+    act: str = "swiglu"      # "swiglu" | "gelu"
+    norm: str = "rmsnorm"    # "rmsnorm" | "layernorm"
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ModelConfig":
+        return ModelConfig(**d)
+
+
+FAMILIES: dict[str, ModelConfig] = {
+    # LLaMA-analogue: RoPE + SwiGLU + RMSNorm (Tables 1-13, Fig 6-8).
+    "tiny-llama": ModelConfig("tiny-llama", d_model=256, n_layers=4, n_heads=4, d_ff=512),
+    # OPT-analogue: learned positions + GELU + LayerNorm (Table 15).
+    "tiny-gpt": ModelConfig(
+        "tiny-gpt", d_model=192, n_layers=4, n_heads=4, d_ff=768,
+        pos="learned", act="gelu", norm="layernorm",
+    ),
+    # Qwen2.5-analogue: llama-like with qkv bias, different widths (Table 14).
+    "tiny-qwen": ModelConfig(
+        "tiny-qwen", d_model=320, n_layers=3, n_heads=5, d_ff=640, qkv_bias=True,
+    ),
+}
+
+
+class StageTimer:
+    """Record wall-time + peak RSS per pipeline stage (Table 5 inputs)."""
+
+    def __init__(self) -> None:
+        self.records: list[dict] = []
+
+    def stage(self, name: str):
+        return _Stage(self, name)
+
+    def dump(self, path: str | Path) -> None:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.records, indent=2))
+
+
+class _Stage:
+    def __init__(self, timer: StageTimer, name: str) -> None:
+        self.timer, self.name = timer, name
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *exc):
+        import resource
+
+        peak_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        self.timer.records.append(
+            {"stage": self.name, "seconds": round(time.time() - self.t0, 3),
+             "peak_rss_mb": round(peak_kb / 1024.0, 1)}
+        )
+        return False
+
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"

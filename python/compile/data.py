@@ -1,0 +1,119 @@
+"""Synthetic corpus generation (WikiText2/C4 stand-ins).
+
+The paper evaluates language-modeling perplexity on WikiText2 and C4.
+Neither is available in this offline image, so we synthesize two corpora
+from the same generator family with different seeds/parameters:
+
+  * ``wiki_syn`` — Zipf-distributed word vocabulary, order-1 word-level
+    Markov chain with topical state (bursty, wiki-like repetition).
+  * ``c4_syn``   — same generator, different seed, flatter Zipf exponent
+    and more topics (web-crawl-ish heterogeneity).
+
+Words are rendered as lowercase ASCII strings separated by spaces with
+sentence punctuation, so the byte-level models see realistic structure
+(whitespace, frequent short tokens, punctuation).  Every compression
+method is evaluated on the *same* held-out split, so the rankings the
+paper's tables report are preserved (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import common
+
+
+def _make_words(rng: np.random.Generator, n_words: int) -> list[bytes]:
+    """Random pronounceable-ish words, 2-9 chars."""
+    cons = b"bcdfghjklmnpqrstvwz"
+    vows = b"aeiou"
+    words = []
+    for _ in range(n_words):
+        n_syll = int(rng.integers(1, 4))
+        w = bytearray()
+        for _ in range(n_syll):
+            w.append(cons[int(rng.integers(len(cons)))])
+            w.append(vows[int(rng.integers(len(vows)))])
+            if rng.random() < 0.3:
+                w.append(cons[int(rng.integers(len(cons)))])
+        words.append(bytes(w))
+    return words
+
+
+def generate_corpus(
+    seed: int,
+    n_bytes: int,
+    n_words: int = 2000,
+    n_topics: int = 8,
+    zipf_a: float = 1.3,
+    topic_stick: float = 0.98,
+) -> bytes:
+    """Topical Zipf-Markov byte corpus of ~n_bytes bytes."""
+    rng = np.random.default_rng(seed)
+    words = _make_words(rng, n_words)
+
+    # Global Zipf ranks; per-topic reweighting concentrates on a subset.
+    ranks = np.arange(1, n_words + 1, dtype=np.float64)
+    base = ranks ** (-zipf_a)
+    topic_w = np.empty((n_topics, n_words))
+    for t in range(n_topics):
+        boost = np.zeros(n_words)
+        idx = rng.choice(n_words, size=n_words // n_topics, replace=False)
+        boost[idx] = 6.0
+        w = base * (1.0 + boost)
+        topic_w[t] = w / w.sum()
+
+    # Order-1 Markov: next word from mixture of topic unigram and a sparse
+    # per-word successor table (bigram structure the models can learn).
+    n_succ = 6
+    succ = rng.integers(0, n_words, size=(n_words, n_succ))
+
+    out = bytearray()
+    topic = int(rng.integers(n_topics))
+    word = int(rng.choice(n_words, p=topic_w[topic]))
+    sent_len = 0
+    while len(out) < n_bytes:
+        out += words[word]
+        sent_len += 1
+        if rng.random() < 0.12 and sent_len > 3:
+            out += b". "
+            sent_len = 0
+        else:
+            out += b" "
+        if rng.random() > topic_stick:
+            topic = int(rng.integers(n_topics))
+        if rng.random() < 0.55:
+            word = int(succ[word, int(rng.integers(n_succ))])
+        else:
+            word = int(rng.choice(n_words, p=topic_w[topic]))
+    return bytes(out[:n_bytes])
+
+
+def build_all(out_dir=None, train_bytes: int = 2_000_000, eval_bytes: int = 131_072) -> dict:
+    """Write train + two eval corpora; returns paths.
+
+    Both eval sets share the train generator's *word vocabulary* (same
+    seed => same `_make_words` draw), like WikiText2/C4 sharing English:
+      * wiki_syn — the held-out continuation of the train stream (same
+        distribution, unseen text);
+      * c4_syn   — same words, flatter Zipf + more topics (domain shift).
+    Early versions used disjoint word sets, which made eval ppl *rise*
+    as models sharpened — pure OOD, useless for ranking compression.
+    """
+    out_dir = common.ART / "corpus" if out_dir is None else out_dir
+    out_dir.mkdir(parents=True, exist_ok=True)
+    full = generate_corpus(seed=1234, n_bytes=train_bytes + eval_bytes, zipf_a=1.3, n_topics=8)
+    paths = {}
+    for name, data in {
+        "train": full[:train_bytes],
+        "wiki_syn": full[train_bytes:],
+        "c4_syn": generate_corpus(seed=1234, n_bytes=eval_bytes, zipf_a=1.15, n_topics=16),
+    }.items():
+        p = out_dir / f"{name}.bin"
+        p.write_bytes(data)
+        paths[name] = str(p)
+    return paths
+
+
+if __name__ == "__main__":
+    print(build_all())

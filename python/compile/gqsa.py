@@ -1,0 +1,376 @@
+"""The GQSA compression pipeline (paper §3): calibration -> group pruning
+-> group quantization -> BQPO -> E2E-OQP -> BSR export.
+
+Stages
+------
+1. **Hessian calibration** — run the FP model over calibration text and
+   accumulate per-linear-layer input Hessians  H = Σ XᵀX  (the GPTQ /
+   SparseGPT H). Saliency is Eq. 4:  s_i = w_i² / [H⁻¹]_ii².
+2. **Group pruning** (§3.2) — scores averaged over 1xG groups along the
+   input dim; per-row top-k groups survive ("1xN sparse mode").
+3. **BQPO** (§3.3) — block-wise: optimize each block's *surviving
+   weights* (STE through quant-dequant) to match the FP block's outputs.
+4. **E2E-OQP** (§3.4) — freeze the integer codes, train only per-group
+   (scale, zero) end-to-end against the FP model's logits.
+5. **Export** — Block-Sparse-Row container (`rowIndex`/`groups`/packed
+   nibble `values` + scales/zeros), the exact storage structure of §3.2,
+   read by the Rust engine (`rust/src/gqs/format.rs`).
+
+All jitted steps are shape-stable across sparsity levels (full-NG frozen
+tensors with masks), so a whole sweep pays XLA compilation once per
+family.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, model
+from .common import ART, FAMILIES, ModelConfig, StageTimer
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+def calib_batches(corpus: np.ndarray, n_seq: int, ctx: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(corpus) - ctx - 1, size=n_seq)
+    return np.stack([corpus[i : i + ctx] for i in idx]).astype(np.int32)
+
+
+def calibrate(cfg: ModelConfig, p: dict, seqs: np.ndarray):
+    """Returns (hessians {lname: (K,K)}, block_inputs {i: (B,T,D)}, fp_logits (B,T,V))."""
+    lnames = model.linear_names(cfg)
+    fwd = jax.jit(lambda tk: model.forward_capture(cfg, p, tk))
+    hess = {n: None for n in lnames}
+    blk_in = {i: [] for i in range(cfg.n_layers)}
+    logits_all = []
+    for s in seqs:
+        logits, caps = fwd(jnp.asarray(s))
+        logits_all.append(np.asarray(logits))
+        for n in lnames:
+            x = caps[n]  # (T, K)
+            h = np.asarray(x.T @ x, dtype=np.float64)
+            hess[n] = h if hess[n] is None else hess[n] + h
+        for i in range(cfg.n_layers):
+            blk_in[i].append(np.asarray(caps[f"blk{i}.__in__"]))
+    blk_in = {i: np.stack(v) for i, v in blk_in.items()}
+    return hess, blk_in, np.stack(logits_all)
+
+
+def hinv_diag(h: np.ndarray, damp: float = 0.01) -> np.ndarray:
+    """Damped inverse-Hessian diagonal (the [H⁻¹]_ii of Eq. 4)."""
+    k = h.shape[0]
+    d = damp * float(np.mean(np.diag(h))) + 1e-8
+    hd = h + d * np.eye(k)
+    try:
+        hinv = np.linalg.inv(hd)
+    except np.linalg.LinAlgError:
+        hinv = np.linalg.pinv(hd)
+    return np.clip(np.diag(hinv), 1e-12, None)
+
+
+def saliency(w: np.ndarray, hinv_d: np.ndarray, group: int) -> np.ndarray:
+    """Group saliency (N, K//G): mean over the group of  w² / [H⁻¹]_ii²."""
+    s = (w.astype(np.float64) ** 2) / (hinv_d[None, :] ** 2)
+    n, k = w.shape
+    return s.reshape(n, k // group, group).mean(axis=2).astype(np.float64)
+
+
+def build_masks(cfg: ModelConfig, p: dict, hess: dict, sparsity: float, group: int) -> dict:
+    masks = {}
+    for n in model.linear_names(cfg):
+        hd = hinv_diag(hess[n])
+        sc = saliency(np.asarray(p[n]), hd, group)
+        masks[n] = ref.group_mask_from_scores(sc, sparsity)
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: BQPO — block-wise quantization-pruning optimization
+# ---------------------------------------------------------------------------
+
+def _strip_block(cfg: ModelConfig, p: dict, i: int) -> dict:
+    """Extract block i's params, renamed to blk0.* so one jit fits all blocks."""
+    out = {}
+    pre, pre0 = f"blk{i}.", "blk0."
+    for k, v in p.items():
+        if k.startswith(pre):
+            out[pre0 + k[len(pre):]] = v
+    return out
+
+
+def bqpo(cfg: ModelConfig, p: dict, masks: dict, bits: int, group: int,
+         blk_in: dict, steps: int = 40, lr: float = 1e-4, log=None) -> dict:
+    """Optimize surviving weights per block (STE quant) to match FP outputs."""
+    lsuffixes = [n.split(".", 1)[1] for n in model.linear_names(cfg) if n.startswith("blk0.")]
+
+    def loss_fn(trainable, static_bp, masks0, x):
+        bp = dict(static_bp)
+        bp.update(trainable)
+        wm = model.wmap_qdq_ste(cfg, bp, masks0, bits, group)
+        y = model.block_apply(cfg, bp, wm, 0, x)
+        # FP target computed inside: same block, identity wmap, FP weights.
+        return y
+
+    @jax.jit
+    def step(trainable, opt_m, opt_v, t, static_bp, masks0, x, y_fp):
+        def mse(tr):
+            y = loss_fn(tr, static_bp, masks0, x)
+            return jnp.mean((y - y_fp) ** 2)
+        l, g = jax.value_and_grad(mse)(trainable)
+        new_tr, new_m, new_v = {}, {}, {}
+        for k in trainable:
+            m = 0.9 * opt_m[k] + 0.1 * g[k]
+            v = 0.95 * opt_v[k] + 0.05 * g[k] ** 2
+            mh = m / (1 - 0.9**t)
+            vh = v / (1 - 0.95**t)
+            new_tr[k] = trainable[k] - lr * mh / (jnp.sqrt(vh) + 1e-8)
+            new_m[k], new_v[k] = m, v
+        return new_tr, new_m, new_v, l
+
+    @jax.jit
+    def fp_block(bp, x):
+        return model.block_apply(cfg, bp, lambda n: bp[n], 0, x)
+
+    new_p = dict(p)
+    for i in range(cfg.n_layers):
+        bp = {k: jnp.asarray(v) for k, v in _strip_block(cfg, p, i).items()}
+        masks0 = {f"blk0.{sfx}": masks[f"blk{i}.{sfx}"] for sfx in lsuffixes}
+        x = jnp.asarray(blk_in[i])
+        y_fp = fp_block(bp, x)
+        trainable = {k: bp[k] for k in masks0}
+        static_bp = {k: v for k, v in bp.items() if k not in masks0}
+        opt_m = {k: jnp.zeros_like(v) for k, v in trainable.items()}
+        opt_v = {k: jnp.zeros_like(v) for k, v in trainable.items()}
+        l0 = None
+        for t in range(1, steps + 1):
+            trainable, opt_m, opt_v, l = step(trainable, opt_m, opt_v, float(t), static_bp, masks0, x, y_fp)
+            if l0 is None:
+                l0 = float(l)
+        if log is not None:
+            log.append({"block": i, "loss_first": l0, "loss_last": float(l)})
+        for k, v in trainable.items():
+            new_p[f"blk{i}." + k[len("blk0."):]] = np.asarray(v)
+    return new_p
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: E2E-OQP — freeze integer codes, tune (scale, zero) end-to-end
+# ---------------------------------------------------------------------------
+
+def freeze_quantize(cfg: ModelConfig, p: dict, masks: dict, bits: int, group: int):
+    """Integer codes + initial (s, z) for every GQS layer (full NG, mask kept)."""
+    frozen, sz = {}, {}
+    for n in model.linear_names(cfg):
+        w = jnp.asarray(p[n])
+        nrows, k = w.shape
+        wg = w.reshape(nrows, k // group, group)
+        s, z = ref.quant_params(wg, bits)
+        q = ref.quantize(wg, s, z, bits)
+        frozen[n] = (q, jnp.asarray(masks[n]))
+        sz[n] = {"s": s, "z": z}
+    return frozen, sz
+
+
+def e2e_oqp(cfg: ModelConfig, p: dict, frozen: dict, sz: dict, group: int,
+            seqs: np.ndarray, fp_logits: np.ndarray, steps: int = 40,
+            lr: float = 1e-4, batch: int = 4, log=None) -> dict:
+    """Distill FP logits into the frozen-integer model through (s, z) only."""
+    pj = {k: jnp.asarray(v) for k, v in p.items()}
+
+    def loss_fn(sz_tr, toks, y_fp):
+        wm = model.wmap_frozen_q(cfg, pj, frozen, sz_tr, group)
+        logits = model.forward_batch(cfg, pj, toks, wm)
+        return jnp.mean((logits - y_fp) ** 2)
+
+    @jax.jit
+    def step(sz_tr, opt_m, opt_v, t, toks, y_fp):
+        l, g = jax.value_and_grad(loss_fn)(sz_tr, toks, y_fp)
+        new_sz, new_m, new_v = {}, {}, {}
+        for n in sz_tr:
+            new_sz[n], new_m[n], new_v[n] = {}, {}, {}
+            for c in ("s", "z"):
+                m = 0.9 * opt_m[n][c] + 0.1 * g[n][c]
+                v = 0.95 * opt_v[n][c] + 0.05 * g[n][c] ** 2
+                mh = m / (1 - 0.9**t)
+                vh = v / (1 - 0.95**t)
+                new_sz[n][c] = sz_tr[n][c] - lr * mh / (jnp.sqrt(vh) + 1e-8)
+                new_m[n][c], new_v[n][c] = m, v
+        return new_sz, new_m, new_v, l
+
+    zeros_like = lambda tree: {n: {c: jnp.zeros_like(tree[n][c]) for c in ("s", "z")} for n in tree}
+    opt_m, opt_v = zeros_like(sz), zeros_like(sz)
+    n_seq = seqs.shape[0]
+    rng = np.random.default_rng(3)
+    l0 = None
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n_seq, size=batch)
+        toks = jnp.asarray(seqs[idx])
+        y_fp = jnp.asarray(fp_logits[idx])
+        sz, opt_m, opt_v, l = step(sz, opt_m, opt_v, float(t), toks, y_fp)
+        if l0 is None:
+            l0 = float(l)
+    if log is not None:
+        log.append({"e2e_loss_first": l0, "e2e_loss_last": float(l)})
+    return sz
+
+
+# ---------------------------------------------------------------------------
+# Export: BSR container (§3.2 storage structure)
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(q: np.ndarray, bits: int) -> np.ndarray:
+    """Pack integer codes into bytes. q: flat uint8 array of codes."""
+    q = q.astype(np.uint8)
+    if bits == 8:
+        return q
+    if bits == 4:
+        if len(q) % 2:
+            q = np.concatenate([q, np.zeros(1, np.uint8)])
+        return (q[0::2] | (q[1::2] << 4)).astype(np.uint8)
+    if bits == 2:
+        pad = (-len(q)) % 4
+        if pad:
+            q = np.concatenate([q, np.zeros(pad, np.uint8)])
+        return (q[0::4] | (q[1::4] << 2) | (q[2::4] << 4) | (q[3::4] << 6)).astype(np.uint8)
+    raise ValueError(f"bits={bits}")
+
+
+def export_gqsa(path, cfg: ModelConfig, p: dict, frozen: dict, sz: dict,
+                masks: dict, bits: int, group: int, sparsity: float,
+                extra_meta: dict | None = None) -> dict:
+    """Write the .gqsa container; returns byte-accounting stats."""
+    tensors: dict[str, np.ndarray] = {}
+    lnames = model.linear_names(cfg)
+    stats = {"gqs_bytes": 0, "dense_bytes": 0, "fp_bytes": 0}
+    for n, v in p.items():
+        if n not in lnames:
+            tensors[n] = np.asarray(v, dtype=np.float32)
+            stats["dense_bytes"] += tensors[n].nbytes
+    for n in lnames:
+        q_full, _ = frozen[n]
+        s_full, z_full = np.asarray(sz[n]["s"]), np.asarray(sz[n]["z"])
+        mask = np.asarray(masks[n], dtype=bool)
+        nrows, ng = mask.shape
+        row_ptr = np.zeros(nrows + 1, dtype=np.int32)
+        cols_all, q_codes, s_out, z_out = [], [], [], []
+        qmax = 2**bits - 1
+        q_np = np.asarray(q_full)
+        for r in range(nrows):
+            cols = np.nonzero(mask[r])[0]
+            row_ptr[r + 1] = row_ptr[r] + len(cols)
+            cols_all.append(cols.astype(np.int32))
+            q_codes.append(q_np[r, cols].reshape(-1))
+            s_out.append(s_full[r, cols])
+            # zero-points are integers by construction; round defensively
+            z_out.append(np.clip(np.round(z_full[r, cols]), 0, qmax))
+        cols_all = np.concatenate(cols_all) if cols_all else np.zeros(0, np.int32)
+        codes = np.clip(np.round(np.concatenate(q_codes)), 0, qmax).astype(np.uint8) if q_codes else np.zeros(0, np.uint8)
+        tensors[n + ".row_ptr"] = row_ptr
+        tensors[n + ".cols"] = cols_all
+        tensors[n + ".qvals"] = pack_nibbles(codes, bits)
+        tensors[n + ".scales"] = np.concatenate(s_out).astype(np.float32)
+        tensors[n + ".zeros"] = np.concatenate(z_out).astype(np.uint8)
+        stats["gqs_bytes"] += sum(tensors[n + sfx].nbytes for sfx in (".row_ptr", ".cols", ".qvals", ".scales", ".zeros"))
+        stats["fp_bytes"] += np.asarray(p[n]).nbytes
+    meta = {
+        "kind": "gqsa",
+        "config": cfg.to_json(),
+        "bits": bits,
+        "group": group,
+        "sparsity": sparsity,
+        "gqs_layers": lnames,
+        "stats": stats,
+    }
+    if extra_meta:
+        meta.update(extra_meta)
+    common.save_tensors(path, tensors, meta=meta)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline
+# ---------------------------------------------------------------------------
+
+def compress(family: str, sparsity: float, bits: int = 4, group: int = 16,
+             bqpo_steps: int = 40, e2e_steps: int = 40, n_calib: int = 16,
+             ctx: int = 192, tag: str | None = None,
+             _cache: dict | None = None) -> dict:
+    """Run the full GQSA pipeline for one (family, sparsity, G, bits) setting.
+
+    ``_cache`` lets sweep drivers reuse the expensive FP calibration pass
+    across settings of the same family.
+    """
+    cfg = FAMILIES[family]
+    tensors, meta = common.load_tensors(ART / "models" / f"{family}.fp.bin")
+    p = {k: v for k, v in tensors.items()}
+    corpus = np.frombuffer((ART / "corpus" / "train.bin").read_bytes(), dtype=np.uint8)
+
+    timer = StageTimer()
+    log: list = []
+    if _cache is not None and "calib" in _cache:
+        hess, blk_in, fp_logits, seqs = _cache["calib"]
+    else:
+        seqs = calib_batches(corpus, n_calib, ctx)
+        with timer.stage("calibrate"):
+            hess, blk_in, fp_logits = calibrate(cfg, {k: jnp.asarray(v) for k, v in p.items()}, seqs)
+        if _cache is not None:
+            _cache["calib"] = (hess, blk_in, fp_logits, seqs)
+
+    with timer.stage("masks"):
+        masks = build_masks(cfg, p, hess, sparsity, group)
+
+    with timer.stage("bqpo"):
+        p_bqpo = bqpo(cfg, p, masks, bits, group, blk_in, steps=bqpo_steps, log=log) \
+            if bqpo_steps > 0 else dict(p)
+
+    with timer.stage("freeze"):
+        frozen, sz = freeze_quantize(cfg, p_bqpo, masks, bits, group)
+
+    with timer.stage("e2e_oqp"):
+        if e2e_steps > 0:
+            sz = e2e_oqp(cfg, p_bqpo, frozen, sz, group, seqs, fp_logits, steps=e2e_steps, log=log)
+
+    tag = tag or f"w{bits}s{int(sparsity*100)}g{group}"
+    out = ART / "models" / f"{family}.{tag}.gqsa"
+    stats = export_gqsa(out, cfg, p_bqpo, frozen, sz, masks, bits, group, sparsity,
+                        extra_meta={"tag": tag, "opt_log": log,
+                                    "bqpo_steps": bqpo_steps, "e2e_steps": e2e_steps})
+    timer.dump(ART / "logs" / f"compress.{family}.{tag}.json")
+    total = stats["gqs_bytes"] + stats["dense_bytes"]
+    print(f"[{family}/{tag}] gqs={stats['gqs_bytes']} dense={stats['dense_bytes']} "
+          f"(fp linear {stats['fp_bytes']}) ratio={stats['fp_bytes']/max(stats['gqs_bytes'],1):.2f}x -> {out}")
+    return {"path": str(out), "stats": stats}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--family", default="tiny-llama")
+    ap.add_argument("--sparsity", type=float, nargs="*", default=[0.5])
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--group", type=int, nargs="*", default=[16])
+    ap.add_argument("--bqpo-steps", type=int, default=40)
+    ap.add_argument("--e2e-steps", type=int, default=40)
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    cache: dict = {}
+    for s in args.sparsity:
+        for g in args.group:
+            t0 = time.time()
+            compress(args.family, s, bits=args.bits, group=g,
+                     bqpo_steps=args.bqpo_steps, e2e_steps=args.e2e_steps,
+                     tag=args.tag, _cache=cache)
+            print(f"  ({time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: GQS sparse-quantized GEMV / matmul.
+
+This is the paper's GQSKernel (§3.5, Fig. 4) re-thought for TPU:
+
+  * the CUDA version tiles the output into 1xBN tiles per CTA and stages
+    weight chunks HBM->shared->registers; here each *grid step* owns a
+    (BN,) output tile and BlockSpec stages the matching (BN, MG, G)
+    quantized-weight tile plus per-group scale/zero/index tiles into
+    VMEM (the TPU analogue of the CTA's shared-memory schedule);
+  * the activation vector is small (K <= a few thousand) and lives whole
+    in VMEM, so the "access the activation group by real group index"
+    step (paper step 1-2) is a VMEM gather instead of a global->shared
+    async copy;
+  * dequantize-then-FMA (paper steps 3-4) maps to the VPU: GEMV has no
+    MXU-shaped contraction, exactly as the paper's GEMV path uses
+    CUDA-core FMAs rather than tensor-core MMA.
+
+Weights arrive in the *padded-BSR* form produced by ``ref.encode`` —
+``rowIndex``/``groups``/``values`` of §3.2, padded to the max group count
+per row so shapes are static (padding slots carry scale 0).
+
+Pallas runs with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the
+TPU performance story is estimated from the BlockSpec schedule (see
+DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+DEFAULT_BN = 64  # output rows per grid step
+
+
+def _gemv_kernel(x_ref, qv_ref, sc_ref, zp_ref, gi_ref, o_ref, *, group: int):
+    """One grid step: compute a (BN,) output tile.
+
+    x_ref:  (K,)        full activation vector (VMEM-resident)
+    qv_ref: (BN, MG, G) quantized values (float-valued ints)
+    sc_ref: (BN, MG)    scales (0.0 => padding slot)
+    zp_ref: (BN, MG)    zero-points
+    gi_ref: (BN, MG)    group-column indices into x
+    o_ref:  (BN,)       output tile
+    """
+    x = x_ref[...]
+    qv = qv_ref[...]
+    sc = sc_ref[...]
+    zp = zp_ref[...]
+    gi = gi_ref[...]
+
+    # Gather the activation groups addressed by this tile's BSR indices
+    # (paper Fig. 4: "access the activation group by real group index").
+    xg = x.reshape(-1, group)[gi]                       # (BN, MG, G)
+    # Dequantize (Eq. 3) and fused multiply-accumulate.
+    deq = (qv - zp[..., None]) * sc[..., None]          # (BN, MG, G)
+    o_ref[...] = jnp.sum(deq * xg, axis=(1, 2))
+
+
+def gqs_gemv(gqs: ref.GQSWeights, x: jnp.ndarray, block_n: int = DEFAULT_BN) -> jnp.ndarray:
+    """Sparse-quantized GEMV: y = W_hat @ x, x: (K,) -> y: (N,)."""
+    n, mg, g = gqs.qvals.shape
+    assert x.shape == (gqs.k_in,), (x.shape, gqs.k_in)
+    bn = min(block_n, n)
+    # Pad N to a multiple of BN so the grid is exact.
+    n_pad = (-n) % bn
+    qv, sc, zp, gi = gqs.qvals, gqs.scales, gqs.zeros, gqs.gidx
+    if n_pad:
+        qv = jnp.pad(qv, ((0, n_pad), (0, 0), (0, 0)))
+        sc = jnp.pad(sc, ((0, n_pad), (0, 0)))
+        zp = jnp.pad(zp, ((0, n_pad), (0, 0)))
+        gi = jnp.pad(gi, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // bn,)
+
+    out = pl.pallas_call(
+        functools.partial(_gemv_kernel, group=g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gqs.k_in,), lambda i: (0,)),          # x: whole vector
+            pl.BlockSpec((bn, mg, g), lambda i: (i, 0, 0)),     # qvals tile
+            pl.BlockSpec((bn, mg), lambda i: (i, 0)),           # scales tile
+            pl.BlockSpec((bn, mg), lambda i: (i, 0)),           # zeros tile
+            pl.BlockSpec((bn, mg), lambda i: (i, 0)),           # gidx tile
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.float32),
+        interpret=True,
+    )(x, qv, sc, zp, gi)
+    return out[:n]
+
+
+def gqs_matmul(gqs: ref.GQSWeights, x: jnp.ndarray, block_n: int = DEFAULT_BN) -> jnp.ndarray:
+    """Batched wrapper: x (..., K) -> (..., N) via vmap over the GEMV kernel."""
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, gqs.k_in)
+    f = lambda v: gqs_gemv(gqs, v, block_n=block_n)
+    out = jax.vmap(f)(flat)
+    return out.reshape(*lead, -1)
+
+
+def vmem_estimate_bytes(n: int, k: int, mg: int, g: int, bn: int = DEFAULT_BN) -> dict:
+    """Static VMEM footprint of one grid step (the §Perf L1 profile).
+
+    On a real TPU qvals would be stored as packed int4 (g/2 bytes per
+    group); interpret mode keeps them f32. Both numbers are reported.
+    """
+    x_bytes = k * 4
+    tile_int4 = bn * mg * (g // 2 + 8)   # packed nibbles + scale/zero
+    tile_f32 = bn * mg * (g * 4 + 12)
+    out_bytes = bn * 4
+    return {
+        "x_bytes": x_bytes,
+        "weight_tile_bytes_tpu_int4": tile_int4,
+        "weight_tile_bytes_interp_f32": tile_f32,
+        "out_bytes": out_bytes,
+        "total_tpu": x_bytes + tile_int4 + out_bytes,
+        "total_interp": x_bytes + tile_f32 + out_bytes,
+    }

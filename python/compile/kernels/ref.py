@@ -1,0 +1,177 @@
+"""Pure-jnp oracle for the GQS (group-quantized-sparse) layer.
+
+This module is the *reference semantics* for everything the system does
+with GQS weights:
+
+  * per-group asymmetric uniform quantization (paper Eq. 1-3),
+  * 1xG group pruning along the row (input) dimension (paper §3.2),
+  * the padded-BSR representation shared with the Pallas kernel and the
+    Rust engine,
+  * a dense-reconstruction GEMV/matmul oracle the kernel is tested
+    against (pytest + hypothesis).
+
+Convention: a linear layer weight has shape (N, K) = (out_features,
+in_features); groups are G consecutive *input* channels of one output
+row ("1xN sparse mode" in the paper's words, §Appendix I).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Group quantization (Eq. 1-3)
+# ---------------------------------------------------------------------------
+
+def quant_params(w_groups: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-group (scale, zero) for asymmetric uniform quantization.
+
+    w_groups: (..., G). Returns scale (...,), zero (...,) with the paper's
+    convention  s = (max-min)/(2^n - 1),  z = -floor(min/s).
+    """
+    qmax = 2.0**bits - 1.0
+    wmax = jnp.max(w_groups, axis=-1)
+    wmin = jnp.min(w_groups, axis=-1)
+    scale = (wmax - wmin) / qmax
+    scale = jnp.where(scale <= 1e-12, 1e-12, scale)
+    zero = -jnp.floor(wmin / scale)
+    zero = jnp.clip(zero, 0.0, qmax)
+    # Constant-group edge case (matches rust quant::group): literal Eq. 1
+    # collapses the scale and decodes the group to 0; pick (s, z) that
+    # reproduce the constant exactly instead.
+    const = (wmax - wmin) <= 1e-12 * jnp.maximum(jnp.abs(wmax), 1.0)
+    nonzero_const = const & (jnp.abs(wmax) > 0)
+    scale = jnp.where(nonzero_const, jnp.abs(wmax), scale)
+    zero = jnp.where(nonzero_const, jnp.where(wmax >= 0, 0.0, qmax), zero)
+    return scale, zero
+
+
+def quantize(w_groups: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Eq. 2: q = clamp(round(w/s) + z, 0, 2^n-1). Returns float-valued ints."""
+    qmax = 2.0**bits - 1.0
+    q = jnp.round(w_groups / scale[..., None]) + zero[..., None]
+    return jnp.clip(q, 0.0, qmax)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3: w_hat = (q - z) * s."""
+    return (q - zero[..., None]) * scale[..., None]
+
+
+def quant_dequant(w_groups: jnp.ndarray, bits: int) -> jnp.ndarray:
+    scale, zero = quant_params(w_groups, bits)
+    return dequantize(quantize(w_groups, scale, zero, bits), scale, zero)
+
+
+# ---------------------------------------------------------------------------
+# Group pruning + padded-BSR encoding
+# ---------------------------------------------------------------------------
+
+class GQSWeights(NamedTuple):
+    """Padded-BSR GQS layer (the representation the Pallas kernel consumes).
+
+    qvals:  (N, MG, G) float-valued ints in [0, 2^bits)
+    scales: (N, MG)    f32, 0.0 on padding slots
+    zeros:  (N, MG)    f32
+    gidx:   (N, MG)    i32 group-column index (0 on padding slots)
+    mask:   (N, K//G)  original keep-mask (bool), for accounting/tests
+    bits:   int
+    group:  int        G
+    k_in:   int        K
+    """
+
+    qvals: jnp.ndarray
+    scales: jnp.ndarray
+    zeros: jnp.ndarray
+    gidx: jnp.ndarray
+    mask: jnp.ndarray
+    bits: int
+    group: int
+    k_in: int
+
+
+def group_mask_from_scores(scores: np.ndarray, sparsity: float) -> np.ndarray:
+    """Keep-mask (N, NG) keeping the top-(1-sparsity) groups *per row*.
+
+    Per-row selection mirrors the BSR layout (each row owns its surviving
+    groups) and keeps every output channel alive.
+    """
+    n, ng = scores.shape
+    keep = max(1, int(round(ng * (1.0 - sparsity))))
+    order = np.argsort(-scores, axis=1, kind="stable")
+    mask = np.zeros((n, ng), dtype=bool)
+    np.put_along_axis(mask, order[:, :keep], True, axis=1)
+    return mask
+
+
+def encode(w: np.ndarray, mask: np.ndarray, bits: int, group: int) -> GQSWeights:
+    """Dense (N,K) + keep-mask (N, K//G) -> padded-BSR GQS weights."""
+    w = np.asarray(w, dtype=np.float32)
+    mask = np.asarray(mask, dtype=bool)
+    n, k = w.shape
+    ng = k // group
+    assert ng * group == k, f"K={k} not divisible by G={group}"
+    assert mask.shape == (n, ng)
+    wg = w.reshape(n, ng, group)
+
+    counts = mask.sum(axis=1)
+    mg = int(counts.max()) if n else 0
+    mg = max(mg, 1)
+
+    qvals = np.zeros((n, mg, group), dtype=np.float32)
+    scales = np.zeros((n, mg), dtype=np.float32)
+    zeros = np.zeros((n, mg), dtype=np.float32)
+    gidx = np.zeros((n, mg), dtype=np.int32)
+    for i in range(n):
+        cols = np.nonzero(mask[i])[0]
+        if len(cols) == 0:
+            continue
+        g = jnp.asarray(wg[i, cols])
+        s, z = quant_params(g, bits)
+        q = quantize(g, s, z, bits)
+        qvals[i, : len(cols)] = np.asarray(q)
+        scales[i, : len(cols)] = np.asarray(s)
+        zeros[i, : len(cols)] = np.asarray(z)
+        gidx[i, : len(cols)] = cols
+    return GQSWeights(
+        jnp.asarray(qvals), jnp.asarray(scales), jnp.asarray(zeros),
+        jnp.asarray(gidx), jnp.asarray(mask), bits, group, k,
+    )
+
+
+def decode_dense(gqs: GQSWeights) -> jnp.ndarray:
+    """Reconstruct the dense (N, K) de-quantized weight (oracle)."""
+    n, mg, g = gqs.qvals.shape
+    live = (gqs.scales[..., None] != 0.0)
+    deq = (gqs.qvals - gqs.zeros[..., None]) * gqs.scales[..., None]   # (N,MG,G)
+    ng = gqs.k_in // g
+    w = jnp.zeros((n, ng, g), dtype=jnp.float32)
+    rows = jnp.repeat(jnp.arange(n)[:, None], mg, axis=1)
+    w = w.at[rows, gqs.gidx].add(jnp.where(live, deq, 0.0))
+    return w.reshape(n, gqs.k_in)
+
+
+# ---------------------------------------------------------------------------
+# Oracles the Pallas kernel is tested against
+# ---------------------------------------------------------------------------
+
+def gqs_gemv_ref(gqs: GQSWeights, x: jnp.ndarray) -> jnp.ndarray:
+    """y = W_hat @ x via dense reconstruction. x: (K,) -> (N,)."""
+    return decode_dense(gqs) @ x
+
+
+def gqs_gemv_gather_ref(gqs: GQSWeights, x: jnp.ndarray) -> jnp.ndarray:
+    """Same result computed the way the kernel does (gather, no dense W)."""
+    g = gqs.group
+    xg = x.reshape(-1, g)[gqs.gidx]                        # (N, MG, G)
+    deq = (gqs.qvals - gqs.zeros[..., None]) * gqs.scales[..., None]
+    return jnp.sum(deq * xg, axis=(1, 2))
+
+
+def gqs_matmul_ref(gqs: GQSWeights, x: jnp.ndarray) -> jnp.ndarray:
+    """Batched oracle: x (..., K) -> (..., N)."""
+    return x @ decode_dense(gqs).T

@@ -1,0 +1,464 @@
+"""Layer-2: tiny transformer families in functional JAX.
+
+Three families stand in for the paper's LLaMA / OPT / Qwen2.5 model
+zoos (DESIGN.md §Hardware-Adaptation):
+
+  * tiny-llama : RMSNorm + RoPE + SwiGLU, tied embeddings
+  * tiny-gpt   : LayerNorm + learned positions + GELU (OPT-analogue)
+  * tiny-qwen  : llama-like with qkv bias, different widths
+
+The forward is written against a *weight map*: any 2D linear weight can
+be substituted (quant-dequant STE during BQPO/E2E-OQP, dense during
+training, GQS-dequantized during validation) without touching the graph.
+A separate builder (`forward_gqs`) routes every linear through the
+Layer-1 Pallas kernel for the AOT inference artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig
+from .kernels import gqs_gemv, ref
+
+# Names of the 2D linear weights GQSA compresses, per block.
+LINEAR_NAMES = ("attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.w1", "mlp.w2", "mlp.w3")
+
+
+def linear_names(cfg: ModelConfig) -> list[str]:
+    """Fully-qualified names of every GQS-compressible weight."""
+    per_blk = list(LINEAR_NAMES)
+    if cfg.act != "swiglu":
+        per_blk.remove("mlp.w2")
+    return [f"blk{i}.{n}" for i in range(cfg.n_layers) for n in per_blk]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def w(shape, fan_in):
+        return (rng.normal(size=shape) * (fan_in**-0.5)).astype(np.float32)
+
+    p: dict[str, np.ndarray] = {"tok_emb": (rng.normal(size=(v, d)) * 0.02).astype(np.float32)}
+    if cfg.pos == "learned":
+        p["pos_emb"] = (rng.normal(size=(cfg.max_seq, d)) * 0.02).astype(np.float32)
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        for nm in ("attn.wq", "attn.wk", "attn.wv", "attn.wo"):
+            p[pre + nm] = w((d, d), d)
+        if cfg.qkv_bias:
+            for nm in ("attn.bq", "attn.bk", "attn.bv"):
+                p[pre + nm] = np.zeros(d, dtype=np.float32)
+        if cfg.act == "swiglu":
+            p[pre + "mlp.w1"] = w((ff, d), d)
+            p[pre + "mlp.w2"] = w((ff, d), d)
+            p[pre + "mlp.w3"] = w((d, ff), ff)
+        else:
+            p[pre + "mlp.w1"] = w((ff, d), d)
+            p[pre + "mlp.w3"] = w((d, ff), ff)
+        p[pre + "norm1"] = np.ones(d, dtype=np.float32)
+        p[pre + "norm2"] = np.ones(d, dtype=np.float32)
+        if cfg.norm == "layernorm":
+            p[pre + "norm1.bias"] = np.zeros(d, dtype=np.float32)
+            p[pre + "norm2.bias"] = np.zeros(d, dtype=np.float32)
+    p["final_norm"] = np.ones(d, dtype=np.float32)
+    if cfg.norm == "layernorm":
+        p["final_norm.bias"] = np.zeros(d, dtype=np.float32)
+    if not cfg.tie_embeddings:
+        p["head"] = w((v, d), d)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def _norm(cfg: ModelConfig, p, x, name: str):
+    if cfg.norm == "rmsnorm":
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + 1e-6) * p[name]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * p[name] + p[name + ".bias"]
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., T, H, Dh); rotate pairs with theta base 10000."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,T,1,half)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+WMap = Callable[[str], jnp.ndarray]
+
+
+def _attn(cfg: ModelConfig, p, wm: WMap, pre: str, x, positions, kv=None, mask=None):
+    """Self-attention. x: (T, D). kv: optional (2, H, Tmax, Dh) cache with
+    write position = positions[0]; returns (out, new_kv)."""
+    t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = x @ wm(pre + "attn.wq").T
+    k = x @ wm(pre + "attn.wk").T
+    v = x @ wm(pre + "attn.wv").T
+    if cfg.qkv_bias:
+        q, k, v = q + p[pre + "attn.bq"], k + p[pre + "attn.bk"], v + p[pre + "attn.bv"]
+    q = q.reshape(t, h, dh)
+    k = k.reshape(t, h, dh)
+    v = v.reshape(t, h, dh)
+    if cfg.pos == "rope":
+        q, k = _rope(q, positions), _rope(k, positions)
+
+    if kv is None:
+        att = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(dh)
+        causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jnp.where(causal[None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("hqk,khd->qhd", att, v)
+        new_kv = None
+    else:
+        # Single-token decode: t == 1, write k/v at positions[0].
+        pos = positions[0]
+        kcache = kv[0].at[:, pos].set(k[0])
+        vcache = kv[1].at[:, pos].set(v[0])
+        tmax = kcache.shape[1]
+        att = jnp.einsum("hd,htd->ht", q[0], kcache) / jnp.sqrt(dh)
+        valid = jnp.arange(tmax) <= pos
+        att = jnp.where(valid[None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("ht,htd->hd", att, vcache)[None]
+        new_kv = jnp.stack([kcache, vcache])
+    out = out.reshape(t, d) @ wm(pre + "attn.wo").T
+    return out, new_kv
+
+
+def _mlp(cfg: ModelConfig, wm: WMap, pre: str, x):
+    if cfg.act == "swiglu":
+        g = x @ wm(pre + "mlp.w1").T
+        u = x @ wm(pre + "mlp.w2").T
+        return (jax.nn.silu(g) * u) @ wm(pre + "mlp.w3").T
+    hdn = jax.nn.gelu(x @ wm(pre + "mlp.w1").T)
+    return hdn @ wm(pre + "mlp.w3").T
+
+
+# ---------------------------------------------------------------------------
+# Full forwards
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, p: dict, tokens: jnp.ndarray, wmap: WMap | None = None) -> jnp.ndarray:
+    """Dense forward. tokens: (T,) int32 -> logits (T, V).
+
+    ``wmap(name)`` substitutes any 2D linear weight (STE quant-dequant,
+    pruning masks, ...); defaults to the raw parameter.
+    """
+    wm: WMap = wmap if wmap is not None else (lambda n: p[n])
+    t = tokens.shape[0]
+    x = p["tok_emb"][tokens]
+    positions = jnp.arange(t)
+    if cfg.pos == "learned":
+        x = x + p["pos_emb"][:t]
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        a, _ = _attn(cfg, p, wm, pre, _norm(cfg, p, x, pre + "norm1"), positions)
+        x = x + a
+        x = x + _mlp(cfg, wm, pre, _norm(cfg, p, x, pre + "norm2"))
+    x = _norm(cfg, p, x, "final_norm")
+    head = p["tok_emb"] if cfg.tie_embeddings else p["head"]
+    return x @ head.T
+
+
+def forward_batch(cfg: ModelConfig, p: dict, tokens: jnp.ndarray, wmap: WMap | None = None) -> jnp.ndarray:
+    """tokens: (B, T) -> (B, T, V)."""
+    return jax.vmap(lambda tk: forward(cfg, p, tk, wmap))(tokens)
+
+
+def decode_step(cfg: ModelConfig, p: dict, token: jnp.ndarray, pos: jnp.ndarray,
+                kv: jnp.ndarray, wmap: WMap | None = None):
+    """Single-token KV-cached decode.
+
+    token: () int32; pos: () int32; kv: (L, 2, H, Tmax, Dh).
+    Returns (logits (V,), new_kv). This is the function AOT-lowered for
+    the Rust PJRT serving backend.
+    """
+    wm: WMap = wmap if wmap is not None else (lambda n: p[n])
+    x = p["tok_emb"][token][None]            # (1, D)
+    if cfg.pos == "learned":
+        x = x + p["pos_emb"][pos][None]
+    positions = pos[None]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        a, nkv = _attn(cfg, p, wm, pre, _norm(cfg, p, x, pre + "norm1"), positions, kv=kv[i])
+        new_kv.append(nkv)
+        x = x + a
+        x = x + _mlp(cfg, wm, pre, _norm(cfg, p, x, pre + "norm2"))
+    x = _norm(cfg, p, x, "final_norm")
+    head = p["tok_emb"] if cfg.tie_embeddings else p["head"]
+    return (x @ head.T)[0], jnp.stack(new_kv)
+
+
+def block_apply(cfg: ModelConfig, p: dict, wm: WMap, i: int, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply transformer block i to batched hidden states x: (B, T, D).
+
+    Used by BQPO to optimize one block against the FP block's outputs.
+    """
+    pre = f"blk{i}."
+    t = x.shape[1]
+    positions = jnp.arange(t)
+
+    def one(xb):
+        a, _ = _attn(cfg, p, wm, pre, _norm(cfg, p, xb, pre + "norm1"), positions)
+        xb = xb + a
+        return xb + _mlp(cfg, wm, pre, _norm(cfg, p, xb, pre + "norm2"))
+
+    return jax.vmap(one)(x)
+
+
+def forward_capture(cfg: ModelConfig, p: dict, tokens: jnp.ndarray):
+    """Dense forward that also returns the input matrix of every linear.
+
+    Returns (logits, {linear_name: (T, K) inputs}, {f"blk{i}.__in__": (T, D)}).
+    Feeds Hessian calibration (H = X^T X) and BQPO block targets.
+    """
+    caps: dict[str, jnp.ndarray] = {}
+    t = tokens.shape[0]
+    x = p["tok_emb"][tokens]
+    positions = jnp.arange(t)
+    if cfg.pos == "learned":
+        x = x + p["pos_emb"][:t]
+    h, dh = cfg.n_heads, cfg.head_dim
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        caps[pre + "__in__"] = x
+        xn = _norm(cfg, p, x, pre + "norm1")
+        caps[pre + "attn.wq"] = xn
+        caps[pre + "attn.wk"] = xn
+        caps[pre + "attn.wv"] = xn
+        q = xn @ p[pre + "attn.wq"].T
+        k = xn @ p[pre + "attn.wk"].T
+        v = xn @ p[pre + "attn.wv"].T
+        if cfg.qkv_bias:
+            q, k, v = q + p[pre + "attn.bq"], k + p[pre + "attn.bk"], v + p[pre + "attn.bv"]
+        q = q.reshape(t, h, dh)
+        k = k.reshape(t, h, dh)
+        v = v.reshape(t, h, dh)
+        if cfg.pos == "rope":
+            q, k = _rope(q, positions), _rope(k, positions)
+        att = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(dh)
+        causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jax.nn.softmax(jnp.where(causal[None], att, -1e30), axis=-1)
+        a = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, cfg.d_model)
+        caps[pre + "attn.wo"] = a
+        x = x + a @ p[pre + "attn.wo"].T
+        xn = _norm(cfg, p, x, pre + "norm2")
+        caps[pre + "mlp.w1"] = xn
+        if cfg.act == "swiglu":
+            caps[pre + "mlp.w2"] = xn
+            g = xn @ p[pre + "mlp.w1"].T
+            u = xn @ p[pre + "mlp.w2"].T
+            hdn = jax.nn.silu(g) * u
+        else:
+            hdn = jax.nn.gelu(xn @ p[pre + "mlp.w1"].T)
+        caps[pre + "mlp.w3"] = hdn
+        x = x + hdn @ p[pre + "mlp.w3"].T
+    x = _norm(cfg, p, x, "final_norm")
+    head = p["tok_emb"] if cfg.tie_embeddings else p["head"]
+    return x @ head.T, caps
+
+
+# ---------------------------------------------------------------------------
+# Weight-map builders
+# ---------------------------------------------------------------------------
+
+def wmap_qdq_ste(cfg: ModelConfig, p: dict, masks: dict[str, np.ndarray],
+                 bits: int, group: int) -> WMap:
+    """Quantization-aware STE weight map for BQPO.
+
+    Surviving groups are fake-quantized with a straight-through gradient;
+    pruned groups are hard-zeroed. ``masks[name]`` is the (N, K//G)
+    keep-mask.
+    """
+    def wm(name: str) -> jnp.ndarray:
+        w = p[name]
+        if name not in masks:
+            return w
+        n, k = w.shape
+        wg = w.reshape(n, k // group, group)
+        qdq = ref.quant_dequant(wg, bits)
+        ste = wg + jax.lax.stop_gradient(qdq - wg)
+        m = jnp.asarray(masks[name], dtype=jnp.float32)[..., None]
+        return (ste * m).reshape(n, k)
+    return wm
+
+
+def wmap_frozen_q(cfg: ModelConfig, p: dict, frozen: dict[str, tuple],
+                  sz: dict, group: int) -> WMap:
+    """E2E-OQP weight map: integer codes frozen, (scale, zero) trainable.
+
+    ``frozen[name] = (q (N,NG,G) float-ints, mask (N,NG))``;
+    ``sz[name] = {"s": (N,NG), "z": (N,NG)}`` live in the optimized pytree.
+    """
+    def wm(name: str) -> jnp.ndarray:
+        if name not in frozen:
+            return p[name]
+        q, mask = frozen[name]
+        s, z = sz[name]["s"], sz[name]["z"]
+        deq = (q - z[..., None]) * s[..., None]
+        deq = deq * jnp.asarray(mask, dtype=jnp.float32)[..., None]
+        n, ng, g = q.shape
+        return deq.reshape(n, ng * g)
+    return wm
+
+
+def wmap_gqs_dense(p: dict, layers: dict[str, ref.GQSWeights]) -> WMap:
+    """Validation map: GQS layers dense-reconstructed through the oracle."""
+    def wm(name: str) -> jnp.ndarray:
+        if name in layers:
+            return ref.decode_dense(layers[name])
+        return p[name]
+    return wm
+
+
+def forward_gqs(cfg: ModelConfig, p: dict, tokens: jnp.ndarray,
+                layers: dict[str, ref.GQSWeights], block_n: int = 64) -> jnp.ndarray:
+    """Forward routing every GQS linear through the Layer-1 Pallas kernel.
+
+    Used by the AOT path so the exported HLO contains the kernel's
+    (interpret-mode) lowering; numerics must match `forward` with
+    `wmap_gqs_dense` (tested in python/tests).
+    """
+    def wm_mat(name: str):
+        if name in layers:
+            gqs = layers[name]
+            return lambda x: gqs_gemv.gqs_matmul(gqs, x, block_n=block_n)
+        return lambda x: x @ p[name].T
+
+    # Inline forward with kernel-routed linears.
+    t = tokens.shape[0]
+    x = p["tok_emb"][tokens]
+    positions = jnp.arange(t)
+    if cfg.pos == "learned":
+        x = x + p["pos_emb"][:t]
+    h, dh = cfg.n_heads, cfg.head_dim
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        xn = _norm(cfg, p, x, pre + "norm1")
+        q = wm_mat(pre + "attn.wq")(xn)
+        k = wm_mat(pre + "attn.wk")(xn)
+        v = wm_mat(pre + "attn.wv")(xn)
+        if cfg.qkv_bias:
+            q, k, v = q + p[pre + "attn.bq"], k + p[pre + "attn.bk"], v + p[pre + "attn.bv"]
+        q = q.reshape(t, h, dh)
+        k = k.reshape(t, h, dh)
+        v = v.reshape(t, h, dh)
+        if cfg.pos == "rope":
+            q, k = _rope(q, positions), _rope(k, positions)
+        att = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(dh)
+        causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jax.nn.softmax(jnp.where(causal[None], att, -1e30), axis=-1)
+        a = jnp.einsum("hqk,khd->qhd", att, v).reshape(t, cfg.d_model)
+        x = x + wm_mat(pre + "attn.wo")(a)
+        xn = _norm(cfg, p, x, pre + "norm2")
+        if cfg.act == "swiglu":
+            g = wm_mat(pre + "mlp.w1")(xn)
+            u = wm_mat(pre + "mlp.w2")(xn)
+            x = x + wm_mat(pre + "mlp.w3")(jax.nn.silu(g) * u)
+        else:
+            x = x + wm_mat(pre + "mlp.w3")(jax.nn.gelu(wm_mat(pre + "mlp.w1")(xn)))
+    x = _norm(cfg, p, x, "final_norm")
+    head = p["tok_emb"] if cfg.tie_embeddings else p["head"]
+    return x @ head.T
+
+
+def decode_step_gqs(cfg: ModelConfig, p: dict, token: jnp.ndarray, pos: jnp.ndarray,
+                    kv: jnp.ndarray, layers: dict[str, ref.GQSWeights],
+                    block_n: int = 64):
+    """KV-cached decode with every GQS linear routed through the Layer-1
+    Pallas GEMV kernel — the AOT hot path the Rust PJRT backend executes.
+
+    Semantics must match `decode_step` with `wmap_gqs_dense` (tested).
+    """
+    def mv(name: str, x_vec: jnp.ndarray) -> jnp.ndarray:
+        if name in layers:
+            return gqs_gemv.gqs_gemv(layers[name], x_vec, block_n=block_n)
+        return p[name] @ x_vec
+
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = p["tok_emb"][token]                     # (D,)
+    if cfg.pos == "learned":
+        x = x + p["pos_emb"][pos]
+    new_kv = []
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}."
+        xn = _norm(cfg, p, x[None], pre + "norm1")[0]
+        q = mv(pre + "attn.wq", xn)
+        k = mv(pre + "attn.wk", xn)
+        v = mv(pre + "attn.wv", xn)
+        if cfg.qkv_bias:
+            q, k, v = q + p[pre + "attn.bq"], k + p[pre + "attn.bk"], v + p[pre + "attn.bv"]
+        q = q.reshape(h, dh)
+        k = k.reshape(h, dh)
+        v = v.reshape(h, dh)
+        if cfg.pos == "rope":
+            q = _rope(q[None], pos[None])[0]
+            k = _rope(k[None], pos[None])[0]
+        kcache = kv[i, 0].at[:, pos].set(k)
+        vcache = kv[i, 1].at[:, pos].set(v)
+        tmax = kcache.shape[1]
+        att = jnp.einsum("hd,htd->ht", q, kcache) / jnp.sqrt(dh)
+        valid = jnp.arange(tmax) <= pos
+        att = jax.nn.softmax(jnp.where(valid[None], att, -1e30), axis=-1)
+        a = jnp.einsum("ht,htd->hd", att, vcache).reshape(cfg.d_model)
+        x = x + mv(pre + "attn.wo", a)
+        new_kv.append(jnp.stack([kcache, vcache]))
+        xn = _norm(cfg, p, x[None], pre + "norm2")[0]
+        if cfg.act == "swiglu":
+            g = mv(pre + "mlp.w1", xn)
+            u = mv(pre + "mlp.w2", xn)
+            x = x + mv(pre + "mlp.w3", jax.nn.silu(g) * u)
+        else:
+            x = x + mv(pre + "mlp.w3", jax.nn.gelu(mv(pre + "mlp.w1", xn)))
+    x = _norm(cfg, p, x[None], "final_norm")[0]
+    head = p["tok_emb"] if cfg.tie_embeddings else p["head"]
+    return head @ x, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# Loss / eval helpers
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, p: dict, tokens: jnp.ndarray, wmap: WMap | None = None) -> jnp.ndarray:
+    """Next-token cross-entropy over a (B, T) batch."""
+    logits = forward_batch(cfg, p, tokens[:, :-1], wmap)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def perplexity(cfg: ModelConfig, p: dict, data: np.ndarray, ctx: int = 256,
+               wmap: WMap | None = None, max_windows: int = 64) -> float:
+    """Sliding-window ppl over a byte array (matches the rust evaluator)."""
+    n_win = min(max_windows, (len(data) - 1) // ctx)
+    tot, cnt = 0.0, 0
+    fwd = jax.jit(lambda tk: forward(cfg, p, tk, wmap))
+    for i in range(n_win):
+        chunk = jnp.asarray(data[i * ctx : i * ctx + ctx + 1].astype(np.int32))
+        logits = fwd(chunk[:-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, chunk[1:, None], axis=-1)[:, 0]
+        tot += float(jnp.sum(nll))
+        cnt += ctx
+    return float(np.exp(tot / max(cnt, 1)))

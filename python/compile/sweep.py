@@ -1,0 +1,57 @@
+"""Build-time compression sweep: every GQSA variant the paper's tables need.
+
+Per family: W4 S{20,30,40,50} G16 (Tables 1/14/15, 2/3, 4, 13, 16).
+tiny-llama extras:
+  * S{60,70,80} G16            — Fig. 8 left (sparsity ablation)
+  * S50 G{8,32,64,128}         — Fig. 8 right (group-size ablation)
+  * S50 bqpo-only / one-shot   — Table 6 (stage ablation)
+  * W8 S50 G16                 — Table 13 (W8S50 row)
+
+Headline settings get more optimization steps than ablation points; the
+step counts are recorded in each artifact's meta.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from . import gqsa
+from .common import FAMILIES
+
+HEADLINE = dict(bqpo_steps=60, e2e_steps=60)
+STANDARD = dict(bqpo_steps=30, e2e_steps=30)
+ABLATION = dict(bqpo_steps=15, e2e_steps=15)
+
+
+def run():
+    t_start = time.time()
+    jobs: list[tuple] = []
+    for fam in FAMILIES:
+        if fam.startswith("_"):
+            continue
+        for s in (0.2, 0.3, 0.4, 0.5):
+            prof = HEADLINE if s == 0.5 else STANDARD
+            jobs.append((fam, dict(sparsity=s, group=16, bits=4, **prof)))
+    fam = "tiny-llama"
+    for s in (0.6, 0.7, 0.8):
+        jobs.append((fam, dict(sparsity=s, group=16, bits=4, **ABLATION)))
+    for g in (8, 32, 64, 128):
+        jobs.append((fam, dict(sparsity=0.5, group=g, bits=4, **ABLATION)))
+    jobs.append((fam, dict(sparsity=0.5, group=16, bits=4, bqpo_steps=60, e2e_steps=0,
+                           tag="w4s50g16-bqpo")))
+    jobs.append((fam, dict(sparsity=0.5, group=16, bits=4, bqpo_steps=0, e2e_steps=0,
+                           tag="w4s50g16-oneshot")))
+    jobs.append((fam, dict(sparsity=0.5, group=16, bits=8, **STANDARD)))
+
+    caches: dict[str, dict] = {}
+    for i, (fam, kw) in enumerate(jobs):
+        t0 = time.time()
+        gqsa.compress(fam, **kw, _cache=caches.setdefault(fam, {}))
+        print(f"  job {i+1}/{len(jobs)} done in {time.time()-t0:.0f}s "
+              f"(total {time.time()-t_start:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    run()
+    print("sweep complete", file=sys.stderr)

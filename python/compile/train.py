@@ -1,0 +1,100 @@
+"""Build-time training of the tiny model families on the synthetic corpus.
+
+AdamW, a few hundred steps — enough to pull ppl well below the uniform
+baseline (256) so compression-induced degradation is measurable, which
+is all the paper's tables need (they report *relative* degradation
+between compression settings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, data, model
+from .common import ART, FAMILIES, ModelConfig, StageTimer
+
+
+def adamw_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros(())}
+
+
+def adamw_update(params, grads, opt, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = opt["t"] + 1.0
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * opt["m"][k] + (1 - b1) * grads[k]
+        v = b2 * opt["v"][k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        if params[k].ndim >= 2:
+            upd = upd + wd * params[k]
+        new_p[k] = params[k] - lr * upd
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+def batches(corpus: np.ndarray, batch: int, ctx: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(corpus) - ctx - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([corpus[i : i + ctx + 1] for i in idx]).astype(np.int32)
+
+
+def train_family(cfg: ModelConfig, corpus: np.ndarray, steps: int = 400,
+                 batch: int = 8, ctx: int = 192, lr: float = 3e-4,
+                 log_every: int = 50) -> tuple[dict, list]:
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=hash(cfg.family) % 2**31).items()}
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, toks):
+        loss, grads = jax.value_and_grad(lambda p: model.lm_loss(cfg, p, toks))(params)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    gen = batches(corpus, batch, ctx, seed=99)
+    log = []
+    t0 = time.time()
+    for i in range(steps):
+        toks = jnp.asarray(next(gen))
+        params, opt, loss = step(params, opt, toks)
+        if i % log_every == 0 or i == steps - 1:
+            l = float(loss)
+            log.append({"step": i, "loss": round(l, 4), "elapsed_s": round(time.time() - t0, 1)})
+            print(f"[{cfg.family}] step {i:4d} loss {l:.4f}", flush=True)
+    return {k: np.asarray(v) for k, v in params.items()}, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--families", nargs="*", default=list(FAMILIES))
+    args = ap.parse_args()
+
+    corpus = np.frombuffer((ART / "corpus" / "train.bin").read_bytes(), dtype=np.uint8)
+    wiki = np.frombuffer((ART / "corpus" / "wiki_syn.bin").read_bytes(), dtype=np.uint8)
+    timer = StageTimer()
+    for fam in args.families:
+        cfg = FAMILIES[fam]
+        with timer.stage(f"train.{fam}"):
+            params, log = train_family(cfg, corpus, steps=args.steps)
+        ppl = model.perplexity(cfg, {k: jnp.asarray(v) for k, v in params.items()}, wiki, max_windows=16)
+        print(f"[{fam}] wiki_syn ppl {ppl:.3f}")
+        common.save_tensors(
+            ART / "models" / f"{fam}.fp.bin", params,
+            meta={"config": cfg.to_json(), "train_log": log, "wiki_syl_ppl": ppl},
+        )
+    timer.dump(ART / "logs" / "train_times.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+import sys
+from pathlib import Path
+
+# allow `pytest python/tests/` from the repo root
+sys.path.insert(0, str(Path(__file__).resolve().parent))

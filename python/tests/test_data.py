@@ -1,0 +1,48 @@
+"""Synthetic corpus generator properties."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_corpus_length_and_charset():
+    c = data.generate_corpus(seed=1, n_bytes=5000)
+    assert len(c) == 5000
+    allowed = set(b"abcdefghijklmnopqrstuvwxyz. ")
+    assert set(c) <= allowed
+
+
+def test_corpus_deterministic():
+    assert data.generate_corpus(seed=5, n_bytes=2000) == data.generate_corpus(seed=5, n_bytes=2000)
+
+
+def test_corpus_seeds_differ():
+    assert data.generate_corpus(seed=1, n_bytes=2000) != data.generate_corpus(seed=2, n_bytes=2000)
+
+
+def test_zipf_skew():
+    """Word frequencies should be heavy-tailed: top decile >> uniform share."""
+    c = data.generate_corpus(seed=3, n_bytes=50000)
+    words = c.split()
+    uniq, counts = np.unique(words, return_counts=True)
+    counts = np.sort(counts)[::-1]
+    top10 = counts[: max(1, len(counts) // 10)].sum() / counts.sum()
+    assert top10 > 0.35, top10
+
+
+def test_bigram_structure_present():
+    """Markov successor table should make bigrams non-uniform."""
+    c = data.generate_corpus(seed=4, n_bytes=80000)
+    words = c.replace(b". ", b" ").split()
+    from collections import Counter, defaultdict
+    succ = defaultdict(Counter)
+    for a, b in zip(words, words[1:]):
+        succ[a][b] += 1
+    # among frequent words, the most common successor should dominate
+    freq = Counter(words).most_common(20)
+    ratios = []
+    for w, _ in freq:
+        s = succ[w]
+        if sum(s.values()) >= 20:
+            ratios.append(s.most_common(1)[0][1] / sum(s.values()))
+    assert ratios and np.mean(ratios) > 0.08

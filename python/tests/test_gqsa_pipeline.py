@@ -1,0 +1,183 @@
+"""Pipeline-level tests: calibration, saliency, BQPO/E2E-OQP improve error,
+BSR export round-trips, container format."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, gqsa, model
+from compile.common import ModelConfig
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(family="t", vocab=64, d_model=64, n_layers=2, n_heads=2, d_ff=96, max_seq=64)
+    p = model.init_params(cfg, 7)
+    rng = np.random.default_rng(0)
+    corpus = rng.integers(0, 64, size=20000).astype(np.uint8)
+    seqs = gqsa.calib_batches(corpus, n_seq=4, ctx=48)
+    pj = {k: jnp.asarray(v) for k, v in p.items()}
+    hess, blk_in, fp_logits = gqsa.calibrate(cfg, pj, seqs)
+    return cfg, p, corpus, seqs, hess, blk_in, fp_logits
+
+
+class TestCalibration:
+    def test_hessian_psd_and_shape(self, setup):
+        cfg, p, *_ , hess, _, _ = (*setup[:4], setup[4], setup[5], setup[6])
+        for n in model.linear_names(cfg):
+            h = hess[n]
+            assert h.shape[0] == h.shape[1] == p[n].shape[1]
+            ev = np.linalg.eigvalsh(h)
+            assert ev.min() > -1e-6 * max(1.0, ev.max())
+
+    def test_block_inputs_shape(self, setup):
+        cfg, _, _, seqs, _, blk_in, _ = setup
+        for i in range(cfg.n_layers):
+            assert blk_in[i].shape == (seqs.shape[0], seqs.shape[1], cfg.d_model)
+
+    def test_hinv_diag_positive(self, setup):
+        _, _, _, _, hess, _, _ = setup
+        for h in hess.values():
+            assert np.all(gqsa.hinv_diag(h) > 0)
+
+
+class TestSaliencyMasks:
+    def test_saliency_prefers_large_weights(self):
+        w = np.ones((4, 64), dtype=np.float32) * 0.01
+        w[:, :16] = 5.0  # one huge group
+        hd = np.ones(64)
+        sc = gqsa.saliency(w, hd, 16)
+        assert np.all(sc[:, 0] > sc[:, 1:].max(axis=1))
+
+    def test_saliency_uses_hessian(self):
+        w = np.ones((2, 32), dtype=np.float32)
+        hd = np.ones(32)
+        hd[:16] = 0.1  # low H^-1 diag => high saliency
+        sc = gqsa.saliency(w, hd, 16)
+        assert sc[0, 0] > sc[0, 1]
+
+    def test_build_masks_sparsity(self, setup):
+        cfg, p, _, _, hess, _, _ = setup
+        masks = gqsa.build_masks(cfg, p, hess, 0.5, 16)
+        for n, m in masks.items():
+            assert abs(1.0 - m.mean() - 0.5) < 0.13
+
+
+class TestOptimization:
+    def test_bqpo_reduces_block_error(self, setup):
+        cfg, p, _, seqs, hess, blk_in, _ = setup
+        masks = gqsa.build_masks(cfg, p, hess, 0.5, 16)
+        log = []
+        gqsa.bqpo(cfg, p, masks, 4, 16, blk_in, steps=12, lr=3e-4, log=log)
+        assert len(log) == cfg.n_layers
+        improved = sum(1 for r in log if r["loss_last"] < r["loss_first"])
+        assert improved >= cfg.n_layers - 1, log
+
+    def test_e2e_oqp_reduces_logit_error(self, setup):
+        cfg, p, _, seqs, hess, blk_in, fp_logits = setup
+        masks = gqsa.build_masks(cfg, p, hess, 0.5, 16)
+        frozen, sz = gqsa.freeze_quantize(cfg, p, masks, 4, 16)
+        log = []
+        gqsa.e2e_oqp(cfg, p, frozen, sz, 16, seqs, fp_logits, steps=12, lr=3e-4, batch=2, log=log)
+        assert log[0]["e2e_loss_last"] < log[0]["e2e_loss_first"], log
+
+    def test_freeze_quantize_codes_integral(self, setup):
+        cfg, p, _, _, hess, _, _ = setup
+        masks = gqsa.build_masks(cfg, p, hess, 0.3, 16)
+        frozen, sz = gqsa.freeze_quantize(cfg, p, masks, 4, 16)
+        for n, (q, m) in frozen.items():
+            qn = np.asarray(q)
+            np.testing.assert_allclose(qn, np.round(qn), atol=1e-5)
+            assert qn.min() >= 0 and qn.max() <= 15
+
+
+class TestPacking:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_pack_roundtrip(self, bits):
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, 2**bits, size=64).astype(np.uint8)
+        packed = gqsa.pack_nibbles(codes, bits)
+        # unpack
+        if bits == 8:
+            un = packed
+        elif bits == 4:
+            un = np.empty(packed.size * 2, np.uint8)
+            un[0::2], un[1::2] = packed & 0xF, packed >> 4
+        else:
+            un = np.empty(packed.size * 4, np.uint8)
+            for j in range(4):
+                un[j::4] = (packed >> (2 * j)) & 0x3
+        np.testing.assert_array_equal(un[: len(codes)], codes)
+
+    def test_pack_density(self):
+        codes = np.zeros(128, np.uint8)
+        assert gqsa.pack_nibbles(codes, 4).size == 64
+        assert gqsa.pack_nibbles(codes, 2).size == 32
+
+
+class TestExport:
+    def test_export_roundtrip_dense_equivalence(self, setup, tmp_path):
+        """BSR export -> reload -> dense reconstruction == wmap_frozen_q dense."""
+        cfg, p, _, _, hess, _, _ = setup
+        masks = gqsa.build_masks(cfg, p, hess, 0.5, 16)
+        frozen, sz = gqsa.freeze_quantize(cfg, p, masks, 4, 16)
+        out = tmp_path / "m.gqsa"
+        gqsa.export_gqsa(out, cfg, p, frozen, sz, masks, 4, 16, 0.5)
+        tensors, meta = common.load_tensors(out)
+        assert meta["bits"] == 4 and meta["group"] == 16
+        n = model.linear_names(cfg)[0]
+        rp = tensors[n + ".row_ptr"]
+        cols = tensors[n + ".cols"]
+        packed = tensors[n + ".qvals"]
+        scales = tensors[n + ".scales"]
+        zeros = tensors[n + ".zeros"]
+        # reconstruct dense
+        codes = np.empty(packed.size * 2, np.float32)
+        codes[0::2], codes[1::2] = (packed & 0xF), (packed >> 4)
+        codes = codes[: rp[-1] * 16].reshape(-1, 16)
+        nrows, k = p[n].shape
+        dense = np.zeros((nrows, k), np.float32)
+        for r in range(nrows):
+            for j in range(rp[r], rp[r + 1]):
+                c = cols[j]
+                dense[r, c * 16 : (c + 1) * 16] = (codes[j] - zeros[j]) * scales[j]
+        # oracle dense from frozen q + sz
+        wm = model.wmap_frozen_q(cfg, {k2: jnp.asarray(v) for k2, v in p.items()},
+                                 frozen, sz, 16)
+        np.testing.assert_allclose(dense, np.asarray(wm(n)), atol=1e-4)
+
+    def test_row_ptr_monotone_and_counts(self, setup, tmp_path):
+        cfg, p, _, _, hess, _, _ = setup
+        masks = gqsa.build_masks(cfg, p, hess, 0.4, 16)
+        frozen, sz = gqsa.freeze_quantize(cfg, p, masks, 4, 16)
+        out = tmp_path / "m2.gqsa"
+        gqsa.export_gqsa(out, cfg, p, frozen, sz, masks, 4, 16, 0.4)
+        tensors, _ = common.load_tensors(out)
+        for n in model.linear_names(cfg):
+            rp = tensors[n + ".row_ptr"]
+            assert np.all(np.diff(rp) >= 0)
+            assert rp[-1] == len(tensors[n + ".cols"]) == len(tensors[n + ".scales"])
+
+
+class TestContainer:
+    def test_save_load_all_dtypes(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "f": rng.normal(size=(3, 4)).astype(np.float32),
+            "i": rng.integers(-5, 5, size=(7,)).astype(np.int32),
+            "b": rng.integers(0, 255, size=(9,)).astype(np.uint8),
+            "s": rng.integers(-3, 3, size=(2, 2, 2)).astype(np.int8),
+        }
+        common.save_tensors(tmp_path / "t.bin", tensors, meta={"x": 1, "y": [1, 2]})
+        back, meta = common.load_tensors(tmp_path / "t.bin")
+        assert meta == {"x": 1, "y": [1, 2]}
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+
+    def test_scalar_and_empty(self, tmp_path):
+        common.save_tensors(tmp_path / "e.bin", {"z": np.zeros(0, np.float32)})
+        back, _ = common.load_tensors(tmp_path / "e.bin")
+        assert back["z"].size == 0

@@ -1,0 +1,192 @@
+"""L1 correctness: the Pallas GQS GEMV kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / group sizes / sparsities / bit-widths; every
+case asserts allclose against dense-reconstruction semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gqs_gemv, ref
+
+
+def make_gqs(seed, n, k, g, bits, sparsity):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    scores = rng.random((n, k // g))
+    mask = ref.group_mask_from_scores(scores, sparsity)
+    return ref.encode(w, mask, bits, g), w, mask, rng
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit cases
+# ---------------------------------------------------------------------------
+
+class TestQuantParams:
+    def test_scale_zero_paper_convention(self):
+        g = jnp.asarray([[0.0, 1.5, 3.0, -1.5]])
+        s, z = ref.quant_params(g, 4)
+        assert np.isclose(float(s[0]), 4.5 / 15.0)
+        assert float(z[0]) == -np.floor(-1.5 / float(s[0]))
+
+    def test_constant_group_does_not_nan(self):
+        g = jnp.full((1, 16), 2.5)
+        out = ref.quant_dequant(g, 4)
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_codes_in_range(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+        for bits in (2, 3, 4, 8):
+            s, z = ref.quant_params(g, bits)
+            q = np.asarray(ref.quantize(g, s, z, bits))
+            assert q.min() >= 0 and q.max() <= 2**bits - 1
+
+    def test_quant_error_bounded_by_scale(self):
+        # interior points err <= s/2; range edges can clip by up to one
+        # full step (z = -floor(min/s) biases the top of the range).
+        rng = np.random.default_rng(1)
+        g = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+        s, _ = ref.quant_params(g, 4)
+        err = np.abs(np.asarray(ref.quant_dequant(g, 4) - g))
+        assert np.all(err <= np.asarray(s)[..., None] * 1.0001 + 1e-6)
+
+    def test_more_bits_less_error(self):
+        rng = np.random.default_rng(2)
+        g = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        errs = [float(jnp.mean((ref.quant_dequant(g, b) - g) ** 2)) for b in (2, 4, 8)]
+        assert errs[0] > errs[1] > errs[2]
+
+
+class TestGroupPruning:
+    def test_mask_keeps_exact_fraction(self):
+        scores = np.random.default_rng(0).random((32, 16))
+        for s in (0.25, 0.5, 0.75):
+            m = ref.group_mask_from_scores(scores, s)
+            assert np.all(m.sum(1) == round(16 * (1 - s)))
+
+    def test_mask_keeps_top_scores(self):
+        scores = np.arange(8.0)[None].repeat(4, 0)
+        m = ref.group_mask_from_scores(scores, 0.5)
+        assert np.array_equal(m[0], np.array([0, 0, 0, 0, 1, 1, 1, 1], bool))
+
+    def test_at_least_one_group_survives(self):
+        scores = np.random.default_rng(0).random((4, 8))
+        m = ref.group_mask_from_scores(scores, 0.99)
+        assert np.all(m.sum(1) >= 1)
+
+
+class TestEncodeDecode:
+    def test_decode_zeroes_pruned_groups(self):
+        gqs, w, mask, _ = make_gqs(0, 32, 64, 16, 4, 0.5)
+        dense = np.asarray(ref.decode_dense(gqs)).reshape(32, 4, 16)
+        assert np.all(dense[~mask] == 0.0)
+
+    def test_decode_close_on_kept_groups(self):
+        gqs, w, mask, _ = make_gqs(1, 32, 64, 16, 8, 0.25)
+        dense = np.asarray(ref.decode_dense(gqs)).reshape(32, 4, 16)
+        wg = w.reshape(32, 4, 16)
+        err = np.abs(dense[mask] - wg[mask])
+        assert err.max() < 0.05  # 8-bit on unit-normal data
+
+    def test_gemv_matches_gather_formulation(self):
+        gqs, _, _, rng = make_gqs(2, 48, 96, 16, 4, 0.4)
+        x = jnp.asarray(rng.normal(size=(96,)).astype(np.float32))
+        a = ref.gqs_gemv_ref(gqs, x)
+        b = ref.gqs_gemv_gather_ref(gqs, x)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle — fixed grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [16, 64, 100])
+@pytest.mark.parametrize("k", [64, 256])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5])
+def test_kernel_matches_oracle_grid(n, k, sparsity):
+    gqs, _, _, rng = make_gqs(3, n, k, 16, 4, sparsity)
+    x = jnp.asarray(rng.normal(size=(k,)).astype(np.float32))
+    y_ref = np.asarray(ref.gqs_gemv_ref(gqs, x))
+    y_ker = np.asarray(gqs_gemv.gqs_gemv(gqs, x))
+    np.testing.assert_allclose(y_ker, y_ref, atol=2e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("block_n", [8, 32, 128])
+def test_kernel_block_size_invariance(block_n):
+    gqs, _, _, rng = make_gqs(4, 96, 128, 16, 4, 0.5)
+    x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    y_ref = np.asarray(ref.gqs_gemv_ref(gqs, x))
+    y_ker = np.asarray(gqs_gemv.gqs_gemv(gqs, x, block_n=block_n))
+    np.testing.assert_allclose(y_ker, y_ref, atol=2e-4, rtol=1e-4)
+
+
+def test_kernel_batched_matmul():
+    gqs, _, _, rng = make_gqs(5, 64, 64, 16, 4, 0.5)
+    xb = jnp.asarray(rng.normal(size=(5, 64)).astype(np.float32))
+    y_ref = np.asarray(ref.gqs_matmul_ref(gqs, xb))
+    y_ker = np.asarray(gqs_gemv.gqs_matmul(gqs, xb))
+    np.testing.assert_allclose(y_ker, y_ref, atol=2e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (shapes, dtypes of x, sparsity, group, bits)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 80),
+    ng=st.integers(1, 8),
+    g=st.sampled_from([4, 8, 16, 32]),
+    bits=st.sampled_from([2, 4, 8]),
+    sparsity=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_matches_oracle_hypothesis(n, ng, g, bits, sparsity, seed):
+    k = ng * g
+    gqs, _, _, rng = make_gqs(seed, n, k, g, bits, sparsity)
+    x = jnp.asarray(rng.normal(size=(k,)).astype(np.float32))
+    y_ref = np.asarray(ref.gqs_gemv_ref(gqs, x))
+    y_ker = np.asarray(gqs_gemv.gqs_gemv(gqs, x))
+    np.testing.assert_allclose(y_ker, y_ref, atol=5e-4, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float32, np.float16]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**16),
+)
+def test_kernel_x_dtype_and_scale(dtype, scale, seed):
+    gqs, _, _, rng = make_gqs(seed, 32, 64, 16, 4, 0.5)
+    x = (rng.normal(size=(64,)) * scale).astype(dtype)
+    y_ref = np.asarray(ref.gqs_gemv_ref(gqs, jnp.asarray(x, dtype=jnp.float32)))
+    y_ker = np.asarray(gqs_gemv.gqs_gemv(gqs, jnp.asarray(x, dtype=jnp.float32)))
+    np.testing.assert_allclose(y_ker, y_ref, atol=5e-3 * scale, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sparsity=st.floats(0.0, 0.95), seed=st.integers(0, 2**16))
+def test_padding_slots_never_contribute(sparsity, seed):
+    """Rows with fewer groups than MG must ignore their padding slots."""
+    rng = np.random.default_rng(seed)
+    n, k, g = 16, 64, 16
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    # ragged mask: row i keeps i%4+1 groups -> heavy padding
+    mask = np.zeros((n, k // g), bool)
+    for i in range(n):
+        keep = rng.choice(k // g, size=i % (k // g) + 1, replace=False)
+        mask[i, keep] = True
+    gqs = ref.encode(w, mask, 4, g)
+    x = jnp.asarray(rng.normal(size=(k,)).astype(np.float32))
+    y_ref = np.asarray(ref.gqs_gemv_ref(gqs, x))
+    y_ker = np.asarray(gqs_gemv.gqs_gemv(gqs, x))
+    np.testing.assert_allclose(y_ker, y_ref, atol=5e-4, rtol=1e-3)
+
+
+def test_vmem_estimate_fits_tpu_budget():
+    """Paper-scale tile (K=4096, G=16, 50% sparsity) must fit 16 MiB VMEM."""
+    est = gqs_gemv.vmem_estimate_bytes(n=4096, k=4096, mg=128, g=16, bn=gqs_gemv.DEFAULT_BN)
+    assert est["total_tpu"] < 16 * 1024 * 1024

@@ -1,0 +1,38 @@
+//! Bench: end-to-end decode latency across compression settings
+//! (Tables 4/10/16, Figure 7 shape). `cargo bench --bench e2e_latency`.
+
+use gqsa::bench::Workbench;
+
+fn main() {
+    let art = Workbench::default_dir();
+    if !art.join("models/tiny-llama.fp.bin").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut wb = Workbench::new(art);
+    println!("# e2e decode latency, input len 15 — tiny-llama");
+    for (label, spec) in [
+        ("fp32", "fp"),
+        ("w8", "w8"),
+        ("w4", "w4"),
+        ("w2", "w2"),
+        ("w4 2:4", "w4-24"),
+        ("gqsa w4s30", "gqsa:w4s30g16"),
+        ("gqsa w4s50", "gqsa:w4s50g16"),
+        ("gqsa w8s50", "gqsa:w8s50g16"),
+    ] {
+        let model = match wb.variant("tiny-llama", spec) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{label}: {e:#} (skipped)");
+                continue;
+            }
+        };
+        print!("{label:<14}");
+        for out_len in [128usize, 512] {
+            let ms = wb.decode_latency_ms(&model, 15, out_len).unwrap();
+            print!("  len{out_len}: {ms:>8.1} ms");
+        }
+        println!("  weights: {:>7.2} MB", model.weight_bytes() as f64 / 1048576.0);
+    }
+}

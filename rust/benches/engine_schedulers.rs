@@ -1,0 +1,44 @@
+//! Bench: Slice-K vs Stream-K scheduling on the multi-SM simulator
+//! (Figure 5 / Appendix I shape) + wall-clock of the schedulers
+//! themselves. `cargo bench --bench engine_schedulers`.
+
+use gqsa::bench::Bench;
+use gqsa::engine::cost_model::{CostModel, GpuSpec};
+use gqsa::engine::{simulate, slice_k, stream_k, Workload};
+
+fn main() {
+    let cm = CostModel::new(GpuSpec::default());
+    println!("# scheduler comparison (simulated cycles; util in parens)");
+    for (label, hot, skew) in [
+        ("uniform", 0.0, 1.0),
+        ("skew 10% x4", 0.10, 4.0),
+        ("skew 5% x16", 0.05, 16.0),
+        ("skew 3% x32", 0.03, 32.0),
+    ] {
+        let wl = Workload::synthetic(4096, 8, hot, skew, 5);
+        let slice = simulate(&slice_k::decompose(&wl, 8), &cm);
+        let stream = simulate(
+            &stream_k::decompose(&wl, stream_k::default_cta_count(cm.spec.n_sm, 4)),
+            &cm,
+        );
+        println!(
+            "{label:<14} slice {:>12.0} ({:.2})   stream {:>12.0} ({:.2})   speedup {:.2}x",
+            slice.makespan,
+            slice.utilization,
+            stream.makespan,
+            stream.utilization,
+            slice.makespan / stream.makespan
+        );
+    }
+
+    // decomposition overhead itself (host-side cost of the scheduler)
+    let wl = Workload::synthetic(4096, 8, 0.05, 16.0, 5);
+    let r1 = Bench::new("slice_k::decompose").run(|| {
+        std::hint::black_box(slice_k::decompose(&wl, 8));
+    });
+    let r2 = Bench::new("stream_k::decompose").run(|| {
+        std::hint::black_box(stream_k::decompose(&wl, 432));
+    });
+    println!("{}", r1.report());
+    println!("{}", r2.report());
+}

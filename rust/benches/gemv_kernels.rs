@@ -1,0 +1,66 @@
+//! Bench: GEMV kernels (Figure 6). Run via `cargo bench --bench gemv_kernels`.
+//!
+//! Criterion is not vendored in this offline image; the in-tree harness
+//! (gqsa::bench::Bench) provides warmup + timed iterations. Ratios
+//! between kernels are the reproduction target.
+
+use gqsa::bench::Bench;
+use gqsa::gqs::gemv::{gqs_gemv, gqs_gemv_ref};
+use gqsa::gqs::gemv_dense::{dense_gemv, QuantDense, Semi24Kernel};
+use gqsa::gqs::layer::GqsLayer;
+use gqsa::sparse::group_prune::group_prune;
+use gqsa::sparse::saliency::SaliencyMetric;
+use gqsa::sparse::semi24::prune_24;
+use gqsa::util::{Mat, XorShift};
+
+fn main() {
+    let (n, k) = (1024usize, 1024usize);
+    let mut rng = XorShift::new(42);
+    let w = Mat::randn(n, k, &mut rng);
+    let x = rng.normal_vec(k);
+    let mut y = vec![0.0f32; n];
+    let mut scratch: Vec<f32> = Vec::new();
+
+    println!("# GEMV kernel bench ({n}x{k}) — Figure 6 shape");
+
+    let r_fp = Bench::new("fp32 dense").run(|| dense_gemv(&w, &x, &mut y));
+    println!("{}", r_fp.report());
+
+    for bits in [8u32, 4, 2] {
+        let qd = QuantDense::encode(&w, bits, 16);
+        let r = Bench::new(format!("w{bits} dense (fused dequant)")).run(|| {
+            qd.gemv(&x, &mut y, &mut scratch)
+        });
+        println!("{}", r.report());
+    }
+
+    let w24 = prune_24(&w, None, SaliencyMetric::Magnitude);
+    let k24 = Semi24Kernel::encode(&w24, 4, 16);
+    let r_24 = Bench::new("w4 2:4 (metadata kernel)").run(|| k24.gemv(&x, &mut y));
+    println!("{}", r_24.report());
+
+    for s in [0.3f64, 0.5, 0.7] {
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, s);
+        let layer = GqsLayer::encode(&w, &mask, 4);
+        let r = Bench::new(format!("GQS w4 s{:.0}% g16 (opt)", s * 100.0))
+            .run(|| gqs_gemv(&layer, &x, &mut y, &mut scratch));
+        println!("{}  [{:.2}x vs 2:4]", r.report(), r_24.mean_us() / r.mean_us());
+        if s == 0.5 {
+            let r_ref = Bench::new("GQS w4 s50% g16 (scalar ref)")
+                .run(|| gqs_gemv_ref(&layer, &x, &mut y));
+            println!(
+                "{}  [opt speedup {:.2}x]",
+                r_ref.report(),
+                r_ref.mean_us() / r.mean_us()
+            );
+        }
+    }
+
+    for g in [8usize, 32, 128] {
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, 0.5);
+        let layer = GqsLayer::encode(&w, &mask, 4);
+        let r = Bench::new(format!("GQS w4 s50% g{g}"))
+            .run(|| gqs_gemv(&layer, &x, &mut y, &mut scratch));
+        println!("{}", r.report());
+    }
+}

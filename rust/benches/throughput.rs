@@ -1,0 +1,54 @@
+//! Bench: serving throughput through the continuous-batching
+//! coordinator (Table 13 shape). `cargo bench --bench throughput`.
+
+use gqsa::bench::Workbench;
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+
+fn main() {
+    let art = Workbench::default_dir();
+    if !art.join("models/tiny-llama.fp.bin").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut wb = Workbench::new(art);
+    println!("# serving throughput: 8 requests x 64 tokens, batch 4, input 15");
+    let mut base = 0.0f64;
+    for (label, spec) in [
+        ("fp32", "fp"),
+        ("w8", "w8"),
+        ("w8 s50", "gqsa:w8s50g16"),
+        ("w4", "w4"),
+        ("w4 s50", "gqsa:w4s50g16"),
+    ] {
+        let model = match wb.variant("tiny-llama", spec) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{label}: {e:#} (skipped)");
+                continue;
+            }
+        };
+        let cfg = model.cfg.clone();
+        let mut engine = EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: 4, prefill_chunk: 15, kv_capacity: 128 },
+        )
+        .unwrap();
+        let corpus = wb.corpus("wiki_syn").unwrap().to_vec();
+        for i in 0..8u64 {
+            let start = (i as usize * 53) % 2000;
+            let prompt: Vec<u32> = corpus[start..start + 15].iter().map(|&b| u32::from(b)).collect();
+            engine.submit(Request::new(i, prompt, 64));
+        }
+        let t0 = std::time::Instant::now();
+        let out = engine.run_to_completion().unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        let tps = tokens as f64 / secs;
+        if base == 0.0 {
+            base = tps;
+        }
+        println!("{label:<10} {tps:>8.1} tok/s   ({:.2}x vs fp32)", tps / base);
+    }
+    println!("# paper shape (Table 13): W4S50 > W4 > W8S50 > W8 > FP");
+}

@@ -1,0 +1,630 @@
+//! One function per paper table/figure (DESIGN.md §5). Each prints a
+//! paper-shaped table and persists it under artifacts/results/.
+//!
+//! Absolute numbers differ from the paper (tiny models, CPU testbed,
+//! synthetic corpora — see DESIGN.md §Hardware-Adaptation); the *shape*
+//! (who wins, by roughly what factor, where the knees are) is the
+//! reproduction target, and EXPERIMENTS.md records both side by side.
+
+use anyhow::{bail, Result};
+
+use crate::bench::tables::{f1 as fmt1, f2 as fmt2, mb, Table};
+use crate::bench::variants::Workbench;
+use crate::bench::Bench;
+use crate::engine::cost_model::{CostModel, GpuSpec};
+use crate::engine::{simulate, slice_k, stream_k, Workload};
+use crate::gqs::gemv_dense::{dense_gemv, QuantDense, Semi24Kernel};
+use crate::gqs::layer::GqsLayer;
+use crate::sparse::group_prune::group_prune;
+use crate::sparse::saliency::{saliency_scores, SaliencyMetric};
+use crate::sparse::semi24::prune_24;
+use crate::util::json::Json;
+use crate::util::{Mat, XorShift};
+
+pub const ALL_IDS: &[&str] = &[
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
+    "t15", "t16", "f1", "f5", "f6", "f7", "f8",
+];
+
+pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
+    match id {
+        "t1" => ppl_table(wb, "tiny-llama", "t1"),
+        "t14" => ppl_table(wb, "tiny-qwen", "t14"),
+        "t15" => ppl_table(wb, "tiny-gpt", "t15"),
+        "t2" => t2(wb),
+        "t3" => t3(wb),
+        "t4" => t4(wb),
+        "t5" => t5(wb),
+        "t6" => t6(wb),
+        "t7" => t7(wb),
+        "t8" => t8(wb),
+        "t9" => t9(wb),
+        "t10" => t10(wb),
+        "t11" => t11(wb),
+        "t12" => t12(wb),
+        "t13" => t13(wb),
+        "t16" => t16(wb, "t16"),
+        "f1" => fig1(wb),
+        "f5" => fig5(wb),
+        "f6" => fig6(wb),
+        "f7" => t16(wb, "f7"),
+        "f8" => fig8(wb),
+        "all" => {
+            for id in ALL_IDS {
+                println!("\n##### {id} #####");
+                run(id, wb)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment id '{id}' (try one of {ALL_IDS:?})"),
+    }
+}
+
+const PPL_WINDOWS: usize = 6;
+const ZS_ITEMS: usize = 12;
+
+// ---------------------------------------------------------------------
+// Tables 1 / 14 / 15 — language modeling ppl across methods
+// ---------------------------------------------------------------------
+
+fn ppl_table(wb: &mut Workbench, family: &str, id: &str) -> Result<()> {
+    let specs: Vec<(&str, String)> = vec![
+        ("W2 (RTN)", "w2".into()),
+        ("W2 (GPTQ)", "w2-gptq".into()),
+        ("2:4 (SparseGPT)", "24-hessian".into()),
+        ("2:4 (Wanda)", "24-wanda".into()),
+        ("GQSA W4S20%", "gqsa:w4s20g16".into()),
+        ("GQSA W4S30%", "gqsa:w4s30g16".into()),
+        ("GQSA W4S40%", "gqsa:w4s40g16".into()),
+        ("GQSA W4S50%", "gqsa:w4s50g16".into()),
+        ("FP (ref)", "fp".into()),
+    ];
+    let mut t = Table::new(
+        format!("Table {id}: {family} perplexity (wiki_syn / c4_syn stand-ins)"),
+        &["method", "wiki_syn", "c4_syn"],
+    );
+    for (label, spec) in specs {
+        let m = wb.variant(family, &spec)?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        let c = wb.ppl(&m, "c4_syn", PPL_WINDOWS)?;
+        t.row(vec![label.into(), fmt2(w), fmt2(c)]);
+    }
+    t.note("paper shape: GQSA W4S50 < W2 baselines; comparable to 2:4 at higher compression");
+    t.emit(wb.results_dir(), id)
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — zero-shot vs structured pruning
+// ---------------------------------------------------------------------
+
+fn t2(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let specs = [
+        ("Struct 25% (LLM-Pruner-like)", "struct:25"),
+        ("GQSA W4S30%", "gqsa:w4s30g16"),
+        ("Struct 40%", "struct:40"),
+        ("GQSA W4S40%", "gqsa:w4s40g16"),
+    ];
+    let mut header = vec!["method".to_string()];
+    let first = wb.variant(fam, "fp")?;
+    let (rows0, _) = wb.zero_shot_avg(&first, 2)?;
+    header.extend(rows0.iter().map(|(n, _)| n.clone()));
+    header.push("avg".into());
+    let mut t = Table::new(
+        "Table 2: zero-shot accuracy (%) vs structured pruning — tiny-llama",
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    for (label, spec) in specs {
+        let m = wb.variant(fam, spec)?;
+        let (rows, avg) = wb.zero_shot_avg(&m, ZS_ITEMS)?;
+        let mut cells = vec![label.to_string()];
+        cells.extend(rows.iter().map(|(_, a)| fmt1(*a)));
+        cells.push(fmt1(avg));
+        t.row(cells);
+    }
+    t.note("paper shape: GQSA beats structured pruning at matched (higher) compression");
+    t.emit(wb.results_dir(), "t2")
+}
+
+// ---------------------------------------------------------------------
+// Table 3 — zero-shot vs W2 quantization and 2:4
+// ---------------------------------------------------------------------
+
+fn t3(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let specs = [
+        ("W2 (RTN)", "w2"),
+        ("W2 (GPTQ)", "w2-gptq"),
+        ("GQSA W4S50%", "gqsa:w4s50g16"),
+        ("2:4 (SparseGPT)", "24-hessian"),
+        ("2:4 (Wanda)", "24-wanda"),
+        ("GQSA W4S40%", "gqsa:w4s40g16"),
+    ];
+    let mut t = Table::new(
+        "Table 3: zero-shot accuracy (%) vs W2 and 2:4 — tiny-llama",
+        &["method", "avg-acc"],
+    );
+    for (label, spec) in specs {
+        let m = wb.variant(fam, spec)?;
+        let (_, avg) = wb.zero_shot_avg(&m, ZS_ITEMS)?;
+        t.row(vec![label.into(), fmt1(avg)]);
+    }
+    t.note("paper shape: GQSA W4S50 > W2; GQSA W4S40 ~ 2:4 at 3x compression");
+    t.emit(wb.results_dir(), "t3")
+}
+
+// ---------------------------------------------------------------------
+// Table 4 — decode latency vs output length
+// ---------------------------------------------------------------------
+
+fn t4(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Table 4: decode latency (ms), input len 15 — tiny-llama",
+        &["seqlen", "W4A16", "W4 2:4", "GQSA W4S50%"],
+    );
+    let w4 = wb.variant(fam, "w4")?;
+    let w424 = wb.variant(fam, "w4-24")?;
+    let gqsa = wb.variant(fam, "gqsa:w4s50g16")?;
+    for out_len in [128usize, 256, 512, 1024] {
+        let a = wb.decode_latency_ms(&w4, 15, out_len)?;
+        let b = wb.decode_latency_ms(&w424, 15, out_len)?;
+        let c = wb.decode_latency_ms(&gqsa, 15, out_len)?;
+        t.row(vec![out_len.to_string(), fmt1(a), fmt1(b), fmt1(c)]);
+    }
+    t.note("paper shape: GQSA fastest at every length (paper: 1.7x over W4A16, 1.36x over 2:4 at 128)");
+    t.emit(wb.results_dir(), "t4")
+}
+
+// ---------------------------------------------------------------------
+// Table 5 — training cost of BQPO / E2E-OQP (from python logs)
+// ---------------------------------------------------------------------
+
+fn t5(wb: &mut Workbench) -> Result<()> {
+    let mut t = Table::new(
+        "Table 5: GQSA optimization cost (from make-artifacts logs)",
+        &["stage", "seconds", "peak_rss_mb"],
+    );
+    let logs = wb.art.join("logs");
+    let mut found = false;
+    for fam in ["tiny-llama", "tiny-gpt", "tiny-qwen"] {
+        let p = logs.join(format!("compress.{fam}.w4s50g16.json"));
+        if let Ok(text) = std::fs::read_to_string(&p) {
+            if let Ok(Json::Arr(stages)) = Json::parse(&text) {
+                for st in &stages {
+                    let name = st.get("stage").and_then(Json::as_str).unwrap_or("?");
+                    let secs = st.get("seconds").and_then(Json::as_f64).unwrap_or(0.0);
+                    let rss = st.get("peak_rss_mb").and_then(Json::as_f64).unwrap_or(0.0);
+                    t.row(vec![format!("{fam}/{name}"), fmt1(secs), fmt1(rss)]);
+                    found = true;
+                }
+            }
+        }
+    }
+    if !found {
+        t.note("no compress logs found — run `make artifacts`");
+    }
+    t.note("paper shape: optimization cost << training-from-scratch; memory < fp checkpoint size");
+    t.emit(wb.results_dir(), "t5")
+}
+
+// ---------------------------------------------------------------------
+// Table 6 — BQPO vs BQPO+E2E-OQP ablation
+// ---------------------------------------------------------------------
+
+fn t6(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Table 6: two-stage optimization ablation — tiny-llama W4S50 G16",
+        &["method", "wiki_syn", "c4_syn"],
+    );
+    for (label, spec) in [
+        ("one-shot (no opt)", "gqsa:w4s50g16-oneshot"),
+        ("BQPO only", "gqsa:w4s50g16-bqpo"),
+        ("BQPO + E2E-OQP", "gqsa:w4s50g16"),
+    ] {
+        let m = wb.variant(fam, spec)?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        let c = wb.ppl(&m, "c4_syn", PPL_WINDOWS)?;
+        t.row(vec![label.into(), fmt2(w), fmt2(c)]);
+    }
+    t.note("paper shape: each stage improves ppl; BQPO+E2E-OQP best");
+    t.emit(wb.results_dir(), "t6")
+}
+
+// ---------------------------------------------------------------------
+// Table 7 — weight+activation quantization (W4A8S50%)
+// ---------------------------------------------------------------------
+
+fn t7(wb: &mut Workbench) -> Result<()> {
+    let mut t = Table::new(
+        "Table 7: GQSA with INT8 activations (W4A8S50%)",
+        &["family", "setting", "wiki_syn", "c4_syn"],
+    );
+    for fam in ["tiny-llama", "tiny-qwen"] {
+        for (label, spec) in [("W4A16S50%", "gqsa:w4s50g16"), ("W4A8S50%", "a8+gqsa:w4s50g16")] {
+            let m = wb.variant(fam, spec)?;
+            let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+            let c = wb.ppl(&m, "c4_syn", PPL_WINDOWS)?;
+            t.row(vec![fam.into(), label.into(), fmt2(w), fmt2(c)]);
+        }
+    }
+    t.note("paper shape: A8 costs little ppl on top of W4S50");
+    t.emit(wb.results_dir(), "t7")
+}
+
+// ---------------------------------------------------------------------
+// Table 8 — vs SparseGPT joint sparsification+quantization
+// ---------------------------------------------------------------------
+
+fn t8(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Table 8: joint sparsification & quantization — tiny-llama",
+        &["method", "wiki_syn", "c4_syn"],
+    );
+    for (label, spec) in [
+        ("SparseGPT 2:4", "24-obs"),
+        ("SparseGPT 2:4 + INT4", "w4-24"),
+        ("GQSA W4S50%", "gqsa:w4s50g16"),
+    ] {
+        let m = wb.variant(fam, spec)?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        let c = wb.ppl(&m, "c4_syn", PPL_WINDOWS)?;
+        t.row(vec![label.into(), fmt2(w), fmt2(c)]);
+    }
+    t.note("paper shape: GQSA beats 2:4+INT4 despite equal-or-better compression");
+    t.emit(wb.results_dir(), "t8")
+}
+
+// ---------------------------------------------------------------------
+// Table 9 — vs contemporaneous combos (SliM-like, DC-like)
+// ---------------------------------------------------------------------
+
+fn t9(wb: &mut Workbench) -> Result<()> {
+    let mut t = Table::new(
+        "Table 9: avg zero-shot accuracy (%) vs contemporaneous combos",
+        &["family", "SliM-like (W4+2:4)", "DC-like (W8A8+unstr20%)", "GQSA W4S50%"],
+    );
+    for fam in ["tiny-llama", "tiny-gpt"] {
+        let slim = wb.variant(fam, "w4-24")?;
+        let dc = wb.variant(fam, "a8+unstr:s20:w8")?;
+        let gqsa = wb.variant(fam, "gqsa:w4s50g16")?;
+        let (_, a) = wb.zero_shot_avg(&slim, ZS_ITEMS)?;
+        let (_, b) = wb.zero_shot_avg(&dc, ZS_ITEMS)?;
+        let (_, c) = wb.zero_shot_avg(&gqsa, ZS_ITEMS)?;
+        t.row(vec![fam.into(), fmt1(a), fmt1(b), fmt1(c)]);
+    }
+    t.note("paper shape: GQSA competitive or better at a higher compression rate");
+    t.emit(wb.results_dir(), "t9")
+}
+
+// ---------------------------------------------------------------------
+// Table 10 — pruning vs quantization vs both: ppl + decode speed
+// ---------------------------------------------------------------------
+
+fn t10(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let specs: Vec<(&str, String)> = vec![
+        ("0% (fp)", "fp".into()),
+        ("S20%", "sparse:s20:g16".into()),
+        ("S30%", "sparse:s30:g16".into()),
+        ("S40%", "sparse:s40:g16".into()),
+        ("S50%", "sparse:s50:g16".into()),
+        ("S60%", "sparse:s60:g16".into()),
+        ("W8", "w8".into()),
+        ("W4", "w4".into()),
+        ("W2", "w2".into()),
+        ("W4S50%", "gqsa:w4s50g16".into()),
+    ];
+    let mut t = Table::new(
+        "Table 10: single-axis vs combined compression — tiny-llama",
+        &["setting", "wiki_syn", "c4_syn", "decode ms (128 tok)"],
+    );
+    for (label, spec) in specs {
+        let m = wb.variant(fam, &spec)?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        let c = wb.ppl(&m, "c4_syn", PPL_WINDOWS)?;
+        let ms = wb.decode_latency_ms(&m, 15, 128)?;
+        t.row(vec![label.into(), fmt2(w), fmt2(c), fmt1(ms)]);
+    }
+    t.note("paper shape: W4S50 beats W2 and S60 on ppl AND is the fastest setting");
+    t.emit(wb.results_dir(), "t10")
+}
+
+// ---------------------------------------------------------------------
+// Table 11 — speed: W4 vs W2 vs W4S50
+// ---------------------------------------------------------------------
+
+fn t11(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Table 11: decode speed, quantization-only vs GQSA — tiny-llama",
+        &["setting", "decode ms (128 tok)", "speedup vs W4"],
+    );
+    let w4_ms = {
+        let m = wb.variant(fam, "w4")?;
+        wb.decode_latency_ms(&m, 15, 128)?
+    };
+    for (label, spec) in [("W4", "w4"), ("W2", "w2"), ("W4S50%", "gqsa:w4s50g16")] {
+        let m = wb.variant(fam, spec)?;
+        let ms = wb.decode_latency_ms(&m, 15, 128)?;
+        t.row(vec![label.into(), fmt1(ms), fmt2(w4_ms / ms)]);
+    }
+    t.note("paper shape: W4S50 faster than W2 (paper: 1.26x) — sparsity skips work, bits only shrink it");
+    t.emit(wb.results_dir(), "t11")
+}
+
+// ---------------------------------------------------------------------
+// Table 12 — vs vector quantization
+// ---------------------------------------------------------------------
+
+fn t12(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Table 12: uniform+sparse vs vector quantization — tiny-llama",
+        &["method", "wiki_syn", "c4_syn", "tokens/s"],
+    );
+    for (label, spec) in [("VQ W2 (AQLM/QuIP#-like)", "vq-w2"), ("GQSA W4S50%", "gqsa:w4s50g16")] {
+        let m = wb.variant(fam, spec)?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        let c = wb.ppl(&m, "c4_syn", PPL_WINDOWS)?;
+        let ms = wb.decode_latency_ms(&m, 15, 128)?;
+        let tps = 128.0 / (ms / 1000.0);
+        t.row(vec![label.into(), fmt2(w), fmt2(c), fmt1(tps)]);
+    }
+    t.note("VQ decodes through a dense codebook-reconstructed matrix (no fused kernel) — the paper's point");
+    t.emit(wb.results_dir(), "t12")
+}
+
+// ---------------------------------------------------------------------
+// Table 13 — serving throughput through the coordinator
+// ---------------------------------------------------------------------
+
+fn t13(wb: &mut Workbench) -> Result<()> {
+    use crate::coordinator::{Backend, EngineConfig, EngineCore, Request};
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Table 13: serving throughput (continuous batching, 8 requests x 64 tokens)",
+        &["setting", "tokens/s", "vs FP"],
+    );
+    let mut base_tps = 0.0;
+    for (label, spec) in [
+        ("FP", "fp"),
+        ("W8", "w8"),
+        ("W8S50%", "gqsa:w8s50g16"),
+        ("W4", "w4"),
+        ("W4S50%", "gqsa:w4s50g16"),
+    ] {
+        let model = wb.variant(fam, spec)?;
+        let cfg = model.cfg.clone();
+        let mut engine = EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: 4, prefill_chunk: 15, kv_capacity: 128 },
+        )?;
+        let corpus = wb.corpus("wiki_syn")?.to_vec();
+        for i in 0..8u64 {
+            let start = (i as usize * 37) % 1000;
+            let prompt: Vec<u32> =
+                corpus[start..start + 15].iter().map(|&b| u32::from(b)).collect();
+            engine.submit(Request::new(i, prompt, 64));
+        }
+        let t0 = std::time::Instant::now();
+        let out = engine.run_to_completion()?;
+        let secs = t0.elapsed().as_secs_f64();
+        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        let tps = tokens as f64 / secs;
+        if label == "FP" {
+            base_tps = tps;
+        }
+        t.row(vec![label.into(), fmt1(tps), fmt2(tps / base_tps)]);
+    }
+    t.note("paper shape: W4S50 > W4 > W8S50 > W8 > FP (paper: W4S50 ~3.7x FP, +60% over W4)");
+    t.emit(wb.results_dir(), "t13")
+}
+
+// ---------------------------------------------------------------------
+// Table 16 / Figure 7 — latency + memory grid
+// ---------------------------------------------------------------------
+
+fn t16(wb: &mut Workbench, id: &str) -> Result<()> {
+    let fam = "tiny-llama";
+    let specs: Vec<(&str, String)> = vec![
+        ("fp32", "fp".into()),
+        ("w8a16", "w8".into()),
+        ("w8a16+sp0.5", "gqsa:w8s50g16".into()),
+        ("w4a16", "w4".into()),
+        ("w4a16+g16+sp0.3", "gqsa:w4s30g16".into()),
+        ("w4a16+g16+sp0.4", "gqsa:w4s40g16".into()),
+        ("w4a16+g16+sp0.5", "gqsa:w4s50g16".into()),
+    ];
+    let mut t = Table::new(
+        format!("Table {id}: latency (ms) and memory (MB), input len 15 — tiny-llama"),
+        &["setting", "128 ms", "128 MB", "256 ms", "256 MB", "512 ms", "512 MB", "1024 ms", "1024 MB"],
+    );
+    for (label, spec) in specs {
+        let m = wb.variant(fam, &spec)?;
+        let mut cells = vec![label.to_string()];
+        for out_len in [128usize, 256, 512, 1024] {
+            let ms = wb.decode_latency_ms(&m, 15, out_len)?;
+            let bytes = wb.memory_bytes(&m, 15 + out_len);
+            cells.push(fmt1(ms));
+            cells.push(mb(bytes));
+        }
+        t.row(cells);
+    }
+    t.note("paper shape: latency and memory fall monotonically with bits and sparsity; w4+sp0.5 best");
+    t.emit(wb.results_dir(), id)
+}
+
+// ---------------------------------------------------------------------
+// Figure 1 — salient-weight distribution (segmented rows)
+// ---------------------------------------------------------------------
+
+fn fig1(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let fp = wb.fp(fam)?;
+    let hess = wb.hessians(fam)?.clone();
+    let mut t = Table::new(
+        "Figure 1: top-1% salient weight layout — run-length structure along rows",
+        &["layer", "mean run len (salient)", "expected if random", "segmented?"],
+    );
+    for name in ["blk0.attn.wq", "blk0.attn.wk", "blk2.mlp.w1"] {
+        let w = fp.get(name)?;
+        let s = saliency_scores(w, Some(&hess[name]), SaliencyMetric::Hessian);
+        // top 1% mask
+        let mut vals: Vec<f32> = s.data.clone();
+        vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thresh = vals[vals.len() / 100];
+        // mean run length of salient cells along rows
+        let (mut runs, mut run_total) = (0usize, 0usize);
+        for r in 0..s.rows {
+            let mut len = 0usize;
+            for c in 0..s.cols {
+                if s.at(r, c) >= thresh {
+                    len += 1;
+                } else if len > 0 {
+                    runs += 1;
+                    run_total += len;
+                    len = 0;
+                }
+            }
+            if len > 0 {
+                runs += 1;
+                run_total += len;
+            }
+        }
+        let mean_run = run_total as f64 / runs.max(1) as f64;
+        // under a random 1% scatter, mean run length ~ 1/(1-p) ~ 1.01
+        let expected = 1.0 / (1.0 - 0.01);
+        t.row(vec![
+            name.into(),
+            fmt2(mean_run),
+            fmt2(expected),
+            (if mean_run > expected * 1.15 { "yes" } else { "no" }).into(),
+        ]);
+    }
+    t.note("paper claim: salient weights cluster in segments along rows -> group pruning is natural");
+    t.emit(wb.results_dir(), "f1")
+}
+
+// ---------------------------------------------------------------------
+// Figure 5 / Appendix I — Slice-K vs Stream-K on the simulator
+// ---------------------------------------------------------------------
+
+fn fig5(wb: &mut Workbench) -> Result<()> {
+    let mut t = Table::new(
+        "Figure 5: scheduler comparison on the multi-SM simulator",
+        &["workload", "slice-k util", "stream-k util", "speedup"],
+    );
+    let cm = CostModel::new(GpuSpec::default());
+    // real layer workloads from the compressed model + synthetic skew
+    let gm = wb.gqs("tiny-llama", "w4s50g16")?;
+    for (label, wl) in [
+        (
+            "gqsa layer blk0.mlp.w1 (real)".to_string(),
+            Workload::from_layer(&gm.layers["blk0.mlp.w1"]),
+        ),
+        ("uniform (no skew)".to_string(), Workload::synthetic(4096, 8, 0.0, 1.0, 1)),
+        ("skew 5% x16".to_string(), Workload::synthetic(4096, 8, 0.05, 16.0, 2)),
+        ("skew 3% x32".to_string(), Workload::synthetic(4096, 8, 0.03, 32.0, 3)),
+    ] {
+        let slice = simulate(&slice_k::decompose(&wl, 8), &cm);
+        // adaptive CTA count: small (real tiny-model) layers would drown
+        // a full 4-wave grid in launch overhead
+        let n_ctas = stream_k::adaptive_cta_count(wl.total_groups(), cm.spec.n_sm, 4, 64);
+        let stream = simulate(&stream_k::decompose(&wl, n_ctas), &cm);
+        t.row(vec![
+            label,
+            fmt2(slice.utilization),
+            fmt2(stream.utilization),
+            fmt2(slice.makespan / stream.makespan),
+        ]);
+    }
+    t.note("paper claim: task-centric decomposition fixes stragglers, 1.3-1.5x per-operator");
+    t.emit(wb.results_dir(), "f5")
+}
+
+// ---------------------------------------------------------------------
+// Figure 6 — GEMV kernel speed vs sparsity and group size
+// ---------------------------------------------------------------------
+
+fn fig6(wb: &mut Workbench) -> Result<()> {
+    let (n, k) = (1024usize, 1024usize);
+    let mut rng = XorShift::new(99);
+    let w = Mat::randn(n, k, &mut rng);
+    let x = rng.normal_vec(k);
+    let mut y = vec![0.0f32; n];
+    let mut scratch: Vec<f32> = Vec::new();
+
+    // 2:4 baseline
+    let w24 = prune_24(&w, None, SaliencyMetric::Magnitude);
+    let k24 = Semi24Kernel::encode(&w24, 4, 16);
+    let r24 = Bench::new("w4 2:4").run(|| k24.gemv(&x, &mut y));
+    // dense quant + fp
+    let qd = QuantDense::encode(&w, 4, 16);
+    let rq = Bench::new("w4 dense").run(|| qd.gemv(&x, &mut y, &mut scratch));
+    let rfp = Bench::new("fp32 dense").run(|| dense_gemv(&w, &x, &mut y));
+
+    let mut t = Table::new(
+        format!("Figure 6: GQS GEMV ({n}x{k}) vs baselines"),
+        &["kernel", "us/iter", "speedup vs 2:4"],
+    );
+    t.row(vec!["fp32 dense".into(), fmt1(rfp.mean_us()), fmt2(r24.mean_us() / rfp.mean_us())]);
+    t.row(vec!["w4 dense".into(), fmt1(rq.mean_us()), fmt2(r24.mean_us() / rq.mean_us())]);
+    t.row(vec!["w4 2:4".into(), fmt1(r24.mean_us()), "1.00".into()]);
+    for s in [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8] {
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, s);
+        let layer = GqsLayer::encode(&w, &mask, 4);
+        let r = Bench::new("gqs").run(|| crate::gqs::gemv::gqs_gemv(&layer, &x, &mut y, &mut scratch));
+        t.row(vec![
+            format!("GQS W4 S{:.0}% G16", s * 100.0),
+            fmt1(r.mean_us()),
+            fmt2(r24.mean_us() / r.mean_us()),
+        ]);
+    }
+    for g in [8usize, 32, 64, 128] {
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, 0.5);
+        let layer = GqsLayer::encode(&w, &mask, 4);
+        let r = Bench::new("gqs").run(|| crate::gqs::gemv::gqs_gemv(&layer, &x, &mut y, &mut scratch));
+        t.row(vec![
+            format!("GQS W4 S50% G{g}"),
+            fmt1(r.mean_us()),
+            fmt2(r24.mean_us() / r.mean_us()),
+        ]);
+    }
+    t.note("paper shape: GQS beats 2:4 at every G; speed grows with sparsity (paper: 3x at S50)");
+    t.emit(wb.results_dir(), "f6")
+}
+
+// ---------------------------------------------------------------------
+// Figure 8 — ppl vs sparsity and group size (ablations)
+// ---------------------------------------------------------------------
+
+fn fig8(wb: &mut Workbench) -> Result<()> {
+    let fam = "tiny-llama";
+    let mut t = Table::new(
+        "Figure 8 (left): ppl vs sparsity — tiny-llama W4 G16",
+        &["sparsity", "wiki_syn"],
+    );
+    for s in [20, 30, 40, 50, 60, 70, 80] {
+        let m = wb.variant(fam, &format!("gqsa:w4s{s}g16"))?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        t.row(vec![format!("{s}%"), fmt2(w)]);
+    }
+    t.note("paper shape: graceful to ~50-60%, knee after; no collapse at 80%");
+    t.emit(wb.results_dir(), "f8-left")?;
+
+    let mut t2 = Table::new(
+        "Figure 8 (right): ppl vs group size — tiny-llama W4 S50",
+        &["group", "wiki_syn"],
+    );
+    for g in [8, 16, 32, 64, 128] {
+        let m = wb.variant(fam, &format!("gqsa:w4s50g{g}"))?;
+        let w = wb.ppl(&m, "wiki_syn", PPL_WINDOWS)?;
+        t2.row(vec![format!("G{g}"), fmt2(w)]);
+    }
+    t2.note("paper shape: ppl degrades as G grows; G16 the accuracy/speed sweet spot");
+    t2.emit(wb.results_dir(), "f8-right")
+}

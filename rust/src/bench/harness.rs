@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (criterion is not vendored in this offline
+//! image — see Cargo.toml): warmup + timed iterations with summary
+//! statistics, good enough for the kernel/e2e comparisons where only
+//! *ratios* between variants matter.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_secs: f64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), warmup_iters: 3, min_iters: 10, max_iters: 2000, target_secs: 0.6 }
+    }
+
+    pub fn quick(name: impl Into<String>) -> Self {
+        Self { name: name.into(), warmup_iters: 1, min_iters: 3, max_iters: 200, target_secs: 0.15 }
+    }
+
+    /// Time `f`; returns per-iteration stats in microseconds.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            let done = samples.len();
+            if done >= self.max_iters {
+                break;
+            }
+            if done >= self.min_iters && start.elapsed().as_secs_f64() > self.target_secs {
+                break;
+            }
+        }
+        BenchResult { name: self.name.clone(), us: Summary::from(&samples) }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub us: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.us.mean
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.1} us/iter (p50 {:>8.1}, n={})",
+            self.name, self.us.mean, self.us.p50, self.us.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::quick("spin").run(|| {
+            let mut acc = 0u64;
+            for i in 0..10000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.mean_us() > 0.0);
+        assert!(r.us.n >= 3);
+    }
+
+    #[test]
+    fn relative_ordering_detectable() {
+        // p50 is robust to scheduler noise on a loaded 1-core box
+        let small = Bench::quick("small").run(|| {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        let big = Bench::quick("big").run(|| {
+            std::hint::black_box((0..1_000_000u64).sum::<u64>());
+        });
+        assert!(big.us.p50 > small.us.p50, "{} vs {}", big.us.p50, small.us.p50);
+    }
+}

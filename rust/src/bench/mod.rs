@@ -1,0 +1,12 @@
+//! Experiment harness: builds every compression variant the paper's
+//! tables compare, evaluates perplexity / zero-shot / latency / memory,
+//! and regenerates each table and figure (see DESIGN.md §5 for the map).
+
+pub mod experiments;
+pub mod harness;
+pub mod tables;
+pub mod variants;
+
+pub use harness::Bench;
+pub use tables::Table;
+pub use variants::Workbench;

@@ -1,0 +1,281 @@
+//! The variant factory: builds a `Transformer` for every compression
+//! setting the paper's tables compare, from the build-time artifacts.
+//!
+//! Spec grammar (examples):
+//!   fp                     dense FP32 checkpoint
+//!   w8 / w4 / w2           per-group RTN weight-only quantization
+//!   w2-gptq                GPTQ/OBS W2 (Hessian calibrated)
+//!   24-hessian / 24-wanda  2:4 pruning, fp values (SparseGPT / Wanda)
+//!   24-obs                 2:4 with OBS error feedback
+//!   w4-24                  2:4 pruned + 4-bit quantized (Semi24 kernel)
+//!   gqsa:w4s50g16          load the optimized .gqsa artifact by tag
+//!   oneshot:s50:g16:b4     one-shot GQSA from fp (no BQPO/E2E)
+//!   sparse:s50:g16         group-pruned, unquantized (BSR f32)
+//!   struct:25              structured row pruning, 25%
+//!   unstr:s20:w8           unstructured 20% + W8 (DC-W8A8 analogue)
+//!   vq-w2                  k-means VQ at ~2 bits/weight (AQLM/QuIP#-like)
+//!   a8+<spec>              any of the above with dynamic INT8 activations
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gqs::format::{FpModel, GqsModel};
+use crate::gqs::gemv_dense::Semi24Kernel;
+use crate::model::eval;
+use crate::model::transformer::LinearKind;
+use crate::model::{KvCache, Scratch, Transformer};
+use crate::quant::gptq::gptq_quantize;
+use crate::quant::vq::vq_quantize;
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::group_prune::group_prune;
+use crate::sparse::saliency::SaliencyMetric;
+use crate::sparse::semi24::{prune_24, prune_24_obs};
+use crate::sparse::structured::prune_rows;
+use crate::sparse::unstructured::prune_unstructured;
+use crate::util::Mat;
+
+pub struct Workbench {
+    pub art: PathBuf,
+    corpora: BTreeMap<String, Vec<u8>>,
+    hessians: BTreeMap<String, BTreeMap<String, Mat>>,
+    pub calib_seqs: usize,
+    pub calib_ctx: usize,
+}
+
+impl Workbench {
+    pub fn new(art: impl Into<PathBuf>) -> Self {
+        Self {
+            art: art.into(),
+            corpora: BTreeMap::new(),
+            hessians: BTreeMap::new(),
+            calib_seqs: 6,
+            calib_ctx: 96,
+        }
+    }
+
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn corpus(&mut self, name: &str) -> Result<&[u8]> {
+        if !self.corpora.contains_key(name) {
+            let p = self.art.join("corpus").join(format!("{name}.bin"));
+            let data = std::fs::read(&p).with_context(|| format!("read {}", p.display()))?;
+            self.corpora.insert(name.to_string(), data);
+        }
+        Ok(self.corpora.get(name).unwrap())
+    }
+
+    pub fn fp(&self, family: &str) -> Result<FpModel> {
+        FpModel::load(self.art.join("models").join(format!("{family}.fp.bin")))
+    }
+
+    pub fn gqs(&self, family: &str, tag: &str) -> Result<GqsModel> {
+        GqsModel::load(self.art.join("models").join(format!("{family}.{tag}.gqsa")))
+    }
+
+    /// Calibration Hessians for a family (cached; ~seconds once).
+    pub fn hessians(&mut self, family: &str) -> Result<&BTreeMap<String, Mat>> {
+        if !self.hessians.contains_key(family) {
+            let fp = self.fp(family)?;
+            let mut t = Transformer::from_fp(&fp)?;
+            let corpus = self.corpus("train")?.to_vec();
+            let h = t.calibrate_hessians(&corpus, self.calib_seqs, self.calib_ctx)?;
+            self.hessians.insert(family.to_string(), h);
+        }
+        Ok(self.hessians.get(family).unwrap())
+    }
+
+    /// Build a model variant by spec string.
+    pub fn variant(&mut self, family: &str, spec: &str) -> Result<Transformer> {
+        if let Some(rest) = spec.strip_prefix("a8+") {
+            let mut t = self.variant(family, rest)?;
+            t.act_quant_i8 = true;
+            return Ok(t);
+        }
+        let fp = self.fp(family)?;
+        let t = match spec {
+            "fp" => Transformer::from_fp(&fp)?,
+            "w8" => Transformer::from_fp_quantized(&fp, 8, 16)?,
+            "w4" => Transformer::from_fp_quantized(&fp, 4, 16)?,
+            "w2" => Transformer::from_fp_quantized(&fp, 2, 16)?,
+            "w2-gptq" => {
+                let hess = self.hessians(family)?.clone();
+                Transformer::from_fp_with(&fp, |name, w| {
+                    gptq_quantize(w, &hess[name], 2, 16)
+                })?
+            }
+            "24-hessian" => {
+                let hess = self.hessians(family)?.clone();
+                Transformer::from_fp_with(&fp, |name, w| {
+                    prune_24(w, hess.get(name), SaliencyMetric::Hessian)
+                })?
+            }
+            "24-wanda" => {
+                let hess = self.hessians(family)?.clone();
+                Transformer::from_fp_with(&fp, |name, w| {
+                    prune_24(w, hess.get(name), SaliencyMetric::Wanda)
+                })?
+            }
+            "24-obs" => {
+                let hess = self.hessians(family)?.clone();
+                Transformer::from_fp_with(&fp, |name, w| {
+                    prune_24_obs(w, &hess[name], SaliencyMetric::Hessian)
+                })?
+            }
+            "w4-24" => {
+                let hess = self.hessians(family)?.clone();
+                let mut t = Transformer::from_fp(&fp)?;
+                for name in fp.config.linear_names() {
+                    let w24 = prune_24_obs(fp.get(&name)?, &hess[&name], SaliencyMetric::Hessian);
+                    t.linears
+                        .insert(name.clone(), LinearKind::Semi24(Semi24Kernel::encode(&w24, 4, 16)));
+                }
+                t
+            }
+            "vq-w2" => Transformer::from_fp_with(&fp, |name, w| {
+                // vdim 4 + 256-entry codebook ~= 2 bits/weight
+                let seed = name.len() as u64 + 7;
+                vq_quantize(w, 4, 8, 8, seed).mat
+            })?,
+            _ => {
+                if let Some(tag) = spec.strip_prefix("gqsa:") {
+                    let gm = self.gqs(family, tag)?;
+                    Transformer::from_gqs(&gm)?
+                } else if let Some(rest) = spec.strip_prefix("oneshot:") {
+                    let (s, g, b) = parse_sgb(rest)?;
+                    let hess = self.hessians(family)?.clone();
+                    Transformer::from_fp_gqs_oneshot(&fp, Some(&hess), b, g, s)?
+                } else if let Some(rest) = spec.strip_prefix("sparse:") {
+                    let (s, g, _) = parse_sgb(rest)?;
+                    let hess = self.hessians(family)?.clone();
+                    let mut t = Transformer::from_fp(&fp)?;
+                    for name in fp.config.linear_names() {
+                        let w = fp.get(&name)?;
+                        let mask =
+                            group_prune(w, hess.get(&name), SaliencyMetric::Hessian, g, s);
+                        t.linears
+                            .insert(name.clone(), LinearKind::BsrF32(BsrMatrix::encode(w, &mask)));
+                    }
+                    t
+                } else if let Some(pct) = spec.strip_prefix("struct:") {
+                    let ratio: f64 = pct.parse::<f64>()? / 100.0;
+                    Transformer::from_fp_with(&fp, |name, w| {
+                        // prune rows of the expanding projections only
+                        // (contracting ones keep output dimensionality)
+                        if name.ends_with("mlp.w1") || name.ends_with("mlp.w2") {
+                            prune_rows(w, ratio).0
+                        } else {
+                            w.clone()
+                        }
+                    })?
+                } else if let Some(rest) = spec.strip_prefix("unstr:") {
+                    let (s, _, b) = parse_sgb(rest)?;
+                    let hess = self.hessians(family)?.clone();
+                    let mut t = Transformer::from_fp_with(&fp, |name, w| {
+                        prune_unstructured(w, hess.get(name), SaliencyMetric::Wanda, s)
+                    })?;
+                    if b < 32 {
+                        for name in fp.config.linear_names() {
+                            if let Some(LinearKind::Dense(w)) = t.linears.get(&name) {
+                                let q = crate::quant::rtn::rtn_quantize(w, b, 16);
+                                t.linears.insert(name, LinearKind::Dense(q.mat));
+                            }
+                        }
+                    }
+                    t
+                } else {
+                    bail!("unknown variant spec '{spec}'");
+                }
+            }
+        };
+        Ok(t)
+    }
+
+    // ------------------------------------------------------------------
+    // Evaluations
+    // ------------------------------------------------------------------
+
+    pub fn ppl(&mut self, model: &Transformer, corpus: &str, windows: usize) -> Result<f64> {
+        let ctx = 128;
+        let data = self.corpus(corpus)?.to_vec();
+        eval::perplexity(model, &data, ctx, windows)
+    }
+
+    pub fn zero_shot_avg(&mut self, model: &Transformer, n_per_task: usize) -> Result<(Vec<(String, f64)>, f64)> {
+        let corpus = self.corpus("wiki_syn")?.to_vec();
+        let rows = eval::zero_shot_suite(model, &corpus, n_per_task, 42)?;
+        let avg = rows.iter().map(|(_, a)| a).sum::<f64>() / rows.len() as f64;
+        Ok((rows, avg))
+    }
+
+    /// Serving latency: prefill `input_len` then decode `output_len`
+    /// tokens; returns milliseconds.
+    pub fn decode_latency_ms(
+        &mut self,
+        model: &Transformer,
+        input_len: usize,
+        output_len: usize,
+    ) -> Result<f64> {
+        let corpus = self.corpus("wiki_syn")?;
+        let prompt: Vec<u32> = corpus[..input_len].iter().map(|&b| u32::from(b)).collect();
+        let mut kv = KvCache::new(
+            model.cfg.n_layers,
+            model.cfg.n_heads,
+            model.cfg.head_dim(),
+            input_len + output_len + 1,
+        );
+        let mut scratch = Scratch::new(&model.cfg);
+        let t0 = std::time::Instant::now();
+        model.prefill(&prompt, &mut kv, &mut scratch)?;
+        let mut tok = crate::model::sampler::argmax(&scratch.logits) as u32;
+        for _ in 0..output_len.saturating_sub(1) {
+            model.decode_step(tok, &mut kv, &mut scratch)?;
+            tok = crate::model::sampler::argmax(&scratch.logits) as u32;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1000.0)
+    }
+
+    /// Model weight memory in bytes (plus the KV cache for a given len).
+    pub fn memory_bytes(&self, model: &Transformer, seq_len: usize) -> usize {
+        let kv = model.cfg.n_layers * 2 * model.cfg.n_heads * seq_len * model.cfg.head_dim() * 4;
+        model.weight_bytes() + kv
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.art.join("results")
+    }
+}
+
+fn parse_sgb(s: &str) -> Result<(f64, usize, u32)> {
+    // "s50:g16:b4" with defaults g16 b4
+    let mut sparsity = 0.5;
+    let mut group = 16;
+    let mut bits = 4;
+    for part in s.split(':') {
+        if let Some(v) = part.strip_prefix('s') {
+            sparsity = v.parse::<f64>()? / 100.0;
+        } else if let Some(v) = part.strip_prefix('g') {
+            group = v.parse()?;
+        } else if let Some(v) = part.strip_prefix('b') {
+            bits = v.parse()?;
+        } else if let Some(v) = part.strip_prefix('w') {
+            bits = v.parse()?;
+        }
+    }
+    Ok((sparsity, group, bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse_sgb("s50:g16:b4").unwrap(), (0.5, 16, 4));
+        assert_eq!(parse_sgb("s20").unwrap(), (0.2, 16, 4));
+        assert_eq!(parse_sgb("s20:w8").unwrap(), (0.2, 16, 8));
+    }
+}

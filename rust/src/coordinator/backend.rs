@@ -1,0 +1,135 @@
+//! Compute backends for the engine core.
+//!
+//! `Native` runs the rust GQS/quantized kernels (the paper's engine);
+//! `Pjrt` executes the AOT-compiled jax decode step through the PJRT
+//! runtime (the three-layer path). Both expose the same single-token
+//! decode interface so the scheduler is backend-agnostic.
+
+use anyhow::{bail, Result};
+
+use crate::model::{KvCache, Scratch, Transformer};
+use crate::runtime::Artifact;
+
+pub enum Backend {
+    Native(Transformer),
+    Pjrt(PjrtBackend),
+}
+
+impl Backend {
+    pub fn vocab(&self) -> usize {
+        match self {
+            Backend::Native(t) => t.cfg.vocab,
+            Backend::Pjrt(p) => p.vocab,
+        }
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            Backend::Native(t) => t.weight_bytes(),
+            Backend::Pjrt(_) => 0, // resident in PJRT; accounted at load
+        }
+    }
+}
+
+/// Per-sequence state, backend-specific.
+pub enum SeqState {
+    Native { kv: KvCache },
+    Pjrt { kv: xla::Literal, pos: usize },
+}
+
+/// PJRT decode backend: one compiled decode artifact, KV as literals.
+pub struct PjrtBackend {
+    pub artifact: Artifact,
+    pub vocab: usize,
+    pub kv_shape: Vec<usize>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact: Artifact) -> Result<Self> {
+        let kv_spec = artifact
+            .manifest
+            .runtime_params
+            .iter()
+            .find(|p| p.name == "kv")
+            .ok_or_else(|| anyhow::anyhow!("decode artifact has no kv param"))?;
+        let kv_shape = kv_spec.shape.clone();
+        let vocab = artifact
+            .manifest
+            .outputs
+            .first()
+            .map(|o| o.numel())
+            .unwrap_or(0);
+        Ok(Self { artifact, vocab, kv_shape })
+    }
+
+    pub fn fresh_kv(&self) -> Result<xla::Literal> {
+        let numel: usize = self.kv_shape.iter().product();
+        Artifact::lit_f32(&vec![0.0; numel], &self.kv_shape)
+    }
+}
+
+impl Backend {
+    /// Allocate per-sequence state with `capacity` KV slots.
+    pub fn new_seq(&self, capacity: usize) -> Result<SeqState> {
+        match self {
+            Backend::Native(t) => Ok(SeqState::Native {
+                kv: KvCache::new(t.cfg.n_layers, t.cfg.n_heads, t.cfg.head_dim(), capacity),
+            }),
+            Backend::Pjrt(p) => Ok(SeqState::Pjrt { kv: p.fresh_kv()?, pos: 0 }),
+        }
+    }
+
+    /// One decode step; returns logits into `scratch.logits`.
+    pub fn step(&self, token: u32, seq: &mut SeqState, scratch: &mut Scratch) -> Result<()> {
+        match (self, seq) {
+            (Backend::Native(t), SeqState::Native { kv }) => t.decode_step(token, kv, scratch),
+            (Backend::Pjrt(p), SeqState::Pjrt { kv, pos }) => {
+                // move kv out, replace after the call
+                let numel: usize = p.kv_shape.iter().product();
+                let old = std::mem::replace(kv, Artifact::lit_f32(&[], &[0]).unwrap_or_else(|_| xla::Literal::scalar(0f32)));
+                let out = p.artifact.run(vec![
+                    Artifact::lit_i32_scalar(token as i32),
+                    Artifact::lit_i32_scalar(*pos as i32),
+                    old,
+                ])?;
+                let mut it = out.into_iter();
+                let logits = it.next().ok_or_else(|| anyhow::anyhow!("no logits"))?;
+                let new_kv = it.next().ok_or_else(|| anyhow::anyhow!("no kv out"))?;
+                let lv = Artifact::to_vec_f32(&logits)?;
+                if lv.len() != scratch.logits.len() {
+                    bail!("logit size mismatch: {} vs {}", lv.len(), scratch.logits.len());
+                }
+                scratch.logits.copy_from_slice(&lv);
+                *kv = new_kv;
+                *pos += 1;
+                let _ = numel;
+                Ok(())
+            }
+            _ => bail!("sequence state does not match backend"),
+        }
+    }
+
+    /// Current sequence length.
+    pub fn seq_len(&self, seq: &SeqState) -> usize {
+        match seq {
+            SeqState::Native { kv } => kv.len(),
+            SeqState::Pjrt { pos, .. } => *pos,
+        }
+    }
+
+    /// Reset a sequence for reuse (KV pooling).
+    pub fn reset_seq(&self, seq: &mut SeqState) -> Result<()> {
+        match (self, seq) {
+            (_, SeqState::Native { kv }) => {
+                kv.reset();
+                Ok(())
+            }
+            (Backend::Pjrt(p), SeqState::Pjrt { kv, pos }) => {
+                *kv = p.fresh_kv()?;
+                *pos = 0;
+                Ok(())
+            }
+            _ => bail!("mismatched reset"),
+        }
+    }
+}

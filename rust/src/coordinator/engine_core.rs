@@ -1,0 +1,326 @@
+//! The engine core: continuous batching with chunked prefill.
+//!
+//! Each engine iteration:
+//!   1. admit waiting requests while slots are free (up to `max_batch`),
+//!   2. for every active sequence still in prefill, feed up to
+//!      `prefill_chunk` prompt tokens,
+//!   3. for every sequence in decode, generate one token,
+//!   4. retire finished sequences, returning their KV slot to the pool.
+//!
+//! Prefill and decode interleave across iterations, so a long prompt
+//! never blocks other requests' token cadence — the scheduling concern
+//! the serving tables (4/13/16) measure.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::backend::{Backend, SeqState};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, RequestTiming, Response};
+use crate::model::sampler::{sample, Sampling};
+use crate::model::Scratch;
+use crate::util::XorShift;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub prefill_chunk: usize,
+    pub kv_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, prefill_chunk: 16, kv_capacity: 288 }
+    }
+}
+
+struct ActiveSeq {
+    req: Request,
+    state: SeqState,
+    /// tokens of prompt already consumed
+    fed: usize,
+    generated: Vec<u32>,
+    submitted: Instant,
+    prefill_done: Option<Instant>,
+    timing: RequestTiming,
+}
+
+/// Single-threaded engine with continuous batching. Drive it with
+/// `submit` + `tick` (or wrap in `Server` for a threaded front-end).
+pub struct EngineCore {
+    pub backend: Backend,
+    pub cfg: EngineConfig,
+    pub metrics: Metrics,
+    waiting: VecDeque<(Request, Instant)>,
+    active: Vec<ActiveSeq>,
+    pool: Vec<SeqState>,
+    scratch: Scratch,
+    rng: XorShift,
+    finished: Vec<Response>,
+}
+
+impl EngineCore {
+    pub fn new(backend: Backend, model_cfg: &crate::model::ModelConfig, cfg: EngineConfig) -> Result<Self> {
+        let mut pool = Vec::with_capacity(cfg.max_batch);
+        for _ in 0..cfg.max_batch {
+            pool.push(backend.new_seq(cfg.kv_capacity)?);
+        }
+        Ok(Self {
+            backend,
+            cfg,
+            metrics: Metrics::default(),
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            pool,
+            scratch: Scratch::new(model_cfg),
+            rng: XorShift::new(0xC0FFEE),
+            finished: Vec::new(),
+        })
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.waiting.push_back((req, Instant::now()));
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.active.is_empty()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Drain finished responses.
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// One engine iteration. Returns number of tokens processed.
+    pub fn tick(&mut self) -> Result<usize> {
+        let t0 = Instant::now();
+        self.metrics.engine_iterations += 1;
+        // 1. admit
+        while self.active.len() < self.cfg.max_batch && !self.waiting.is_empty() {
+            let (req, submitted) = self.waiting.pop_front().unwrap();
+            let mut state = match self.pool.pop() {
+                Some(s) => s,
+                None => self.backend.new_seq(self.cfg.kv_capacity)?,
+            };
+            self.backend.reset_seq(&mut state)?;
+            let mut timing = RequestTiming::default();
+            timing.queued_us = submitted.elapsed().as_micros() as u64;
+            self.active.push(ActiveSeq {
+                req,
+                state,
+                fed: 0,
+                generated: Vec::new(),
+                submitted,
+                prefill_done: None,
+                timing,
+            });
+        }
+
+        // 2+3. step each active sequence
+        let mut processed = 0usize;
+        let mut still_active = Vec::with_capacity(self.active.len());
+        for mut seq in std::mem::take(&mut self.active) {
+            let prompt_len = seq.req.prompt.len();
+            if seq.fed < prompt_len {
+                // chunked prefill
+                let take = self.cfg.prefill_chunk.min(prompt_len - seq.fed);
+                for i in 0..take {
+                    let tok = seq.req.prompt[seq.fed + i];
+                    self.backend.step(tok, &mut seq.state, &mut self.scratch)?;
+                    processed += 1;
+                }
+                seq.fed += take;
+                if seq.fed == prompt_len {
+                    seq.prefill_done = Some(Instant::now());
+                    seq.timing.prefill_us =
+                        seq.submitted.elapsed().as_micros() as u64 - seq.timing.queued_us;
+                    // first token comes from the last prefill logits
+                    let tok = self.sample_token(&seq.req);
+                    seq.generated.push(tok);
+                    seq.timing.ttft_us = seq.submitted.elapsed().as_micros() as u64;
+                    processed += 1;
+                }
+                if !self.seq_finished(&seq) {
+                    still_active.push(seq);
+                    continue;
+                }
+            } else {
+                // decode one token
+                let last = *seq.generated.last().unwrap_or(&0);
+                self.backend.step(last, &mut seq.state, &mut self.scratch)?;
+                let tok = self.sample_token(&seq.req);
+                seq.generated.push(tok);
+                processed += 1;
+                if !self.seq_finished(&seq) {
+                    still_active.push(seq);
+                    continue;
+                }
+            }
+            // finished
+            seq.timing.total_us = seq.submitted.elapsed().as_micros() as u64;
+            seq.timing.decode_us =
+                seq.timing.total_us - seq.timing.queued_us - seq.timing.prefill_us;
+            self.metrics.record(&seq.timing, prompt_len, seq.generated.len());
+            self.finished.push(Response {
+                id: seq.req.id,
+                tokens: seq.generated,
+                timing: seq.timing,
+                n_prompt: prompt_len,
+            });
+            self.pool.push(seq.state);
+        }
+        self.active = still_active;
+        self.metrics.add_busy(t0.elapsed());
+        Ok(processed)
+    }
+
+    /// Run until all submitted work completes; returns responses.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            self.tick()?;
+            out.extend(self.take_finished());
+        }
+        Ok(out)
+    }
+
+    fn sample_token(&mut self, req: &Request) -> u32 {
+        let mode: Sampling = req.sampling.to_sampling();
+        sample(&self.scratch.logits, mode, &mut self.rng)
+    }
+
+    fn seq_finished(&self, seq: &ActiveSeq) -> bool {
+        if seq.generated.len() >= seq.req.max_new_tokens {
+            return true;
+        }
+        if let (Some(stop), Some(&last)) = (seq.req.stop_token, seq.generated.last()) {
+            if last == stop {
+                return true;
+            }
+        }
+        // KV capacity guard
+        self.backend.seq_len(&seq.state) + 1 >= self.cfg.kv_capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::demo_config;
+    use crate::model::transformer::{random_fp, Transformer};
+
+    fn engine(max_batch: usize) -> EngineCore {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 21);
+        let t = Transformer::from_fp(&fp).unwrap();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig { max_batch, prefill_chunk: 4, kv_capacity: 96 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(2);
+        e.submit(Request::new(1, vec![1, 2, 3], 5));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tokens.len(), 5);
+        assert!(out[0].tokens.iter().all(|&t| t < 64));
+        assert!(out[0].timing.total_us > 0);
+    }
+
+    #[test]
+    fn batch_of_requests_all_complete() {
+        let mut e = engine(3);
+        for i in 0..7 {
+            e.submit(Request::new(i, vec![(i % 60) as u32; 6], 4));
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 7);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn greedy_is_deterministic_across_batching() {
+        // continuous batching must not change a request's tokens
+        let mut e1 = engine(1);
+        e1.submit(Request::new(1, vec![5, 6, 7, 8], 6));
+        let solo = e1.run_to_completion().unwrap();
+
+        let mut e2 = engine(3);
+        e2.submit(Request::new(1, vec![5, 6, 7, 8], 6));
+        e2.submit(Request::new(2, vec![9, 10], 6));
+        e2.submit(Request::new(3, vec![11; 10], 6));
+        let batched = e2.run_to_completion().unwrap();
+        let r1 = batched.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.tokens, solo[0].tokens);
+    }
+
+    #[test]
+    fn stop_token_halts_generation() {
+        let mut e = engine(1);
+        let mut req = Request::new(1, vec![1, 2], 50);
+        // pick whatever greedy generates first as the stop token
+        e.submit(req.clone());
+        let first = e.run_to_completion().unwrap()[0].tokens[0];
+        req.stop_token = Some(first);
+        let mut e2 = engine(1);
+        e2.submit(req);
+        let out = e2.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn kv_capacity_bounds_generation() {
+        let mut e = engine(1);
+        e.submit(Request::new(1, vec![1; 4], 1000));
+        let out = e.run_to_completion().unwrap();
+        assert!(out[0].tokens.len() + 4 + 1 <= 96 + 1);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let mut e = engine(2);
+        for i in 0..3 {
+            e.submit(Request::new(i, vec![2, 3], 3));
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.metrics.requests_completed, 3);
+        assert_eq!(e.metrics.tokens_generated, 9);
+        assert!(e.metrics.decode_throughput() > 0.0);
+    }
+
+    #[test]
+    fn pool_reuse_no_leak() {
+        let mut e = engine(2);
+        for round in 0..3 {
+            for i in 0..4 {
+                e.submit(Request::new(round * 10 + i, vec![1, 2, 3], 2));
+            }
+            let out = e.run_to_completion().unwrap();
+            assert_eq!(out.len(), 4);
+        }
+        assert_eq!(e.metrics.requests_completed, 12);
+    }
+}

@@ -1,0 +1,86 @@
+//! Serving metrics: counters and latency aggregation.
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+pub use crate::coordinator::request::RequestTiming as RequestMetrics;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_prefilled: u64,
+    pub tokens_generated: u64,
+    pub engine_iterations: u64,
+    pub busy_us: u64,
+    ttft_samples: Vec<f64>,
+    total_samples: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn record(&mut self, timing: &RequestMetrics, n_prompt: usize, n_generated: usize) {
+        self.requests_completed += 1;
+        self.tokens_prefilled += n_prompt as u64;
+        self.tokens_generated += n_generated as u64;
+        self.ttft_samples.push(timing.ttft_us as f64 / 1000.0);
+        self.total_samples.push(timing.total_us as f64 / 1000.0);
+    }
+
+    pub fn ttft_ms(&self) -> Summary {
+        Summary::from(&self.ttft_samples)
+    }
+
+    pub fn latency_ms(&self) -> Summary {
+        Summary::from(&self.total_samples)
+    }
+
+    /// Generated tokens per second of engine busy time.
+    pub fn decode_throughput(&self) -> f64 {
+        if self.busy_us == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (self.busy_us as f64 / 1e6)
+        }
+    }
+
+    pub fn add_busy(&mut self, d: Duration) {
+        self.busy_us += d.as_micros() as u64;
+    }
+
+    pub fn report(&self) -> String {
+        let lat = self.latency_ms();
+        let ttft = self.ttft_ms();
+        format!(
+            "requests={} prefill_toks={} gen_toks={} iters={} tok/s={:.1} \
+             latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms",
+            self.requests_completed,
+            self.tokens_prefilled,
+            self.tokens_generated,
+            self.engine_iterations,
+            self.decode_throughput(),
+            lat.p50,
+            lat.p95,
+            ttft.p50,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let mut m = Metrics::default();
+        m.record(
+            &RequestMetrics { ttft_us: 1000, total_us: 5000, ..Default::default() },
+            4,
+            16,
+        );
+        m.add_busy(Duration::from_millis(10));
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.tokens_generated, 16);
+        assert!(m.decode_throughput() > 0.0);
+        assert!(m.report().contains("requests=1"));
+    }
+}

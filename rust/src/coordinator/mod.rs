@@ -1,0 +1,25 @@
+//! The serving coordinator — L3 of the stack.
+//!
+//! A vLLM-style (much smaller) continuous-batching engine: a router
+//! admits requests into a bounded queue, the engine core interleaves
+//! chunked prefill and decode across active sequences from a pooled KV
+//! allocator, and a thread-based front-end exposes a blocking
+//! submit/await API. The compute backend is either the rust-native GQS
+//! engine (the paper's kernels) or the PJRT decode artifact (the AOT
+//! jax path) — selected per model at startup.
+//!
+//! NOTE: the offline image vendors no async runtime (see Cargo.toml);
+//! the coordinator uses std threads + mpsc channels, which on this
+//! 1-core testbed is also the faster choice.
+
+pub mod backend;
+pub mod engine_core;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use backend::Backend;
+pub use engine_core::{EngineConfig, EngineCore};
+pub use metrics::{Metrics, RequestMetrics};
+pub use request::{Request, Response, SamplingCfg};
+pub use server::Server;

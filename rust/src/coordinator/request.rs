@@ -1,0 +1,78 @@
+//! Request/response types for the serving API.
+
+use crate::model::sampler::Sampling;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingCfg {
+    pub mode: SamplingMode,
+    pub temperature: f32,
+    pub top_k: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingMode {
+    Greedy,
+    TopK,
+}
+
+impl Default for SamplingCfg {
+    fn default() -> Self {
+        Self { mode: SamplingMode::Greedy, temperature: 1.0, top_k: 40 }
+    }
+}
+
+impl SamplingCfg {
+    pub fn to_sampling(self) -> Sampling {
+        match self.mode {
+            SamplingMode::Greedy => Sampling::Greedy,
+            SamplingMode::TopK => Sampling::TopK { temperature: self.temperature, k: self.top_k },
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingCfg,
+    /// stop generation at this byte (e.g. b'.'), if set
+    pub stop_token: Option<u32>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self { id, prompt, max_new_tokens, sampling: SamplingCfg::default(), stop_token: None }
+    }
+}
+
+/// Per-request latency breakdown (drives Tables 4/13/16).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTiming {
+    pub queued_us: u64,
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    /// time to first generated token, from submission
+    pub ttft_us: u64,
+    pub total_us: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub timing: RequestTiming,
+    pub n_prompt: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let r = Request::new(1, vec![1, 2, 3], 8);
+        assert_eq!(r.sampling.mode, SamplingMode::Greedy);
+        assert!(r.stop_token.is_none());
+    }
+}

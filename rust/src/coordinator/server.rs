@@ -1,0 +1,194 @@
+//! Threaded front-end: a router thread owns the engine core; clients
+//! submit requests over an mpsc channel and block on a per-request
+//! response channel. (std threads — no async runtime is vendored in
+//! this image; see coordinator/mod.rs.)
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::engine_core::EngineCore;
+use crate::coordinator::request::{Request, Response};
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Report(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Handle for submitting requests to a running engine.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Client {
+    /// Blocking generate: submit and wait for the response.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Fire-and-forget submit; receive on the returned channel.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx)
+    }
+
+    pub fn metrics_report(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Report(tx)).map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        Ok(rx.recv()?)
+    }
+}
+
+/// The server: engine loop on its own thread.
+///
+/// PJRT handles are not `Send` (raw pointers + `Rc` internally), so the
+/// engine is *constructed on* the engine thread from a `Send` builder
+/// closure rather than moved into it.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start<F>(build: F) -> Self
+    where
+        F: FnOnce() -> Result<EngineCore> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = std::thread::spawn(move || {
+            let mut engine = match build() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("engine build failed: {e:#}");
+                    return;
+                }
+            };
+            let mut pending: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
+            loop {
+                // Drain control messages; block only when idle.
+                let msg = if engine.has_work() {
+                    match rx.try_recv() {
+                        Ok(m) => Some(m),
+                        Err(mpsc::TryRecvError::Empty) => None,
+                        Err(mpsc::TryRecvError::Disconnected) => break,
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    }
+                };
+                match msg {
+                    Some(Msg::Submit(req, reply)) => {
+                        pending.insert(req.id, reply);
+                        engine.submit(req);
+                    }
+                    Some(Msg::Report(reply)) => {
+                        let _ = reply.send(engine.metrics.report());
+                    }
+                    Some(Msg::Shutdown) => break,
+                    None => {}
+                }
+                if engine.has_work() {
+                    if let Err(e) = engine.tick() {
+                        eprintln!("engine error: {e:#}");
+                        break;
+                    }
+                    for resp in engine.take_finished() {
+                        if let Some(reply) = pending.remove(&resp.id) {
+                            let _ = reply.send(resp);
+                        }
+                    }
+                }
+            }
+        });
+        Self { tx, handle: Some(handle) }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::Backend;
+    use crate::coordinator::engine_core::EngineConfig;
+    use crate::model::config::demo_config;
+    use crate::model::transformer::{random_fp, Transformer};
+
+    fn server() -> Server {
+        Server::start(|| {
+            let mut cfg = demo_config();
+            cfg.d_model = 64;
+            cfg.n_layers = 1;
+            cfg.n_heads = 2;
+            cfg.d_ff = 96;
+            cfg.vocab = 64;
+            cfg.max_seq = 96;
+            let t = Transformer::from_fp(&random_fp(&cfg, 33)).unwrap();
+            EngineCore::new(
+                Backend::Native(t),
+                &cfg,
+                EngineConfig { max_batch: 4, prefill_chunk: 8, kv_capacity: 96 },
+            )
+        })
+    }
+
+    #[test]
+    fn blocking_generate() {
+        let srv = server();
+        let client = srv.client();
+        let resp = client.generate(Request::new(1, vec![1, 2, 3], 4)).unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let srv = server();
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let c = srv.client();
+            handles.push(std::thread::spawn(move || {
+                c.generate(Request::new(i, vec![(i % 60) as u32 + 1; 5], 3)).unwrap()
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        let report = srv.client().metrics_report().unwrap();
+        assert!(report.contains("requests=6"), "{report}");
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,108 @@
+//! Roofline cost model for CTA-level work.
+//!
+//! A CTA's latency is max(memory time, compute time) + launch overhead:
+//! memory-bound GEMV decoding is dominated by weight bytes moved (the
+//! paper's observation that quantization wins come from memory traffic
+//! and sparsity wins from traffic + compute).
+
+/// Device description. Defaults roughly model one A800-class SM scaled
+/// to arbitrary units — only *ratios* matter for the reproduced shapes.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub n_sm: usize,
+    /// bytes per cycle per SM from HBM.
+    pub mem_bw: f64,
+    /// MACs per cycle per SM (CUDA-core FMA path for GEMV).
+    pub compute: f64,
+    /// fixed CTA launch/drain cycles.
+    pub launch_overhead: f64,
+    /// extra cycles per partial-tile reduction (Stream-K fixup).
+    pub reduce_cost: f64,
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        Self {
+            n_sm: 108,
+            mem_bw: 16.0,
+            compute: 128.0,
+            launch_overhead: 600.0,
+            reduce_cost: 150.0,
+        }
+    }
+}
+
+/// Work descriptor for one CTA.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CtaCost {
+    pub bytes: f64,
+    pub macs: f64,
+    pub reductions: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub spec: GpuSpec,
+}
+
+impl CostModel {
+    pub fn new(spec: GpuSpec) -> Self {
+        Self { spec }
+    }
+
+    /// Cycles for one CTA.
+    pub fn cta_cycles(&self, c: &CtaCost) -> f64 {
+        let mem = c.bytes / self.spec.mem_bw;
+        let cmp = c.macs / self.spec.compute;
+        mem.max(cmp) + self.spec.launch_overhead + c.reductions as f64 * self.spec.reduce_cost
+    }
+
+    /// Ideal cycles if all work were perfectly balanced with no overhead.
+    pub fn ideal_cycles(&self, total: &CtaCost) -> f64 {
+        let mem = total.bytes / (self.spec.mem_bw * self.spec.n_sm as f64);
+        let cmp = total.macs / (self.spec.compute * self.spec.n_sm as f64);
+        mem.max(cmp)
+    }
+}
+
+/// Weight bytes per surviving group for a given bit-width/group size
+/// (packed codes + scale + zero + group index amortized).
+pub fn group_bytes(bits: u32, group: usize) -> f64 {
+    (group * bits as usize) as f64 / 8.0 + 4.0 + 1.0 + 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_bound_gemv() {
+        let cm = CostModel::new(GpuSpec::default());
+        // typical GEMV group-task: more memory time than compute time
+        let c = CtaCost { bytes: 16000.0, macs: 4096.0, reductions: 0 };
+        let mem_t = c.bytes / cm.spec.mem_bw;
+        assert!((cm.cta_cycles(&c) - mem_t - cm.spec.launch_overhead).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_bound_when_macs_dominate() {
+        let cm = CostModel::new(GpuSpec::default());
+        let c = CtaCost { bytes: 10.0, macs: 1e7, reductions: 0 };
+        assert!(cm.cta_cycles(&c) > 1e7 / cm.spec.compute - 1.0);
+    }
+
+    #[test]
+    fn reductions_add_cost() {
+        let cm = CostModel::new(GpuSpec::default());
+        let a = CtaCost { bytes: 100.0, macs: 100.0, reductions: 0 };
+        let b = CtaCost { bytes: 100.0, macs: 100.0, reductions: 2 };
+        assert!((cm.cta_cycles(&b) - cm.cta_cycles(&a) - 2.0 * cm.spec.reduce_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn group_bytes_scale_with_bits() {
+        assert!(group_bytes(4, 16) < group_bytes(8, 16));
+        // G=16 @4bit: 8 code bytes + 9 overhead
+        assert!((group_bytes(4, 16) - 17.0).abs() < 1e-9);
+    }
+}

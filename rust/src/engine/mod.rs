@@ -1,0 +1,19 @@
+//! GPU-analogue execution engine (paper §3.5, Fig. 4-5).
+//!
+//! The paper's engineering contribution is *task-centric* (Stream-K)
+//! work decomposition for sparse GEMV, replacing the *data-centric*
+//! (Slice-K) output-tile assignment that suffers stragglers under
+//! row-skewed sparsity. Real CTAs need a GPU; scheduling is a
+//! hardware-independent phenomenon, so we reproduce it with a
+//! discrete-event multi-SM simulator driven by a roofline cost model
+//! (see DESIGN.md §Hardware-Adaptation).
+
+pub mod cost_model;
+pub mod simulator;
+pub mod slice_k;
+pub mod stream_k;
+pub mod workload;
+
+pub use cost_model::{CostModel, GpuSpec};
+pub use simulator::{simulate, SimResult};
+pub use workload::{Cta, Workload};

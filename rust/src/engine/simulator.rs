@@ -1,0 +1,120 @@
+//! Discrete-event multi-SM simulator: greedy list scheduling of CTAs
+//! onto SMs (the hardware's behavior for a grid launch), reporting
+//! makespan, utilization, and the straggler profile of Fig. 5.
+
+use crate::engine::cost_model::CostModel;
+use crate::engine::workload::Cta;
+
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    /// total cycles until the last CTA finishes.
+    pub makespan: f64,
+    /// sum of busy cycles / (n_sm * makespan).
+    pub utilization: f64,
+    /// per-SM busy time.
+    pub sm_busy: Vec<f64>,
+    /// ideal (perfectly balanced, zero overhead) cycles.
+    pub ideal: f64,
+    pub n_ctas: usize,
+}
+
+/// Simulate a grid launch: CTAs issue in order; each goes to the
+/// earliest-free SM (GPU block schedulers approximate this).
+pub fn simulate(ctas: &[Cta], cm: &CostModel) -> SimResult {
+    let n_sm = cm.spec.n_sm;
+    let mut free_at = vec![0.0f64; n_sm];
+    let mut busy = vec![0.0f64; n_sm];
+    for cta in ctas {
+        // earliest-free SM
+        let (sm, _) = free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let dur = cm.cta_cycles(&cta.cost);
+        free_at[sm] += dur;
+        busy[sm] += dur;
+    }
+    let makespan = free_at.iter().cloned().fold(0.0, f64::max);
+    let total_busy: f64 = busy.iter().sum();
+    let total_cost = ctas.iter().fold(
+        crate::engine::cost_model::CtaCost::default(),
+        |mut acc, c| {
+            acc.bytes += c.cost.bytes;
+            acc.macs += c.cost.macs;
+            acc
+        },
+    );
+    SimResult {
+        makespan,
+        utilization: if makespan > 0.0 { total_busy / (n_sm as f64 * makespan) } else { 0.0 },
+        sm_busy: busy,
+        ideal: cm.ideal_cycles(&total_cost),
+        n_ctas: ctas.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::cost_model::GpuSpec;
+    use crate::engine::workload::Workload;
+    use crate::engine::{slice_k, stream_k};
+
+    fn cm(n_sm: usize) -> CostModel {
+        CostModel::new(GpuSpec { n_sm, ..Default::default() })
+    }
+
+    #[test]
+    fn single_cta_makespan_is_its_cost() {
+        let wl = Workload::synthetic(16, 8, 0.0, 1.0, 0);
+        let ctas = slice_k::decompose(&wl, 16);
+        assert_eq!(ctas.len(), 1);
+        let res = simulate(&ctas, &cm(4));
+        assert!((res.makespan - cm(4).cta_cycles(&ctas[0].cost)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balanced_work_high_utilization() {
+        let wl = Workload::synthetic(1024, 8, 0.0, 1.0, 1);
+        let ctas = stream_k::decompose(&wl, 108 * 4);
+        let res = simulate(&ctas, &cm(108));
+        assert!(res.utilization > 0.9, "util {}", res.utilization);
+    }
+
+    #[test]
+    fn stream_k_beats_slice_k_under_skew() {
+        // the paper's headline scheduling claim (1.3-1.5x per-operator)
+        let wl = Workload::synthetic(4096, 8, 0.03, 32.0, 7);
+        let model = cm(108);
+        let slice = simulate(&slice_k::decompose(&wl, 8), &model);
+        let stream = simulate(
+            &stream_k::decompose(&wl, stream_k::default_cta_count(108, 4)),
+            &model,
+        );
+        let speedup = slice.makespan / stream.makespan;
+        assert!(speedup > 1.15, "speedup {speedup}");
+        assert!(stream.utilization > slice.utilization);
+    }
+
+    #[test]
+    fn no_skew_schedulers_comparable() {
+        let wl = Workload::synthetic(4096, 8, 0.0, 1.0, 9);
+        let model = cm(108);
+        let slice = simulate(&slice_k::decompose(&wl, 8), &model);
+        let stream = simulate(
+            &stream_k::decompose(&wl, stream_k::default_cta_count(108, 4)),
+            &model,
+        );
+        let ratio = slice.makespan / stream.makespan;
+        assert!(ratio > 0.7 && ratio < 1.45, "ratio {ratio}");
+    }
+
+    #[test]
+    fn makespan_at_least_ideal() {
+        let wl = Workload::synthetic(512, 8, 0.1, 8.0, 3);
+        let ctas = stream_k::decompose(&wl, 200);
+        let res = simulate(&ctas, &cm(64));
+        assert!(res.makespan >= res.ideal * 0.999);
+    }
+}

@@ -1,0 +1,108 @@
+//! Stream-K (task-centric) decomposition — the paper's §3.5/Fig. 5
+//! contribution. The flattened group-iteration space is split into
+//! equal-volume chunks, one per CTA slot; a CTA may finish a row started
+//! by another, paying a small fixup/reduction cost at each row boundary
+//! it shares (the Stream-K partial-tile reduction).
+
+use crate::engine::workload::{Cta, Workload};
+
+/// Split total group-work into `n_ctas` near-equal chunks.
+pub fn decompose(wl: &Workload, n_ctas: usize) -> Vec<Cta> {
+    let total = wl.total_groups();
+    if total == 0 || n_ctas == 0 {
+        return Vec::new();
+    }
+    let n_ctas = n_ctas.min(total);
+    // prefix[r] = groups before row r
+    let n = wl.row_groups.len();
+    let mut prefix = Vec::with_capacity(n + 1);
+    prefix.push(0usize);
+    for &g in &wl.row_groups {
+        prefix.push(prefix.last().unwrap() + g);
+    }
+
+    let mut ctas = Vec::with_capacity(n_ctas);
+    for i in 0..n_ctas {
+        let lo = total * i / n_ctas;
+        let hi = total * (i + 1) / n_ctas;
+        if hi == lo {
+            continue;
+        }
+        // rows spanned by [lo, hi)
+        let row_lo = prefix.partition_point(|&p| p <= lo) - 1;
+        let row_hi = prefix.partition_point(|&p| p < hi) - 1;
+        // boundary reductions: one per partially-owned row edge
+        let mut reductions = 0;
+        if prefix[row_lo] < lo {
+            reductions += 1; // starts mid-row
+        }
+        if prefix[row_hi + 1] > hi {
+            reductions += 1; // ends mid-row
+        }
+        ctas.push(Cta { cost: wl.groups_cost(hi - lo, reductions), rows: (row_lo, row_hi + 1) });
+    }
+    ctas
+}
+
+/// The natural CTA count: enough waves to cover all SMs evenly.
+pub fn default_cta_count(n_sm: usize, waves: usize) -> usize {
+    n_sm * waves.max(1)
+}
+
+/// Work-adaptive CTA count (what Stream-K implementations actually do):
+/// full SM waves only while each CTA still gets a worthwhile chunk —
+/// small workloads otherwise drown in launch overhead.
+pub fn adaptive_cta_count(total_groups: usize, n_sm: usize, waves: usize, min_groups_per_cta: usize) -> usize {
+    let by_work = total_groups / min_groups_per_cta.max(1);
+    default_cta_count(n_sm, waves).min(by_work.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::cv;
+
+    #[test]
+    fn conserves_work() {
+        let wl = Workload::synthetic(300, 8, 0.1, 8.0, 0);
+        let ctas = decompose(&wl, 64);
+        let total: f64 = ctas.iter().map(|c| c.cost.macs).sum();
+        assert!((total - wl.total_cost().macs).abs() < 1e-6);
+    }
+
+    #[test]
+    fn near_uniform_costs_under_skew() {
+        let wl = Workload::synthetic(512, 8, 0.05, 16.0, 1);
+        let slice = crate::engine::slice_k::decompose(&wl, 8);
+        let stream = decompose(&wl, slice.len());
+        let cv_slice = cv(&slice.iter().map(|c| c.cost.macs).collect::<Vec<_>>());
+        let cv_stream = cv(&stream.iter().map(|c| c.cost.macs).collect::<Vec<_>>());
+        assert!(
+            cv_stream < cv_slice * 0.3,
+            "stream cv {cv_stream} should be well under slice cv {cv_slice}"
+        );
+    }
+
+    #[test]
+    fn boundary_reductions_bounded() {
+        let wl = Workload::synthetic(100, 8, 0.2, 4.0, 2);
+        let ctas = decompose(&wl, 32);
+        assert!(ctas.iter().all(|c| c.cost.reductions <= 2));
+    }
+
+    #[test]
+    fn adaptive_count_caps_small_workloads() {
+        assert_eq!(adaptive_cta_count(100, 108, 4, 64), 1);
+        assert_eq!(adaptive_cta_count(64 * 10, 108, 4, 64), 10);
+        assert_eq!(adaptive_cta_count(1_000_000, 108, 4, 64), 432);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let empty = Workload { row_groups: vec![], group: 16, bits: 4, act_bytes_per_group: 64.0 };
+        assert!(decompose(&empty, 8).is_empty());
+        let wl = Workload::synthetic(4, 1, 0.0, 1.0, 3);
+        let ctas = decompose(&wl, 100); // more CTAs than groups
+        assert_eq!(ctas.iter().map(|c| c.cost.macs as usize).sum::<usize>(), 4 * 16);
+    }
+}

@@ -1,0 +1,104 @@
+//! Workload descriptions: a sparse GEMV as per-row group counts, and the
+//! CTA lists the two decompositions produce.
+
+use crate::engine::cost_model::{group_bytes, CtaCost};
+use crate::gqs::layer::GqsLayer;
+use crate::util::XorShift;
+
+/// A sparse-quantized GEMV workload: per-output-row surviving group
+/// counts plus the constants needed to cost it.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub row_groups: Vec<usize>,
+    pub group: usize,
+    pub bits: u32,
+    /// bytes of activation data read per group (G * 4, f32 activations).
+    pub act_bytes_per_group: f64,
+}
+
+impl Workload {
+    pub fn from_layer(layer: &GqsLayer) -> Self {
+        Self {
+            row_groups: layer.row_loads(),
+            group: layer.group,
+            bits: layer.bits,
+            act_bytes_per_group: layer.group as f64 * 4.0,
+        }
+    }
+
+    /// Synthetic skewed workload: row group counts drawn so that a
+    /// `hot_frac` of rows carry `skew`x the base load — the straggler
+    /// regime of Fig. 5.
+    pub fn synthetic(rows: usize, base_groups: usize, hot_frac: f64, skew: f64, seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        let row_groups = (0..rows)
+            .map(|_| {
+                if (rng.next_f32() as f64) < hot_frac {
+                    ((base_groups as f64) * skew).round() as usize
+                } else {
+                    base_groups
+                }
+            })
+            .collect();
+        Self { row_groups, group: 16, bits: 4, act_bytes_per_group: 64.0 }
+    }
+
+    pub fn total_groups(&self) -> usize {
+        self.row_groups.iter().sum()
+    }
+
+    /// Cost of `n_groups` groups of this workload.
+    pub fn groups_cost(&self, n_groups: usize, reductions: usize) -> CtaCost {
+        let per_group_bytes = group_bytes(self.bits, self.group) + self.act_bytes_per_group;
+        CtaCost {
+            bytes: n_groups as f64 * per_group_bytes,
+            macs: (n_groups * self.group) as f64,
+            reductions,
+        }
+    }
+
+    pub fn total_cost(&self) -> CtaCost {
+        self.groups_cost(self.total_groups(), 0)
+    }
+}
+
+/// One schedulable unit (the CUDA CTA analogue).
+#[derive(Clone, Debug)]
+pub struct Cta {
+    pub cost: CtaCost,
+    /// output rows this CTA touches (for bookkeeping/asserts).
+    pub rows: (usize, usize),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::group_prune::group_prune;
+    use crate::sparse::saliency::SaliencyMetric;
+    use crate::util::Mat;
+
+    #[test]
+    fn from_layer_counts() {
+        let mut rng = XorShift::new(0);
+        let w = Mat::randn(32, 128, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.5);
+        let layer = GqsLayer::encode(&w, &mask, 4);
+        let wl = Workload::from_layer(&layer);
+        assert_eq!(wl.total_groups(), layer.nnz_groups());
+    }
+
+    #[test]
+    fn synthetic_skew() {
+        let wl = Workload::synthetic(1000, 10, 0.1, 8.0, 42);
+        let hot = wl.row_groups.iter().filter(|&&g| g == 80).count();
+        assert!(hot > 50 && hot < 200, "hot rows {hot}");
+    }
+
+    #[test]
+    fn cost_monotone_in_groups() {
+        let wl = Workload::synthetic(100, 8, 0.0, 1.0, 1);
+        let c1 = wl.groups_cost(10, 0);
+        let c2 = wl.groups_cost(20, 0);
+        assert!(c2.bytes > c1.bytes && c2.macs > c1.macs);
+    }
+}

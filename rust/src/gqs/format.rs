@@ -1,0 +1,249 @@
+//! Loader for the `.gqsa` container written by `python/compile/gqsa.py`
+//! and the `.fp.bin` dense checkpoints from `train.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gqs::layer::GqsLayer;
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+use crate::util::{Mat, TensorFile};
+
+/// A fully-loaded GQSA-compressed model: dense leftovers (norms,
+/// embeddings, biases) + one `GqsLayer` per compressed linear.
+pub struct GqsModel {
+    pub config: ModelConfig,
+    pub bits: u32,
+    pub group: usize,
+    pub sparsity: f64,
+    pub tag: String,
+    pub dense: BTreeMap<String, Mat>,
+    pub layers: BTreeMap<String, GqsLayer>,
+}
+
+impl GqsModel {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(&path)?;
+        let meta = &tf.meta;
+        if meta.get("kind").and_then(Json::as_str) != Some("gqsa") {
+            bail!("not a .gqsa container: {}", path.as_ref().display());
+        }
+        let config = ModelConfig::from_meta(meta)?;
+        let bits = meta.get("bits").and_then(Json::as_u64).context("bits")? as u32;
+        let group = meta.get("group").and_then(Json::as_u64).context("group")? as usize;
+        let sparsity = meta.get("sparsity").and_then(Json::as_f64).unwrap_or(0.0);
+        let tag = meta.get("tag").and_then(Json::as_str).unwrap_or("").to_string();
+
+        let lnames: Vec<String> = meta
+            .get("gqs_layers")
+            .and_then(Json::as_arr)
+            .context("gqs_layers")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+
+        let mut layers = BTreeMap::new();
+        for name in &lnames {
+            let (rows, cols) = config.linear_shape(name);
+            let row_index: Vec<u32> = tf.i32(&format!("{name}.row_ptr"))?.iter().map(|&v| v as u32).collect();
+            let groups: Vec<u32> = tf.i32(&format!("{name}.cols"))?.iter().map(|&v| v as u32).collect();
+            let qvals = tf.get(&format!("{name}.qvals"))?.as_u8()?.to_vec();
+            let scales = tf.f32(&format!("{name}.scales"))?;
+            let zeros = tf.get(&format!("{name}.zeros"))?.as_u8()?.to_vec();
+            if row_index.len() != rows + 1 {
+                bail!("{name}: row_ptr len {} != rows+1 {}", row_index.len(), rows + 1);
+            }
+            let nnz = *row_index.last().unwrap() as usize;
+            if groups.len() != nnz || scales.len() != nnz || zeros.len() != nnz {
+                bail!("{name}: inconsistent nnz arrays");
+            }
+            let expected_bytes = (nnz * group * bits as usize).div_ceil(8);
+            if qvals.len() < expected_bytes {
+                bail!("{name}: qvals too short: {} < {}", qvals.len(), expected_bytes);
+            }
+            layers.insert(
+                name.clone(),
+                GqsLayer { rows, cols, group, bits, row_index, groups, qvals, scales, zeros },
+            );
+        }
+
+        let mut dense = BTreeMap::new();
+        for (name, t) in &tf.tensors {
+            if name.contains(".row_ptr") || name.contains(".cols") || name.contains(".qvals")
+                || name.contains(".scales") || name.contains(".zeros")
+            {
+                continue;
+            }
+            let data = t.as_f32()?;
+            let (rows, cols) = match t.shape.len() {
+                1 => (1, t.shape[0]),
+                2 => (t.shape[0], t.shape[1]),
+                n => bail!("{name}: unsupported rank {n}"),
+            };
+            dense.insert(name.clone(), Mat::from_vec(rows, cols, data));
+        }
+
+        Ok(Self { config, bits, group, sparsity, tag, dense, layers })
+    }
+
+    /// Total device-resident bytes of the compressed linears.
+    pub fn gqs_bytes(&self) -> usize {
+        self.layers.values().map(|l| l.storage_bytes()).sum()
+    }
+
+    /// Bytes of the uncompressed (dense) leftovers.
+    pub fn dense_bytes(&self) -> usize {
+        self.dense.values().map(|m| m.data.len() * 4).sum()
+    }
+}
+
+impl GqsModel {
+    /// Serialize back to the .gqsa container (same layout python emits),
+    /// enabling a pure-rust compression path (`gqsa quantize`).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        use crate::util::tensorio::Tensor;
+        let mut tf = TensorFile::default();
+        for (name, m) in &self.dense {
+            let shape = if m.rows == 1 { vec![m.cols] } else { vec![m.rows, m.cols] };
+            tf.tensors.insert(name.clone(), Tensor::from_f32(shape, &m.data));
+        }
+        let mut gqs_bytes = 0usize;
+        for (name, l) in &self.layers {
+            let nnz = l.nnz_groups();
+            tf.tensors.insert(
+                format!("{name}.row_ptr"),
+                Tensor::from_i32(vec![l.row_index.len()], &l.row_index.iter().map(|&v| v as i32).collect::<Vec<_>>()),
+            );
+            tf.tensors.insert(
+                format!("{name}.cols"),
+                Tensor::from_i32(vec![nnz], &l.groups.iter().map(|&v| v as i32).collect::<Vec<_>>()),
+            );
+            tf.tensors.insert(format!("{name}.qvals"), Tensor::from_u8(vec![l.qvals.len()], l.qvals.clone()));
+            tf.tensors.insert(
+                format!("{name}.scales"),
+                Tensor::from_f32(vec![nnz], &l.scales),
+            );
+            tf.tensors.insert(format!("{name}.zeros"), Tensor::from_u8(vec![nnz], l.zeros.clone()));
+            gqs_bytes += l.storage_bytes();
+        }
+        let lnames: Vec<Json> = self.layers.keys().map(|k| Json::str(k.clone())).collect();
+        tf.meta = Json::obj(vec![
+            ("kind", Json::str("gqsa")),
+            ("config", self.config.to_json()),
+            ("bits", Json::num(self.bits as f64)),
+            ("group", Json::num(self.group as f64)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("tag", Json::str(self.tag.clone())),
+            ("gqs_layers", Json::Arr(lnames)),
+            ("stats", Json::obj(vec![("gqs_bytes", Json::num(gqs_bytes as f64))])),
+        ]);
+        tf.save(path)
+    }
+
+    /// Build a GqsModel by one-shot compressing an FP checkpoint in rust
+    /// (no BQPO/E2E — the paper's unoptimized starting point).
+    pub fn encode_oneshot(
+        fp: &FpModel,
+        hessians: Option<&BTreeMap<String, crate::util::Mat>>,
+        bits: u32,
+        group: usize,
+        sparsity: f64,
+        tag: &str,
+    ) -> Result<Self> {
+        use crate::sparse::group_prune::group_prune;
+        use crate::sparse::saliency::SaliencyMetric;
+        let mut layers = BTreeMap::new();
+        let mut dense = BTreeMap::new();
+        let lnames = fp.config.linear_names();
+        for (name, m) in &fp.weights {
+            if lnames.contains(name) {
+                let h = hessians.and_then(|hs| hs.get(name));
+                let metric = if h.is_some() { SaliencyMetric::Hessian } else { SaliencyMetric::Magnitude };
+                let mask = group_prune(m, h, metric, group, sparsity);
+                layers.insert(name.clone(), GqsLayer::encode(m, &mask, bits));
+            } else {
+                dense.insert(name.clone(), m.clone());
+            }
+        }
+        Ok(Self {
+            config: fp.config.clone(),
+            bits,
+            group,
+            sparsity,
+            tag: tag.to_string(),
+            dense,
+            layers,
+        })
+    }
+}
+
+/// A dense FP32 checkpoint (`<family>.fp.bin`).
+pub struct FpModel {
+    pub config: ModelConfig,
+    pub weights: BTreeMap<String, Mat>,
+}
+
+impl FpModel {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(&path)?;
+        let config = ModelConfig::from_meta(&tf.meta)?;
+        let mut weights = BTreeMap::new();
+        for (name, t) in &tf.tensors {
+            let data = t.as_f32()?;
+            let (rows, cols) = match t.shape.len() {
+                1 => (1, t.shape[0]),
+                2 => (t.shape[0], t.shape[1]),
+                n => bail!("{name}: unsupported rank {n}"),
+            };
+            weights.insert(name.clone(), Mat::from_vec(rows, cols, data));
+        }
+        Ok(Self { config, weights })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Mat> {
+        self.weights.get(name).with_context(|| format!("weight '{name}' missing"))
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.weights.values().map(|m| m.data.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorio::{Tensor, TensorFile};
+
+    fn fake_cfg_json() -> Json {
+        Json::parse(r#"{
+            "family": "t", "vocab": 8, "d_model": 16, "n_layers": 1,
+            "n_heads": 2, "d_ff": 32, "max_seq": 32, "pos": "rope",
+            "act": "swiglu", "norm": "rmsnorm", "qkv_bias": false,
+            "tie_embeddings": true
+        }"#).unwrap()
+    }
+
+    #[test]
+    fn rejects_non_gqsa() {
+        let mut tf = TensorFile::default();
+        tf.meta = Json::obj(vec![("kind", Json::str("other")), ("config", fake_cfg_json())]);
+        let p = std::env::temp_dir().join("not_gqsa.bin");
+        tf.save(&p).unwrap();
+        assert!(GqsModel::load(&p).is_err());
+    }
+
+    #[test]
+    fn fp_model_roundtrip() {
+        let mut tf = TensorFile::default();
+        tf.meta = Json::obj(vec![("config", fake_cfg_json())]);
+        tf.tensors.insert("tok_emb".into(), Tensor::from_f32(vec![8, 16], &vec![0.5; 128]));
+        let p = std::env::temp_dir().join("fp_test.bin");
+        tf.save(&p).unwrap();
+        let m = FpModel::load(&p).unwrap();
+        assert_eq!(m.config.d_model, 16);
+        assert_eq!(m.get("tok_emb").unwrap().rows, 8);
+        assert!(m.get("nope").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The GQS layer (paper §3.2) and its compute kernels: quantized BSR
+//! storage, the sparse-quantized GEMV hot path, dense/quantized/2:4
+//! baselines, and the .gqsa container loader.
+
+pub mod format;
+pub mod gemm;
+pub mod gemv;
+pub mod gemv_dense;
+pub mod layer;
+
+pub use gemv::{gqs_gemv, gqs_gemv_ref};
+pub use layer::GqsLayer;

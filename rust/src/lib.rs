@@ -1,0 +1,22 @@
+//! GQSA — Group Quantization and Sparsity for Accelerating LLM Inference.
+//!
+//! Full-system reproduction of the paper (Zeng & Liu et al., 2024):
+//! the GQS layer (group pruning + per-group quantization in BSR form),
+//! the two-stage BQPO / E2E-OQP optimization (build-time, python), the
+//! task-centric sparse GEMV engine, and a serving coordinator that runs
+//! the compressed models — plus every baseline the paper compares
+//! against. See DESIGN.md for the system inventory and experiment map.
+
+pub mod bench;
+pub mod coordinator;
+pub mod engine;
+pub mod gqs;
+pub mod quant;
+pub mod sparse;
+pub mod util;
+pub mod model;
+pub mod runtime;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

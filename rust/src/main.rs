@@ -1,0 +1,283 @@
+//! gqsa — command-line launcher for the GQSA serving + experiment stack.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored offline):
+//!   info                          artifact + model inventory
+//!   generate  [--model SPEC] [--family F] [--prompt S] [--max-new N] [--backend native|pjrt]
+//!   serve-demo [--requests N] [--batch B]    continuous-batching demo
+//!   eval      [--family F] [--model SPEC]    ppl + zero-shot for one variant
+//!   bench-table <t1..t16|f1|f5|f6|f7|f8|all> regenerate a paper table/figure
+//!   engine-sim [--rows N] [--skew X]         Slice-K vs Stream-K simulator
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use gqsa::bench::{experiments, Workbench};
+use gqsa::coordinator::backend::PjrtBackend;
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+use gqsa::engine::cost_model::{CostModel, GpuSpec};
+use gqsa::engine::{simulate, Workload};
+use gqsa::engine::{slice_k, stream_k};
+use gqsa::model::tokenizer::ByteTokenizer;
+use gqsa::runtime::Runtime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    let art = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Workbench::default_dir);
+
+    match cmd {
+        "info" => info(&art),
+        "generate" => generate(&art, &flags),
+        "serve-demo" => serve_demo(&art, &flags),
+        "eval" => eval_cmd(&art, &flags),
+        "bench-table" => {
+            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5-f8, all)")?;
+            let mut wb = Workbench::new(art);
+            experiments::run(id, &mut wb)
+        }
+        "quantize" => quantize(&art, &flags),
+        "engine-sim" => engine_sim(&flags),
+        _ => {
+            println!(
+                "gqsa {} — GQSA reproduction CLI\n\n\
+                 usage: gqsa <info|generate|serve-demo|eval|bench-table|engine-sim> [flags]\n\
+                 see rust/src/main.rs header for flags",
+                gqsa::version()
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(art: &std::path::Path) -> Result<()> {
+    println!("gqsa {} — artifact inventory at {}", gqsa::version(), art.display());
+    let models = art.join("models");
+    if models.exists() {
+        let mut entries: Vec<_> = std::fs::read_dir(&models)?.collect::<std::io::Result<Vec<_>>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for entry in entries {
+            let p = entry.path();
+            let name = p.file_name().unwrap().to_string_lossy().to_string();
+            let size = p.metadata()?.len();
+            if name.ends_with(".gqsa") {
+                let gm = gqsa::gqs::format::GqsModel::load(&p)?;
+                println!(
+                    "  {name:<40} {:>8} KB  bits={} G={} sparsity={:.0}% layers={}",
+                    size / 1024,
+                    gm.bits,
+                    gm.group,
+                    gm.sparsity * 100.0,
+                    gm.layers.len()
+                );
+            } else {
+                println!("  {name:<40} {:>8} KB", size / 1024);
+            }
+        }
+    } else {
+        println!("  (no models — run `make artifacts`)");
+    }
+    let hlo = art.join("hlo");
+    if hlo.exists() {
+        for entry in std::fs::read_dir(&hlo)? {
+            let p = entry?.path();
+            if p.extension().is_some_and(|e| e == "txt") {
+                println!("  hlo: {}", p.file_name().unwrap().to_string_lossy());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn generate(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()> {
+    let family = flags.get("family").map(String::as_str).unwrap_or("tiny-llama");
+    let spec = flags.get("model").map(String::as_str).unwrap_or("gqsa:w4s50g16");
+    let prompt_text = flags.get("prompt").map(String::as_str).unwrap_or("the ");
+    let max_new: usize = flags.get("max-new").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let backend_kind = flags.get("backend").map(String::as_str).unwrap_or("native");
+
+    let tok = ByteTokenizer;
+    let prompt = tok.encode(prompt_text);
+    let mut wb = Workbench::new(art.to_path_buf());
+
+    let (backend, cfg) = match backend_kind {
+        "native" => {
+            let model = wb.variant(family, spec)?;
+            let cfg = model.cfg.clone();
+            (Backend::Native(model), cfg)
+        }
+        "pjrt" => {
+            let rt = Runtime::cpu()?;
+            let name = if let Some(tag) = spec.strip_prefix("gqsa:") {
+                format!("{family}.decode_gqs.{tag}")
+            } else {
+                format!("{family}.decode")
+            };
+            let artifact = rt.load(art.join("hlo"), &name)?;
+            let cfg = wb.fp(family)?.config.clone();
+            (Backend::Pjrt(PjrtBackend::new(artifact)?), cfg)
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+
+    let mut engine = EngineCore::new(
+        backend,
+        &cfg,
+        EngineConfig { max_batch: 1, prefill_chunk: 32, kv_capacity: prompt.len() + max_new + 2 },
+    )?;
+    engine.submit(Request::new(0, prompt, max_new));
+    let t0 = std::time::Instant::now();
+    let out = engine.run_to_completion()?;
+    let resp = &out[0];
+    println!("prompt : {prompt_text:?}");
+    println!("output : {:?}", tok.decode(&resp.tokens));
+    println!(
+        "{} tokens in {:.1} ms ({:.1} tok/s, backend={backend_kind}, model={spec})",
+        resp.tokens.len(),
+        t0.elapsed().as_secs_f64() * 1000.0,
+        resp.tokens.len() as f64 / t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn serve_demo(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()> {
+    let family = flags.get("family").cloned().unwrap_or_else(|| "tiny-llama".into());
+    let spec = flags.get("model").cloned().unwrap_or_else(|| "gqsa:w4s50g16".into());
+    let n_requests: usize = flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+    let art_owned = art.to_path_buf();
+    let srv = gqsa::coordinator::Server::start(move || {
+        let mut wb = Workbench::new(art_owned);
+        let model = wb.variant(&family, &spec)?;
+        let cfg = model.cfg.clone();
+        EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: batch, prefill_chunk: 15, kv_capacity: 160 },
+        )
+    });
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n_requests as u64 {
+        let c = srv.client();
+        handles.push(std::thread::spawn(move || {
+            let prompt: Vec<u32> = format!("request {i} says ").bytes().map(u32::from).collect();
+            c.generate(Request::new(i, prompt, 48))
+        }));
+    }
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let resp = h.join().unwrap()?;
+        total_tokens += resp.tokens.len();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{}", srv.client().metrics_report()?);
+    println!(
+        "served {n_requests} requests / {total_tokens} tokens in {secs:.2}s -> {:.1} tok/s",
+        total_tokens as f64 / secs
+    );
+    srv.shutdown();
+    Ok(())
+}
+
+fn eval_cmd(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()> {
+    let family = flags.get("family").map(String::as_str).unwrap_or("tiny-llama");
+    let spec = flags.get("model").map(String::as_str).unwrap_or("gqsa:w4s50g16");
+    let mut wb = Workbench::new(art.to_path_buf());
+    let model = wb.variant(family, spec)?;
+    let wiki = wb.ppl(&model, "wiki_syn", 8)?;
+    let c4 = wb.ppl(&model, "c4_syn", 8)?;
+    println!("{family} / {spec}");
+    println!("  ppl wiki_syn = {wiki:.3}   c4_syn = {c4:.3}");
+    let (rows, avg) = wb.zero_shot_avg(&model, 16)?;
+    for (name, acc) in rows {
+        println!("  zero-shot {name:<16} {acc:.1}%");
+    }
+    println!("  zero-shot avg = {avg:.1}%");
+    println!("  weight bytes  = {:.2} MB", model.weight_bytes() as f64 / 1048576.0);
+    Ok(())
+}
+
+/// Pure-rust one-shot GQSA compression: fp checkpoint -> .gqsa file.
+/// (The optimized BQPO/E2E-OQP path lives in python/compile/gqsa.py;
+/// this is the no-python fallback the library exposes.)
+fn quantize(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()> {
+    let family = flags.get("family").map(String::as_str).unwrap_or("tiny-llama");
+    let sparsity: f64 = flags.get("sparsity").map(|s| s.parse()).transpose()?.unwrap_or(0.5);
+    let bits: u32 = flags.get("bits").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let group: usize = flags.get("group").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let default_tag = format!("rs-w{bits}s{:.0}g{group}", sparsity * 100.0);
+    let tag = flags.get("tag").map(String::as_str).unwrap_or(&default_tag);
+    let mut wb = Workbench::new(art.to_path_buf());
+    let fp = wb.fp(family)?;
+    let hess = wb.hessians(family)?.clone();
+    let gm = gqsa::gqs::format::GqsModel::encode_oneshot(&fp, Some(&hess), bits, group, sparsity, tag)?;
+    let out = art.join("models").join(format!("{family}.{tag}.gqsa"));
+    gm.save(&out)?;
+    println!(
+        "wrote {} ({} gqs KB + {} dense KB, {:.2}x linear compression)",
+        out.display(),
+        gm.gqs_bytes() / 1024,
+        gm.dense_bytes() / 1024,
+        fp.weights.iter().filter(|(k, _)| fp.config.linear_names().contains(k))
+            .map(|(_, m)| m.data.len() * 4).sum::<usize>() as f64 / gm.gqs_bytes() as f64,
+    );
+    Ok(())
+}
+
+fn engine_sim(flags: &HashMap<String, String>) -> Result<()> {
+    let rows: usize = flags.get("rows").map(|s| s.parse()).transpose()?.unwrap_or(4096);
+    let skew: f64 = flags.get("skew").map(|s| s.parse()).transpose()?.unwrap_or(16.0);
+    let hot: f64 = flags.get("hot").map(|s| s.parse()).transpose()?.unwrap_or(0.05);
+    let wl = Workload::synthetic(rows, 8, hot, skew, 7);
+    let cm = CostModel::new(GpuSpec::default());
+    let slice = simulate(&slice_k::decompose(&wl, 8), &cm);
+    let stream = simulate(
+        &stream_k::decompose(&wl, stream_k::default_cta_count(cm.spec.n_sm, 4)),
+        &cm,
+    );
+    println!("workload: rows={rows} hot={hot} skew={skew}x");
+    println!(
+        "slice-k : makespan={:>12.0} util={:.2} ctas={}",
+        slice.makespan, slice.utilization, slice.n_ctas
+    );
+    println!(
+        "stream-k: makespan={:>12.0} util={:.2} ctas={}",
+        stream.makespan, stream.utilization, stream.n_ctas
+    );
+    println!("speedup : {:.2}x (paper: 1.3-1.5x per operator)", slice.makespan / stream.makespan);
+    Ok(())
+}

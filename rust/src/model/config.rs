@@ -1,0 +1,181 @@
+//! Model configuration — mirrors `python/compile/common.py::ModelConfig`.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub family: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// "rope" | "learned"
+    pub pos: String,
+    /// "swiglu" | "gelu"
+    pub act: String,
+    /// "rmsnorm" | "layernorm"
+    pub norm: String,
+    pub qkv_bias: bool,
+    pub tie_embeddings: bool,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(cfg: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(cfg.get(k).and_then(Json::as_str).with_context(|| format!("config.{k}"))?.to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            Ok(cfg.get(k).and_then(Json::as_u64).with_context(|| format!("config.{k}"))? as usize)
+        };
+        let b = |k: &str| -> Result<bool> {
+            cfg.get(k).and_then(Json::as_bool).with_context(|| format!("config.{k}"))
+        };
+        Ok(Self {
+            family: s("family")?,
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            pos: s("pos")?,
+            act: s("act")?,
+            norm: s("norm")?,
+            qkv_bias: b("qkv_bias")?,
+            tie_embeddings: b("tie_embeddings")?,
+        })
+    }
+
+    pub fn from_meta(meta: &Json) -> Result<Self> {
+        Self::from_json(meta.get("config").context("meta has no 'config'")?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::str(self.family.clone())),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("pos", Json::str(self.pos.clone())),
+            ("act", Json::str(self.act.clone())),
+            ("norm", Json::str(self.norm.clone())),
+            ("qkv_bias", Json::Bool(self.qkv_bias)),
+            ("tie_embeddings", Json::Bool(self.tie_embeddings)),
+        ])
+    }
+
+    /// Names of the GQS-compressible linear weights, matching
+    /// `python/compile/model.py::linear_names`.
+    pub fn linear_names(&self) -> Vec<String> {
+        let mut per_blk = vec!["attn.wq", "attn.wk", "attn.wv", "attn.wo", "mlp.w1", "mlp.w2", "mlp.w3"];
+        if self.act != "swiglu" {
+            per_blk.retain(|n| *n != "mlp.w2");
+        }
+        (0..self.n_layers)
+            .flat_map(|i| per_blk.iter().map(move |n| format!("blk{i}.{n}")))
+            .collect()
+    }
+
+    /// (out_features, in_features) of a linear by suffix.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        if name.ends_with("mlp.w1") || name.ends_with("mlp.w2") {
+            (self.d_ff, self.d_model)
+        } else if name.ends_with("mlp.w3") {
+            (self.d_model, self.d_ff)
+        } else {
+            (self.d_model, self.d_model)
+        }
+    }
+
+    /// Total parameter count (dense fp).
+    pub fn n_params(&self) -> usize {
+        let mut n = self.vocab * self.d_model;
+        if self.pos == "learned" {
+            n += self.max_seq * self.d_model;
+        }
+        for lname in self.linear_names() {
+            let (r, c) = self.linear_shape(&lname);
+            n += r * c;
+        }
+        n += self.n_layers * 2 * self.d_model + self.d_model;
+        if !self.tie_embeddings {
+            n += self.vocab * self.d_model;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+pub fn demo_config() -> ModelConfig {
+    ModelConfig {
+        family: "tiny-llama".into(),
+        vocab: 256,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 512,
+        max_seq: 1088,
+        pos: "rope".into(),
+        act: "swiglu".into(),
+        norm: "rmsnorm".into(),
+        qkv_bias: false,
+        tie_embeddings: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_names_count() {
+        let cfg = demo_config();
+        assert_eq!(cfg.linear_names().len(), 4 * 7);
+        let mut gelu = demo_config();
+        gelu.act = "gelu".into();
+        assert_eq!(gelu.linear_names().len(), 4 * 6);
+    }
+
+    #[test]
+    fn shapes() {
+        let cfg = demo_config();
+        assert_eq!(cfg.linear_shape("blk0.attn.wq"), (256, 256));
+        assert_eq!(cfg.linear_shape("blk2.mlp.w1"), (512, 256));
+        assert_eq!(cfg.linear_shape("blk2.mlp.w3"), (256, 512));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = demo_config();
+        let v = cfg.to_json();
+        let back = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn parses_python_emitted_config() {
+        let src = r#"{"family": "tiny-llama", "vocab": 256, "d_model": 256,
+            "n_layers": 4, "n_heads": 4, "d_ff": 512, "max_seq": 1088,
+            "pos": "rope", "act": "swiglu", "norm": "rmsnorm",
+            "qkv_bias": false, "tie_embeddings": true}"#;
+        let cfg = ModelConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(cfg, demo_config());
+    }
+
+    #[test]
+    fn n_params_plausible() {
+        let n = demo_config().n_params();
+        assert!(n > 2_000_000 && n < 3_500_000, "{n}");
+    }
+}

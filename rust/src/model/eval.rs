@@ -1,0 +1,260 @@
+//! Evaluation harnesses: sliding-window perplexity (the WikiText2/C4
+//! analogue) and the synthetic zero-shot task suite (the lm-eval
+//! analogue for Tables 2/3/9).
+
+use anyhow::Result;
+
+use crate::model::transformer::Transformer;
+use crate::util::XorShift;
+
+/// Sliding-window byte-level perplexity, matching
+/// `python/compile/model.py::perplexity`.
+pub fn perplexity(model: &Transformer, data: &[u8], ctx: usize, max_windows: usize) -> Result<f64> {
+    let n_win = max_windows.min((data.len().saturating_sub(1)) / ctx);
+    let mut tot = 0.0f64;
+    let mut cnt = 0usize;
+    for w in 0..n_win {
+        let chunk = &data[w * ctx..w * ctx + ctx + 1];
+        let tokens: Vec<u32> = chunk.iter().map(|&b| u32::from(b)).collect();
+        let logits = model.forward_all(&tokens[..ctx])?;
+        for i in 0..ctx {
+            let row = logits.row(i);
+            let target = tokens[i + 1] as usize;
+            tot -= log_softmax_at(row, target);
+            cnt += 1;
+        }
+    }
+    Ok((tot / cnt.max(1) as f64).exp())
+}
+
+fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+    let maxv = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let lse: f64 = logits.iter().map(|&v| ((v - maxv) as f64).exp()).sum::<f64>().ln();
+    (logits[idx] - maxv) as f64 - lse
+}
+
+/// A zero-shot item: prompt + candidate continuations, one correct.
+pub struct ZeroShotItem {
+    pub prompt: Vec<u32>,
+    pub candidates: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// The five synthetic task families (DESIGN.md §Hardware-Adaptation):
+/// analogues of PIQA/ARC/HellaSwag/Winogrande-style candidate scoring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// repeat a literal span: "xyz xyz" vs corrupted.
+    Copy,
+    /// induction head pattern: A B ... A -> B.
+    Induction,
+    /// corpus-plausible continuation vs random bytes.
+    BigramChoice,
+    /// most frequent corpus word vs rare garbage.
+    UnigramChoice,
+    /// closing punctuation after a sentence vs mid-word stop.
+    Punctuation,
+}
+
+pub const ALL_TASKS: [Task; 5] = [
+    Task::Copy,
+    Task::Induction,
+    Task::BigramChoice,
+    Task::UnigramChoice,
+    Task::Punctuation,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Copy => "copy",
+            Task::Induction => "induction",
+            Task::BigramChoice => "bigram-choice",
+            Task::UnigramChoice => "unigram-choice",
+            Task::Punctuation => "punctuation",
+        }
+    }
+
+    /// Build `n` items from corpus text.
+    pub fn build(&self, corpus: &[u8], n: usize, seed: u64) -> Vec<ZeroShotItem> {
+        let mut rng = XorShift::new(seed ^ (*self as u64 + 1) * 7919);
+        let enc = |s: &[u8]| s.iter().map(|&b| u32::from(b)).collect::<Vec<u32>>();
+        let mut items = Vec::with_capacity(n);
+        let words: Vec<&[u8]> = corpus.split(|&b| b == b' ').filter(|w| w.len() >= 3).collect();
+        assert!(!words.is_empty(), "corpus too small for zero-shot tasks");
+        let mut attempts = 0usize;
+        while items.len() < n {
+            attempts += 1;
+            assert!(attempts < n * 1000, "task generation not converging (degenerate corpus?)");
+            match self {
+                Task::Copy => {
+                    let w = words[rng.below(words.len())];
+                    let mut prompt = w.to_vec();
+                    prompt.push(b' ');
+                    prompt.extend_from_slice(w);
+                    prompt.push(b' ');
+                    prompt.extend_from_slice(&w[..w.len() - 1]); // partial repeat
+                    let good = vec![u32::from(w[w.len() - 1])];
+                    let mut bad_b = w[w.len() - 1];
+                    bad_b = if bad_b == b'z' { b'a' } else { bad_b + 1 };
+                    items.push(ZeroShotItem {
+                        prompt: enc(&prompt),
+                        candidates: vec![good, vec![u32::from(bad_b)]],
+                        correct: 0,
+                    });
+                }
+                Task::Induction => {
+                    let a = words[rng.below(words.len())];
+                    let b = words[rng.below(words.len())];
+                    let mut prompt = Vec::new();
+                    for _ in 0..2 {
+                        prompt.extend_from_slice(a);
+                        prompt.push(b' ');
+                        prompt.extend_from_slice(b);
+                        prompt.push(b' ');
+                    }
+                    prompt.extend_from_slice(a);
+                    prompt.push(b' ');
+                    let good = enc(&b[..2.min(b.len())]);
+                    let wrong = words[rng.below(words.len())];
+                    let mut bad = enc(&wrong[..2.min(wrong.len())]);
+                    if good == bad {
+                        // low-diversity corpus: perturb deterministically
+                        let last = bad.last_mut().unwrap();
+                        *last = if *last == b'z' as u32 { b'a' as u32 } else { *last + 1 };
+                    }
+                    items.push(ZeroShotItem { prompt: enc(&prompt), candidates: vec![good, bad], correct: 0 });
+                }
+                Task::BigramChoice => {
+                    let start = rng.below(corpus.len().saturating_sub(48));
+                    let prompt = &corpus[start..start + 32];
+                    let good = enc(&corpus[start + 32..start + 40]);
+                    let bad: Vec<u32> = (0..8).map(|_| 33 + rng.below(90) as u32).collect();
+                    items.push(ZeroShotItem { prompt: enc(prompt), candidates: vec![good, bad], correct: 0 });
+                }
+                Task::UnigramChoice => {
+                    let w = words[rng.below(words.len())];
+                    let prompt = b"the ".to_vec();
+                    let good = enc(w);
+                    let bad: Vec<u32> = (0..w.len()).map(|_| 33 + rng.below(12) as u32).collect();
+                    items.push(ZeroShotItem { prompt: enc(&prompt), candidates: vec![good, bad], correct: 0 });
+                }
+                Task::Punctuation => {
+                    let start = rng.below(corpus.len().saturating_sub(40));
+                    let prompt = &corpus[start..start + 24];
+                    items.push(ZeroShotItem {
+                        prompt: enc(prompt),
+                        candidates: vec![enc(b" "), enc(b"#")],
+                        correct: 0,
+                    });
+                }
+            }
+        }
+        items
+    }
+}
+
+/// Sum log-prob of `cont` following `prompt`.
+fn continuation_logprob(model: &Transformer, prompt: &[u32], cont: &[u32]) -> Result<f64> {
+    let mut full = prompt.to_vec();
+    full.extend_from_slice(cont);
+    let logits = model.forward_all(&full[..full.len() - 1])?;
+    let mut lp = 0.0f64;
+    for (i, &tok) in cont.iter().enumerate() {
+        let row = logits.row(prompt.len() - 1 + i);
+        lp += log_softmax_at(row, tok as usize);
+    }
+    // length-normalized, as lm-eval does for choice tasks
+    Ok(lp / cont.len() as f64)
+}
+
+/// Accuracy of the model on a task's items.
+pub fn task_accuracy(model: &Transformer, items: &[ZeroShotItem]) -> Result<f64> {
+    let mut correct = 0usize;
+    for item in items {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, cand) in item.candidates.iter().enumerate() {
+            let lp = continuation_logprob(model, &item.prompt, cand)?;
+            if lp > best.0 {
+                best = (lp, ci);
+            }
+        }
+        if best.1 == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Run the full suite; returns (task name, accuracy %) rows.
+pub fn zero_shot_suite(
+    model: &Transformer,
+    corpus: &[u8],
+    n_per_task: usize,
+    seed: u64,
+) -> Result<Vec<(String, f64)>> {
+    let mut rows = Vec::new();
+    for task in ALL_TASKS {
+        let items = task.build(corpus, n_per_task, seed);
+        let acc = task_accuracy(model, &items)?;
+        rows.push((task.name().to_string(), acc * 100.0));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::demo_config;
+    use crate::model::transformer::random_fp;
+
+    fn tiny_model() -> Transformer {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.max_seq = 128;
+        Transformer::from_fp(&random_fp(&cfg, 11)).unwrap()
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        let m = tiny_model();
+        let data: Vec<u8> = (0..2000u32).map(|i| (i * 7 % 251) as u8).collect();
+        let ppl = perplexity(&m, &data, 64, 2).unwrap();
+        assert!(ppl > 50.0 && ppl < 2000.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn tasks_build_requested_count() {
+        let corpus = b"hello world this is a tiny corpus of words for tasks. ".repeat(20);
+        for task in ALL_TASKS {
+            let items = task.build(&corpus, 5, 1);
+            assert_eq!(items.len(), 5, "{}", task.name());
+            for it in &items {
+                assert!(it.candidates.len() >= 2);
+                assert!(it.correct < it.candidates.len());
+                assert_ne!(it.candidates[0], it.candidates[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn suite_runs_on_random_model() {
+        let m = tiny_model();
+        let corpus = b"ba ko ba ko te na ba ko. ".repeat(30);
+        let rows = zero_shot_suite(&m, &corpus, 3, 2).unwrap();
+        assert_eq!(rows.len(), 5);
+        for (_, acc) in rows {
+            assert!((0.0..=100.0).contains(&acc));
+        }
+    }
+}

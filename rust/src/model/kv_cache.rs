@@ -1,0 +1,135 @@
+//! KV cache for the rust-native decode path.
+//!
+//! Layout: per layer, `k`/`v` as (n_heads, capacity, head_dim) row-major
+//! slabs, preallocated once per sequence (the serving coordinator pools
+//! and reuses them across requests — no allocation on the decode path).
+
+#[derive(Clone, Debug)]
+pub struct LayerKv {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub capacity: usize,
+    pub len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl LayerKv {
+    pub fn new(n_heads: usize, head_dim: usize, capacity: usize) -> Self {
+        Self {
+            n_heads,
+            head_dim,
+            capacity,
+            len: 0,
+            k: vec![0.0; n_heads * capacity * head_dim],
+            v: vec![0.0; n_heads * capacity * head_dim],
+        }
+    }
+
+    /// Append one position's K/V (already head-major: (H, Dh) flat).
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert!(self.len < self.capacity, "kv cache overflow");
+        assert_eq!(k.len(), self.n_heads * self.head_dim);
+        for h in 0..self.n_heads {
+            let dst = (h * self.capacity + self.len) * self.head_dim;
+            let src = h * self.head_dim;
+            self.k[dst..dst + self.head_dim].copy_from_slice(&k[src..src + self.head_dim]);
+            self.v[dst..dst + self.head_dim].copy_from_slice(&v[src..src + self.head_dim]);
+        }
+        self.len += 1;
+    }
+
+    /// Key vector of head h at position t.
+    #[inline]
+    pub fn key(&self, h: usize, t: usize) -> &[f32] {
+        let o = (h * self.capacity + t) * self.head_dim;
+        &self.k[o..o + self.head_dim]
+    }
+
+    #[inline]
+    pub fn value(&self, h: usize, t: usize) -> &[f32] {
+        let o = (h * self.capacity + t) * self.head_dim;
+        &self.v[o..o + self.head_dim]
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Whole-model cache: one LayerKv per transformer block.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, n_heads: usize, head_dim: usize, capacity: usize) -> Self {
+        Self {
+            layers: (0..n_layers).map(|_| LayerKv::new(n_heads, head_dim, capacity)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.reset();
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read() {
+        let mut kv = LayerKv::new(2, 3, 4);
+        let k1: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let v1: Vec<f32> = (0..6).map(|i| 10.0 + i as f32).collect();
+        kv.append(&k1, &v1);
+        assert_eq!(kv.len, 1);
+        assert_eq!(kv.key(0, 0), &[0.0, 1.0, 2.0]);
+        assert_eq!(kv.key(1, 0), &[3.0, 4.0, 5.0]);
+        assert_eq!(kv.value(1, 0), &[13.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut kv = LayerKv::new(1, 2, 1);
+        kv.append(&[0.0, 0.0], &[0.0, 0.0]);
+        kv.append(&[0.0, 0.0], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let mut kv = KvCache::new(2, 1, 2, 3);
+        kv.layers[0].append(&[1.0, 2.0], &[3.0, 4.0]);
+        kv.layers[1].append(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(kv.len(), 1);
+        kv.reset();
+        assert_eq!(kv.len(), 0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let kv = KvCache::new(4, 4, 64, 288);
+        assert_eq!(kv.bytes(), 4 * 2 * 4 * 64 * 288 * 4);
+    }
+}

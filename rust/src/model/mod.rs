@@ -1,0 +1,13 @@
+//! Rust-native serving model: tokenizer, transformer forward built on
+//! the gqs kernels, KV cache, sampling, and evaluation harnesses.
+
+pub mod config;
+pub mod eval;
+pub mod kv_cache;
+pub mod sampler;
+pub mod tokenizer;
+pub mod transformer;
+
+pub use config::ModelConfig;
+pub use kv_cache::KvCache;
+pub use transformer::{LinearKind, Scratch, Transformer};

@@ -1,0 +1,79 @@
+//! Token sampling for generation: greedy, temperature, top-k.
+
+use crate::util::XorShift;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    Greedy,
+    /// softmax temperature + optional top-k truncation
+    TopK { temperature: f32, k: usize },
+}
+
+pub fn sample(logits: &[f32], mode: Sampling, rng: &mut XorShift) -> u32 {
+    match mode {
+        Sampling::Greedy => argmax(logits) as u32,
+        Sampling::TopK { temperature, k } => {
+            let temp = temperature.max(1e-4);
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
+            let k = k.clamp(1, logits.len());
+            let top = &idx[..k];
+            let maxv = logits[top[0]];
+            let weights: Vec<f64> = top
+                .iter()
+                .map(|&i| (((logits[i] - maxv) / temp) as f64).exp())
+                .collect();
+            let total: f64 = weights.iter().sum();
+            let mut u = rng.next_f32() as f64 * total;
+            for (i, w) in top.iter().zip(&weights) {
+                if u < *w {
+                    return *i as u32;
+                }
+                u -= w;
+            }
+            top[k - 1] as u32
+        }
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = XorShift::new(0);
+        let logits = vec![0.1, 5.0, 0.3];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_top_set() {
+        let mut rng = XorShift::new(1);
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        for _ in 0..100 {
+            let t = sample(&logits, Sampling::TopK { temperature: 1.0, k: 2 }, &mut rng);
+            assert!(t < 2);
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = XorShift::new(2);
+        let logits = vec![1.0, 1.5, 0.5];
+        let hits = (0..50)
+            .filter(|_| sample(&logits, Sampling::TopK { temperature: 0.01, k: 3 }, &mut rng) == 1)
+            .count();
+        assert!(hits >= 48);
+    }
+}

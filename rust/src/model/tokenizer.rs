@@ -1,0 +1,49 @@
+//! Byte-level tokenizer: vocab = 256 raw bytes. Matches the python
+//! training pipeline (corpora are byte streams).
+
+/// Byte-level tokenizer (identity mapping, with helpers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(u32::from).collect()
+    }
+
+    pub fn encode_bytes(&self, data: &[u8]) -> Vec<u32> {
+        data.iter().map(|&b| u32::from(b)).collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "hello gqsa. ";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn encode_bytes_matches_encode() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode("abc"), t.encode_bytes(b"abc"));
+    }
+
+    #[test]
+    fn all_tokens_in_vocab() {
+        let t = ByteTokenizer;
+        assert!(t.encode("日本").iter().all(|&v| v < 256));
+    }
+}

@@ -1,0 +1,667 @@
+//! Rust-native transformer forward — the serving engine's compute path.
+//!
+//! Numerics mirror `python/compile/model.py` exactly (RMSNorm/LayerNorm
+//! eps 1e-6, RoPE theta 10000, tanh-approx GELU, causal softmax), so the
+//! same checkpoint produces the same logits through either path (cross-
+//! checked against the PJRT artifacts in tests/runtime_integration.rs).
+//!
+//! Every linear is a `LinearKind`: dense FP32, the paper's GQS layer, a
+//! dense group-quantized W{2,4,8} baseline, or the 2:4 kernel — so one
+//! forward implementation serves every compression setting in the
+//! paper's tables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gqs::format::{FpModel, GqsModel};
+use crate::gqs::gemv::gqs_gemv;
+use crate::gqs::gemv_dense::{dense_gemv, QuantDense, Semi24Kernel};
+use crate::gqs::layer::GqsLayer;
+use crate::model::config::ModelConfig;
+use crate::model::kv_cache::KvCache;
+use crate::quant::act::fake_quant_i8;
+use crate::sparse::group_prune::group_prune;
+use crate::sparse::saliency::SaliencyMetric;
+use crate::sparse::semi24::prune_24;
+use crate::util::Mat;
+
+/// One linear operator in any of the paper's compression settings.
+pub enum LinearKind {
+    Dense(Mat),
+    Gqs(GqsLayer),
+    QuantDense(QuantDense),
+    Semi24(Semi24Kernel),
+    /// group-pruned, unquantized (the "S%" sparsity-only rows of Table 10)
+    BsrF32(crate::sparse::bsr::BsrMatrix),
+}
+
+impl LinearKind {
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearKind::Dense(m) => m.rows,
+            LinearKind::Gqs(l) => l.rows,
+            LinearKind::QuantDense(q) => q.rows,
+            LinearKind::Semi24(s) => s.rows,
+            LinearKind::BsrF32(b) => b.rows,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinearKind::Dense(m) => m.cols,
+            LinearKind::Gqs(l) => l.cols,
+            LinearKind::QuantDense(q) => q.cols,
+            LinearKind::Semi24(s) => s.cols,
+            LinearKind::BsrF32(b) => b.cols,
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            LinearKind::Dense(m) => m.data.len() * 4,
+            LinearKind::Gqs(l) => l.storage_bytes(),
+            LinearKind::QuantDense(q) => q.storage_bytes(),
+            LinearKind::Semi24(s) => s.storage_bytes(),
+            LinearKind::BsrF32(b) => b.storage_bytes(),
+        }
+    }
+
+    #[inline]
+    pub fn matvec(&self, x: &[f32], y: &mut [f32], scratch: &mut Vec<f32>) {
+        match self {
+            LinearKind::Dense(m) => dense_gemv(m, x, y),
+            LinearKind::Gqs(l) => gqs_gemv(l, x, y, scratch),
+            LinearKind::QuantDense(q) => q.gemv(x, y, scratch),
+            LinearKind::Semi24(s) => s.gemv(x, y),
+            LinearKind::BsrF32(b) => y.copy_from_slice(&b.matvec(x)),
+        }
+    }
+}
+
+/// Pre-allocated scratch for one decode step (no allocation on the hot
+/// path — a §Perf deliverable).
+pub struct Scratch {
+    pub x: Vec<f32>,
+    pub xn: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub attn_out: Vec<f32>,
+    pub proj: Vec<f32>,
+    pub ff_a: Vec<f32>,
+    pub ff_b: Vec<f32>,
+    pub ff_n: Vec<f32>,
+    pub att: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub gsum: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let d = cfg.d_model;
+        let ff = cfg.d_ff;
+        Self {
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn_out: vec![0.0; d],
+            proj: vec![0.0; d],
+            ff_a: vec![0.0; ff],
+            ff_b: vec![0.0; ff],
+            ff_n: vec![0.0; ff],
+            att: vec![0.0; cfg.max_seq],
+            logits: vec![0.0; cfg.vocab],
+            gsum: Vec::new(),
+        }
+    }
+}
+
+/// The model: small dense tensors + compressible linears.
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub tok_emb: Mat,
+    pub pos_emb: Option<Mat>,
+    pub dense_small: BTreeMap<String, Vec<f32>>, // norms + biases
+    pub linears: BTreeMap<String, LinearKind>,
+    /// dynamic INT8 activation fake-quant before every linear (W4A8 mode)
+    pub act_quant_i8: bool,
+    /// when set, `lin()` accumulates per-linear input Hessians H += x xᵀ
+    /// (the calibration pass for saliency / GPTQ / OBS baselines)
+    pub capture_hessians: Option<std::cell::RefCell<BTreeMap<String, Mat>>>,
+}
+
+impl Transformer {
+    // ------------------------------------------------------------------
+    // Constructors for every compression setting
+    // ------------------------------------------------------------------
+
+    /// Dense FP32 (the "fp16" rows of the tables).
+    pub fn from_fp(fp: &FpModel) -> Result<Self> {
+        let mut t = Self::skeleton(fp)?;
+        for name in fp.config.linear_names() {
+            t.linears.insert(name.clone(), LinearKind::Dense(fp.get(&name)?.clone()));
+        }
+        Ok(t)
+    }
+
+    /// GQSA-compressed from a .gqsa container (BQPO+E2E-OQP optimized).
+    pub fn from_gqs(gm: &GqsModel) -> Result<Self> {
+        let fp_like = FpModel { config: gm.config.clone(), weights: gm.dense.clone() };
+        let mut t = Self::skeleton(&fp_like)?;
+        for (name, layer) in &gm.layers {
+            t.linears.insert(name.clone(), LinearKind::Gqs(layer.clone()));
+        }
+        Ok(t)
+    }
+
+    /// One-shot GQSA from the FP checkpoint (no BQPO/E2E) — used for
+    /// sweeps where only relative ordering matters.
+    pub fn from_fp_gqs_oneshot(
+        fp: &FpModel,
+        hessians: Option<&BTreeMap<String, Mat>>,
+        bits: u32,
+        group: usize,
+        sparsity: f64,
+    ) -> Result<Self> {
+        let mut t = Self::skeleton(fp)?;
+        for name in fp.config.linear_names() {
+            let w = fp.get(&name)?;
+            let h = hessians.and_then(|m| m.get(&name));
+            let metric = if h.is_some() { SaliencyMetric::Hessian } else { SaliencyMetric::Magnitude };
+            let mask = group_prune(w, h, metric, group, sparsity);
+            t.linears.insert(name.clone(), LinearKind::Gqs(GqsLayer::encode(w, &mask, bits)));
+        }
+        Ok(t)
+    }
+
+    /// Dense W{2,4,8} per-group RTN quantization (quantization-only rows).
+    pub fn from_fp_quantized(fp: &FpModel, bits: u32, group: usize) -> Result<Self> {
+        let mut t = Self::skeleton(fp)?;
+        for name in fp.config.linear_names() {
+            t.linears.insert(
+                name.clone(),
+                LinearKind::QuantDense(QuantDense::encode(fp.get(&name)?, bits, group)),
+            );
+        }
+        Ok(t)
+    }
+
+    /// Dense with an externally-transformed weight map (GPTQ, OBS-2:4,
+    /// structured prune, VQ, ... — any baseline that yields dense f32).
+    pub fn from_fp_with(fp: &FpModel, f: impl Fn(&str, &Mat) -> Mat) -> Result<Self> {
+        let mut t = Self::skeleton(fp)?;
+        for name in fp.config.linear_names() {
+            t.linears.insert(name.clone(), LinearKind::Dense(f(&name, fp.get(&name)?)));
+        }
+        Ok(t)
+    }
+
+    /// W4 2:4 (2:4 prune then the Semi24 kernel) — the "W4 2:4" rows.
+    pub fn from_fp_24(fp: &FpModel, hessians: Option<&BTreeMap<String, Mat>>, bits: u32, group: usize) -> Result<Self> {
+        let mut t = Self::skeleton(fp)?;
+        for name in fp.config.linear_names() {
+            let w = fp.get(&name)?;
+            let h = hessians.and_then(|m| m.get(&name));
+            let metric = if h.is_some() { SaliencyMetric::Wanda } else { SaliencyMetric::Magnitude };
+            let w24 = prune_24(w, h, metric);
+            t.linears.insert(name.clone(), LinearKind::Semi24(Semi24Kernel::encode(&w24, bits, group)));
+        }
+        Ok(t)
+    }
+
+    fn skeleton(fp: &FpModel) -> Result<Self> {
+        let cfg = fp.config.clone();
+        let tok_emb = fp.get("tok_emb")?.clone();
+        if tok_emb.rows != cfg.vocab || tok_emb.cols != cfg.d_model {
+            bail!("tok_emb shape mismatch");
+        }
+        let pos_emb = if cfg.pos == "learned" { Some(fp.get("pos_emb")?.clone()) } else { None };
+        let mut dense_small = BTreeMap::new();
+        let lnames = cfg.linear_names();
+        for (name, m) in &fp.weights {
+            if name == "tok_emb" || name == "pos_emb" || lnames.contains(name) {
+                continue;
+            }
+            dense_small.insert(name.clone(), m.data.clone());
+        }
+        Ok(Self {
+            cfg,
+            tok_emb,
+            pos_emb,
+            dense_small,
+            linears: BTreeMap::new(),
+            act_quant_i8: false,
+            capture_hessians: None,
+        })
+    }
+
+    fn small(&self, name: &str) -> Result<&[f32]> {
+        self.dense_small
+            .get(name)
+            .map(|v| v.as_slice())
+            .with_context(|| format!("small tensor '{name}' missing"))
+    }
+
+    /// Weight bytes: embeddings + small + linears (the "Memory (GB)"
+    /// column of Fig. 7 / Table 16, scaled down).
+    pub fn weight_bytes(&self) -> usize {
+        let emb = self.tok_emb.data.len() * 4
+            + self.pos_emb.as_ref().map_or(0, |p| p.data.len() * 4);
+        let small: usize = self.dense_small.values().map(|v| v.len() * 4).sum();
+        let lin: usize = self.linears.values().map(|l| l.storage_bytes()).sum();
+        emb + small + lin
+    }
+
+    // ------------------------------------------------------------------
+    // Forward
+    // ------------------------------------------------------------------
+
+    fn norm(&self, name: &str, x: &[f32], out: &mut [f32]) -> Result<()> {
+        let scale = self.small(name)?;
+        if self.cfg.norm == "rmsnorm" {
+            let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+            let r = 1.0 / (ms + 1e-6).sqrt();
+            for i in 0..x.len() {
+                out[i] = x[i] * r * scale[i];
+            }
+        } else {
+            let mu = x.iter().sum::<f32>() / x.len() as f32;
+            let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / x.len() as f32;
+            let r = 1.0 / (var + 1e-6).sqrt();
+            let bias = self.small(&format!("{name}.bias"))?;
+            for i in 0..x.len() {
+                out[i] = (x[i] - mu) * r * scale[i] + bias[i];
+            }
+        }
+        Ok(())
+    }
+
+    fn rope(&self, v: &mut [f32], pos: usize) {
+        // matches python _rope: per head, halves rotated jointly.
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let half = dh / 2;
+        for head in 0..h {
+            let o = head * dh;
+            for i in 0..half {
+                let freq = (10000.0f32).powf(-(i as f32) / half as f32);
+                let ang = pos as f32 * freq;
+                let (sin, cos) = ang.sin_cos();
+                let x1 = v[o + i];
+                let x2 = v[o + half + i];
+                v[o + i] = x1 * cos - x2 * sin;
+                v[o + half + i] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+
+    fn lin(&self, name: &str, x: &mut [f32], y: &mut [f32], gsum: &mut Vec<f32>) -> Result<()> {
+        if self.act_quant_i8 {
+            fake_quant_i8(x);
+        }
+        if let Some(cap) = &self.capture_hessians {
+            let mut map = cap.borrow_mut();
+            let k = x.len();
+            let h = map.entry(name.to_string()).or_insert_with(|| Mat::zeros(k, k));
+            for i in 0..k {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = h.row_mut(i);
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r += xi * x[j];
+                }
+            }
+        }
+        let l = self.linears.get(name).with_context(|| format!("linear '{name}' missing"))?;
+        l.matvec(x, y, gsum);
+        Ok(())
+    }
+
+    /// Calibration pass: run `n_seq` windows of `ctx` corpus bytes through
+    /// the model collecting per-linear input Hessians (H = Σ x xᵀ).
+    pub fn calibrate_hessians(
+        &mut self,
+        corpus: &[u8],
+        n_seq: usize,
+        ctx: usize,
+    ) -> Result<BTreeMap<String, Mat>> {
+        self.capture_hessians = Some(std::cell::RefCell::new(BTreeMap::new()));
+        let stride = (corpus.len().saturating_sub(ctx)) / n_seq.max(1);
+        for s in 0..n_seq {
+            let start = s * stride;
+            let tokens: Vec<u32> =
+                corpus[start..start + ctx].iter().map(|&b| u32::from(b)).collect();
+            self.forward_all(&tokens)?;
+        }
+        let cap = self.capture_hessians.take().unwrap();
+        Ok(cap.into_inner())
+    }
+
+    /// One decode step: appends to `kv`, returns logits in
+    /// `scratch.logits`. `pos` must equal `kv.len()`.
+    pub fn decode_step(&self, token: u32, kv: &mut KvCache, scratch: &mut Scratch) -> Result<()> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let dh = cfg.head_dim();
+        let pos = kv.len();
+        if pos >= kv.layers[0].capacity {
+            bail!("kv capacity exceeded");
+        }
+
+        let s = scratch;
+        s.x.copy_from_slice(self.tok_emb.row(token as usize));
+        if let Some(pe) = &self.pos_emb {
+            for i in 0..d {
+                s.x[i] += pe.at(pos, i);
+            }
+        }
+
+        for l in 0..cfg.n_layers {
+            let pre = format!("blk{l}.");
+            // --- attention ---
+            {
+                let (xn, x) = (&mut s.xn, &s.x);
+                self.norm(&format!("{pre}norm1"), x, xn)?;
+            }
+            self.lin(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.gsum)?;
+            self.lin(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.gsum)?;
+            self.lin(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.gsum)?;
+            if cfg.qkv_bias {
+                let bq = self.small(&format!("{pre}attn.bq"))?;
+                let bk = self.small(&format!("{pre}attn.bk"))?;
+                let bv = self.small(&format!("{pre}attn.bv"))?;
+                for i in 0..d {
+                    s.q[i] += bq[i];
+                    s.k[i] += bk[i];
+                    s.v[i] += bv[i];
+                }
+            }
+            if cfg.pos == "rope" {
+                self.rope(&mut s.q, pos);
+                self.rope(&mut s.k, pos);
+            }
+            kv.layers[l].append(&s.k, &s.v);
+            let cache = &kv.layers[l];
+            let t_now = cache.len;
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+            for head in 0..h {
+                let qh = &s.q[head * dh..(head + 1) * dh];
+                // scores
+                let att = &mut s.att[..t_now];
+                let mut maxv = f32::NEG_INFINITY;
+                for (t, a) in att.iter_mut().enumerate() {
+                    let kt = cache.key(head, t);
+                    let mut dot = 0.0;
+                    for i in 0..dh {
+                        dot += qh[i] * kt[i];
+                    }
+                    *a = dot * inv_sqrt;
+                    maxv = maxv.max(*a);
+                }
+                let mut denom = 0.0;
+                for a in att.iter_mut() {
+                    *a = (*a - maxv).exp();
+                    denom += *a;
+                }
+                let out = &mut s.attn_out[head * dh..(head + 1) * dh];
+                out.fill(0.0);
+                for t in 0..t_now {
+                    let wgt = att[t] / denom;
+                    let vt = cache.value(head, t);
+                    for i in 0..dh {
+                        out[i] += wgt * vt[i];
+                    }
+                }
+            }
+            self.lin(&format!("{pre}attn.wo"), &mut s.attn_out, &mut s.proj, &mut s.gsum)?;
+            for i in 0..d {
+                s.x[i] += s.proj[i];
+            }
+            // --- mlp ---
+            {
+                let (xn, x) = (&mut s.xn, &s.x);
+                self.norm(&format!("{pre}norm2"), x, xn)?;
+            }
+            if cfg.act == "swiglu" {
+                self.lin(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.gsum)?;
+                self.lin(&format!("{pre}mlp.w2"), &mut s.xn, &mut s.ff_b, &mut s.gsum)?;
+                for i in 0..cfg.d_ff {
+                    let a = s.ff_a[i];
+                    s.ff_n[i] = a / (1.0 + (-a).exp()) * s.ff_b[i]; // silu(a)*b
+                }
+            } else {
+                self.lin(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.gsum)?;
+                for i in 0..cfg.d_ff {
+                    s.ff_n[i] = gelu_tanh(s.ff_a[i]);
+                }
+            }
+            self.lin(&format!("{pre}mlp.w3"), &mut s.ff_n, &mut s.proj, &mut s.gsum)?;
+            for i in 0..d {
+                s.x[i] += s.proj[i];
+            }
+        }
+
+        {
+            let (xn, x) = (&mut s.xn, &s.x);
+            self.norm("final_norm", x, xn)?;
+        }
+        // logits = tok_emb @ xn (tied embeddings)
+        dense_gemv(&self.tok_emb, &s.xn, &mut s.logits);
+        Ok(())
+    }
+
+    /// Prefill a prompt: sequential decode steps (GEMV path — input
+    /// lengths in the paper's serving tables are tiny, e.g. 15).
+    pub fn prefill(&self, tokens: &[u32], kv: &mut KvCache, scratch: &mut Scratch) -> Result<()> {
+        for &t in tokens {
+            self.decode_step(t, kv, scratch)?;
+        }
+        Ok(())
+    }
+
+    /// Full-sequence logits (for perplexity): returns (T, V) matrix.
+    pub fn forward_all(&self, tokens: &[u32]) -> Result<Mat> {
+        let mut kv = KvCache::new(
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.head_dim(),
+            tokens.len(),
+        );
+        let mut scratch = Scratch::new(&self.cfg);
+        let mut out = Mat::zeros(tokens.len(), self.cfg.vocab);
+        for (i, &t) in tokens.iter().enumerate() {
+            self.decode_step(t, &mut kv, &mut scratch)?;
+            out.row_mut(i).copy_from_slice(&scratch.logits);
+        }
+        Ok(out)
+    }
+}
+
+/// tanh-approximation GELU (matches jax.nn.gelu(approximate=True)).
+#[inline]
+pub fn gelu_tanh(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Random-weight FP model for tests (shared across test modules).
+#[cfg(test)]
+pub fn random_fp(cfg: &ModelConfig, seed: u64) -> FpModel {
+    use crate::util::XorShift;
+    let mut rng = XorShift::new(seed);
+        let mut weights = BTreeMap::new();
+        let scale = |fan_in: usize| (fan_in as f32).powf(-0.5);
+        let mat = |r: usize, c: usize, s: f32, rng: &mut XorShift| {
+            let mut m = Mat::randn(r, c, rng);
+            for v in &mut m.data {
+                *v *= s;
+            }
+            m
+        };
+        weights.insert("tok_emb".into(), mat(cfg.vocab, cfg.d_model, 0.02, &mut rng));
+        if cfg.pos == "learned" {
+            weights.insert("pos_emb".into(), mat(cfg.max_seq, cfg.d_model, 0.02, &mut rng));
+        }
+        for i in 0..cfg.n_layers {
+            let pre = format!("blk{i}.");
+            for nm in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+                weights.insert(format!("{pre}{nm}"), mat(cfg.d_model, cfg.d_model, scale(cfg.d_model), &mut rng));
+            }
+            if cfg.qkv_bias {
+                for nm in ["attn.bq", "attn.bk", "attn.bv"] {
+                    weights.insert(format!("{pre}{nm}"), Mat::zeros(1, cfg.d_model));
+                }
+            }
+            weights.insert(format!("{pre}mlp.w1"), mat(cfg.d_ff, cfg.d_model, scale(cfg.d_model), &mut rng));
+            if cfg.act == "swiglu" {
+                weights.insert(format!("{pre}mlp.w2"), mat(cfg.d_ff, cfg.d_model, scale(cfg.d_model), &mut rng));
+            }
+            weights.insert(format!("{pre}mlp.w3"), mat(cfg.d_model, cfg.d_ff, scale(cfg.d_ff), &mut rng));
+            weights.insert(format!("{pre}norm1"), Mat::from_vec(1, cfg.d_model, vec![1.0; cfg.d_model]));
+            weights.insert(format!("{pre}norm2"), Mat::from_vec(1, cfg.d_model, vec![1.0; cfg.d_model]));
+            if cfg.norm == "layernorm" {
+                weights.insert(format!("{pre}norm1.bias"), Mat::zeros(1, cfg.d_model));
+                weights.insert(format!("{pre}norm2.bias"), Mat::zeros(1, cfg.d_model));
+            }
+        }
+        weights.insert("final_norm".into(), Mat::from_vec(1, cfg.d_model, vec![1.0; cfg.d_model]));
+        if cfg.norm == "layernorm" {
+            weights.insert("final_norm.bias".into(), Mat::zeros(1, cfg.d_model));
+        }
+        FpModel { config: cfg.clone(), weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::demo_config;
+
+    fn small_cfg() -> ModelConfig {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 64;
+        cfg
+    }
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 1);
+        let t = Transformer::from_fp(&fp).unwrap();
+        let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 16);
+        let mut s = Scratch::new(&cfg);
+        t.decode_step(7, &mut kv, &mut s).unwrap();
+        assert!(s.logits.iter().all(|v| v.is_finite()));
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn forward_all_deterministic() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 2);
+        let t = Transformer::from_fp(&fp).unwrap();
+        let toks = [1u32, 5, 9, 3];
+        let a = t.forward_all(&toks).unwrap();
+        let b = t.forward_all(&toks).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn causality_prefix_stable() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 3);
+        let t = Transformer::from_fp(&fp).unwrap();
+        let a = t.forward_all(&[1, 2, 3, 4]).unwrap();
+        let b = t.forward_all(&[1, 2, 3, 60]).unwrap();
+        for i in 0..3 {
+            for j in 0..cfg.vocab {
+                assert!((a.at(i, j) - b.at(i, j)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn all_families_forward() {
+        for (pos, act, norm, bias) in [
+            ("rope", "swiglu", "rmsnorm", false),
+            ("learned", "gelu", "layernorm", false),
+            ("rope", "swiglu", "rmsnorm", true),
+        ] {
+            let mut cfg = small_cfg();
+            cfg.pos = pos.into();
+            cfg.act = act.into();
+            cfg.norm = norm.into();
+            cfg.qkv_bias = bias;
+            let fp = random_fp(&cfg, 4);
+            let t = Transformer::from_fp(&fp).unwrap();
+            let out = t.forward_all(&[1, 2, 3]).unwrap();
+            assert!(out.data.iter().all(|v| v.is_finite()), "{pos}/{act}/{norm}");
+        }
+    }
+
+    #[test]
+    fn gqs_close_to_dense_at_low_sparsity() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 5);
+        let dense = Transformer::from_fp(&fp).unwrap();
+        let gqs = Transformer::from_fp_gqs_oneshot(&fp, None, 8, 16, 0.0).unwrap();
+        let a = dense.forward_all(&[1, 2, 3, 4, 5]).unwrap();
+        let b = gqs.forward_all(&[1, 2, 3, 4, 5]).unwrap();
+        let rel = a.dist(&b) / a.frob();
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn quantized_variants_forward() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 6);
+        for t in [
+            Transformer::from_fp_quantized(&fp, 4, 16).unwrap(),
+            Transformer::from_fp_quantized(&fp, 8, 16).unwrap(),
+            Transformer::from_fp_24(&fp, None, 4, 16).unwrap(),
+            Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap(),
+        ] {
+            let out = t.forward_all(&[3, 1, 4]).unwrap();
+            assert!(out.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn storage_ordering_full_model() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 7);
+        let dense = Transformer::from_fp(&fp).unwrap().weight_bytes();
+        let w4 = Transformer::from_fp_quantized(&fp, 4, 16).unwrap().weight_bytes();
+        let gqs50 = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap().weight_bytes();
+        assert!(gqs50 < w4 && w4 < dense, "{gqs50} < {w4} < {dense}");
+    }
+
+    #[test]
+    fn act_quant_changes_little() {
+        let cfg = small_cfg();
+        let fp = random_fp(&cfg, 8);
+        let mut t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        let a = t.forward_all(&[1, 2, 3]).unwrap();
+        t.act_quant_i8 = true;
+        let b = t.forward_all(&[1, 2, 3]).unwrap();
+        let rel = a.dist(&b) / a.frob();
+        assert!(rel > 0.0 && rel < 0.2, "rel {rel}");
+    }
+
+    #[test]
+    fn gelu_tanh_reference_values() {
+        assert!((gelu_tanh(0.0)).abs() < 1e-7);
+        assert!((gelu_tanh(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu_tanh(-1.0) + 0.158808).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,68 @@
+//! Dynamic per-token INT8 activation quantization (Appendix C, W4A8).
+//!
+//! Symmetric per-vector scaling: s = max|x| / 127, q = round(x/s).
+//! Applied on the fly in the serving path when the model is configured
+//! W4A8S50%; adds quantization noise but no storage (activations are
+//! transient).
+
+/// Quantize-dequantize one activation vector in place (simulated A8).
+pub fn fake_quant_i8(x: &mut [f32]) -> f32 {
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        return 0.0;
+    }
+    let scale = amax / 127.0;
+    for v in x.iter_mut() {
+        *v = (*v / scale).round().clamp(-127.0, 127.0) * scale;
+    }
+    scale
+}
+
+/// Quantize to real i8 codes + scale (for kernels that consume int8).
+pub fn quant_i8(x: &[f32]) -> (Vec<i8>, f32) {
+    let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+    let q = x.iter().map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8).collect();
+    (q, scale)
+}
+
+pub fn dequant_i8(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn fake_quant_bounded_error() {
+        let mut rng = XorShift::new(0);
+        let orig = rng.normal_vec(256);
+        let mut x = orig.clone();
+        let scale = fake_quant_i8(&mut x);
+        for (a, b) in orig.iter().zip(&x) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn roundtrip_i8() {
+        let mut rng = XorShift::new(1);
+        let x = rng.normal_vec(64);
+        let (q, s) = quant_i8(&x);
+        let back = dequant_i8(&q, s);
+        let mut fq = x.clone();
+        fake_quant_i8(&mut fq);
+        for (a, b) in back.iter().zip(&fq) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_vector_safe() {
+        let mut x = vec![0.0; 8];
+        assert_eq!(fake_quant_i8(&mut x), 0.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,187 @@
+//! Per-group asymmetric uniform quantization — paper Eq. 1-3.
+//!
+//! `s = (max - min) / (2^n - 1)`, `z = -floor(min / s)`,
+//! `q = clamp(round(w/s) + z, 0, 2^n - 1)`, `w_hat = (q - z) * s`.
+
+/// Scale/zero pair for one group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero: f32,
+}
+
+impl QuantParams {
+    /// Eq. 1 over one group of weights.
+    pub fn fit(group: &[f32], bits: u32) -> Self {
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &w in group {
+            lo = lo.min(w);
+            hi = hi.max(w);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            return Self { scale: 1e-12, zero: 0.0 };
+        }
+        if (hi - lo).abs() <= 1e-12 * hi.abs().max(1.0) {
+            // Constant group: pick (s, z) that reproduce the value exactly
+            // (literal Eq. 1 would collapse the scale and decode to 0).
+            if hi == 0.0 {
+                return Self { scale: 1e-12, zero: 0.0 };
+            }
+            let scale = hi.abs();
+            let zero = if hi >= 0.0 { 0.0 } else { qmax };
+            return Self { scale, zero };
+        }
+        let scale = ((hi - lo) / qmax).max(1e-12);
+        let zero = (-(lo / scale).floor()).clamp(0.0, qmax);
+        Self { scale, zero }
+    }
+
+    /// Eq. 2: quantize one value to an integer code.
+    #[inline]
+    pub fn quantize(&self, w: f32, bits: u32) -> u8 {
+        let qmax = ((1u32 << bits) - 1) as f32;
+        ((w / self.scale).round() + self.zero).clamp(0.0, qmax) as u8
+    }
+
+    /// Eq. 3: dequantize a code.
+    #[inline]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        (q as f32 - self.zero) * self.scale
+    }
+}
+
+/// A group-quantized weight row-block: codes + per-group params.
+#[derive(Clone, Debug)]
+pub struct GroupQuant {
+    pub bits: u32,
+    pub group: usize,
+    /// Integer codes, len = n_groups * group.
+    pub codes: Vec<u8>,
+    pub params: Vec<QuantParams>,
+}
+
+impl GroupQuant {
+    /// Quantize a flat weight slice in consecutive groups of `group`.
+    pub fn quantize(w: &[f32], bits: u32, group: usize) -> Self {
+        assert!(w.len() % group == 0, "len {} % group {group} != 0", w.len());
+        let ng = w.len() / group;
+        let mut codes = Vec::with_capacity(w.len());
+        let mut params = Vec::with_capacity(ng);
+        for g in 0..ng {
+            let chunk = &w[g * group..(g + 1) * group];
+            let p = QuantParams::fit(chunk, bits);
+            for &v in chunk {
+                codes.push(p.quantize(v, bits));
+            }
+            params.push(p);
+        }
+        Self { bits, group, codes, params }
+    }
+
+    /// Reconstruct the dense weights.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.codes.len());
+        for (g, p) in self.params.iter().enumerate() {
+            for &q in &self.codes[g * self.group..(g + 1) * self.group] {
+                out.push(p.dequantize(q));
+            }
+        }
+        out
+    }
+
+    /// Mean squared quantization error against the original.
+    pub fn mse(&self, w: &[f32]) -> f64 {
+        let deq = self.dequantize();
+        w.iter()
+            .zip(&deq)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / w.len() as f64
+    }
+
+    /// Stored bytes on-device: packed codes + f32 scale + u8 zero per group.
+    pub fn storage_bytes(&self) -> usize {
+        let ng = self.params.len();
+        let code_bits = self.codes.len() * self.bits as usize;
+        code_bits.div_ceil(8) + ng * (4 + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn fit_matches_paper_convention() {
+        let g = [0.0, 1.5, 3.0, -1.5];
+        let p = QuantParams::fit(&g, 4);
+        assert!((p.scale - 4.5 / 15.0).abs() < 1e-6);
+        assert_eq!(p.zero, -(-1.5f32 / p.scale).floor());
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = XorShift::new(0);
+        let w = rng.normal_vec(256);
+        for bits in [2u32, 3, 4, 8] {
+            let gq = GroupQuant::quantize(&w, bits, 16);
+            let qmax = (1u32 << bits) - 1;
+            assert!(gq.codes.iter().all(|&c| (c as u32) <= qmax));
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_scale() {
+        let mut rng = XorShift::new(1);
+        let w = rng.normal_vec(128);
+        let gq = GroupQuant::quantize(&w, 4, 16);
+        let deq = gq.dequantize();
+        for (g, p) in gq.params.iter().enumerate() {
+            for i in g * 16..(g + 1) * 16 {
+                assert!((w[i] - deq[i]).abs() <= p.scale * 1.0001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = XorShift::new(2);
+        let w = rng.normal_vec(512);
+        let e2 = GroupQuant::quantize(&w, 2, 16).mse(&w);
+        let e4 = GroupQuant::quantize(&w, 4, 16).mse(&w);
+        let e8 = GroupQuant::quantize(&w, 8, 16).mse(&w);
+        assert!(e2 > e4 && e4 > e8);
+    }
+
+    #[test]
+    fn smaller_groups_less_error() {
+        let mut rng = XorShift::new(3);
+        // heterogeneous scales across the row stress group granularity
+        let mut w = rng.normal_vec(512);
+        for (i, v) in w.iter_mut().enumerate() {
+            *v *= 1.0 + (i / 64) as f32;
+        }
+        let e8 = GroupQuant::quantize(&w, 4, 8).mse(&w);
+        let e128 = GroupQuant::quantize(&w, 4, 128).mse(&w);
+        assert!(e8 < e128, "e8={e8} e128={e128}");
+    }
+
+    #[test]
+    fn constant_group_safe() {
+        let w = vec![3.25; 32];
+        let gq = GroupQuant::quantize(&w, 4, 16);
+        let deq = gq.dequantize();
+        assert!(deq.iter().all(|v| v.is_finite()));
+        assert!(deq.iter().all(|v| (v - 3.25).abs() < 0.5));
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let w = vec![0.0; 160];
+        let gq = GroupQuant::quantize(&w, 4, 16);
+        // 160 codes * 4 bits = 80 bytes, 10 groups * 5 bytes = 50
+        assert_eq!(gq.storage_bytes(), 80 + 50);
+    }
+}

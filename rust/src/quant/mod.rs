@@ -1,0 +1,15 @@
+//! Quantization substrate: the paper's per-group asymmetric uniform
+//! quantizer (Eq. 1-3), RTN baselines at W2/W4/W8, a GPTQ-style OBS
+//! quantizer (the W2 table baseline), a vector-quantization baseline
+//! (AQLM/QuIP#-analogue, Table 12), nibble packing, and dynamic INT8
+//! activation quantization (Table 7, W4A8).
+
+pub mod act;
+pub mod gptq;
+pub mod group;
+pub mod packing;
+pub mod rtn;
+pub mod vq;
+
+pub use group::{GroupQuant, QuantParams};
+pub use packing::{pack_codes, unpack_codes};

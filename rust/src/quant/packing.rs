@@ -1,0 +1,118 @@
+//! Bit-packing of integer codes (2/4/8 bits) — matches
+//! `python/compile/gqsa.py::pack_nibbles` byte-for-byte.
+
+/// Pack codes into bytes. 4-bit: two per byte, low nibble first.
+/// 2-bit: four per byte, lowest bits first. 8-bit: identity.
+pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u8> {
+    match bits {
+        8 => codes.to_vec(),
+        4 => {
+            let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+            for ch in codes.chunks(2) {
+                let lo = ch[0] & 0xF;
+                let hi = if ch.len() > 1 { ch[1] & 0xF } else { 0 };
+                out.push(lo | (hi << 4));
+            }
+            out
+        }
+        2 => {
+            let mut out = Vec::with_capacity(codes.len().div_ceil(4));
+            for ch in codes.chunks(4) {
+                let mut b = 0u8;
+                for (j, &c) in ch.iter().enumerate() {
+                    b |= (c & 0x3) << (2 * j);
+                }
+                out.push(b);
+            }
+            out
+        }
+        _ => panic!("unsupported pack bits {bits}"),
+    }
+}
+
+/// Unpack `n` codes from packed bytes.
+pub fn unpack_codes(packed: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    match bits {
+        8 => out.extend_from_slice(&packed[..n]),
+        4 => {
+            for &b in packed {
+                out.push(b & 0xF);
+                if out.len() == n {
+                    break;
+                }
+                out.push(b >> 4);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        2 => {
+            'outer: for &b in packed {
+                for j in 0..4 {
+                    out.push((b >> (2 * j)) & 0x3);
+                    if out.len() == n {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        _ => panic!("unsupported unpack bits {bits}"),
+    }
+    assert_eq!(out.len(), n, "packed buffer too short");
+    out
+}
+
+/// Dequantization lookup table for one group: LUT[q] = (q - z) * s.
+/// The optimized GEMV kernel indexes this instead of doing per-element
+/// arithmetic (see gqs::gemv).
+#[inline]
+pub fn dequant_lut(scale: f32, zero: f32, bits: u32) -> [f32; 256] {
+    let mut lut = [0.0f32; 256];
+    let levels = 1usize << bits;
+    for (q, v) in lut.iter_mut().enumerate().take(levels) {
+        *v = (q as f32 - zero) * scale;
+    }
+    lut
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn roundtrip_all_bits() {
+        let mut rng = XorShift::new(0);
+        for bits in [2u32, 4, 8] {
+            let n = 37; // deliberately not a multiple of the packing factor
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.below(1 << bits)) as u8).collect();
+            let packed = pack_codes(&codes, bits);
+            assert_eq!(unpack_codes(&packed, bits, n), codes);
+        }
+    }
+
+    #[test]
+    fn packed_density() {
+        let codes = vec![0u8; 128];
+        assert_eq!(pack_codes(&codes, 4).len(), 64);
+        assert_eq!(pack_codes(&codes, 2).len(), 32);
+        assert_eq!(pack_codes(&codes, 8).len(), 128);
+    }
+
+    #[test]
+    fn nibble_order_matches_python() {
+        // python: q[0::2] | (q[1::2] << 4)
+        let packed = pack_codes(&[0x3, 0xA], 4);
+        assert_eq!(packed, vec![0x3 | (0xA << 4)]);
+    }
+
+    #[test]
+    fn lut_matches_arithmetic() {
+        let lut = dequant_lut(0.25, 7.0, 4);
+        for q in 0..16u8 {
+            assert_eq!(lut[q as usize], (q as f32 - 7.0) * 0.25);
+        }
+    }
+}

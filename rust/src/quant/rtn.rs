@@ -1,0 +1,56 @@
+//! Round-to-nearest weight-only quantization baselines (W2/W4/W8).
+//!
+//! RTN with per-group params is the paper's "W{2,4,8}" comparison rows
+//! (Tables 1, 10, 11, 16 use per-group weight-only quantization for the
+//! quantization-only settings).
+
+use crate::quant::GroupQuant;
+use crate::util::Mat;
+
+/// Quantize every row of a (N, K) weight matrix with per-group RTN and
+/// return the dequantized matrix plus storage accounting.
+pub struct RtnQuantized {
+    pub mat: Mat,
+    pub bits: u32,
+    pub group: usize,
+    pub storage_bytes: usize,
+}
+
+pub fn rtn_quantize(w: &Mat, bits: u32, group: usize) -> RtnQuantized {
+    let mut out = Mat::zeros(w.rows, w.cols);
+    let mut storage = 0usize;
+    for r in 0..w.rows {
+        let gq = GroupQuant::quantize(w.row(r), bits, group);
+        storage += gq.storage_bytes();
+        out.row_mut(r).copy_from_slice(&gq.dequantize());
+    }
+    RtnQuantized { mat: out, bits, group, storage_bytes: storage }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn rtn_preserves_shape_and_reduces_with_bits() {
+        let mut rng = XorShift::new(0);
+        let w = Mat::randn(16, 64, &mut rng);
+        let q8 = rtn_quantize(&w, 8, 16);
+        let q2 = rtn_quantize(&w, 2, 16);
+        assert_eq!(q8.mat.rows, 16);
+        let e8 = q8.mat.dist(&w);
+        let e2 = q2.mat.dist(&w);
+        assert!(e8 < e2);
+    }
+
+    #[test]
+    fn storage_scales_with_bits() {
+        let mut rng = XorShift::new(1);
+        let w = Mat::randn(8, 64, &mut rng);
+        let s2 = rtn_quantize(&w, 2, 16).storage_bytes;
+        let s4 = rtn_quantize(&w, 4, 16).storage_bytes;
+        let s8 = rtn_quantize(&w, 8, 16).storage_bytes;
+        assert!(s2 < s4 && s4 < s8);
+    }
+}

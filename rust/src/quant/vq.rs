@@ -1,0 +1,135 @@
+//! Vector-quantization baseline (Table 12 / Appendix G).
+//!
+//! AQLM / QuIP# quantize groups of weights against learned codebooks.
+//! We implement the honest small-scale analogue: k-means codebooks over
+//! weight sub-vectors (dim `vdim`), one codebook per output matrix, with
+//! `2^code_bits` entries. Reconstruction replaces each sub-vector with
+//! its nearest centroid. Decoding cost (codebook lookups, no fused
+//! dequant-FMA) is modeled in the engine cost model, mirroring the
+//! paper's observation that VQ trades speed for accuracy.
+
+use crate::util::{Mat, XorShift};
+
+pub struct VqQuantized {
+    pub mat: Mat,
+    pub vdim: usize,
+    pub code_bits: u32,
+    pub storage_bytes: usize,
+    pub iters_run: usize,
+}
+
+/// k-means VQ of a (N, K) matrix over sub-vectors of length `vdim`.
+pub fn vq_quantize(w: &Mat, vdim: usize, code_bits: u32, iters: usize, seed: u64) -> VqQuantized {
+    assert!(w.cols % vdim == 0);
+    let ncode = 1usize << code_bits;
+    let nvec = w.rows * w.cols / vdim;
+    let vecs: Vec<&[f32]> = (0..nvec)
+        .map(|i| &w.data[i * vdim..(i + 1) * vdim])
+        .collect();
+
+    // k-means++ -ish init: random distinct picks
+    let mut rng = XorShift::new(seed);
+    let mut centroids: Vec<Vec<f32>> = rng
+        .choose(nvec, ncode.min(nvec))
+        .into_iter()
+        .map(|i| vecs[i].to_vec())
+        .collect();
+    while centroids.len() < ncode {
+        centroids.push(rng.normal_vec(vdim));
+    }
+
+    let mut assign = vec![0usize; nvec];
+    let mut iters_run = 0;
+    for _ in 0..iters {
+        iters_run += 1;
+        // assignment
+        let mut changed = false;
+        for (i, v) in vecs.iter().enumerate() {
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, cent) in centroids.iter().enumerate() {
+                let d: f32 = v.iter().zip(cent).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if assign[i] != best.1 {
+                assign[i] = best.1;
+                changed = true;
+            }
+        }
+        // update
+        let mut sums = vec![vec![0.0f32; vdim]; ncode];
+        let mut counts = vec![0usize; ncode];
+        for (i, v) in vecs.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, a) in sums[assign[i]].iter_mut().zip(*v) {
+                *s += a;
+            }
+        }
+        for c in 0..ncode {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f32;
+                }
+                centroids[c] = sums[c].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for (i, &a) in assign.iter().enumerate() {
+        out.data[i * vdim..(i + 1) * vdim].copy_from_slice(&centroids[a]);
+    }
+    // storage: code indices + codebook
+    let storage = (nvec * code_bits as usize).div_ceil(8) + ncode * vdim * 4;
+    VqQuantized { mat: out, vdim, code_bits, storage_bytes: storage, iters_run }
+}
+
+/// Effective bits per weight of a VQ configuration.
+pub fn vq_bits_per_weight(n: usize, k: usize, vdim: usize, code_bits: u32) -> f64 {
+    let nvec = n * k / vdim;
+    let ncode = 1usize << code_bits;
+    let bits = nvec * code_bits as usize + ncode * vdim * 32;
+    bits as f64 / (n * k) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vq_reduces_error_vs_random_codebook() {
+        let mut rng = XorShift::new(0);
+        let w = Mat::randn(32, 64, &mut rng);
+        let trained = vq_quantize(&w, 4, 6, 15, 1);
+        let untrained = vq_quantize(&w, 4, 6, 0, 1);
+        assert!(trained.mat.dist(&w) <= untrained.mat.dist(&w));
+    }
+
+    #[test]
+    fn vq_more_codes_less_error() {
+        let mut rng = XorShift::new(1);
+        let w = Mat::randn(32, 64, &mut rng);
+        let small = vq_quantize(&w, 4, 3, 10, 2);
+        let big = vq_quantize(&w, 4, 8, 10, 2);
+        assert!(big.mat.dist(&w) < small.mat.dist(&w));
+    }
+
+    #[test]
+    fn vq_w2_equivalent_config() {
+        // vdim=4, 8-bit codes => 2 bits/weight + codebook overhead
+        let bpw = vq_bits_per_weight(256, 256, 4, 8);
+        assert!(bpw > 2.0 && bpw < 2.6, "bpw {bpw}");
+    }
+
+    #[test]
+    fn vq_converges_early_on_degenerate_data() {
+        let w = Mat::zeros(8, 16);
+        let q = vq_quantize(&w, 4, 4, 50, 3);
+        assert!(q.iters_run < 50);
+        assert!(q.mat.frob() < 1e-3);
+    }
+}

@@ -1,0 +1,183 @@
+//! Artifact loading + execution on the PJRT CPU client.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensorio::{Dtype, TensorFile};
+
+/// One runtime parameter or output, as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl ParamSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name").and_then(Json::as_str).context("param name")?.to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("param shape")?
+                .iter()
+                .filter_map(|d| d.as_u64().map(|x| x as usize))
+                .collect(),
+            dtype: v.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `<name>.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub n_weight_inputs: usize,
+    pub runtime_params: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Json::parse(&text)?;
+        let params = |key: &str| -> Result<Vec<ParamSpec>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("manifest.{key}"))?
+                .iter()
+                .map(ParamSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            name: v.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            n_weight_inputs: v.get("n_weight_inputs").and_then(Json::as_u64).context("n_weight_inputs")? as usize,
+            runtime_params: params("runtime_params")?,
+            outputs: params("outputs")?,
+        })
+    }
+}
+
+/// The PJRT client wrapper; create once, load many artifacts.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<dir>/<name>.{hlo.txt,inputs.bin,manifest.json}`, compile,
+    /// and upload the weight inputs once.
+    pub fn load(&self, dir: impl AsRef<Path>, name: &str) -> Result<Artifact> {
+        let dir = dir.as_ref();
+        let hlo_path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+        let manifest = Manifest::load(&dir.join(format!("{name}.manifest.json")))?;
+
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse hlo {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+
+        // Weight inputs: in000..inNNN in exact parameter order.
+        let tf = TensorFile::load(dir.join(format!("{name}.inputs.bin")))?;
+        let mut weights = Vec::with_capacity(manifest.n_weight_inputs);
+        for i in 0..manifest.n_weight_inputs {
+            let t = tf.get(&format!("in{i:03}"))?;
+            let ty = match t.dtype {
+                Dtype::F32 => xla::ElementType::F32,
+                Dtype::I32 => xla::ElementType::S32,
+                Dtype::U8 => xla::ElementType::U8,
+                Dtype::I8 => xla::ElementType::S8,
+                Dtype::I64 => xla::ElementType::S64,
+                Dtype::U16 => xla::ElementType::U16,
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.raw)
+                .map_err(|e| anyhow::anyhow!("literal in{i:03}: {e:?}"))?;
+            weights.push(lit);
+        }
+        Ok(Artifact { exe, weights, manifest })
+    }
+}
+
+/// A compiled executable + resident weight literals.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    pub manifest: Manifest,
+}
+
+impl Artifact {
+    /// Execute with the runtime inputs appended after the weights.
+    /// Returns the flattened output literals (tuple decomposed).
+    pub fn run(&self, runtime_inputs: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+        if runtime_inputs.len() != self.manifest.runtime_params.len() {
+            bail!(
+                "expected {} runtime inputs, got {}",
+                self.manifest.runtime_params.len(),
+                runtime_inputs.len()
+            );
+        }
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        for lit in &runtime_inputs {
+            args.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.manifest.name))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .context("no output buffer")?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!("expected {} outputs, got {}", self.manifest.outputs.len(), parts.len());
+        }
+        Ok(parts)
+    }
+
+    /// Helper: f32 literal from a slice + dims.
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let raw: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &raw)
+            .map_err(|e| anyhow::anyhow!("lit_f32: {e:?}"))
+    }
+
+    pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let raw: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, &raw)
+            .map_err(|e| anyhow::anyhow!("lit_i32: {e:?}"))
+    }
+
+    pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+    }
+}

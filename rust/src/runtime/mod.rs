@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them from the serving path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax>=0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Each artifact is three files: `<name>.hlo.txt`, `<name>.inputs.bin`
+//! (weight inputs, uploaded once at load), `<name>.manifest.json`
+//! (runtime input/output schema). Python never runs at serve time.
+
+pub mod artifact;
+
+pub use artifact::{Artifact, Manifest, ParamSpec, Runtime};

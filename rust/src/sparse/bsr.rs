@@ -1,0 +1,175 @@
+//! Block-Sparse-Row container — exactly the storage structure of §3.2:
+//!
+//! ```text
+//! rowIndex = {0, 1, 3, 3, 4}
+//! groups   = {1, 0, 1, 1}
+//! values   = {...}
+//! ```
+//!
+//! `row_index[r+1] - row_index[r]` is the number of surviving groups in
+//! row r; `groups[j]` is the group-column of the j-th stored group;
+//! `values` holds the group payloads back to back.
+
+use crate::sparse::group_prune::GroupMask;
+use crate::util::Mat;
+
+/// BSR with f32 payloads (the quantized variant lives in gqs::layer).
+#[derive(Clone, Debug)]
+pub struct BsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+    pub row_index: Vec<u32>,
+    pub groups: Vec<u32>,
+    pub values: Vec<f32>, // len = groups.len() * group
+}
+
+impl BsrMatrix {
+    /// Encode `w` keeping only groups where `mask` is set.
+    pub fn encode(w: &Mat, mask: &GroupMask) -> Self {
+        assert_eq!(w.rows, mask.rows);
+        assert_eq!(w.cols, mask.ngroups * mask.group);
+        let g = mask.group;
+        let mut row_index = Vec::with_capacity(w.rows + 1);
+        let mut groups = Vec::new();
+        let mut values = Vec::new();
+        row_index.push(0u32);
+        for r in 0..w.rows {
+            for gc in 0..mask.ngroups {
+                if mask.kept(r, gc) {
+                    groups.push(gc as u32);
+                    values.extend_from_slice(&w.row(r)[gc * g..(gc + 1) * g]);
+                }
+            }
+            row_index.push(groups.len() as u32);
+        }
+        Self { rows: w.rows, cols: w.cols, group: g, row_index, groups, values }
+    }
+
+    /// Reconstruct the dense matrix (pruned groups are zero).
+    pub fn decode(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (a, b) = (self.row_index[r] as usize, self.row_index[r + 1] as usize);
+            for j in a..b {
+                let gc = self.groups[j] as usize;
+                let src = &self.values[j * self.group..(j + 1) * self.group];
+                out.row_mut(r)[gc * self.group..(gc + 1) * self.group].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// y = BSR @ x without densifying.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let (a, b) = (self.row_index[r] as usize, self.row_index[r + 1] as usize);
+            let mut acc = 0.0f32;
+            for j in a..b {
+                let gc = self.groups[j] as usize;
+                let vals = &self.values[j * self.group..(j + 1) * self.group];
+                let xs = &x[gc * self.group..(gc + 1) * self.group];
+                for (v, xv) in vals.iter().zip(xs) {
+                    acc += v * xv;
+                }
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    pub fn nnz_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Stored bytes at f32 payloads (metadata + values).
+    pub fn storage_bytes(&self) -> usize {
+        self.row_index.len() * 4 + self.groups.len() * 4 + self.values.len() * 4
+    }
+
+    /// Groups per row — the load-imbalance profile the engine's Stream-K
+    /// scheduler exists to fix.
+    pub fn row_loads(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| (self.row_index[r + 1] - self.row_index[r]) as usize)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::group_prune::{group_prune, mask_from_scores};
+    use crate::sparse::saliency::SaliencyMetric;
+    use crate::util::XorShift;
+
+    #[test]
+    fn paper_example_layout() {
+        // 4x2-group matrix reproducing the §3.2 example shape:
+        // row0: group@1, row1: groups@0,1, row2: none, row3: group@1
+        let g = 2;
+        let mut w = Mat::zeros(4, 4);
+        w.row_mut(0)[2..4].copy_from_slice(&[5.0, 1.0]);
+        w.row_mut(1).copy_from_slice(&[15.0, 1.0, 15.0, 13.0]);
+        w.row_mut(3)[2..4].copy_from_slice(&[3.0, 6.0]);
+        let keep = vec![
+            false, true, // row 0
+            true, true, // row 1
+            false, false, // row 2
+            false, true, // row 3
+        ];
+        let mask = GroupMask { rows: 4, ngroups: 2, group: g, keep };
+        let bsr = BsrMatrix::encode(&w, &mask);
+        assert_eq!(bsr.row_index, vec![0, 1, 3, 3, 4]);
+        assert_eq!(bsr.groups, vec![1, 0, 1, 1]);
+        assert_eq!(bsr.decode().data, w.data);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = XorShift::new(0);
+        let w = Mat::randn(16, 64, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.5);
+        let bsr = BsrMatrix::encode(&w, &mask);
+        assert_eq!(bsr.decode().data, mask.apply(&w).data);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = XorShift::new(1);
+        let w = Mat::randn(24, 32, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 8, 0.4);
+        let bsr = BsrMatrix::encode(&w, &mask);
+        let x = rng.normal_vec(32);
+        let y_bsr = bsr.matvec(&x);
+        let y_dense = mask.apply(&w).matvec(&x);
+        for (a, b) in y_bsr.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_with_sparsity() {
+        let mut rng = XorShift::new(2);
+        let w = Mat::randn(32, 128, &mut rng);
+        let scores = Mat::randn(32, 8, &mut rng);
+        let m30 = mask_from_scores(&scores, 16, 0.3);
+        let m70 = mask_from_scores(&scores, 16, 0.7);
+        let b30 = BsrMatrix::encode(&w, &m30).storage_bytes();
+        let b70 = BsrMatrix::encode(&w, &m70).storage_bytes();
+        assert!(b70 < b30);
+    }
+
+    #[test]
+    fn row_loads_match_mask() {
+        let mut rng = XorShift::new(3);
+        let w = Mat::randn(8, 64, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.5);
+        let bsr = BsrMatrix::encode(&w, &mask);
+        for (r, &l) in bsr.row_loads().iter().enumerate() {
+            assert_eq!(l, mask.kept_per_row(r));
+        }
+    }
+}

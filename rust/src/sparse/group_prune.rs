@@ -1,0 +1,143 @@
+//! 1xG group pruning (paper §3.2): prune whole groups of G consecutive
+//! input channels per output row, keeping the per-row top-(1-s) groups
+//! by group-average saliency.
+
+use crate::sparse::saliency::{group_scores, saliency_scores, SaliencyMetric};
+use crate::util::Mat;
+
+/// Keep-mask over groups: (N rows) x (K/G group-columns).
+#[derive(Clone, Debug)]
+pub struct GroupMask {
+    pub rows: usize,
+    pub ngroups: usize,
+    pub group: usize,
+    pub keep: Vec<bool>, // rows * ngroups
+}
+
+impl GroupMask {
+    #[inline]
+    pub fn kept(&self, r: usize, g: usize) -> bool {
+        self.keep[r * self.ngroups + g]
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.keep.iter().filter(|&&k| k).count() as f64 / self.keep.len() as f64
+    }
+
+    pub fn kept_per_row(&self, r: usize) -> usize {
+        self.keep[r * self.ngroups..(r + 1) * self.ngroups]
+            .iter()
+            .filter(|&&k| k)
+            .count()
+    }
+
+    /// Apply to a dense weight: zero pruned groups.
+    pub fn apply(&self, w: &Mat) -> Mat {
+        let mut out = w.clone();
+        for r in 0..self.rows {
+            for g in 0..self.ngroups {
+                if !self.kept(r, g) {
+                    for v in &mut out.row_mut(r)[g * self.group..(g + 1) * self.group] {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Build the keep-mask from group scores: per-row top-k selection.
+pub fn mask_from_scores(scores: &Mat, group: usize, sparsity: f64) -> GroupMask {
+    let (n, ng) = (scores.rows, scores.cols);
+    let keep_n = ((ng as f64 * (1.0 - sparsity)).round() as usize).clamp(1, ng);
+    let mut keep = vec![false; n * ng];
+    let mut idx: Vec<usize> = Vec::with_capacity(ng);
+    for r in 0..n {
+        idx.clear();
+        idx.extend(0..ng);
+        let row = scores.row(r);
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+        for &g in idx.iter().take(keep_n) {
+            keep[r * ng + g] = true;
+        }
+    }
+    GroupMask { rows: n, ngroups: ng, group, keep }
+}
+
+/// Full pipeline: saliency -> group scores -> per-row top-k mask.
+pub fn group_prune(
+    w: &Mat,
+    hess: Option<&Mat>,
+    metric: SaliencyMetric,
+    group: usize,
+    sparsity: f64,
+) -> GroupMask {
+    let elem = saliency_scores(w, hess, metric);
+    let gs = group_scores(&elem, group);
+    mask_from_scores(&gs, group, sparsity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn mask_exact_sparsity() {
+        let mut rng = XorShift::new(0);
+        let scores = Mat::randn(32, 16, &mut rng);
+        for s in [0.25, 0.5, 0.75] {
+            let m = mask_from_scores(&scores, 16, s);
+            assert!((m.sparsity() - s).abs() < 0.01, "{s}: got {}", m.sparsity());
+            for r in 0..32 {
+                assert_eq!(m.kept_per_row(r), ((16.0 * (1.0 - s)).round()) as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_keeps_top_scores() {
+        let scores = Mat::from_vec(1, 4, vec![0.1, 5.0, 0.2, 4.0]);
+        let m = mask_from_scores(&scores, 8, 0.5);
+        assert!(m.kept(0, 1) && m.kept(0, 3));
+        assert!(!m.kept(0, 0) && !m.kept(0, 2));
+    }
+
+    #[test]
+    fn apply_zeroes_pruned_groups() {
+        let mut rng = XorShift::new(1);
+        let w = Mat::randn(4, 32, &mut rng);
+        let m = group_prune(&w, None, SaliencyMetric::Magnitude, 8, 0.5);
+        let wp = m.apply(&w);
+        for r in 0..4 {
+            for g in 0..4 {
+                let zeroed = wp.row(r)[g * 8..(g + 1) * 8].iter().all(|&v| v == 0.0);
+                assert_eq!(zeroed, !m.kept(r, g));
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_sparsity_keeps_one_group() {
+        let mut rng = XorShift::new(2);
+        let w = Mat::randn(4, 64, &mut rng);
+        let m = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.99);
+        for r in 0..4 {
+            assert!(m.kept_per_row(r) >= 1);
+        }
+    }
+
+    #[test]
+    fn magnitude_prune_keeps_big_groups() {
+        let mut w = Mat::zeros(1, 32);
+        for v in &mut w.row_mut(0)[8..16] {
+            *v = 10.0;
+        }
+        for v in &mut w.row_mut(0)[24..32] {
+            *v = 5.0;
+        }
+        let m = group_prune(&w, None, SaliencyMetric::Magnitude, 8, 0.5);
+        assert!(m.kept(0, 1) && m.kept(0, 3));
+    }
+}

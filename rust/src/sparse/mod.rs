@@ -1,0 +1,15 @@
+//! Sparsity substrate: saliency metrics (Hessian / Wanda / magnitude),
+//! the paper's 1xG group pruning, 2:4 semi-structured pruning with
+//! metadata accounting, unstructured pruning, structured row pruning,
+//! and the Block-Sparse-Row container of §3.2.
+
+pub mod bsr;
+pub mod group_prune;
+pub mod saliency;
+pub mod semi24;
+pub mod structured;
+pub mod unstructured;
+
+pub use bsr::BsrMatrix;
+pub use group_prune::{group_prune, GroupMask};
+pub use saliency::{SaliencyMetric, saliency_scores};

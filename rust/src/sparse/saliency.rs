@@ -1,0 +1,131 @@
+//! Weight-importance metrics.
+//!
+//! The paper (Eq. 4) scores weights with the OBS/Hessian metric
+//! `s_i = w_i^2 / [H^-1]_ii^2`, where H = X^T X over calibration
+//! activations. Wanda (`|w| * ||x||_2`) and plain magnitude are the
+//! comparison metrics used by the 2:4 baselines.
+
+use crate::util::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SaliencyMetric {
+    /// Eq. 4: w^2 / [H^-1]_ii^2 (needs the input Hessian).
+    Hessian,
+    /// Wanda: |w| * ||x||_2 per input channel.
+    Wanda,
+    /// |w| only.
+    Magnitude,
+}
+
+/// Per-element saliency of a (N, K) weight.
+///
+/// `hess` is the K x K input Hessian; its diagonal doubles as the
+/// per-channel activation second moment for the Wanda metric.
+pub fn saliency_scores(w: &Mat, hess: Option<&Mat>, metric: SaliencyMetric) -> Mat {
+    let (n, k) = (w.rows, w.cols);
+    let mut out = Mat::zeros(n, k);
+    match metric {
+        SaliencyMetric::Magnitude => {
+            for i in 0..w.data.len() {
+                out.data[i] = w.data[i].abs();
+            }
+        }
+        SaliencyMetric::Wanda => {
+            let h = hess.expect("wanda needs activation stats");
+            let xnorm: Vec<f32> = (0..k).map(|j| h.at(j, j).max(0.0).sqrt()).collect();
+            for r in 0..n {
+                for c in 0..k {
+                    out.data[r * k + c] = w.at(r, c).abs() * xnorm[c];
+                }
+            }
+        }
+        SaliencyMetric::Hessian => {
+            let h = hess.expect("hessian metric needs H");
+            let hinv = h.spd_inverse(0.01);
+            let diag: Vec<f32> = (0..k).map(|j| hinv.at(j, j).max(1e-12)).collect();
+            for r in 0..n {
+                for c in 0..k {
+                    let wv = w.at(r, c);
+                    out.data[r * k + c] = (wv * wv) / (diag[c] * diag[c]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Group-average saliency: (N, K) element scores -> (N, K/G) group scores.
+pub fn group_scores(elem: &Mat, group: usize) -> Mat {
+    let (n, k) = (elem.rows, elem.cols);
+    assert!(k % group == 0);
+    let ng = k / group;
+    let mut out = Mat::zeros(n, ng);
+    for r in 0..n {
+        for g in 0..ng {
+            let s: f32 = elem.row(r)[g * group..(g + 1) * group].iter().sum();
+            out.data[r * ng + g] = s / group as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn magnitude_is_abs() {
+        let w = Mat::from_vec(1, 4, vec![-2.0, 1.0, -0.5, 3.0]);
+        let s = saliency_scores(&w, None, SaliencyMetric::Magnitude);
+        assert_eq!(s.data, vec![2.0, 1.0, 0.5, 3.0]);
+    }
+
+    #[test]
+    fn wanda_weights_by_activation_norm() {
+        let w = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let mut h = Mat::zeros(2, 2);
+        *h.at_mut(0, 0) = 4.0; // ||x_0|| = 2
+        *h.at_mut(1, 1) = 1.0; // ||x_1|| = 1
+        let s = saliency_scores(&w, Some(&h), SaliencyMetric::Wanda);
+        assert!(s.data[0] > s.data[1]);
+    }
+
+    #[test]
+    fn hessian_metric_favors_stiff_directions() {
+        // large H diagonal => small [H^-1]_ii => high saliency
+        let w = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let mut h = Mat::zeros(2, 2);
+        *h.at_mut(0, 0) = 100.0;
+        *h.at_mut(1, 1) = 1.0;
+        let s = saliency_scores(&w, Some(&h), SaliencyMetric::Hessian);
+        assert!(s.data[0] > s.data[1]);
+    }
+
+    #[test]
+    fn group_scores_average() {
+        let e = Mat::from_vec(1, 4, vec![1.0, 3.0, 10.0, 20.0]);
+        let g = group_scores(&e, 2);
+        assert_eq!(g.data, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn hessian_matches_wanda_ordering_on_diagonal_h() {
+        // With diagonal H and equal weights, both metrics order channels
+        // by activation energy.
+        let mut rng = XorShift::new(0);
+        let w = Mat::from_vec(1, 8, vec![1.0; 8]);
+        let mut h = Mat::zeros(8, 8);
+        for i in 0..8 {
+            *h.at_mut(i, i) = 1.0 + rng.next_f32() * 10.0;
+        }
+        let sh = saliency_scores(&w, Some(&h), SaliencyMetric::Hessian);
+        let sw = saliency_scores(&w, Some(&h), SaliencyMetric::Wanda);
+        let rank = |v: &[f32]| {
+            let mut idx: Vec<usize> = (0..v.len()).collect();
+            idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+            idx
+        };
+        assert_eq!(rank(&sh.data), rank(&sw.data));
+    }
+}

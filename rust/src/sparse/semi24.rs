@@ -1,0 +1,158 @@
+//! 2:4 semi-structured pruning — the SparseGPT / Wanda baseline.
+//!
+//! Two of every four consecutive weights are forced to zero. The kept
+//! pair needs 2-bit position metadata per weight block (the paper's
+//! point: metadata cancels much of the compression win, unlike BSR).
+//! The OBS error-feedback variant mirrors SparseGPT's update rule.
+
+use crate::sparse::saliency::{saliency_scores, SaliencyMetric};
+use crate::util::Mat;
+
+/// 2:4-prune by zeroing the two lowest-saliency weights of each quad.
+pub fn prune_24(w: &Mat, hess: Option<&Mat>, metric: SaliencyMetric) -> Mat {
+    let scores = saliency_scores(w, hess, metric);
+    let mut out = w.clone();
+    for r in 0..w.rows {
+        let srow = scores.row(r);
+        let orow = out.row_mut(r);
+        for q in (0..w.cols).step_by(4) {
+            let end = (q + 4).min(w.cols);
+            let mut idx: Vec<usize> = (q..end).collect();
+            idx.sort_by(|&a, &b| srow[a].partial_cmp(&srow[b]).unwrap_or(std::cmp::Ordering::Equal));
+            let drop = idx.len() / 2;
+            for &i in idx.iter().take(drop) {
+                orow[i] = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// SparseGPT-style 2:4: prune column-blocks with OBS error feedback into
+/// the remaining columns (needs the input Hessian).
+pub fn prune_24_obs(w: &Mat, hess: &Mat, metric: SaliencyMetric) -> Mat {
+    let (n, k) = (w.rows, w.cols);
+    let hinv = hess.spd_inverse(0.01);
+    let mut wk = w.clone();
+    for q in (0..k).step_by(4) {
+        let end = (q + 4).min(k);
+        // score current (compensated) values
+        let sub = Mat::from_vec(
+            n,
+            end - q,
+            (0..n).flat_map(|r| wk.row(r)[q..end].to_vec()).collect(),
+        );
+        let scores = match metric {
+            SaliencyMetric::Hessian => {
+                let mut s = Mat::zeros(n, end - q);
+                for r in 0..n {
+                    for (ci, c) in (q..end).enumerate() {
+                        let d = hinv.at(c, c).max(1e-12);
+                        let v = sub.at(r, ci);
+                        s.data[r * (end - q) + ci] = v * v / (d * d);
+                    }
+                }
+                s
+            }
+            _ => saliency_scores(&sub, Some(hess), metric),
+        };
+        for r in 0..n {
+            let mut idx: Vec<usize> = (0..end - q).collect();
+            let srow = scores.row(r);
+            idx.sort_by(|&a, &b| srow[a].partial_cmp(&srow[b]).unwrap_or(std::cmp::Ordering::Equal));
+            let mut drops: Vec<usize> = idx.iter().take(idx.len() / 2).map(|&i| q + i).collect();
+            drops.sort_unstable();
+            for (di, &c) in drops.iter().enumerate() {
+                let val = wk.at(r, c);
+                if val == 0.0 {
+                    continue;
+                }
+                let d = hinv.at(c, c).max(1e-10);
+                let err = val / d;
+                *wk.at_mut(r, c) = 0.0;
+                // propagate into later columns, skipping slots this quad
+                // is about to zero (they must stay zero: 2:4 invariant).
+                for c2 in (c + 1)..k {
+                    if drops[di..].contains(&c2) {
+                        continue;
+                    }
+                    *wk.at_mut(r, c2) -= err * hinv.at(c, c2);
+                }
+            }
+        }
+    }
+    wk
+}
+
+/// Storage accounting for a 2:4 weight at `bits` per kept value:
+/// 50% of values + 2-bit metadata per kept value (position in quad).
+pub fn storage_bytes_24(rows: usize, cols: usize, bits: u32) -> usize {
+    let kept = rows * cols / 2;
+    let value_bits = kept * bits as usize;
+    let meta_bits = kept * 2;
+    (value_bits + meta_bits).div_ceil(8)
+}
+
+/// Verify the 2:4 invariant: at most 2 nonzeros per aligned quad.
+pub fn check_24(w: &Mat) -> bool {
+    for r in 0..w.rows {
+        for q in (0..w.cols).step_by(4) {
+            let end = (q + 4).min(w.cols);
+            let nz = w.row(r)[q..end].iter().filter(|&&v| v != 0.0).count();
+            if nz > 2 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn prune_24_invariant() {
+        let mut rng = XorShift::new(0);
+        let w = Mat::randn(16, 64, &mut rng);
+        let p = prune_24(&w, None, SaliencyMetric::Magnitude);
+        assert!(check_24(&p));
+        // exactly 50% zeros
+        let nz = p.data.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, w.data.len() / 2);
+    }
+
+    #[test]
+    fn prune_24_keeps_largest() {
+        let w = Mat::from_vec(1, 4, vec![0.1, 5.0, 0.2, 4.0]);
+        let p = prune_24(&w, None, SaliencyMetric::Magnitude);
+        assert_eq!(p.data, vec![0.0, 5.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn obs_beats_plain_on_calibration_loss() {
+        let mut rng = XorShift::new(42);
+        let (n, k) = (16, 64);
+        let w = Mat::randn(n, k, &mut rng);
+        let x = Mat::randn(512, k, &mut rng);
+        let h = x.transpose().matmul(&x);
+        let plain = prune_24(&w, Some(&h), SaliencyMetric::Hessian);
+        let obs = prune_24_obs(&w, &h, SaliencyMetric::Hessian);
+        assert!(check_24(&obs));
+        let y = x.matmul(&w.transpose());
+        let e_plain = x.matmul(&plain.transpose()).dist(&y);
+        let e_obs = x.matmul(&obs.transpose()).dist(&y);
+        assert!(e_obs < e_plain, "obs {e_obs} vs plain {e_plain}");
+    }
+
+    #[test]
+    fn metadata_overhead_vs_bsr() {
+        // paper argument: at 4-bit, 2:4 metadata adds 2 bits per kept
+        // value (50%), while BSR group indices amortize over G=16.
+        let b24 = storage_bytes_24(256, 256, 4);
+        let kept_values_only = (256 * 256 / 2 * 4) / 8;
+        assert!(b24 > kept_values_only);
+        assert_eq!(b24 - kept_values_only, 256 * 256 / 2 * 2 / 8);
+    }
+}

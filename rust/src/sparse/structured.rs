@@ -1,0 +1,63 @@
+//! Structured pruning baselines for Table 2: whole-row (neuron) removal
+//! in the LLM-Pruner style, and layer-drop in the ShortGPT style.
+
+use crate::util::Mat;
+
+/// Prune entire output rows (neurons) of an (N, K) weight by row L2
+/// norm, zeroing the weakest `ratio` fraction. (Width pruning; paired
+//  rows in up/down projections are handled by the caller.)
+pub fn prune_rows(w: &Mat, ratio: f64) -> (Mat, Vec<bool>) {
+    let n = w.rows;
+    let mut norms: Vec<(f32, usize)> = (0..n)
+        .map(|r| (w.row(r).iter().map(|v| v * v).sum::<f32>(), r))
+        .collect();
+    norms.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let drop = (n as f64 * ratio).round() as usize;
+    let mut keep = vec![true; n];
+    for &(_, r) in norms.iter().take(drop) {
+        keep[r] = false;
+    }
+    let mut out = w.clone();
+    for r in 0..n {
+        if !keep[r] {
+            out.row_mut(r).fill(0.0);
+        }
+    }
+    (out, keep)
+}
+
+/// ShortGPT-style: which layers to drop given per-layer importance
+/// (cosine-similarity-based in the paper; callers supply importances).
+pub fn layers_to_drop(importance: &[f64], ratio: f64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..importance.len()).collect();
+    idx.sort_by(|&a, &b| importance[a].partial_cmp(&importance[b]).unwrap());
+    let n_drop = (importance.len() as f64 * ratio).round() as usize;
+    let mut out: Vec<usize> = idx.into_iter().take(n_drop).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn prune_rows_drops_weakest() {
+        let mut rng = XorShift::new(0);
+        let mut w = Mat::randn(8, 16, &mut rng);
+        for v in w.row_mut(3) {
+            *v *= 0.001;
+        }
+        let (out, keep) = prune_rows(&w, 0.25);
+        assert!(!keep[3]);
+        assert!(out.row(3).iter().all(|&v| v == 0.0));
+        assert_eq!(keep.iter().filter(|&&k| !k).count(), 2);
+    }
+
+    #[test]
+    fn layer_drop_picks_least_important() {
+        let drops = layers_to_drop(&[0.9, 0.1, 0.5, 0.05], 0.5);
+        assert_eq!(drops, vec![1, 3]);
+    }
+}

@@ -1,0 +1,68 @@
+//! Unstructured pruning baseline (DC-W8A8-analogue in Table 9; also the
+//! "S%" pure-sparsity rows of Table 10 use group pruning, while this
+//! module provides the element-level comparison point).
+
+use crate::sparse::saliency::{saliency_scores, SaliencyMetric};
+use crate::util::Mat;
+
+/// Zero the lowest-saliency `sparsity` fraction of elements globally.
+pub fn prune_unstructured(w: &Mat, hess: Option<&Mat>, metric: SaliencyMetric, sparsity: f64) -> Mat {
+    let scores = saliency_scores(w, hess, metric);
+    let mut idx: Vec<usize> = (0..w.data.len()).collect();
+    idx.sort_by(|&a, &b| scores.data[a].partial_cmp(&scores.data[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let drop = (w.data.len() as f64 * sparsity).round() as usize;
+    let mut out = w.clone();
+    for &i in idx.iter().take(drop) {
+        out.data[i] = 0.0;
+    }
+    out
+}
+
+/// Unstructured storage needs per-element indices (CSR-style): value
+/// bits + ~column-index bits per nonzero. This is why unstructured
+/// pruning compresses poorly at moderate sparsity.
+pub fn storage_bytes_unstructured(rows: usize, cols: usize, sparsity: f64, bits: u32) -> usize {
+    let nnz = ((rows * cols) as f64 * (1.0 - sparsity)).round() as usize;
+    let idx_bits = (cols as f64).log2().ceil() as usize;
+    (nnz * (bits as usize + idx_bits)).div_ceil(8) + (rows + 1) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn exact_fraction_pruned() {
+        let mut rng = XorShift::new(0);
+        let w = Mat::randn(16, 16, &mut rng);
+        let p = prune_unstructured(&w, None, SaliencyMetric::Magnitude, 0.3);
+        let zeros = p.data.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, (256.0f64 * 0.3).round() as usize);
+    }
+
+    #[test]
+    fn unstructured_better_error_than_group_at_same_sparsity() {
+        // element-level freedom => lower reconstruction error
+        use crate::sparse::group_prune::group_prune;
+        let mut rng = XorShift::new(1);
+        let w = Mat::randn(16, 64, &mut rng);
+        let pu = prune_unstructured(&w, None, SaliencyMetric::Magnitude, 0.5);
+        let mg = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.5);
+        let pg = mg.apply(&w);
+        assert!(pu.dist(&w) <= pg.dist(&w));
+    }
+
+    #[test]
+    fn storage_worse_than_bsr_at_same_sparsity() {
+        // the paper's compression argument, in bytes
+        use crate::sparse::bsr::BsrMatrix;
+        use crate::sparse::group_prune::group_prune;
+        let mut rng = XorShift::new(2);
+        let w = Mat::randn(64, 256, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.5);
+        let bsr_payload_f32 = BsrMatrix::encode(&w, &mask).storage_bytes();
+        let unstructured = storage_bytes_unstructured(64, 256, 0.5, 32);
+        assert!(bsr_payload_f32 < unstructured);
+    }
+}

@@ -1,0 +1,206 @@
+//! Row-major f32 matrix with the small set of ops the pipeline needs.
+
+use crate::util::XorShift;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut XorShift) -> Self {
+        Self { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// y = self @ x  (GEMV, (R,C) x (C,) -> (R,)).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(w, v)| w * v).sum())
+            .collect()
+    }
+
+    /// C = self @ other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let crow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (c, o) in crow.iter_mut().zip(orow) {
+                    *c += a * o;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn dist(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn frob(&self) -> f32 {
+        self.data.iter().map(|a| a * a).sum::<f32>().sqrt()
+    }
+
+    /// In-place Cholesky inverse of an SPD matrix (used for H^-1 in
+    /// saliency and the GPTQ/OBS updates). Adds `damp * mean(diag)` ridge.
+    pub fn spd_inverse(&self, damp: f32) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let ridge = damp * (0..n).map(|i| self.at(i, i)).sum::<f32>() / n as f32 + 1e-8;
+        // Cholesky decomposition of A + ridge*I
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.at(i, j) + if i == j { ridge } else { 0.0 };
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    *l.at_mut(i, j) = s.max(1e-12).sqrt();
+                } else {
+                    *l.at_mut(i, j) = s / l.at(j, j);
+                }
+            }
+        }
+        // Invert L (forward substitution), then A^-1 = L^-T L^-1
+        let mut linv = Mat::zeros(n, n);
+        for i in 0..n {
+            *linv.at_mut(i, i) = 1.0 / l.at(i, i);
+            for j in 0..i {
+                let mut s = 0.0;
+                for k in j..i {
+                    s -= l.at(i, k) * linv.at(k, j);
+                }
+                *linv.at_mut(i, j) = s / l.at(i, i);
+            }
+        }
+        let mut inv = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in i.max(j)..n {
+                    s += linv.at(k, i) * linv.at(k, j);
+                }
+                inv.data[i * n + j] = s;
+            }
+        }
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let m = Mat::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = XorShift::new(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn spd_inverse_recovers_identity() {
+        let mut rng = XorShift::new(2);
+        let b = Mat::randn(8, 8, &mut rng);
+        // A = B B^T + 8I is SPD
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..8 {
+            *a.at_mut(i, i) += 8.0;
+        }
+        let inv = a.spd_inverse(0.0);
+        let prod = a.matmul(&inv);
+        let err = prod.dist(&Mat::eye(8));
+        assert!(err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn spd_inverse_diag() {
+        let mut d = Mat::zeros(3, 3);
+        for (i, v) in [2.0, 4.0, 8.0].iter().enumerate() {
+            *d.at_mut(i, i) = *v;
+        }
+        let inv = d.spd_inverse(0.0);
+        assert!((inv.at(0, 0) - 0.5).abs() < 1e-4);
+        assert!((inv.at(1, 1) - 0.25).abs() < 1e-4);
+        assert!((inv.at(2, 2) - 0.125).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrate: deterministic RNG, row-major matrices, statistics,
+//! and the GQTB tensor container (python <-> rust interchange).
+
+pub mod json;
+pub mod mat;
+pub mod rng;
+pub mod stats;
+pub mod tensorio;
+
+pub use json::Json;
+pub use mat::Mat;
+pub use rng::XorShift;
+pub use stats::Summary;
+pub use tensorio::{Dtype, Tensor, TensorFile};

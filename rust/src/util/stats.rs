@@ -1,0 +1,90 @@
+//! Small statistics helpers for benches and the engine simulator.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn from(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+        }
+    }
+}
+
+/// Coefficient of variation (std/mean) — the load-imbalance metric used
+/// by the engine simulator benches.
+pub fn cv(samples: &[f64]) -> f64 {
+    let s = Summary::from(samples);
+    if s.mean.abs() < 1e-12 {
+        0.0
+    } else {
+        s.std / s.mean
+    }
+}
+
+/// exp(mean(ln x)) — geometric mean for speedup aggregation.
+pub fn geomean(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    (samples.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / samples.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn cv_uniform_zero() {
+        assert!(cv(&[2.0, 2.0, 2.0]) < 1e-12);
+        assert!(cv(&[1.0, 3.0]) > 0.3);
+    }
+
+    #[test]
+    fn geomean_powers() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

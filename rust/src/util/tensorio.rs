@@ -1,0 +1,261 @@
+//! GQTB tensor container — the python <-> rust interchange format.
+//!
+//! Mirrors `python/compile/common.py` exactly: little-endian, magic
+//! "GQTB", version 1, then `ntensors` records of
+//! `(name, dtype, ndim, dims[], nbytes, raw)`. A tensor named
+//! `__meta__` (u8) carries a UTF-8 JSON blob.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"GQTB";
+const VERSION: u32 = 1;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32 = 0,
+    I32 = 1,
+    U8 = 2,
+    I8 = 3,
+    U16 = 4,
+    I64 = 5,
+}
+
+impl Dtype {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Dtype::F32,
+            1 => Dtype::I32,
+            2 => Dtype::U8,
+            3 => Dtype::I8,
+            4 => Dtype::U16,
+            5 => Dtype::I64,
+            _ => bail!("unknown dtype id {v}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 | Dtype::I8 => 1,
+            Dtype::U16 => 2,
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I64 => 8,
+        }
+    }
+}
+
+/// A raw tensor: shape + dtype + little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub raw: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn from_f32(shape: Vec<usize>, data: &[f32]) -> Self {
+        let mut raw = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: Dtype::F32, shape, raw }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, data: &[i32]) -> Self {
+        let mut raw = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: Dtype::I32, shape, raw }
+    }
+
+    pub fn from_u8(shape: Vec<usize>, data: Vec<u8>) -> Self {
+        Self { dtype: Dtype::U8, shape, raw: data }
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self.raw.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("tensor is {:?}, not I32", self.dtype);
+        }
+        Ok(self.raw.chunks_exact(4).map(|b| i32::from_le_bytes(b.try_into().unwrap())).collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != Dtype::U8 {
+            bail!("tensor is {:?}, not U8", self.dtype);
+        }
+        Ok(&self.raw)
+    }
+}
+
+/// A loaded GQTB file: ordered tensor map + parsed JSON metadata.
+#[derive(Debug)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: Json,
+}
+
+impl Default for TensorFile {
+    fn default() -> Self {
+        Self { tensors: BTreeMap::new(), meta: Json::Null }
+    }
+}
+
+impl TensorFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic in {}", path.display());
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported GQTB version {version}");
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = BTreeMap::new();
+        let mut meta = Json::Null;
+        for _ in 0..n {
+            let name_len = read_u16(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let dtype = Dtype::from_u8(hdr[0])?;
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let nbytes = read_u64(&mut f)? as usize;
+            let mut raw = vec![0u8; nbytes];
+            f.read_exact(&mut raw)?;
+            if name == "__meta__" {
+                meta = Json::parse(std::str::from_utf8(&raw).unwrap_or("null")).unwrap_or(Json::Null);
+            } else {
+                tensors.insert(name, Tensor { dtype, shape, raw });
+            }
+        }
+        Ok(Self { tensors, meta })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        let extra = if matches!(self.meta, Json::Null) { 0 } else { 1 };
+        f.write_all(&((self.tensors.len() + extra) as u32).to_le_bytes())?;
+        let write_one = |f: &mut dyn Write, name: &str, t: &Tensor| -> Result<()> {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&[t.dtype as u8, t.shape.len() as u8])?;
+            for d in &t.shape {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            f.write_all(&(t.raw.len() as u64).to_le_bytes())?;
+            f.write_all(&t.raw)?;
+            Ok(())
+        };
+        for (name, t) in &self.tensors {
+            write_one(&mut f, name, t)?;
+        }
+        if extra == 1 {
+            let raw = self.meta.to_string().into_bytes();
+            let t = Tensor { dtype: Dtype::U8, shape: vec![raw.len()], raw };
+            write_one(&mut f, "__meta__", &t)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn i32(&self, name: &str) -> Result<Vec<i32>> {
+        self.get(name)?.as_i32()
+    }
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::default();
+        tf.tensors.insert("a".into(), Tensor::from_f32(vec![2, 3], &[1., 2., 3., 4., 5., 6.]));
+        tf.tensors.insert("b".into(), Tensor::from_i32(vec![4], &[7, -8, 9, -10]));
+        tf.tensors.insert("c".into(), Tensor::from_u8(vec![3], vec![1, 2, 255]));
+        tf.meta = Json::parse(r#"{"bits": 4, "tag": "test"}"#).unwrap();
+        let dir = std::env::temp_dir().join("gqtb_test");
+        let p = dir.join("t.bin");
+        tf.save(&p).unwrap();
+        let back = TensorFile::load(&p).unwrap();
+        assert_eq!(back.f32("a").unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(back.i32("b").unwrap(), vec![7, -8, 9, -10]);
+        assert_eq!(back.get("c").unwrap().as_u8().unwrap(), &[1, 2, 255]);
+        assert_eq!(back.meta.get("bits").unwrap().as_u64(), Some(4));
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let tf = TensorFile::default();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let mut tf = TensorFile::default();
+        tf.tensors.insert("x".into(), Tensor::from_i32(vec![1], &[1]));
+        assert!(tf.f32("x").is_err());
+    }
+}

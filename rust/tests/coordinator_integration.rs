@@ -1,0 +1,141 @@
+//! Integration: the full serving stack (server thread + continuous
+//! batching) on the real compressed artifacts, including the PJRT
+//! backend. Artifact-dependent tests skip on fresh checkouts.
+
+use std::path::PathBuf;
+
+use gqsa::bench::Workbench;
+use gqsa::coordinator::backend::PjrtBackend;
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request, Server};
+use gqsa::runtime::Runtime;
+
+fn art() -> PathBuf {
+    Workbench::default_dir()
+}
+
+macro_rules! require {
+    ($p:expr) => {
+        if !$p.exists() {
+            eprintln!("SKIP: {} missing (run `make artifacts`)", $p.display());
+            return;
+        }
+    };
+}
+
+#[test]
+fn serve_gqsa_model_end_to_end() {
+    require!(art().join("models/tiny-llama.w4s50g16.gqsa"));
+    let srv = Server::start(|| {
+        let mut wb = Workbench::new(art());
+        let model = wb.variant("tiny-llama", "gqsa:w4s50g16")?;
+        let cfg = model.cfg.clone();
+        EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: 3, prefill_chunk: 8, kv_capacity: 128 },
+        )
+    });
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let c = srv.client();
+        handles.push(std::thread::spawn(move || {
+            let prompt: Vec<u32> = b"the ".iter().map(|&b| u32::from(b)).collect();
+            c.generate(Request::new(i, prompt, 24))
+        }));
+    }
+    for h in handles {
+        let resp = h.join().unwrap().unwrap();
+        assert_eq!(resp.tokens.len(), 24);
+        assert!(resp.tokens.iter().all(|&t| t < 256));
+        assert!(resp.timing.ttft_us > 0);
+    }
+    let report = srv.client().metrics_report().unwrap();
+    assert!(report.contains("requests=6"), "{report}");
+    srv.shutdown();
+}
+
+#[test]
+fn greedy_output_identical_native_all_sparsities() {
+    // identical prompts through different compression levels should all
+    // produce in-vocab tokens and deterministic output per model
+    require!(art().join("models/tiny-llama.w4s20g16.gqsa"));
+    let mut wb = Workbench::new(art());
+    for tag in ["w4s20g16", "w4s50g16"] {
+        let model = wb.variant("tiny-llama", &format!("gqsa:{tag}")).unwrap();
+        let cfg = model.cfg.clone();
+        let run = |m: gqsa::model::Transformer| {
+            let mut e = EngineCore::new(
+                Backend::Native(m),
+                &cfg,
+                EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64 },
+            )
+            .unwrap();
+            e.submit(Request::new(0, vec![116, 104, 101, 32], 16));
+            e.run_to_completion().unwrap()[0].tokens.clone()
+        };
+        let a = run(model);
+        let model2 = wb.variant("tiny-llama", &format!("gqsa:{tag}")).unwrap();
+        let b = run(model2);
+        assert_eq!(a, b, "{tag}: nondeterministic");
+    }
+}
+
+#[test]
+fn pjrt_backend_serves_requests() {
+    require!(art().join("hlo/tiny-llama.decode.hlo.txt"));
+    require!(art().join("models/tiny-llama.fp.bin"));
+    let srv = Server::start(|| {
+        let rt = Runtime::cpu()?;
+        let artifact = rt.load(art().join("hlo"), "tiny-llama.decode")?;
+        let wb = Workbench::new(art());
+        let cfg = wb.fp("tiny-llama")?.config.clone();
+        EngineCore::new(
+            Backend::Pjrt(PjrtBackend::new(artifact)?),
+            &cfg,
+            EngineConfig { max_batch: 2, prefill_chunk: 8, kv_capacity: 64 },
+        )
+    });
+    let c = srv.client();
+    let resp = c
+        .generate(Request::new(0, vec![116, 104, 101, 32], 8))
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 8);
+    srv.shutdown();
+}
+
+#[test]
+fn pjrt_and_native_agree_on_greedy_tokens() {
+    // the strongest composition check: same checkpoint, two compute
+    // stacks, identical greedy decodes
+    require!(art().join("hlo/tiny-llama.decode.hlo.txt"));
+    let mut wb = Workbench::new(art());
+    let cfg = wb.fp("tiny-llama").unwrap().config.clone();
+    let prompt = vec![116u32, 104, 101, 32];
+
+    let native_tokens = {
+        let model = wb.variant("tiny-llama", "fp").unwrap();
+        let mut e = EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64 },
+        )
+        .unwrap();
+        e.submit(Request::new(0, prompt.clone(), 12));
+        e.run_to_completion().unwrap()[0].tokens.clone()
+    };
+
+    let pjrt_tokens = {
+        let rt = Runtime::cpu().unwrap();
+        let artifact = rt.load(art().join("hlo"), "tiny-llama.decode").unwrap();
+        let mut e = EngineCore::new(
+            Backend::Pjrt(PjrtBackend::new(artifact).unwrap()),
+            &cfg,
+            EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64 },
+        )
+        .unwrap();
+        e.submit(Request::new(0, prompt, 12));
+        e.run_to_completion().unwrap()[0].tokens.clone()
+    };
+
+    assert_eq!(native_tokens, pjrt_tokens, "greedy tokens diverge across stacks");
+}

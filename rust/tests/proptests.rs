@@ -1,0 +1,271 @@
+//! Property-based tests over coordinator + kernel invariants.
+//!
+//! proptest is not vendored in this offline image; `props!` drives each
+//! property over many XorShift-seeded random cases with failing-seed
+//! reporting — the same shrink-free discipline, in-tree.
+
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+use gqsa::gqs::gemv::{gqs_gemv, gqs_gemv_ref};
+use gqsa::gqs::layer::GqsLayer;
+use gqsa::model::config::ModelConfig;
+use gqsa::model::transformer::LinearKind;
+use gqsa::model::Transformer;
+use gqsa::sparse::bsr::BsrMatrix;
+use gqsa::sparse::group_prune::{group_prune, mask_from_scores};
+use gqsa::sparse::saliency::SaliencyMetric;
+use gqsa::sparse::semi24::{check_24, prune_24};
+use gqsa::util::{Mat, XorShift};
+
+/// Run `body(seed, rng)` for `n` random cases; panic reports the seed.
+fn props(n: u64, mut body: impl FnMut(u64, &mut XorShift)) {
+    for seed in 0..n {
+        let mut rng = XorShift::new(seed * 7919 + 13);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(seed, &mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_gqs_gemv_opt_matches_ref() {
+    props(40, |seed, rng| {
+        let g = [4usize, 8, 16, 32][rng.below(4)];
+        let ng = 1 + rng.below(8);
+        let k = g * ng;
+        let n = 1 + rng.below(60);
+        let bits = [2u32, 4, 8][rng.below(3)];
+        let sparsity = rng.next_f32() as f64 * 0.9;
+        let w = Mat::randn(n, k, rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, sparsity);
+        let layer = GqsLayer::encode(&w, &mask, bits);
+        let x = rng.normal_vec(k);
+        let mut y1 = vec![0.0f32; n];
+        let mut y2 = vec![0.0f32; n];
+        let mut scratch = Vec::new();
+        gqs_gemv_ref(&layer, &x, &mut y1);
+        gqs_gemv(&layer, &x, &mut y2, &mut scratch);
+        for i in 0..n {
+            assert!(
+                (y1[i] - y2[i]).abs() < 3e-3,
+                "seed {seed} bits {bits} g {g}: row {i}: {} vs {}",
+                y1[i],
+                y2[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_bsr_roundtrip_equals_masked_dense() {
+    props(40, |_, rng| {
+        let g = [8usize, 16][rng.below(2)];
+        let ng = 1 + rng.below(6);
+        let n = 1 + rng.below(40);
+        let w = Mat::randn(n, g * ng, rng);
+        let scores = Mat::randn(n, ng, rng);
+        let mask = mask_from_scores(&scores, g, rng.next_f32() as f64 * 0.9);
+        let bsr = BsrMatrix::encode(&w, &mask);
+        assert_eq!(bsr.decode().data, mask.apply(&w).data);
+        let x = rng.normal_vec(g * ng);
+        let y1 = bsr.matvec(&x);
+        let y2 = mask.apply(&w).matvec(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_24_invariant_always_holds() {
+    props(30, |_, rng| {
+        let n = 1 + rng.below(30);
+        let quads = 1 + rng.below(16);
+        let w = Mat::randn(n, quads * 4, rng);
+        for metric in [SaliencyMetric::Magnitude, SaliencyMetric::Wanda] {
+            let h = {
+                let x = Mat::randn(32, quads * 4, rng);
+                x.transpose().matmul(&x)
+            };
+            let p = prune_24(&w, Some(&h), metric);
+            assert!(check_24(&p));
+        }
+    });
+}
+
+#[test]
+fn prop_group_mask_row_counts_exact() {
+    props(50, |_, rng| {
+        let n = 1 + rng.below(50);
+        let ng = 1 + rng.below(32);
+        let scores = Mat::randn(n, ng, rng);
+        let s = rng.next_f32() as f64;
+        let mask = mask_from_scores(&scores, 16, s);
+        let expect = ((ng as f64 * (1.0 - s)).round() as usize).clamp(1, ng);
+        for r in 0..n {
+            assert_eq!(mask.kept_per_row(r), expect);
+        }
+    });
+}
+
+#[test]
+fn prop_storage_monotone_in_sparsity() {
+    props(20, |_, rng| {
+        let w = Mat::randn(32, 128, rng);
+        let s1 = rng.next_f32() as f64 * 0.5;
+        let s2 = s1 + 0.3;
+        let m1 = group_prune(&w, None, SaliencyMetric::Magnitude, 16, s1);
+        let m2 = group_prune(&w, None, SaliencyMetric::Magnitude, 16, s2);
+        let b1 = GqsLayer::encode(&w, &m1, 4).storage_bytes();
+        let b2 = GqsLayer::encode(&w, &m2, 4).storage_bytes();
+        assert!(b2 <= b1, "sparser must not be bigger: {b2} vs {b1}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Coordinator invariants (routing, batching, state)
+// ---------------------------------------------------------------------
+
+fn tiny_engine(rng: &mut XorShift, max_batch: usize) -> (EngineCore, ModelConfig) {
+    let mut cfg = ModelConfig {
+        family: "t".into(),
+        vocab: 64,
+        d_model: 32,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 48,
+        max_seq: 128,
+        pos: "rope".into(),
+        act: "swiglu".into(),
+        norm: "rmsnorm".into(),
+        qkv_bias: false,
+        tie_embeddings: true,
+    };
+    cfg.max_seq = 128;
+    // random fp weights via public constructors
+    let mut weights = std::collections::BTreeMap::new();
+    let mat = |r: usize, c: usize, s: f32, rng: &mut XorShift| {
+        let mut m = Mat::randn(r, c, rng);
+        for v in &mut m.data {
+            *v *= s;
+        }
+        m
+    };
+    weights.insert("tok_emb".into(), mat(64, 32, 0.05, rng));
+    weights.insert("blk0.norm1".into(), Mat::from_vec(1, 32, vec![1.0; 32]));
+    weights.insert("blk0.norm2".into(), Mat::from_vec(1, 32, vec![1.0; 32]));
+    weights.insert("final_norm".into(), Mat::from_vec(1, 32, vec![1.0; 32]));
+    for nm in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+        weights.insert(format!("blk0.{nm}"), mat(32, 32, 0.17, rng));
+    }
+    weights.insert("blk0.mlp.w1".into(), mat(48, 32, 0.17, rng));
+    weights.insert("blk0.mlp.w2".into(), mat(48, 32, 0.17, rng));
+    weights.insert("blk0.mlp.w3".into(), mat(32, 48, 0.14, rng));
+    let fp = gqsa::gqs::format::FpModel { config: cfg.clone(), weights };
+    let t = Transformer::from_fp(&fp).unwrap();
+    let e = EngineCore::new(
+        Backend::Native(t),
+        &cfg,
+        EngineConfig { max_batch, prefill_chunk: 4, kv_capacity: 128 },
+    )
+    .unwrap();
+    (e, cfg)
+}
+
+#[test]
+fn prop_all_submitted_requests_complete_exactly_once() {
+    props(12, |seed, rng| {
+        let mb = 1 + rng.below(4);
+        let (mut e, _) = tiny_engine(rng, mb);
+        let n_req = 1 + rng.below(10) as u64;
+        for i in 0..n_req {
+            let plen = 1 + rng.below(12);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(60) as u32).collect();
+            e.submit(Request::new(i, prompt, 1 + rng.below(8)));
+        }
+        let out = e.run_to_completion().unwrap();
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, n_req, "seed {seed}: duplicate or lost requests");
+        assert!(!e.has_work());
+    });
+}
+
+#[test]
+fn prop_generation_length_respects_bounds() {
+    props(12, |_, rng| {
+        let (mut e, _) = tiny_engine(rng, 2);
+        let max_new = 1 + rng.below(12);
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![1, 2, 3], max_new));
+        }
+        for r in e.run_to_completion().unwrap() {
+            assert!(r.tokens.len() <= max_new);
+            assert!(!r.tokens.is_empty());
+        }
+    });
+}
+
+#[test]
+fn prop_batching_invariant_greedy_tokens_independent_of_batchmates() {
+    props(6, |seed, rng| {
+        let (mut solo, _) = tiny_engine(&mut XorShift::new(seed + 1000), 1);
+        let prompt: Vec<u32> = (0..5).map(|_| rng.below(60) as u32).collect();
+        solo.submit(Request::new(0, prompt.clone(), 6));
+        let expected = solo.run_to_completion().unwrap()[0].tokens.clone();
+
+        let (mut batched, _) = tiny_engine(&mut XorShift::new(seed + 1000), 4);
+        batched.submit(Request::new(0, prompt, 6));
+        for i in 1..4u64 {
+            let p: Vec<u32> = (0..(1 + rng.below(8))).map(|_| rng.below(60) as u32).collect();
+            batched.submit(Request::new(i, p, 6));
+        }
+        let out = batched.run_to_completion().unwrap();
+        let got = &out.iter().find(|r| r.id == 0).unwrap().tokens;
+        assert_eq!(got, &expected, "seed {seed}: batching changed tokens");
+    });
+}
+
+#[test]
+fn prop_timing_fields_consistent() {
+    props(8, |_, rng| {
+        let (mut e, _) = tiny_engine(rng, 2);
+        e.submit(Request::new(0, vec![1; 6], 4));
+        let out = e.run_to_completion().unwrap();
+        let t = out[0].timing;
+        assert!(t.total_us >= t.ttft_us);
+        assert!(t.total_us >= t.queued_us + t.prefill_us);
+    });
+}
+
+#[test]
+fn prop_linear_kinds_agree_at_high_bits() {
+    // At 8 bits / 0% sparsity, every LinearKind approximates dense well.
+    props(10, |_, rng| {
+        let w = Mat::randn(24, 64, rng);
+        let x = rng.normal_vec(64);
+        let mut y_dense = vec![0.0f32; 24];
+        LinearKind::Dense(w.clone()).matvec(&x, &mut y_dense, &mut Vec::new());
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.0);
+        let kinds = [
+            LinearKind::Gqs(GqsLayer::encode(&w, &mask, 8)),
+            LinearKind::QuantDense(gqsa::gqs::gemv_dense::QuantDense::encode(&w, 8, 16)),
+            LinearKind::BsrF32(BsrMatrix::encode(&w, &mask)),
+        ];
+        for kind in kinds {
+            let mut y = vec![0.0f32; 24];
+            kind.matvec(&x, &mut y, &mut Vec::new());
+            for i in 0..24 {
+                assert!((y[i] - y_dense[i]).abs() < 0.12, "{} vs {}", y[i], y_dense[i]);
+            }
+        }
+    });
+}

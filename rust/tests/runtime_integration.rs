@@ -1,0 +1,158 @@
+//! Integration: the PJRT runtime path (AOT HLO artifacts from jax) must
+//! agree with the rust-native transformer on the same checkpoint — the
+//! proof that all three layers compose.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (not failed) when artifacts are absent so `cargo test` works on a
+//! fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use gqsa::gqs::format::{FpModel, GqsModel};
+use gqsa::model::{KvCache, Scratch, Transformer};
+use gqsa::runtime::{Artifact, Runtime};
+
+fn art() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(p: &Path) -> bool {
+    p.exists()
+}
+
+macro_rules! require {
+    ($p:expr) => {
+        if !have(&$p) {
+            eprintln!("SKIP: {} missing (run `make artifacts`)", $p.display());
+            return;
+        }
+    };
+}
+
+#[test]
+fn prefill_artifact_matches_native_forward() {
+    let hlo = art().join("hlo");
+    require!(hlo.join("tiny-llama.prefill16.hlo.txt"));
+    require!(art().join("models/tiny-llama.fp.bin"));
+
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let artf = rt.load(&hlo, "tiny-llama.prefill16").expect("load prefill");
+    let fp = FpModel::load(art().join("models/tiny-llama.fp.bin")).unwrap();
+    let native = Transformer::from_fp(&fp).unwrap();
+
+    let tokens: Vec<u32> = b"hello gqsa test!".iter().map(|&b| u32::from(b)).collect();
+    assert_eq!(tokens.len(), 16);
+
+    // PJRT path
+    let tok_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    let lit = Artifact::lit_i32(&tok_i32, &[16]).unwrap();
+    let out = artf.run(vec![lit]).unwrap();
+    let logits_pjrt = Artifact::to_vec_f32(&out[0]).unwrap();
+    assert_eq!(logits_pjrt.len(), 16 * fp.config.vocab);
+
+    // native path
+    let logits_native = native.forward_all(&tokens).unwrap();
+
+    let mut max_err = 0.0f32;
+    for (a, b) in logits_pjrt.iter().zip(&logits_native.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 2e-2, "pjrt vs native max err {max_err}");
+}
+
+#[test]
+fn decode_artifact_matches_native_decode() {
+    let hlo = art().join("hlo");
+    require!(hlo.join("tiny-llama.decode.hlo.txt"));
+    require!(art().join("models/tiny-llama.fp.bin"));
+
+    let rt = Runtime::cpu().unwrap();
+    let artf = rt.load(&hlo, "tiny-llama.decode").unwrap();
+    let fp = FpModel::load(art().join("models/tiny-llama.fp.bin")).unwrap();
+    let native = Transformer::from_fp(&fp).unwrap();
+    let cfg = &fp.config;
+
+    let kv_spec = &artf.manifest.runtime_params[2];
+    let kv_numel: usize = kv_spec.numel();
+
+    let tokens = [104u32, 101, 108, 108, 111]; // "hello"
+    let mut kv_lit = Artifact::lit_f32(&vec![0.0; kv_numel], &kv_spec.shape).unwrap();
+    let mut kv_native = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 64);
+    let mut scratch = Scratch::new(cfg);
+
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let out = artf
+            .run(vec![
+                Artifact::lit_i32_scalar(tok as i32),
+                Artifact::lit_i32_scalar(pos as i32),
+                kv_lit,
+            ])
+            .unwrap();
+        let logits_pjrt = Artifact::to_vec_f32(&out[0]).unwrap();
+        let mut it = out.into_iter();
+        let _ = it.next();
+        kv_lit = it.next().unwrap();
+
+        native.decode_step(tok, &mut kv_native, &mut scratch).unwrap();
+
+        let mut max_err = 0.0f32;
+        for (a, b) in logits_pjrt.iter().zip(&scratch.logits) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 2e-2, "step {pos}: max err {max_err}");
+    }
+}
+
+#[test]
+fn gqs_decode_artifact_matches_native_gqs() {
+    // The Pallas-kernel decode artifact vs the rust GQS engine on the
+    // same compressed checkpoint — the paper's hot path through both
+    // stacks.
+    let hlo = art().join("hlo");
+    require!(hlo.join("tiny-llama.decode_gqs.w4s50g16.hlo.txt"));
+    require!(art().join("models/tiny-llama.w4s50g16.gqsa"));
+
+    let rt = Runtime::cpu().unwrap();
+    let artf = rt.load(&hlo, "tiny-llama.decode_gqs.w4s50g16").unwrap();
+    let gm = GqsModel::load(art().join("models/tiny-llama.w4s50g16.gqsa")).unwrap();
+    let native = Transformer::from_gqs(&gm).unwrap();
+    let cfg = &gm.config;
+
+    let kv_spec = &artf.manifest.runtime_params[2];
+    let mut kv_lit = Artifact::lit_f32(&vec![0.0; kv_spec.numel()], &kv_spec.shape).unwrap();
+    let mut kv_native = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 64);
+    let mut scratch = Scratch::new(cfg);
+
+    for (pos, &tok) in [116u32, 101, 32, 110, 97].iter().enumerate() {
+        let out = artf
+            .run(vec![
+                Artifact::lit_i32_scalar(tok as i32),
+                Artifact::lit_i32_scalar(pos as i32),
+                kv_lit,
+            ])
+            .unwrap();
+        let logits_pjrt = Artifact::to_vec_f32(&out[0]).unwrap();
+        let mut it = out.into_iter();
+        let _ = it.next();
+        kv_lit = it.next().unwrap();
+
+        native.decode_step(tok, &mut kv_native, &mut scratch).unwrap();
+
+        let mut max_err = 0.0f32;
+        for (a, b) in logits_pjrt.iter().zip(&scratch.logits) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 5e-2, "step {pos}: max err {max_err}");
+    }
+}
+
+#[test]
+fn manifest_schema_sane() {
+    let hlo = art().join("hlo");
+    require!(hlo.join("tiny-llama.decode.manifest.json"));
+    let m = gqsa::runtime::Manifest::load(&hlo.join("tiny-llama.decode.manifest.json")).unwrap();
+    assert!(m.n_weight_inputs > 10);
+    assert_eq!(m.runtime_params.len(), 3);
+    assert_eq!(m.runtime_params[0].name, "token");
+    assert_eq!(m.outputs.len(), 2);
+}
