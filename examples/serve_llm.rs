@@ -11,9 +11,11 @@
 use std::time::Instant;
 
 use gqsa::bench::Workbench;
+#[cfg(feature = "pjrt")]
 use gqsa::coordinator::backend::PjrtBackend;
 use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request, Server};
 use gqsa::model::tokenizer::ByteTokenizer;
+#[cfg(feature = "pjrt")]
 use gqsa::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -67,30 +69,42 @@ fn main() -> anyhow::Result<()> {
     srv.shutdown();
 
     // --- PJRT backend (the AOT jax path), single stream ---
-    if art.join("hlo/tiny-llama.decode_gqs.w4s50g16.hlo.txt").exists() {
-        println!("== PJRT backend (AOT Pallas decode artifact) ==");
-        let rt = Runtime::cpu()?;
-        let artifact = rt.load(art.join("hlo"), "tiny-llama.decode_gqs.w4s50g16")?;
-        let wb = Workbench::new(art.clone());
-        let cfg = wb.fp("tiny-llama")?.config.clone();
-        let mut engine = EngineCore::new(
-            Backend::Pjrt(PjrtBackend::new(artifact)?),
-            &cfg,
-            EngineConfig { max_batch: 1, prefill_chunk: 16, kv_capacity: 160 },
-        )?;
-        let t0 = Instant::now();
-        engine.submit(Request::new(0, tok.encode("the "), 32));
-        let out = engine.run_to_completion()?;
-        let secs = t0.elapsed().as_secs_f64();
-        println!("  {:?} -> {:?}", "the ", tok.decode(&out[0].tokens));
-        println!(
-            "  {} tokens in {:.2}s -> {:.1} tok/s (interpret-mode Pallas on CPU PJRT)",
-            out[0].tokens.len(),
-            secs,
-            out[0].tokens.len() as f64 / secs
-        );
-    } else {
+    serve_pjrt(&art, &tok)?;
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(art: &std::path::Path, tok: &ByteTokenizer) -> anyhow::Result<()> {
+    if !art.join("hlo/tiny-llama.decode_gqs.w4s50g16.hlo.txt").exists() {
         println!("(PJRT decode artifact missing — run `make artifacts`)");
+        return Ok(());
     }
+    println!("== PJRT backend (AOT Pallas decode artifact) ==");
+    let rt = Runtime::cpu()?;
+    let artifact = rt.load(art.join("hlo"), "tiny-llama.decode_gqs.w4s50g16")?;
+    let wb = Workbench::new(art.to_path_buf());
+    let cfg = wb.fp("tiny-llama")?.config.clone();
+    let mut engine = EngineCore::new(
+        Backend::Pjrt(PjrtBackend::new(artifact)?),
+        &cfg,
+        EngineConfig { max_batch: 1, prefill_chunk: 16, kv_capacity: 160 },
+    )?;
+    let t0 = Instant::now();
+    engine.submit(Request::new(0, tok.encode("the "), 32));
+    let out = engine.run_to_completion()?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!("  {:?} -> {:?}", "the ", tok.decode(&out[0].tokens));
+    println!(
+        "  {} tokens in {:.2}s -> {:.1} tok/s (interpret-mode Pallas on CPU PJRT)",
+        out[0].tokens.len(),
+        secs,
+        out[0].tokens.len() as f64 / secs
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(_art: &std::path::Path, _tok: &ByteTokenizer) -> anyhow::Result<()> {
+    println!("(PJRT backend not built — rerun with `--features pjrt`)");
     Ok(())
 }

@@ -5,13 +5,105 @@
 //! between kernels are the reproduction target.
 
 use gqsa::bench::Bench;
+use gqsa::gqs::gemm::{gqs_gemm, MatmulScratch};
 use gqsa::gqs::gemv::{gqs_gemv, gqs_gemv_ref};
 use gqsa::gqs::gemv_dense::{dense_gemv, QuantDense, Semi24Kernel};
 use gqsa::gqs::layer::GqsLayer;
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::random_fp;
+use gqsa::model::{BlockScratch, KvCache, Scratch, Transformer};
 use gqsa::sparse::group_prune::group_prune;
 use gqsa::sparse::saliency::SaliencyMetric;
 use gqsa::sparse::semi24::prune_24;
 use gqsa::util::{Mat, XorShift};
+
+/// Block-size sweep (T ∈ {1..32}): per-token GEMV vs one batched GEMM
+/// walk on the W4S50% kernel setting, plus model-level prefill through
+/// the same sweep; emits BENCH_batched_forward.json at the repo root.
+fn block_sweep() {
+    let ts = [1usize, 2, 4, 8, 16, 32];
+    let (n, k) = (1024usize, 1024usize);
+    let mut rng = XorShift::new(7);
+    let w = Mat::randn(n, k, &mut rng);
+    let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.5);
+    let layer = GqsLayer::encode(&w, &mask, 4);
+
+    println!("\n# block-size sweep — GQS W4 S50% G16 ({n}x{k} kernel / demo-config prefill)");
+    let mut kernel_rows = Vec::new();
+    for &t in &ts {
+        let x = Mat::randn(t, k, &mut rng);
+        let mut y = Mat::zeros(t, n);
+        let mut mm = MatmulScratch::new();
+        let batched =
+            Bench::new(format!("matmul T={t}")).run(|| gqs_gemm(&layer, &x, &mut y, &mut mm));
+        let mut yr = vec![0.0f32; n];
+        let mut sc: Vec<f32> = Vec::new();
+        let per_token = Bench::new(format!("{t} x gemv")).run(|| {
+            for ti in 0..t {
+                gqs_gemv(&layer, x.row(ti), &mut yr, &mut sc);
+            }
+        });
+        let speedup = per_token.mean_us() / batched.mean_us();
+        println!(
+            "T={t:<3} per-token {:>9.1} us   batched {:>9.1} us   speedup {speedup:.2}x",
+            per_token.mean_us(),
+            batched.mean_us()
+        );
+        kernel_rows.push(format!(
+            "    {{\"t\": {t}, \"per_token_us\": {:.2}, \"batched_us\": {:.2}, \"speedup\": {:.3}}}",
+            per_token.mean_us(),
+            batched.mean_us(),
+            speedup
+        ));
+    }
+
+    // model-level: per-token prefill vs block prefill on W4S50 weights
+    let cfg = demo_config();
+    let fp = random_fp(&cfg, 42);
+    let model = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+    let prompt: Vec<u32> = (0..64u32).map(|i| (i * 37) % 256).collect();
+    let mut model_rows = Vec::new();
+    let mut scratch = Scratch::new(&cfg);
+    let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 128);
+    let seq = Bench::new("prefill per-token").run(|| {
+        kv.reset();
+        model.prefill(&prompt, &mut kv, &mut scratch).unwrap();
+    });
+    let seq_tps = prompt.len() as f64 / (seq.mean_us() * 1e-6);
+    println!("prefill per-token   {:>9.1} us  ({seq_tps:.0} tok/s)", seq.mean_us());
+    for &chunk in &ts {
+        let mut bs = BlockScratch::new(&cfg, chunk);
+        let blk = Bench::new(format!("prefill chunk={chunk}")).run(|| {
+            kv.reset();
+            model.prefill_block(&prompt, &mut kv, &mut bs, chunk).unwrap();
+        });
+        let tps = prompt.len() as f64 / (blk.mean_us() * 1e-6);
+        println!(
+            "prefill chunk={chunk:<3} {:>9.1} us  ({tps:.0} tok/s, {:.2}x vs per-token)",
+            blk.mean_us(),
+            seq.mean_us() / blk.mean_us()
+        );
+        model_rows.push(format!(
+            "    {{\"chunk\": {chunk}, \"us\": {:.2}, \"tok_per_s\": {tps:.1}, \"speedup\": {:.3}}}",
+            blk.mean_us(),
+            seq.mean_us() / blk.mean_us()
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"batched_forward\",\n  \"setting\": \"W4 S50% G16\",\n  \"kernel_shape\": [{n}, {k}],\n  \"kernel_sweep\": [\n{}\n  ],\n  \"prefill_per_token_us\": {:.2},\n  \"prefill_block_sweep\": [\n{}\n  ]\n}}\n",
+        kernel_rows.join(",\n"),
+        seq.mean_us(),
+        model_rows.join(",\n")
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_batched_forward.json");
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}
 
 fn main() {
     let (n, k) = (1024usize, 1024usize);
@@ -63,4 +155,6 @@ fn main() {
             .run(|| gqs_gemv(&layer, &x, &mut y, &mut scratch));
         println!("{}", r.report());
     }
+
+    block_sweep();
 }

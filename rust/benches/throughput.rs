@@ -1,17 +1,63 @@
 //! Bench: serving throughput through the continuous-batching
-//! coordinator (Table 13 shape). `cargo bench --bench throughput`.
+//! coordinator (Table 13 shape), plus a block-size sweep over the
+//! batched forward path. `cargo bench --bench throughput`.
+//!
+//! The compression-variant comparison needs the trained artifacts
+//! (`make artifacts`); the block sweep falls back to a random-weight
+//! W4S50% model so it runs on a fresh checkout too.
 
 use gqsa::bench::Workbench;
 use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::random_fp;
+use gqsa::model::Transformer;
+
+/// Engine-level block sweep: the same request load through per-token
+/// shaped configs (chunk=1, batch=1) up to fully batched ones.
+fn engine_block_sweep() {
+    let cfg = demo_config();
+    let fp = random_fp(&cfg, 42);
+    println!("\n# engine block sweep — synthetic W4S50%G16, 8 requests x 32 tokens, input 24");
+    let mut base = 0.0f64;
+    for (label, chunk, batch) in [
+        ("per-token  (chunk 1, batch 1)", 1usize, 1usize),
+        ("chunked    (chunk 16, batch 1)", 16, 1),
+        ("batched    (chunk 1, batch 8)", 1, 8),
+        ("block+batch (chunk 16, batch 8)", 16, 8),
+    ] {
+        let model = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        let mut engine = EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: batch, prefill_chunk: chunk, kv_capacity: 128 },
+        )
+        .unwrap();
+        for i in 0..8u64 {
+            let prompt: Vec<u32> = (0..24u32).map(|j| (i as u32 * 31 + j * 7) % 256).collect();
+            engine.submit(Request::new(i, prompt, 32));
+        }
+        let t0 = std::time::Instant::now();
+        let out = engine.run_to_completion().unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let tokens: usize = out.iter().map(|r| r.n_prompt + r.tokens.len()).sum();
+        let tps = tokens as f64 / secs;
+        if base == 0.0 {
+            base = tps;
+        }
+        println!("{label:<32} {tps:>8.1} tok/s   ({:.2}x vs per-token)", tps / base);
+    }
+}
 
 fn main() {
+    engine_block_sweep();
+
     let art = Workbench::default_dir();
     if !art.join("models/tiny-llama.fp.bin").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first; skipping");
+        eprintln!("artifacts missing — run `make artifacts` first; skipping variant table");
         return;
     }
     let mut wb = Workbench::new(art);
-    println!("# serving throughput: 8 requests x 64 tokens, batch 4, input 15");
+    println!("\n# serving throughput: 8 requests x 64 tokens, batch 4, input 15");
     let mut base = 0.0f64;
     for (label, spec) in [
         ("fp32", "fp"),

@@ -1,17 +1,24 @@
 //! Compute backends for the engine core.
 //!
 //! `Native` runs the rust GQS/quantized kernels (the paper's engine);
-//! `Pjrt` executes the AOT-compiled jax decode step through the PJRT
-//! runtime (the three-layer path). Both expose the same single-token
-//! decode interface so the scheduler is backend-agnostic.
+//! `Pjrt` (behind the off-by-default `pjrt` feature) executes the
+//! AOT-compiled jax decode step through the PJRT runtime. Both expose
+//! the same block-oriented interface so the scheduler is
+//! backend-agnostic: `step_block` feeds a multi-token chunk of one
+//! sequence (prefill), `step_batch` decodes one token for many
+//! sequences in a single batched weight walk. Native implements both
+//! with true batched GEMMs; Pjrt loops its single-token artifact
+//! internally.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::model::{KvCache, Scratch, Transformer};
+use crate::model::{BlockScratch, KvCache, Scratch, Transformer};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Artifact;
 
 pub enum Backend {
     Native(Transformer),
+    #[cfg(feature = "pjrt")]
     Pjrt(PjrtBackend),
 }
 
@@ -19,6 +26,7 @@ impl Backend {
     pub fn vocab(&self) -> usize {
         match self {
             Backend::Native(t) => t.cfg.vocab,
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(p) => p.vocab,
         }
     }
@@ -26,6 +34,7 @@ impl Backend {
     pub fn weight_bytes(&self) -> usize {
         match self {
             Backend::Native(t) => t.weight_bytes(),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => 0, // resident in PJRT; accounted at load
         }
     }
@@ -33,17 +42,25 @@ impl Backend {
 
 /// Per-sequence state, backend-specific.
 pub enum SeqState {
-    Native { kv: KvCache },
-    Pjrt { kv: xla::Literal, pos: usize },
+    Native {
+        kv: KvCache,
+    },
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        kv: xla::Literal,
+        pos: usize,
+    },
 }
 
 /// PJRT decode backend: one compiled decode artifact, KV as literals.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     pub artifact: Artifact,
     pub vocab: usize,
     pub kv_shape: Vec<usize>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     pub fn new(artifact: Artifact) -> Result<Self> {
         let kv_spec = artifact
@@ -66,6 +83,33 @@ impl PjrtBackend {
         let numel: usize = self.kv_shape.iter().product();
         Artifact::lit_f32(&vec![0.0; numel], &self.kv_shape)
     }
+
+    /// One artifact invocation: token at `pos`, logits into `logits`.
+    fn step_row(
+        &self,
+        token: u32,
+        kv: &mut xla::Literal,
+        pos: &mut usize,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        let old = std::mem::replace(kv, xla::Literal::scalar(0f32));
+        let out = self.artifact.run(vec![
+            Artifact::lit_i32_scalar(token as i32),
+            Artifact::lit_i32_scalar(*pos as i32),
+            old,
+        ])?;
+        let mut it = out.into_iter();
+        let new_logits = it.next().ok_or_else(|| anyhow::anyhow!("no logits"))?;
+        let new_kv = it.next().ok_or_else(|| anyhow::anyhow!("no kv out"))?;
+        let lv = Artifact::to_vec_f32(&new_logits)?;
+        if lv.len() != logits.len() {
+            anyhow::bail!("logit size mismatch: {} vs {}", lv.len(), logits.len());
+        }
+        logits.copy_from_slice(&lv);
+        *kv = new_kv;
+        *pos += 1;
+        Ok(())
+    }
 }
 
 impl Backend {
@@ -75,37 +119,87 @@ impl Backend {
             Backend::Native(t) => Ok(SeqState::Native {
                 kv: KvCache::new(t.cfg.n_layers, t.cfg.n_heads, t.cfg.head_dim(), capacity),
             }),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(p) => Ok(SeqState::Pjrt { kv: p.fresh_kv()?, pos: 0 }),
         }
     }
 
-    /// One decode step; returns logits into `scratch.logits`.
+    /// One single-token decode step; logits into `scratch.logits`.
+    /// (The per-token baseline path — the engine itself uses
+    /// `step_block` / `step_batch`.)
     pub fn step(&self, token: u32, seq: &mut SeqState, scratch: &mut Scratch) -> Result<()> {
         match (self, seq) {
             (Backend::Native(t), SeqState::Native { kv }) => t.decode_step(token, kv, scratch),
+            #[cfg(feature = "pjrt")]
             (Backend::Pjrt(p), SeqState::Pjrt { kv, pos }) => {
-                // move kv out, replace after the call
-                let numel: usize = p.kv_shape.iter().product();
-                let old = std::mem::replace(kv, Artifact::lit_f32(&[], &[0]).unwrap_or_else(|_| xla::Literal::scalar(0f32)));
-                let out = p.artifact.run(vec![
-                    Artifact::lit_i32_scalar(token as i32),
-                    Artifact::lit_i32_scalar(*pos as i32),
-                    old,
-                ])?;
-                let mut it = out.into_iter();
-                let logits = it.next().ok_or_else(|| anyhow::anyhow!("no logits"))?;
-                let new_kv = it.next().ok_or_else(|| anyhow::anyhow!("no kv out"))?;
-                let lv = Artifact::to_vec_f32(&logits)?;
-                if lv.len() != scratch.logits.len() {
-                    bail!("logit size mismatch: {} vs {}", lv.len(), scratch.logits.len());
+                p.step_row(token, kv, pos, &mut scratch.logits)
+            }
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("sequence state does not match backend"),
+        }
+    }
+
+    /// Feed a multi-token chunk of one sequence (chunked prefill).
+    /// Logits for chunk token i land in `scratch.logits.row(i)`.
+    /// Native walks each weight once per chunk; Pjrt loops internally.
+    pub fn step_block(
+        &self,
+        tokens: &[u32],
+        seq: &mut SeqState,
+        scratch: &mut BlockScratch,
+    ) -> Result<()> {
+        match (self, seq) {
+            (Backend::Native(t), SeqState::Native { kv }) => t.forward_block(tokens, kv, scratch),
+            #[cfg(feature = "pjrt")]
+            (Backend::Pjrt(p), SeqState::Pjrt { kv, pos }) => {
+                scratch.prepare(tokens.len());
+                for (i, &tok) in tokens.iter().enumerate() {
+                    p.step_row(tok, kv, pos, scratch.logits.row_mut(i))?;
                 }
-                scratch.logits.copy_from_slice(&lv);
-                *kv = new_kv;
-                *pos += 1;
-                let _ = numel;
                 Ok(())
             }
-            _ => bail!("sequence state does not match backend"),
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("sequence state does not match backend"),
+        }
+    }
+
+    /// Decode one token for each of `seqs` in a single batched weight
+    /// walk (Native) — sequence i's logits land in
+    /// `scratch.logits.row(i)`. Pjrt loops its artifact per sequence.
+    pub fn step_batch(
+        &self,
+        tokens: &[u32],
+        seqs: &mut [&mut SeqState],
+        scratch: &mut BlockScratch,
+    ) -> Result<()> {
+        if tokens.len() != seqs.len() {
+            anyhow::bail!("step_batch: {} tokens vs {} sequences", tokens.len(), seqs.len());
+        }
+        match self {
+            Backend::Native(t) => {
+                let mut kvs: Vec<&mut KvCache> = Vec::with_capacity(seqs.len());
+                for st in seqs.iter_mut() {
+                    match &mut **st {
+                        SeqState::Native { kv } => kvs.push(kv),
+                        #[cfg(feature = "pjrt")]
+                        _ => anyhow::bail!("sequence state does not match backend"),
+                    }
+                }
+                t.decode_batch(tokens, &mut kvs, scratch)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                scratch.prepare(tokens.len());
+                for (i, st) in seqs.iter_mut().enumerate() {
+                    match &mut **st {
+                        SeqState::Pjrt { kv, pos } => {
+                            p.step_row(tokens[i], kv, pos, scratch.logits.row_mut(i))?;
+                        }
+                        _ => anyhow::bail!("sequence state does not match backend"),
+                    }
+                }
+                Ok(())
+            }
         }
     }
 
@@ -113,6 +207,7 @@ impl Backend {
     pub fn seq_len(&self, seq: &SeqState) -> usize {
         match seq {
             SeqState::Native { kv } => kv.len(),
+            #[cfg(feature = "pjrt")]
             SeqState::Pjrt { pos, .. } => *pos,
         }
     }
@@ -124,12 +219,14 @@ impl Backend {
                 kv.reset();
                 Ok(())
             }
+            #[cfg(feature = "pjrt")]
             (Backend::Pjrt(p), SeqState::Pjrt { kv, pos }) => {
                 *kv = p.fresh_kv()?;
                 *pos = 0;
                 Ok(())
             }
-            _ => bail!("mismatched reset"),
+            #[cfg(feature = "pjrt")]
+            _ => anyhow::bail!("mismatched reset"),
         }
     }
 }

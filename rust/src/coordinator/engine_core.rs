@@ -1,15 +1,23 @@
-//! The engine core: continuous batching with chunked prefill.
+//! The engine core: continuous batching with chunked *block* prefill
+//! and batched decode.
 //!
 //! Each engine iteration:
 //!   1. admit waiting requests while slots are free (up to `max_batch`),
 //!   2. for every active sequence still in prefill, feed up to
-//!      `prefill_chunk` prompt tokens,
-//!   3. for every sequence in decode, generate one token,
+//!      `prefill_chunk` prompt tokens as ONE `step_block` call — the
+//!      backend walks each weight once per chunk instead of once per
+//!      token,
+//!   3. gather the next token of every sequence in decode into a single
+//!      `step_batch` call — one batched weight walk serves the whole
+//!      decode batch (attention stays per-sequence),
 //!   4. retire finished sequences, returning their KV slot to the pool.
 //!
 //! Prefill and decode interleave across iterations, so a long prompt
 //! never blocks other requests' token cadence — the scheduling concern
-//! the serving tables (4/13/16) measure.
+//! the serving tables (4/13/16) measure. The batched kernels replicate
+//! the per-token accumulation order, so tokens are identical to the
+//! per-token engine (greedy decode stays deterministic across batching
+//! and chunk sizes).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -19,8 +27,8 @@ use anyhow::Result;
 use crate::coordinator::backend::{Backend, SeqState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, RequestTiming, Response};
-use crate::model::sampler::{sample, Sampling};
-use crate::model::Scratch;
+use crate::model::sampler::sample;
+use crate::model::BlockScratch;
 use crate::util::XorShift;
 
 #[derive(Clone, Copy, Debug)]
@@ -43,7 +51,6 @@ struct ActiveSeq {
     fed: usize,
     generated: Vec<u32>,
     submitted: Instant,
-    prefill_done: Option<Instant>,
     timing: RequestTiming,
 }
 
@@ -56,7 +63,7 @@ pub struct EngineCore {
     waiting: VecDeque<(Request, Instant)>,
     active: Vec<ActiveSeq>,
     pool: Vec<SeqState>,
-    scratch: Scratch,
+    block: BlockScratch,
     rng: XorShift,
     finished: Vec<Response>,
 }
@@ -67,6 +74,9 @@ impl EngineCore {
         for _ in 0..cfg.max_batch {
             pool.push(backend.new_seq(cfg.kv_capacity)?);
         }
+        // one block scratch serves both roles: prefill chunks (rows =
+        // chunk) and batched decode (rows = batch)
+        let t_max = cfg.prefill_chunk.max(cfg.max_batch).max(1);
         Ok(Self {
             backend,
             cfg,
@@ -74,7 +84,7 @@ impl EngineCore {
             waiting: VecDeque::new(),
             active: Vec::new(),
             pool,
-            scratch: Scratch::new(model_cfg),
+            block: BlockScratch::new(model_cfg, t_max),
             rng: XorShift::new(0xC0FFEE),
             finished: Vec::new(),
         })
@@ -121,52 +131,83 @@ impl EngineCore {
                 fed: 0,
                 generated: Vec::new(),
                 submitted,
-                prefill_done: None,
                 timing,
             });
         }
 
-        // 2+3. step each active sequence
         let mut processed = 0usize;
+        // sequences already past prefill at tick start decode this tick
+        // (a sequence that finishes prefill below samples its first
+        // token from the chunk logits and starts decoding next tick,
+        // exactly like the per-token engine did)
+        let decode_idx: Vec<usize> = (0..self.active.len())
+            .filter(|&i| self.active[i].fed >= self.active[i].req.prompt.len())
+            .collect();
+
+        // 2. chunked prefill: ONE step_block per sequence per tick
+        let chunk_cap = self.cfg.prefill_chunk.max(1);
+        for seq in &mut self.active {
+            let prompt_len = seq.req.prompt.len();
+            if seq.fed >= prompt_len {
+                continue;
+            }
+            // clamp to remaining KV slots so an over-long prompt retires
+            // via the capacity guard instead of erroring mid-chunk
+            let cap_left =
+                self.cfg.kv_capacity.saturating_sub(self.backend.seq_len(&seq.state));
+            let take = chunk_cap.min(prompt_len - seq.fed).min(cap_left);
+            if take == 0 {
+                continue;
+            }
+            let chunk = &seq.req.prompt[seq.fed..seq.fed + take];
+            self.backend.step_block(chunk, &mut seq.state, &mut self.block)?;
+            processed += take;
+            seq.fed += take;
+            if seq.fed == prompt_len {
+                seq.timing.prefill_us =
+                    seq.submitted.elapsed().as_micros() as u64 - seq.timing.queued_us;
+                // first token comes from the chunk's last-row logits
+                let mode = seq.req.sampling.to_sampling();
+                let tok = sample(self.block.logits.row(take - 1), mode, &mut self.rng);
+                seq.generated.push(tok);
+                seq.timing.ttft_us = seq.submitted.elapsed().as_micros() as u64;
+                processed += 1;
+            }
+        }
+
+        // 3. batched decode: one weight walk for every decoding sequence
+        if !decode_idx.is_empty() {
+            let tokens: Vec<u32> = decode_idx
+                .iter()
+                .map(|&i| *self.active[i].generated.last().unwrap_or(&0))
+                .collect();
+            {
+                let mut states: Vec<&mut SeqState> = Vec::with_capacity(decode_idx.len());
+                let mut want = decode_idx.iter().peekable();
+                for (i, seq) in self.active.iter_mut().enumerate() {
+                    if want.peek() == Some(&&i) {
+                        want.next();
+                        states.push(&mut seq.state);
+                    }
+                }
+                self.backend.step_batch(&tokens, &mut states, &mut self.block)?;
+            }
+            for (bi, &i) in decode_idx.iter().enumerate() {
+                let mode = self.active[i].req.sampling.to_sampling();
+                let tok = sample(self.block.logits.row(bi), mode, &mut self.rng);
+                self.active[i].generated.push(tok);
+                processed += 1;
+            }
+        }
+
+        // 4. retire finished sequences
         let mut still_active = Vec::with_capacity(self.active.len());
         for mut seq in std::mem::take(&mut self.active) {
-            let prompt_len = seq.req.prompt.len();
-            if seq.fed < prompt_len {
-                // chunked prefill
-                let take = self.cfg.prefill_chunk.min(prompt_len - seq.fed);
-                for i in 0..take {
-                    let tok = seq.req.prompt[seq.fed + i];
-                    self.backend.step(tok, &mut seq.state, &mut self.scratch)?;
-                    processed += 1;
-                }
-                seq.fed += take;
-                if seq.fed == prompt_len {
-                    seq.prefill_done = Some(Instant::now());
-                    seq.timing.prefill_us =
-                        seq.submitted.elapsed().as_micros() as u64 - seq.timing.queued_us;
-                    // first token comes from the last prefill logits
-                    let tok = self.sample_token(&seq.req);
-                    seq.generated.push(tok);
-                    seq.timing.ttft_us = seq.submitted.elapsed().as_micros() as u64;
-                    processed += 1;
-                }
-                if !self.seq_finished(&seq) {
-                    still_active.push(seq);
-                    continue;
-                }
-            } else {
-                // decode one token
-                let last = *seq.generated.last().unwrap_or(&0);
-                self.backend.step(last, &mut seq.state, &mut self.scratch)?;
-                let tok = self.sample_token(&seq.req);
-                seq.generated.push(tok);
-                processed += 1;
-                if !self.seq_finished(&seq) {
-                    still_active.push(seq);
-                    continue;
-                }
+            if !self.seq_finished(&seq) {
+                still_active.push(seq);
+                continue;
             }
-            // finished
+            let prompt_len = seq.req.prompt.len();
             seq.timing.total_us = seq.submitted.elapsed().as_micros() as u64;
             seq.timing.decode_us =
                 seq.timing.total_us - seq.timing.queued_us - seq.timing.prefill_us;
@@ -194,12 +235,11 @@ impl EngineCore {
         Ok(out)
     }
 
-    fn sample_token(&mut self, req: &Request) -> u32 {
-        let mode: Sampling = req.sampling.to_sampling();
-        sample(&self.scratch.logits, mode, &mut self.rng)
-    }
-
     fn seq_finished(&self, seq: &ActiveSeq) -> bool {
+        // still prefilling: only the KV guard can end a sequence early
+        if seq.fed < seq.req.prompt.len() {
+            return self.backend.seq_len(&seq.state) + 1 >= self.cfg.kv_capacity;
+        }
         if seq.generated.len() >= seq.req.max_new_tokens {
             return true;
         }
@@ -217,9 +257,11 @@ impl EngineCore {
 mod tests {
     use super::*;
     use crate::model::config::demo_config;
+    use crate::model::sampler::argmax;
     use crate::model::transformer::{random_fp, Transformer};
+    use crate::model::{KvCache, Scratch};
 
-    fn engine(max_batch: usize) -> EngineCore {
+    fn engine_chunk(max_batch: usize, prefill_chunk: usize) -> EngineCore {
         let mut cfg = demo_config();
         cfg.d_model = 64;
         cfg.n_layers = 1;
@@ -232,9 +274,13 @@ mod tests {
         EngineCore::new(
             Backend::Native(t),
             &cfg,
-            EngineConfig { max_batch, prefill_chunk: 4, kv_capacity: 96 },
+            EngineConfig { max_batch, prefill_chunk, kv_capacity: 96 },
         )
         .unwrap()
+    }
+
+    fn engine(max_batch: usize) -> EngineCore {
+        engine_chunk(max_batch, 4)
     }
 
     #[test]
@@ -263,7 +309,9 @@ mod tests {
 
     #[test]
     fn greedy_is_deterministic_across_batching() {
-        // continuous batching must not change a request's tokens
+        // continuous batching must not change a request's tokens, even
+        // though the batched decode path now shares one weight walk
+        // across batch-mates
         let mut e1 = engine(1);
         e1.submit(Request::new(1, vec![5, 6, 7, 8], 6));
         let solo = e1.run_to_completion().unwrap();
@@ -278,6 +326,63 @@ mod tests {
     }
 
     #[test]
+    fn greedy_is_deterministic_across_prefill_chunk_sizes() {
+        // the block prefill path must produce the same logits whatever
+        // the chunking
+        let mut expected: Option<Vec<u32>> = None;
+        for chunk in [1usize, 3, 4, 16] {
+            let mut e = engine_chunk(2, chunk);
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9, 10, 11], 6));
+            let out = e.run_to_completion().unwrap();
+            match &expected {
+                None => expected = Some(out[0].tokens.clone()),
+                Some(t) => assert_eq!(t, &out[0].tokens, "chunk {chunk} diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn engine_block_path_matches_sequential_decode_steps() {
+        // engine (block prefill + batched decode) vs a hand-rolled
+        // per-token decode_step greedy loop on the same checkpoint
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 77);
+        let prompt = [5u32, 6, 7, 8];
+
+        let t = Transformer::from_fp(&fp).unwrap();
+        let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 96);
+        let mut s = Scratch::new(&cfg);
+        for &tok in &prompt {
+            t.decode_step(tok, &mut kv, &mut s).unwrap();
+        }
+        let mut seq_tokens = Vec::new();
+        let mut last = argmax(&s.logits) as u32;
+        seq_tokens.push(last);
+        for _ in 0..5 {
+            t.decode_step(last, &mut kv, &mut s).unwrap();
+            last = argmax(&s.logits) as u32;
+            seq_tokens.push(last);
+        }
+
+        let t2 = Transformer::from_fp(&fp).unwrap();
+        let mut e = EngineCore::new(
+            Backend::Native(t2),
+            &cfg,
+            EngineConfig { max_batch: 2, prefill_chunk: 3, kv_capacity: 96 },
+        )
+        .unwrap();
+        e.submit(Request::new(1, prompt.to_vec(), 6));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens, seq_tokens);
+    }
+
+    #[test]
     fn stop_token_halts_generation() {
         let mut e = engine(1);
         let mut req = Request::new(1, vec![1, 2], 50);
@@ -289,6 +394,19 @@ mod tests {
         e2.submit(req);
         let out = e2.run_to_completion().unwrap();
         assert_eq!(out[0].tokens.len(), 1);
+    }
+
+    #[test]
+    fn overlong_prompt_retires_without_killing_engine() {
+        // a prompt longer than kv_capacity must retire its own sequence
+        // (via the KV guard), not error the whole engine tick
+        let mut e = engine_chunk(2, 16);
+        e.submit(Request::new(1, vec![1; 200], 5));
+        e.submit(Request::new(2, vec![2, 3], 3));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 2);
+        let r2 = out.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.tokens.len(), 3);
     }
 
     #[test]

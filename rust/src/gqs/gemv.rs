@@ -59,11 +59,15 @@ pub fn gqs_gemv(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum_scratch: &mut V
     group_sums(x, g, gsum_scratch);
     let gsum = &gsum_scratch[..];
 
+    // Group sizes that are not a multiple of the packing factor (2
+    // codes/byte at 4-bit, 4 at 2-bit) straddle byte boundaries in the
+    // packed stream, so the byte-sliced fast paths would silently drop
+    // trailing weights — route them to the code-indexed reference.
     match (layer.bits, g) {
         (4, 16) => gemv_b4_g16(layer, x, y, gsum),
-        (4, _) => gemv_b4_generic(layer, x, y, gsum),
+        (4, _) if g % 2 == 0 => gemv_b4_generic(layer, x, y, gsum),
         (8, _) => gemv_b8(layer, x, y, gsum),
-        (2, _) => gemv_b2(layer, x, y, gsum),
+        (2, _) if g % 4 == 0 => gemv_b2(layer, x, y, gsum),
         _ => gqs_gemv_ref(layer, x, y),
     }
 }
@@ -227,6 +231,16 @@ mod tests {
     #[test]
     fn extreme_sparsity() {
         roundtrip(6, 32, 128, 16, 4, 0.9);
+    }
+
+    #[test]
+    fn odd_group_sizes_route_to_ref() {
+        // regression: g=5 at 4-bit (packing factor 2) and g=6 at 2-bit
+        // (factor 4) pack groups across byte boundaries; the byte-sliced
+        // fast paths used to truncate the trailing codes of every group.
+        roundtrip(7, 16, 20, 5, 4, 0.4);
+        roundtrip(8, 16, 24, 6, 2, 0.4);
+        roundtrip(9, 16, 30, 5, 2, 0.5);
     }
 
     #[test]

@@ -19,6 +19,26 @@ pub fn dense_gemv(w: &Mat, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// Batched dense GEMM: Y (T, N) = X (T, K) @ Wᵀ. One pass over the
+/// weight rows serves every activation row; each output row matches
+/// `dense_gemv` bit for bit (same single accumulation chain).
+pub fn dense_gemm(w: &Mat, x: &Mat, y: &mut Mat) {
+    assert_eq!(x.cols, w.cols);
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows));
+    let n = w.rows;
+    for r in 0..n {
+        let row = w.row(r);
+        for ti in 0..x.rows {
+            let xr = x.row(ti);
+            let mut acc = 0.0f32;
+            for i in 0..row.len() {
+                acc += row[i] * xr[i];
+            }
+            y.data[ti * n + r] = acc;
+        }
+    }
+}
+
 /// Dense group-quantized weight (no pruning): the W{2,4,8} baselines.
 #[derive(Clone, Debug)]
 pub struct QuantDense {
@@ -34,6 +54,14 @@ pub struct QuantDense {
 impl QuantDense {
     pub fn encode(w: &Mat, bits: u32, group: usize) -> Self {
         assert!(w.cols % group == 0);
+        // codes are packed contiguously and the kernels slice the packed
+        // stream per group, so a group must fill whole bytes — otherwise
+        // gemv/gemm would read misaligned bytes (the truncation bug the
+        // GQS path routes to its reference kernel for)
+        assert!(
+            group * bits as usize % 8 == 0,
+            "group {group} at {bits}-bit straddles packed bytes"
+        );
         let ng = w.cols / group;
         let mut codes = Vec::with_capacity(w.rows * w.cols);
         let mut scales = Vec::with_capacity(w.rows * ng);
@@ -118,6 +146,102 @@ impl QuantDense {
                         acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
                     }
                     y[r] = acc;
+                }
+            }
+            _ => panic!("bits {}", self.bits),
+        }
+    }
+
+    /// Batched GEMM counterpart of `gemv`: dequantizes each weight
+    /// group once and FMAs it against all T activation rows; per-row
+    /// accumulation order matches `gemv` exactly.
+    pub fn gemm(&self, x: &Mat, y: &mut Mat, scratch: &mut crate::gqs::gemm::MatmulScratch) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows));
+        y.data.fill(0.0);
+        if x.rows == 0 {
+            return;
+        }
+        let g = self.group;
+        let t = x.rows;
+        let ng = self.cols / g;
+        let n = self.rows;
+        crate::gqs::gemm::group_sums_batch(x, g, &mut scratch.xsum);
+        let xsum = &scratch.xsum[..];
+        let deq = &mut scratch.deq;
+        deq.resize(g, 0.0);
+        match self.bits {
+            4 => {
+                let gb = g / 2;
+                for r in 0..n {
+                    for gc in 0..ng {
+                        let j = r * ng + gc;
+                        let qb = &self.qvals[j * gb..(j + 1) * gb];
+                        for i in 0..gb {
+                            deq[2 * i] = (qb[i] & 0xF) as f32;
+                            deq[2 * i + 1] = (qb[i] >> 4) as f32;
+                        }
+                        let s = self.scales[j];
+                        let z = self.zeros[j] as f32;
+                        for ti in 0..t {
+                            let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+                            let mut dot = 0.0f32;
+                            for i in 0..gb {
+                                dot += deq[2 * i] * xs[2 * i];
+                                dot += deq[2 * i + 1] * xs[2 * i + 1];
+                            }
+                            y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
+                        }
+                    }
+                }
+            }
+            8 => {
+                for r in 0..n {
+                    for gc in 0..ng {
+                        let j = r * ng + gc;
+                        let qb = &self.qvals[j * g..(j + 1) * g];
+                        for i in 0..g {
+                            deq[i] = qb[i] as f32;
+                        }
+                        let s = self.scales[j];
+                        let z = self.zeros[j] as f32;
+                        for ti in 0..t {
+                            let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+                            let mut dot = 0.0f32;
+                            for i in 0..g {
+                                dot += deq[i] * xs[i];
+                            }
+                            y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
+                        }
+                    }
+                }
+            }
+            2 => {
+                let gb = g / 4;
+                for r in 0..n {
+                    for gc in 0..ng {
+                        let j = r * ng + gc;
+                        let qb = &self.qvals[j * gb..(j + 1) * gb];
+                        for i in 0..gb {
+                            deq[4 * i] = (qb[i] & 0x3) as f32;
+                            deq[4 * i + 1] = ((qb[i] >> 2) & 0x3) as f32;
+                            deq[4 * i + 2] = ((qb[i] >> 4) & 0x3) as f32;
+                            deq[4 * i + 3] = (qb[i] >> 6) as f32;
+                        }
+                        let s = self.scales[j];
+                        let z = self.zeros[j] as f32;
+                        for ti in 0..t {
+                            let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+                            let mut dot = 0.0f32;
+                            for i in 0..gb {
+                                dot += deq[4 * i] * xs[4 * i];
+                                dot += deq[4 * i + 1] * xs[4 * i + 1];
+                                dot += deq[4 * i + 2] * xs[4 * i + 2];
+                                dot += deq[4 * i + 3] * xs[4 * i + 3];
+                            }
+                            y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
+                        }
+                    }
                 }
             }
             _ => panic!("bits {}", self.bits),
@@ -272,6 +396,68 @@ impl Semi24Kernel {
         }
     }
 
+    /// Batched GEMM counterpart of `gemv`: decodes each quad's codes +
+    /// position metadata once and FMAs against all T activation rows;
+    /// per-row accumulation order matches `gemv` exactly.
+    pub fn gemm(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows));
+        y.data.fill(0.0);
+        if x.rows == 0 {
+            return;
+        }
+        assert!(self.group % 2 == 0, "semi24 fast path needs even group");
+        let t = x.rows;
+        let n = self.rows;
+        let kept_per_row = self.cols / 2;
+        match self.bits {
+            4 => {
+                for r in 0..n {
+                    let kbase = r * kept_per_row;
+                    for qi in 0..self.cols / 4 {
+                        let j = kbase + qi * 2; // even: both codes share a byte
+                        let code_byte = self.qvals[j / 2];
+                        let meta_byte = self.meta[j / 4];
+                        let shift = (j % 4) * 2;
+                        let g = j / self.group;
+                        let s = self.scales[g];
+                        let z = self.zeros[g] as f32;
+                        let a0 = (code_byte & 0xF) as f32 - z;
+                        let a1 = (code_byte >> 4) as f32 - z;
+                        let i0 = qi * 4 + ((meta_byte >> shift) & 3) as usize;
+                        let i1 = qi * 4 + ((meta_byte >> (shift + 2)) & 3) as usize;
+                        for ti in 0..t {
+                            let xr = x.row(ti);
+                            y.data[ti * n + r] += s * (a0 * xr[i0] + a1 * xr[i1]);
+                        }
+                    }
+                }
+            }
+            _ => {
+                let codes =
+                    crate::quant::unpack_codes(&self.qvals, self.bits, self.rows * kept_per_row);
+                let positions =
+                    crate::quant::unpack_codes(&self.meta, 2, self.rows * kept_per_row);
+                for r in 0..n {
+                    let base = r * kept_per_row;
+                    for qi in 0..self.cols / 4 {
+                        for tpos in 0..2 {
+                            let j = base + qi * 2 + tpos;
+                            let g = j / self.group;
+                            let s = self.scales[g];
+                            let z = self.zeros[g] as f32;
+                            let xi = qi * 4 + positions[j] as usize;
+                            let c = codes[j] as f32;
+                            for ti in 0..t {
+                                y.data[ti * n + r] += (c - z) * s * x.row(ti)[xi];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Dense reconstruction oracle.
     pub fn decode(&self) -> Mat {
         let kept_per_row = self.cols / 2;
@@ -365,6 +551,56 @@ mod tests {
         let y_oracle = kern.decode().matvec(&x);
         for i in 0..24 {
             assert!((y[i] - y_oracle[i]).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "straddles packed bytes")]
+    fn quant_dense_rejects_byte_straddling_groups() {
+        // g=5 at 4-bit packs groups across byte boundaries; the sliced
+        // kernels would silently read misaligned bytes, so encode rejects
+        let mut rng = XorShift::new(11);
+        let w = Mat::randn(4, 20, &mut rng);
+        let _ = QuantDense::encode(&w, 4, 5);
+    }
+
+    #[test]
+    fn batched_gemms_match_per_row_gemv_exactly() {
+        // the batched kernels replicate the per-row accumulation order
+        // of their GEMV counterparts — zero tolerance.
+        let mut rng = XorShift::new(9);
+        let w = Mat::randn(24, 64, &mut rng);
+        let x = Mat::randn(5, 64, &mut rng);
+
+        let mut y = Mat::zeros(5, 24);
+        dense_gemm(&w, &x, &mut y);
+        for ti in 0..5 {
+            let mut yr = vec![0.0f32; 24];
+            dense_gemv(&w, x.row(ti), &mut yr);
+            assert_eq!(y.row(ti), &yr[..], "dense row {ti}");
+        }
+
+        let mut mm = crate::gqs::gemm::MatmulScratch::new();
+        for bits in [2u32, 4, 8] {
+            let qd = QuantDense::encode(&w, bits, 16);
+            qd.gemm(&x, &mut y, &mut mm);
+            for ti in 0..5 {
+                let mut yr = vec![0.0f32; 24];
+                let mut sc = Vec::new();
+                qd.gemv(x.row(ti), &mut yr, &mut sc);
+                assert_eq!(y.row(ti), &yr[..], "quantdense w{bits} row {ti}");
+            }
+        }
+
+        let w24 = prune_24(&w, None, SaliencyMetric::Magnitude);
+        for bits in [4u32, 8] {
+            let kern = Semi24Kernel::encode(&w24, bits, 16);
+            kern.gemm(&x, &mut y);
+            for ti in 0..5 {
+                let mut yr = vec![0.0f32; 24];
+                kern.gemv(x.row(ti), &mut yr);
+                assert_eq!(y.row(ti), &yr[..], "semi24 w{bits} row {ti}");
+            }
         }
     }
 

@@ -8,5 +8,6 @@ pub mod gemv;
 pub mod gemv_dense;
 pub mod layer;
 
+pub use gemm::{gqs_gemm, MatmulScratch};
 pub use gemv::{gqs_gemv, gqs_gemv_ref};
 pub use layer::GqsLayer;

@@ -7,6 +7,17 @@
 //! the compressed models — plus every baseline the paper compares
 //! against. See DESIGN.md for the system inventory and experiment map.
 
+// Kernel code deliberately mirrors the CUDA reference's index loops and
+// builds structs field-by-field next to timing captures; silence the
+// stylistic lints those patterns trip so CI can run `clippy -D warnings`
+// on what's left.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_memcpy,
+    clippy::field_reassign_with_default
+)]
+
 pub mod bench;
 pub mod coordinator;
 pub mod engine;

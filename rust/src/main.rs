@@ -13,12 +13,14 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use gqsa::bench::{experiments, Workbench};
+#[cfg(feature = "pjrt")]
 use gqsa::coordinator::backend::PjrtBackend;
 use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
 use gqsa::engine::cost_model::{CostModel, GpuSpec};
 use gqsa::engine::{simulate, Workload};
 use gqsa::engine::{slice_k, stream_k};
 use gqsa::model::tokenizer::ByteTokenizer;
+#[cfg(feature = "pjrt")]
 use gqsa::runtime::Runtime;
 
 fn main() {
@@ -138,6 +140,7 @@ fn generate(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()
             let cfg = model.cfg.clone();
             (Backend::Native(model), cfg)
         }
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let rt = Runtime::cpu()?;
             let name = if let Some(tag) = spec.strip_prefix("gqsa:") {
@@ -149,6 +152,8 @@ fn generate(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()
             let cfg = wb.fp(family)?.config.clone();
             (Backend::Pjrt(PjrtBackend::new(artifact)?), cfg)
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("pjrt backend not built — rebuild with `--features pjrt`"),
         other => bail!("unknown backend '{other}'"),
     };
 

@@ -116,7 +116,8 @@ impl ModelConfig {
     }
 }
 
-#[cfg(test)]
+/// The tiny-llama demo shape the serving tables and bench sweeps use
+/// (also the default test model).
 pub fn demo_config() -> ModelConfig {
     ModelConfig {
         family: "tiny-llama".into(),

@@ -1,10 +1,19 @@
 //! Artifact loading + execution on the PJRT CPU client.
+//!
+//! Manifest parsing is always available; the `Runtime`/`Artifact`
+//! execution half needs the native XLA binding and is gated behind the
+//! off-by-default `pjrt` feature (see rust/Cargo.toml).
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::{Context, Result};
 
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use crate::util::tensorio::{Dtype, TensorFile};
 
 /// One runtime parameter or output, as described by the manifest.
@@ -67,10 +76,12 @@ impl Manifest {
 }
 
 /// The PJRT client wrapper; create once, load many artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
@@ -120,12 +131,14 @@ impl Runtime {
 }
 
 /// A compiled executable + resident weight literals.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     exe: xla::PjRtLoadedExecutable,
     weights: Vec<xla::Literal>,
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifact {
     /// Execute with the runtime inputs appended after the weights.
     /// Returns the flattened output literals (tuple decomposed).

@@ -8,7 +8,13 @@
 //! Each artifact is three files: `<name>.hlo.txt`, `<name>.inputs.bin`
 //! (weight inputs, uploaded once at load), `<name>.manifest.json`
 //! (runtime input/output schema). Python never runs at serve time.
+//!
+//! Execution requires the native XLA binding and is gated behind the
+//! off-by-default `pjrt` cargo feature; manifest parsing is always
+//! built (the offline tier-1 path exercises it).
 
 pub mod artifact;
 
-pub use artifact::{Artifact, Manifest, ParamSpec, Runtime};
+#[cfg(feature = "pjrt")]
+pub use artifact::{Artifact, Runtime};
+pub use artifact::{Manifest, ParamSpec};

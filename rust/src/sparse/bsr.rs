@@ -80,6 +80,30 @@ impl BsrMatrix {
         y
     }
 
+    /// Batched Y (T, N) = X (T, K) @ BSRᵀ: walks the row/group metadata
+    /// once for the whole block. Elementwise accumulation keeps each
+    /// output row bitwise identical to `matvec`'s single chain.
+    pub fn matmul_into(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, self.rows));
+        y.data.fill(0.0);
+        let n = self.rows;
+        for r in 0..n {
+            let (a, b) = (self.row_index[r] as usize, self.row_index[r + 1] as usize);
+            for j in a..b {
+                let gc = self.groups[j] as usize;
+                let vals = &self.values[j * self.group..(j + 1) * self.group];
+                for ti in 0..x.rows {
+                    let xs = &x.row(ti)[gc * self.group..(gc + 1) * self.group];
+                    let yv = &mut y.data[ti * n + r];
+                    for (v, xv) in vals.iter().zip(xs) {
+                        *yv += v * xv;
+                    }
+                }
+            }
+        }
+    }
+
     pub fn nnz_groups(&self) -> usize {
         self.groups.len()
     }
@@ -147,6 +171,21 @@ mod tests {
         let y_dense = mask.apply(&w).matvec(&x);
         for (a, b) in y_bsr.iter().zip(&y_dense) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_into_matches_matvec_exactly() {
+        let mut rng = XorShift::new(5);
+        let w = Mat::randn(24, 32, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 8, 0.4);
+        let bsr = BsrMatrix::encode(&w, &mask);
+        let x = Mat::randn(6, 32, &mut rng);
+        let mut y = Mat::zeros(6, 24);
+        bsr.matmul_into(&x, &mut y);
+        for ti in 0..6 {
+            let yr = bsr.matvec(x.row(ti));
+            assert_eq!(y.row(ti), &yr[..], "row {ti}");
         }
     }
 

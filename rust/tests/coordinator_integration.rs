@@ -5,8 +5,10 @@
 use std::path::PathBuf;
 
 use gqsa::bench::Workbench;
+#[cfg(feature = "pjrt")]
 use gqsa::coordinator::backend::PjrtBackend;
 use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request, Server};
+#[cfg(feature = "pjrt")]
 use gqsa::runtime::Runtime;
 
 fn art() -> PathBuf {
@@ -80,6 +82,7 @@ fn greedy_output_identical_native_all_sparsities() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_serves_requests() {
     require!(art().join("hlo/tiny-llama.decode.hlo.txt"));
@@ -103,6 +106,7 @@ fn pjrt_backend_serves_requests() {
     srv.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_and_native_agree_on_greedy_tokens() {
     // the strongest composition check: same checkpoint, two compute

@@ -6,7 +6,9 @@
 
 use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
 use gqsa::gqs::gemv::{gqs_gemv, gqs_gemv_ref};
+use gqsa::gqs::gemv_dense::{QuantDense, Semi24Kernel};
 use gqsa::gqs::layer::GqsLayer;
+use gqsa::gqs::MatmulScratch;
 use gqsa::model::config::ModelConfig;
 use gqsa::model::transformer::LinearKind;
 use gqsa::model::Transformer;
@@ -59,6 +61,54 @@ fn prop_gqs_gemv_opt_matches_ref() {
                 y1[i],
                 y2[i]
             );
+        }
+    });
+}
+
+#[test]
+fn prop_matmul_equals_repeated_matvec() {
+    // the tentpole invariant: LinearKind::matmul over X (T, K) equals T
+    // independent matvec calls, for every kind / bit width / sparsity /
+    // block size (the kernels replicate per-row op order, so the bound
+    // is far tighter than the 1e-4 asserted here)
+    props(30, |seed, rng| {
+        let g = 16usize;
+        let k = g * (1 + rng.below(6));
+        let n = 2 * (1 + rng.below(20)); // even: Semi24 group alignment
+        let t = [1usize, 3, 16][rng.below(3)];
+        let bits = [2u32, 4, 8][rng.below(3)];
+        let sparsity = [0.0, 0.5, 0.9][rng.below(3)];
+        let w = Mat::randn(n, k, rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, sparsity);
+        let kinds = [
+            LinearKind::Dense(w.clone()),
+            LinearKind::Gqs(GqsLayer::encode(&w, &mask, bits)),
+            LinearKind::QuantDense(QuantDense::encode(&w, bits, g)),
+            LinearKind::Semi24(Semi24Kernel::encode(
+                &prune_24(&w, None, SaliencyMetric::Magnitude),
+                bits,
+                g,
+            )),
+            LinearKind::BsrF32(BsrMatrix::encode(&w, &mask)),
+        ];
+        let x = Mat::randn(t, k, rng);
+        let mut mm = MatmulScratch::new();
+        for (ki, kind) in kinds.iter().enumerate() {
+            let mut y = Mat::zeros(t, n);
+            kind.matmul(&x, &mut y, &mut mm);
+            let mut yr = vec![0.0f32; n];
+            let mut sc = Vec::new();
+            for ti in 0..t {
+                kind.matvec(x.row(ti), &mut yr, &mut sc);
+                for i in 0..n {
+                    assert!(
+                        (y.at(ti, i) - yr[i]).abs() < 1e-4,
+                        "seed {seed} kind {ki} bits {bits} s {sparsity} t {ti} i {i}: {} vs {}",
+                        y.at(ti, i),
+                        yr[i]
+                    );
+                }
+            }
         }
     });
 }

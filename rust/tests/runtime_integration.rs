@@ -6,29 +6,29 @@
 //! (not failed) when artifacts are absent so `cargo test` works on a
 //! fresh checkout.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
+#[cfg(feature = "pjrt")]
 use gqsa::gqs::format::{FpModel, GqsModel};
+#[cfg(feature = "pjrt")]
 use gqsa::model::{KvCache, Scratch, Transformer};
+#[cfg(feature = "pjrt")]
 use gqsa::runtime::{Artifact, Runtime};
 
 fn art() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn have(p: &Path) -> bool {
-    p.exists()
-}
-
 macro_rules! require {
     ($p:expr) => {
-        if !have(&$p) {
+        if !$p.exists() {
             eprintln!("SKIP: {} missing (run `make artifacts`)", $p.display());
             return;
         }
     };
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn prefill_artifact_matches_native_forward() {
     let hlo = art().join("hlo");
@@ -60,6 +60,7 @@ fn prefill_artifact_matches_native_forward() {
     assert!(max_err < 2e-2, "pjrt vs native max err {max_err}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn decode_artifact_matches_native_decode() {
     let hlo = art().join("hlo");
@@ -103,6 +104,7 @@ fn decode_artifact_matches_native_decode() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn gqs_decode_artifact_matches_native_gqs() {
     // The Pallas-kernel decode artifact vs the rust GQS engine on the

@@ -1,0 +1,158 @@
+//! Offline stub of the `xla` (xla_extension) PJRT binding.
+//!
+//! The offline image does not vendor the native XLA runtime, so this
+//! crate provides just enough of the binding's surface for the `pjrt`
+//! feature of `gqsa` to compile. Every operation that would touch the
+//! runtime returns an error at runtime. To actually execute AOT
+//! artifacts, point the `xla` path dependency in `rust/Cargo.toml` at a
+//! real xla_extension binding with the same API.
+
+/// Error type; call sites format it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "xla runtime not vendored in this image (offline stub — see rust/xla_stub)".to_string(),
+    ))
+}
+
+/// Element types the artifact loader maps tensor dtypes onto.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    S8,
+    S64,
+    U8,
+    U16,
+}
+
+/// Scalar types accepted by `Literal::scalar` / `Literal::to_vec`.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor value.
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (text form).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident output buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn everything_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+        let lit = Literal::scalar(0f32);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
