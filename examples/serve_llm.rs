@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         EngineCore::new(
             Backend::Native(model),
             &cfg,
-            EngineConfig { max_batch: 4, prefill_chunk: 16, kv_capacity: 160 },
+            EngineConfig { max_batch: 4, prefill_chunk: 16, kv_capacity: 160, ..Default::default() },
         )
     });
     let prompts = ["the ", "ba duke ", "we saw a ", "once there was "];
@@ -87,7 +87,7 @@ fn serve_pjrt(art: &std::path::Path, tok: &ByteTokenizer) -> anyhow::Result<()> 
     let mut engine = EngineCore::new(
         Backend::Pjrt(PjrtBackend::new(artifact)?),
         &cfg,
-        EngineConfig { max_batch: 1, prefill_chunk: 16, kv_capacity: 160 },
+        EngineConfig { max_batch: 1, prefill_chunk: 16, kv_capacity: 160, ..Default::default() },
     )?;
     let t0 = Instant::now();
     engine.submit(Request::new(0, tok.encode("the "), 32));

@@ -29,7 +29,7 @@ fn engine_block_sweep() {
         let mut engine = EngineCore::new(
             Backend::Native(model),
             &cfg,
-            EngineConfig { max_batch: batch, prefill_chunk: chunk, kv_capacity: 128 },
+            EngineConfig { max_batch: batch, prefill_chunk: chunk, kv_capacity: 128, ..Default::default() },
         )
         .unwrap();
         for i in 0..8u64 {
@@ -77,7 +77,7 @@ fn main() {
         let mut engine = EngineCore::new(
             Backend::Native(model),
             &cfg,
-            EngineConfig { max_batch: 4, prefill_chunk: 15, kv_capacity: 128 },
+            EngineConfig { max_batch: 4, prefill_chunk: 15, kv_capacity: 128, ..Default::default() },
         )
         .unwrap();
         let corpus = wb.corpus("wiki_syn").unwrap().to_vec();

@@ -10,8 +10,12 @@
 //! with true batched GEMMs; Pjrt loops its single-token artifact
 //! internally.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::engine::executor::Executor;
+use crate::model::transformer::ExecHandle;
 use crate::model::{BlockScratch, KvCache, Scratch, Transformer};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Artifact;
@@ -113,6 +117,36 @@ impl PjrtBackend {
 }
 
 impl Backend {
+    /// Does this backend dispatch kernels through the Stream-K
+    /// executor? (Pjrt runs its compiled artifact — the coordinator
+    /// skips spawning pool workers for it.)
+    pub fn uses_executor(&self) -> bool {
+        match self {
+            Backend::Native(_) => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => false,
+        }
+    }
+
+    /// Build the engine's block scratch with the Stream-K executor
+    /// handle installed — the seam through which the coordinator's
+    /// `threads`/`decomposition` config reaches every kernel call.
+    /// (Pjrt runs its compiled artifact; the handle is inert there.)
+    pub fn new_block_scratch(
+        &self,
+        model_cfg: &crate::model::ModelConfig,
+        t_max: usize,
+        exec: Arc<Executor>,
+    ) -> BlockScratch {
+        match self {
+            Backend::Native(_) => {
+                BlockScratch::with_executor(model_cfg, t_max, ExecHandle::with(exec))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => BlockScratch::new(model_cfg, t_max),
+        }
+    }
+
     /// Allocate per-sequence state with `capacity` KV slots.
     pub fn new_seq(&self, capacity: usize) -> Result<SeqState> {
         match self {

@@ -20,6 +20,7 @@
 //! and chunk sizes).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -27,6 +28,7 @@ use anyhow::Result;
 use crate::coordinator::backend::{Backend, SeqState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, RequestTiming, Response};
+use crate::engine::executor::{Decomposition, ExecConfig, Executor};
 use crate::model::sampler::sample;
 use crate::model::BlockScratch;
 use crate::util::XorShift;
@@ -36,11 +38,26 @@ pub struct EngineConfig {
     pub max_batch: usize,
     pub prefill_chunk: usize,
     pub kv_capacity: usize,
+    /// parallel-executor lanes (1 = sequential kernels). The *default*
+    /// honors `GQSA_EXEC_THREADS` (how CI pins its determinism matrix);
+    /// an explicitly set value is never overridden. Logits are
+    /// identical at any value.
+    pub threads: usize,
+    /// work decomposition the executor runs; the default honors
+    /// `GQSA_EXEC_DECOMP`.
+    pub decomposition: Decomposition,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_batch: 8, prefill_chunk: 16, kv_capacity: 288 }
+        let exec = ExecConfig::default().from_env();
+        Self {
+            max_batch: 8,
+            prefill_chunk: 16,
+            kv_capacity: 288,
+            threads: exec.threads,
+            decomposition: exec.decomposition,
+        }
     }
 }
 
@@ -60,6 +77,9 @@ pub struct EngineCore {
     pub backend: Backend,
     pub cfg: EngineConfig,
     pub metrics: Metrics,
+    /// the Stream-K worker pool; every linear of every forward in this
+    /// engine dispatches through it (bit-exact with sequential).
+    pub exec: Arc<Executor>,
     waiting: VecDeque<(Request, Instant)>,
     active: Vec<ActiveSeq>,
     pool: Vec<SeqState>,
@@ -74,17 +94,36 @@ impl EngineCore {
         for _ in 0..cfg.max_batch {
             pool.push(backend.new_seq(cfg.kv_capacity)?);
         }
+        // cfg.threads/decomposition are authoritative here (env reaches
+        // them only through EngineConfig::default()); GQSA_EXEC_FORCE
+        // alone applies at pool construction so CI can disable the
+        // adaptive gate without touching explicit configs. Configs that
+        // can never dispatch to the pool (Pjrt backends, Sequential
+        // decomposition) get a lane-less pool instead of parked workers.
+        let pooled =
+            backend.uses_executor() && cfg.decomposition != Decomposition::Sequential;
+        let mut exec_cfg = ExecConfig {
+            threads: if pooled { cfg.threads } else { 1 },
+            decomposition: cfg.decomposition,
+            ..ExecConfig::default()
+        };
+        if crate::engine::executor::force_from_env() {
+            exec_cfg.adaptive = false;
+        }
+        let exec = Executor::new(exec_cfg);
         // one block scratch serves both roles: prefill chunks (rows =
         // chunk) and batched decode (rows = batch)
         let t_max = cfg.prefill_chunk.max(cfg.max_batch).max(1);
+        let block = backend.new_block_scratch(model_cfg, t_max, Arc::clone(&exec));
         Ok(Self {
             backend,
             cfg,
             metrics: Metrics::default(),
+            exec,
             waiting: VecDeque::new(),
             active: Vec::new(),
             pool,
-            block: BlockScratch::new(model_cfg, t_max),
+            block,
             rng: XorShift::new(0xC0FFEE),
             finished: Vec::new(),
         })
@@ -222,6 +261,7 @@ impl EngineCore {
         }
         self.active = still_active;
         self.metrics.add_busy(t0.elapsed());
+        self.metrics.set_exec_stats(self.exec.stats());
         Ok(processed)
     }
 
@@ -274,7 +314,7 @@ mod tests {
         EngineCore::new(
             Backend::Native(t),
             &cfg,
-            EngineConfig { max_batch, prefill_chunk, kv_capacity: 96 },
+            EngineConfig { max_batch, prefill_chunk, kv_capacity: 96, ..Default::default() },
         )
         .unwrap()
     }
@@ -374,12 +414,53 @@ mod tests {
         let mut e = EngineCore::new(
             Backend::Native(t2),
             &cfg,
-            EngineConfig { max_batch: 2, prefill_chunk: 3, kv_capacity: 96 },
+            EngineConfig { max_batch: 2, prefill_chunk: 3, kv_capacity: 96, ..Default::default() },
         )
         .unwrap();
         e.submit(Request::new(1, prompt.to_vec(), 6));
         let out = e.run_to_completion().unwrap();
         assert_eq!(out[0].tokens, seq_tokens);
+    }
+
+    #[test]
+    fn greedy_is_deterministic_across_executor_threads() {
+        // the determinism contract: the Stream-K executor is bit-exact
+        // with the sequential kernels, so an engine with a 4-lane pool
+        // must emit exactly the tokens of a 1-lane engine. On this tiny
+        // model the adaptive gate may route everything sequential —
+        // CI's GQSA_EXEC_FORCE=1 run makes this genuinely parallel, and
+        // tests/executor_properties.rs covers forced-parallel greedy
+        // decode unconditionally.
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 99);
+        let mut outs = Vec::new();
+        for threads in [1usize, 4] {
+            let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+            let mut e = EngineCore::new(
+                Backend::Native(t),
+                &cfg,
+                EngineConfig {
+                    max_batch: 2,
+                    prefill_chunk: 4,
+                    kv_capacity: 96,
+                    threads,
+                    decomposition: crate::engine::executor::Decomposition::StreamK,
+                },
+            )
+            .unwrap();
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 8));
+            e.submit(Request::new(2, vec![10, 11], 8));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            outs.push(out.into_iter().map(|r| r.tokens).collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1], "threads=1 vs threads=4 diverged");
     }
 
     #[test]

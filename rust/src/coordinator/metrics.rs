@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::engine::executor::ExecStats;
 use crate::util::stats::Summary;
 
 pub use crate::coordinator::request::RequestTiming as RequestMetrics;
@@ -13,6 +14,9 @@ pub struct Metrics {
     pub tokens_generated: u64,
     pub engine_iterations: u64,
     pub busy_us: u64,
+    /// Stream-K executor counters (chunks run, fixup reductions,
+    /// worker busy time) — snapshotted from the pool each tick.
+    pub exec: ExecStats,
     ttft_samples: Vec<f64>,
     total_samples: Vec<f64>,
 }
@@ -47,12 +51,18 @@ impl Metrics {
         self.busy_us += d.as_micros() as u64;
     }
 
+    /// Install the latest executor counter snapshot.
+    pub fn set_exec_stats(&mut self, s: ExecStats) {
+        self.exec = s;
+    }
+
     pub fn report(&self) -> String {
         let lat = self.latency_ms();
         let ttft = self.ttft_ms();
         format!(
             "requests={} prefill_toks={} gen_toks={} iters={} tok/s={:.1} \
-             latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms",
+             latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms, \
+             exec: chunks={} fixups={} busy_us={} par/seq={}/{}",
             self.requests_completed,
             self.tokens_prefilled,
             self.tokens_generated,
@@ -61,6 +71,11 @@ impl Metrics {
             lat.p50,
             lat.p95,
             ttft.p50,
+            self.exec.chunks_executed,
+            self.exec.fixup_reductions,
+            self.exec.worker_busy_us,
+            self.exec.parallel_calls,
+            self.exec.sequential_calls,
         )
     }
 }

@@ -158,7 +158,7 @@ mod tests {
             EngineCore::new(
                 Backend::Native(t),
                 &cfg,
-                EngineConfig { max_batch: 4, prefill_chunk: 8, kv_capacity: 96 },
+                EngineConfig { max_batch: 4, prefill_chunk: 8, kv_capacity: 96, ..Default::default() },
             )
         })
     }

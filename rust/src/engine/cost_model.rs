@@ -71,6 +71,68 @@ pub fn group_bytes(bits: u32, group: usize) -> f64 {
     (group * bits as usize) as f64 / 8.0 + 4.0 + 1.0 + 4.0
 }
 
+/// Measured-vs-predicted dispatch gate for the parallel executor.
+///
+/// The roofline above prices GPU CTAs in abstract cycles; the executor
+/// needs *wall-clock* answers ("does forking to the pool amortize for
+/// this layer?"), so this model learns two constants online — ns per
+/// work unit of sequential kernel execution and the fixed fork/join
+/// overhead of a pool dispatch — and predicts which path wins. Both
+/// paths produce bit-identical output, so a wrong prediction costs
+/// only time, never determinism.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchModel {
+    /// EWMA ns per work unit (one weight group) when run sequentially.
+    pub seq_ns_per_unit: f64,
+    /// EWMA fixed cost of one pool dispatch (fork + join + reduction).
+    pub dispatch_ns: f64,
+    /// EWMA smoothing factor.
+    pub alpha: f64,
+}
+
+impl Default for DispatchModel {
+    fn default() -> Self {
+        // conservative seeds: ~8ns/group sequential (a G=16 4-bit group
+        // is ~25 scalar FLOPs) and ~40us to wake + drain a pool — both
+        // corrected within a few observed calls.
+        Self { seq_ns_per_unit: 8.0, dispatch_ns: 40_000.0, alpha: 0.2 }
+    }
+}
+
+impl DispatchModel {
+    pub fn predict_seq_ns(&self, units: usize) -> f64 {
+        self.seq_ns_per_unit * units as f64
+    }
+
+    /// Parallel time model: fixed dispatch overhead + perfectly split
+    /// compute across `lanes` workers.
+    pub fn predict_par_ns(&self, units: usize, lanes: usize) -> f64 {
+        self.dispatch_ns + self.predict_seq_ns(units) / lanes.max(1) as f64
+    }
+
+    /// Should the executor fork this call to the pool?
+    pub fn parallel_wins(&self, units: usize, lanes: usize) -> bool {
+        lanes > 1 && self.predict_par_ns(units, lanes) < self.predict_seq_ns(units)
+    }
+
+    /// Feed back a measured sequential run.
+    pub fn observe_seq(&mut self, units: usize, ns: f64) {
+        if units == 0 {
+            return;
+        }
+        let per = ns / units as f64;
+        self.seq_ns_per_unit += self.alpha * (per - self.seq_ns_per_unit);
+    }
+
+    /// Feed back a measured parallel run: attribute everything beyond
+    /// the predicted split compute to dispatch overhead.
+    pub fn observe_par(&mut self, units: usize, lanes: usize, ns: f64) {
+        let compute = self.predict_seq_ns(units) / lanes.max(1) as f64;
+        let overhead = (ns - compute).max(0.0);
+        self.dispatch_ns += self.alpha * (overhead - self.dispatch_ns);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +166,36 @@ mod tests {
         assert!(group_bytes(4, 16) < group_bytes(8, 16));
         // G=16 @4bit: 8 code bytes + 9 overhead
         assert!((group_bytes(4, 16) - 17.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatch_gate_small_vs_large() {
+        let m = DispatchModel::default();
+        // tiny layer: dispatch overhead dominates -> sequential
+        assert!(!m.parallel_wins(100, 4));
+        // big layer: compute dominates -> parallel
+        assert!(m.parallel_wins(1_000_000, 4));
+        // one lane can never win
+        assert!(!m.parallel_wins(1_000_000, 1));
+    }
+
+    #[test]
+    fn dispatch_model_learns_from_measurements() {
+        let mut m = DispatchModel::default();
+        // feed consistent 20ns/unit sequential measurements
+        for _ in 0..50 {
+            m.observe_seq(10_000, 20.0 * 10_000.0);
+        }
+        assert!((m.seq_ns_per_unit - 20.0).abs() < 1.0, "{}", m.seq_ns_per_unit);
+        // parallel runs whose overhead is ~5us shift dispatch_ns down
+        for _ in 0..50 {
+            let compute = m.predict_seq_ns(10_000) / 4.0;
+            m.observe_par(10_000, 4, compute + 5_000.0);
+        }
+        assert!((m.dispatch_ns - 5_000.0).abs() < 500.0, "{}", m.dispatch_ns);
+        // with a 5us overhead, a 10k-unit layer at 20ns/unit wins in parallel
+        assert!(m.parallel_wins(10_000, 4));
+        // and a 300-unit layer does not (6us seq vs 5us overhead alone)
+        assert!(!m.parallel_wins(300, 4));
     }
 }

@@ -1,0 +1,1018 @@
+//! The task-centric parallel executor: Stream-K made real.
+//!
+//! The simulator (`engine::simulator`) *models* the paper's §3.5
+//! decomposition on a GPU cost model; this module *executes* it. A
+//! persistent pool of worker threads runs GQS GEMV/GEMM by splitting
+//! the flattened group-iteration space into near-equal chunks
+//! (`stream_k::decompose_prefix`, with the data-centric
+//! `slice_k::decompose_prefix` selectable for comparison), executing
+//! chunks on whichever lane is free, and combining partially-owned rows
+//! with a deterministic fixed-order fixup reduction.
+//!
+//! ## Determinism contract
+//!
+//! The chunk kernels emit, for every row, either the row's sequential
+//! accumulation-chain value (rows whose chain starts in the chunk) or
+//! the individual per-group terms of a row continued from an earlier
+//! chunk. The reduction replays those terms in flattened group order,
+//! so the final float-addition sequence per row is *identical* to the
+//! sequential kernel's — parallel output is bit-exact with
+//! `gqs_gemv`/`gqs_gemm` for any chunk count and any thread count.
+//! Greedy decode therefore produces identical tokens at `threads = 1`
+//! and `threads = 8`. The dense/quantized/2:4/BSR kinds are partitioned
+//! at row granularity (rows are independent chains), which is bit-exact
+//! trivially.
+//!
+//! ## Dispatch gate
+//!
+//! Forking a tiny layer to the pool costs more than running it in
+//! place, so every call consults `cost_model::DispatchModel` — a
+//! measured-vs-predicted gate that learns sequential ns/unit and pool
+//! dispatch overhead online and routes small workloads sequentially.
+//! Both routes are bit-identical, so the gate affects latency only.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::engine::cost_model::DispatchModel;
+use crate::engine::{slice_k, stream_k};
+use crate::gqs::gemm::{gqs_gemm_chunk, group_sums_batch, reduce_gemm, MatmulScratch};
+use crate::gqs::gemv::{
+    chunkable, gqs_gemv_chunk, gqs_gemv_with_gsum, group_sums, reduce_gemv, GqsChunk,
+};
+use crate::gqs::gemv_dense::{dense_gemm_rows, dense_gemv_rows, QuantDense, Semi24Kernel};
+use crate::gqs::layer::GqsLayer;
+use crate::sparse::bsr::BsrMatrix;
+use crate::util::Mat;
+
+/// Which work decomposition the executor runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decomposition {
+    /// never fork: plain sequential kernels.
+    Sequential,
+    /// data-centric row tiles (the straggler-prone baseline).
+    SliceK,
+    /// task-centric equal group volumes (the paper's contribution).
+    StreamK,
+}
+
+impl Decomposition {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "seq" | "sequential" => Some(Self::Sequential),
+            "slice-k" | "slice_k" | "slice" => Some(Self::SliceK),
+            "stream-k" | "stream_k" | "stream" => Some(Self::StreamK),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sequential => "sequential",
+            Self::SliceK => "slice-k",
+            Self::StreamK => "stream-k",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    /// total parallel lanes (1 caller + threads-1 pool workers).
+    pub threads: usize,
+    pub decomposition: Decomposition,
+    /// chunks issued per lane per call; 1 = one wave (Stream-K needs no
+    /// oversubscription, and 1 keeps the Slice-K comparison honest).
+    pub chunks_per_lane: usize,
+    /// hard floor: never fork workloads below this many work units
+    /// (one unit ≈ one 16-element weight group's worth of MACs, the
+    /// common scale every kind's gate accounting is normalized to).
+    pub min_units: usize,
+    /// consult the measured-vs-predicted gate (false = always fork).
+    pub adaptive: bool,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+        Self {
+            threads,
+            decomposition: Decomposition::StreamK,
+            chunks_per_lane: 1,
+            min_units: 512,
+            adaptive: true,
+        }
+    }
+}
+
+/// Is the adaptive-gate override (`GQSA_EXEC_FORCE=1`) set? Single
+/// parser shared by `ExecConfig::from_env` and the coordinator.
+pub fn force_from_env() -> bool {
+    std::env::var("GQSA_EXEC_FORCE").is_ok_and(|v| v == "1")
+}
+
+impl ExecConfig {
+    /// Apply `GQSA_EXEC_THREADS` / `GQSA_EXEC_DECOMP` / `GQSA_EXEC_FORCE`
+    /// environment overrides (how CI pins the determinism matrix).
+    pub fn from_env(mut self) -> Self {
+        if let Ok(v) = std::env::var("GQSA_EXEC_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                self.threads = n.max(1);
+            }
+        }
+        if let Ok(v) = std::env::var("GQSA_EXEC_DECOMP") {
+            if let Some(d) = Decomposition::parse(&v) {
+                self.decomposition = d;
+            }
+        }
+        if force_from_env() {
+            self.adaptive = false;
+        }
+        self
+    }
+}
+
+/// Snapshot of the executor counters (surfaced in `/report`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub chunks_executed: u64,
+    pub fixup_reductions: u64,
+    pub worker_busy_us: u64,
+    pub parallel_calls: u64,
+    pub sequential_calls: u64,
+}
+
+// ---------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------
+
+struct Job {
+    /// lifetime-erased pointer to the dispatcher's task closure; valid
+    /// until every worker has exited the job (the dispatcher blocks on
+    /// that before returning).
+    task: *const (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+}
+
+// SAFETY: the pointee is Sync and the dispatch protocol (below) keeps
+// the pointer alive for as long as any worker can dereference it.
+unsafe impl Send for Job {}
+
+/// Provenance-preserving pointer to the chunk-buffer pool, shared with
+/// worker tasks. Tasks only ever materialize a `&mut` to pairwise
+/// distinct elements (task i → element i), so the references never
+/// alias.
+#[derive(Clone, Copy)]
+struct ChunkPtr(*mut GqsChunk);
+unsafe impl Send for ChunkPtr {}
+unsafe impl Sync for ChunkPtr {}
+
+impl ChunkPtr {
+    /// SAFETY: caller must have exclusive access to element `i` and the
+    /// pool must outlive the returned reference.
+    unsafe fn get<'a>(self, i: usize) -> &'a mut GqsChunk {
+        &mut *self.0.add(i)
+    }
+}
+
+struct PoolState {
+    job: Option<Job>,
+    epoch: u64,
+    /// workers that finished the current epoch's job.
+    exited: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    next_task: AtomicUsize,
+    busy_us: AtomicU64,
+    /// set when any task panicked during the current job; the
+    /// dispatcher re-raises after the join barrier.
+    panicked: std::sync::atomic::AtomicBool,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (task, n_tasks, epoch) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = &st.job {
+                    if st.epoch != seen_epoch {
+                        break (job.task, job.n_tasks, st.epoch);
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        seen_epoch = epoch;
+        let t0 = Instant::now();
+        // SAFETY: the dispatcher keeps the closure alive until this
+        // worker bumps `exited` below; see `run_tasks`. Panics inside a
+        // task are caught so `exited` is ALWAYS incremented — a worker
+        // panic must not strand the dispatcher on `done_cv`.
+        let task = unsafe { &*task };
+        loop {
+            let i = shared.next_task.fetch_add(1, Ordering::Relaxed);
+            if i >= n_tasks {
+                break;
+            }
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i))).is_err() {
+                shared.panicked.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+        shared.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.exited += 1;
+        }
+        shared.done_cv.notify_all();
+    }
+}
+
+/// Reusable per-call buffers: chunk ranges and chunk output buffers
+/// (one per task — also reused as per-worker scratch by the row paths).
+#[derive(Default)]
+pub struct ExecScratch {
+    pub ranges: Vec<(usize, usize)>,
+    pub chunks: Vec<GqsChunk>,
+}
+
+pub struct Executor {
+    pub cfg: ExecConfig,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// serializes dispatches (the engine loop is single-threaded; this
+    /// guards against accidental concurrent use of one pool).
+    dispatch_lock: Mutex<()>,
+    model: Mutex<DispatchModel>,
+    chunks_executed: AtomicU64,
+    fixup_reductions: AtomicU64,
+    parallel_calls: AtomicU64,
+    sequential_calls: AtomicU64,
+}
+
+impl Executor {
+    pub fn new(cfg: ExecConfig) -> Arc<Self> {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { job: None, epoch: 0, exited: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_task: AtomicUsize::new(0),
+            busy_us: AtomicU64::new(0),
+            panicked: std::sync::atomic::AtomicBool::new(false),
+        });
+        let n_workers = cfg.threads.saturating_sub(1);
+        let workers = (0..n_workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gqsa-exec-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Arc::new(Self {
+            cfg,
+            shared,
+            workers,
+            dispatch_lock: Mutex::new(()),
+            model: Mutex::new(DispatchModel::default()),
+            chunks_executed: AtomicU64::new(0),
+            fixup_reductions: AtomicU64::new(0),
+            parallel_calls: AtomicU64::new(0),
+            sequential_calls: AtomicU64::new(0),
+        })
+    }
+
+    /// Total parallel lanes (pool workers + the calling thread).
+    pub fn lanes(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        ExecStats {
+            chunks_executed: self.chunks_executed.load(Ordering::Relaxed),
+            fixup_reductions: self.fixup_reductions.load(Ordering::Relaxed),
+            worker_busy_us: self.shared.busy_us.load(Ordering::Relaxed),
+            parallel_calls: self.parallel_calls.load(Ordering::Relaxed),
+            sequential_calls: self.sequential_calls.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Run `task(0..n_tasks)` across the pool; the calling thread
+    /// participates. Returns only after every task has completed and no
+    /// worker still holds the closure.
+    pub fn run_tasks(&self, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() || n_tasks <= 1 {
+            for i in 0..n_tasks {
+                task(i);
+            }
+            return;
+        }
+        let _guard = self.dispatch_lock.lock().unwrap();
+        // SAFETY: the borrow of `task` outlives this function call, and
+        // this function does not return — normally OR by unwinding —
+        // until `exited == workers.len()`: the caller's own task loop is
+        // wrapped in catch_unwind so a panicking task still reaches the
+        // join barrier below before the closure's borrow ends. Worker
+        // panics are likewise caught (see `worker_loop`) so the barrier
+        // cannot deadlock; any caught panic is re-raised afterwards.
+        let ptr = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        } as *const (dyn Fn(usize) + Sync);
+        self.shared.panicked.store(false, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Job { task: ptr, n_tasks });
+            st.epoch += 1;
+            st.exited = 0;
+            self.shared.next_task.store(0, Ordering::Relaxed);
+        }
+        self.shared.work_cv.notify_all();
+        let t0 = Instant::now();
+        let caller_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let i = self.shared.next_task.fetch_add(1, Ordering::Relaxed);
+            if i >= n_tasks {
+                break;
+            }
+            task(i);
+        }));
+        self.shared.busy_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.exited < self.workers.len() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        match caller_result {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(()) if self.shared.panicked.load(Ordering::Relaxed) => {
+                panic!("executor worker task panicked");
+            }
+            Ok(()) => {}
+        }
+    }
+
+    /// Gate: fork this call to the pool? (`units` = 16-element-group
+    /// equivalents of MAC work, normalized across kernel kinds so one
+    /// `DispatchModel` serves them all.)
+    fn go_parallel(&self, units: usize) -> bool {
+        if self.cfg.decomposition == Decomposition::Sequential {
+            return false;
+        }
+        if !self.cfg.adaptive {
+            // forced: run the decomposed path even single-lane, so
+            // benches/tests measure decompose+chunk+reduce honestly
+            // rather than silently falling back to the plain kernels
+            return true;
+        }
+        self.lanes() > 1
+            && units >= self.cfg.min_units
+            && self.model.lock().unwrap().parallel_wins(units, self.lanes())
+    }
+
+    fn observe(&self, parallel: bool, units: usize, t0: Instant) {
+        let ns = t0.elapsed().as_nanos() as f64;
+        let mut m = self.model.lock().unwrap();
+        if parallel {
+            m.observe_par(units, self.lanes(), ns);
+        } else {
+            m.observe_seq(units, ns);
+        }
+    }
+
+    fn n_chunks(&self) -> usize {
+        (self.lanes() * self.cfg.chunks_per_lane).max(1)
+    }
+
+    /// Chunk ranges for a BSR prefix under the configured decomposition.
+    fn decompose(&self, row_index: &[u32], out: &mut Vec<(usize, usize)>) {
+        match self.cfg.decomposition {
+            Decomposition::SliceK => slice_k::decompose_prefix(row_index, self.n_chunks(), out),
+            _ => stream_k::decompose_prefix(row_index, self.n_chunks(), out),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // GQS (BSR quantized): true Stream-K with mid-row chunk kernels
+    // -----------------------------------------------------------------
+
+    /// Parallel `gqs_gemv` — bit-exact with the sequential kernel.
+    pub fn gemv_gqs(
+        &self,
+        layer: &GqsLayer,
+        x: &[f32],
+        y: &mut [f32],
+        gsum: &mut Vec<f32>,
+        es: &mut ExecScratch,
+    ) {
+        assert_eq!(x.len(), layer.cols);
+        assert_eq!(y.len(), layer.rows);
+        let units = layer.nnz_groups() * layer.group / 16;
+        let t0 = Instant::now();
+        if !chunkable(layer.bits, layer.group) {
+            // ref-path shapes ignore group sums — don't compute them;
+            // and don't feed the scalar reference kernel's (much slower)
+            // timings into the fast-path cost model.
+            crate::gqs::gemv::gqs_gemv_ref(layer, x, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        group_sums(x, layer.group, gsum);
+        if !self.go_parallel(units) {
+            gqs_gemv_with_gsum(layer, x, y, gsum);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        self.decompose(&layer.row_index, &mut es.ranges);
+        let n = prepare_chunks(es);
+        let chunks = ChunkPtr(es.chunks.as_mut_ptr());
+        let gsum_ref: &[f32] = gsum;
+        let task = move |i: usize| {
+            // SAFETY: task i touches only chunk buffer i — disjoint &mut.
+            let c = unsafe { chunks.get(i) };
+            gqs_gemv_chunk(layer, x, gsum_ref, c);
+        };
+        self.run_tasks(n, &task);
+        let fixups = reduce_gemv(&es.chunks[..n], y);
+        self.finish_par(n as u64, fixups, units, t0);
+    }
+
+    /// Parallel `gqs_gemm` — bit-exact per (row, token) with the
+    /// sequential batched kernel.
+    pub fn gemm_gqs(
+        &self,
+        layer: &GqsLayer,
+        x: &Mat,
+        y: &mut Mat,
+        mm: &mut MatmulScratch,
+        es: &mut ExecScratch,
+    ) {
+        assert_eq!(x.cols, layer.cols);
+        assert_eq!((y.rows, y.cols), (x.rows, layer.rows));
+        if x.rows == 0 {
+            y.data.fill(0.0);
+            return;
+        }
+        let units = layer.nnz_groups() * layer.group * x.rows / 16;
+        let t0 = Instant::now();
+        let supported = chunkable(layer.bits, layer.group);
+        if !supported || !self.go_parallel(units) {
+            crate::gqs::gemm::gqs_gemm(layer, x, y, mm);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            if supported {
+                // (ref-path timings would bias the fast-path cost model)
+                self.observe(false, units, t0);
+            }
+            return;
+        }
+        group_sums_batch(x, layer.group, &mut mm.xsum);
+        self.decompose(&layer.row_index, &mut es.ranges);
+        let n = prepare_chunks(es);
+        let chunks = ChunkPtr(es.chunks.as_mut_ptr());
+        let xsum: &[f32] = &mm.xsum;
+        let task = move |i: usize| {
+            // SAFETY: task i touches only chunk buffer i — disjoint &mut.
+            let c = unsafe { chunks.get(i) };
+            gqs_gemm_chunk(layer, x, xsum, c);
+        };
+        self.run_tasks(n, &task);
+        let fixups = reduce_gemm(&es.chunks[..n], x.rows, y);
+        self.finish_par(n as u64, fixups, units, t0);
+    }
+
+    // -----------------------------------------------------------------
+    // Row-partitioned kinds (independent per-row chains)
+    // -----------------------------------------------------------------
+
+    /// Parallel dense FP32 GEMV (even row split).
+    pub fn gemv_dense(&self, w: &Mat, x: &[f32], y: &mut [f32], es: &mut ExecScratch) {
+        let units = w.rows * w.cols / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            dense_gemv_rows(w, x, y, 0, w.rows);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        even_row_ranges(w.rows, self.n_chunks(), &mut es.ranges);
+        let n = self.par_rows(es, 1, &|c, r0, r1| dense_gemv_rows(w, x, &mut c.partials, r0, r1));
+        reduce_rows_gemv(&es.chunks[..n], &es.ranges, y);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel dense GEMM.
+    pub fn gemm_dense(&self, w: &Mat, x: &Mat, y: &mut Mat, es: &mut ExecScratch) {
+        let units = w.rows * w.cols * x.rows.max(1) / 16;
+        let t0 = Instant::now();
+        if x.rows == 0 || !self.go_parallel(units) {
+            crate::gqs::gemv_dense::dense_gemm(w, x, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        even_row_ranges(w.rows, self.n_chunks(), &mut es.ranges);
+        let n = self.par_rows(es, x.rows, &|c, r0, r1| {
+            dense_gemm_rows(w, x, &mut c.partials, r0, r1)
+        });
+        reduce_rows_gemm(&es.chunks[..n], &es.ranges, x.rows, w.rows, &mut y.data);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel dense group-quantized GEMV.
+    pub fn gemv_quant(
+        &self,
+        q: &QuantDense,
+        x: &[f32],
+        y: &mut [f32],
+        gsum: &mut Vec<f32>,
+        es: &mut ExecScratch,
+    ) {
+        group_sums(x, q.group, gsum);
+        let units = q.rows * q.cols / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            q.gemv_rows(x, y, gsum, 0, q.rows);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        even_row_ranges(q.rows, self.n_chunks(), &mut es.ranges);
+        let gsum_ref: &[f32] = gsum;
+        let n = self.par_rows(es, 1, &|c, r0, r1| {
+            q.gemv_rows(x, &mut c.partials, gsum_ref, r0, r1)
+        });
+        reduce_rows_gemv(&es.chunks[..n], &es.ranges, y);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel dense group-quantized GEMM. Needs per-task dequant
+    /// staging, so the chunk-buffer pool doubles as worker scratch.
+    pub fn gemm_quant(
+        &self,
+        q: &QuantDense,
+        x: &Mat,
+        y: &mut Mat,
+        mm: &mut MatmulScratch,
+        es: &mut ExecScratch,
+    ) {
+        let units = q.rows * q.cols * x.rows.max(1) / 16;
+        let t0 = Instant::now();
+        if x.rows == 0 || !self.go_parallel(units) {
+            q.gemm(x, y, mm);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        group_sums_batch(x, q.group, &mut mm.xsum);
+        even_row_ranges(q.rows, self.n_chunks(), &mut es.ranges);
+        let xsum: &[f32] = &mm.xsum;
+        let n = self.par_rows(es, x.rows, &|c, r0, r1| {
+            // the chunk's deq staging is task-private, like its buffer
+            let mut deq = std::mem::take(&mut c.deq);
+            q.gemm_rows(x, &mut c.partials, xsum, &mut deq, r0, r1);
+            c.deq = deq;
+        });
+        reduce_rows_gemm(&es.chunks[..n], &es.ranges, x.rows, q.rows, &mut y.data);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel 2:4 GEMV (even-group 4-bit fast path only; other
+    /// widths decode whole streams per call and stay sequential — and
+    /// odd groups must reach the sequential kernel's even-group guard
+    /// rather than silently mis-slicing codes).
+    pub fn gemv_semi24(&self, s: &Semi24Kernel, x: &[f32], y: &mut [f32], es: &mut ExecScratch) {
+        let units = s.rows * s.cols / 32;
+        let t0 = Instant::now();
+        let fast = s.bits == 4 && s.group % 2 == 0;
+        if !fast || !self.go_parallel(units) {
+            s.gemv(x, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            if fast {
+                self.observe(false, units, t0);
+            }
+            return;
+        }
+        even_row_ranges(s.rows, self.n_chunks(), &mut es.ranges);
+        let n = self.par_rows(es, 1, &|c, r0, r1| s.gemv_rows(x, &mut c.partials, r0, r1));
+        reduce_rows_gemv(&es.chunks[..n], &es.ranges, y);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel 2:4 GEMM (even-group 4-bit fast path only, as `gemv_semi24`).
+    pub fn gemm_semi24(&self, s: &Semi24Kernel, x: &Mat, y: &mut Mat, es: &mut ExecScratch) {
+        let units = s.rows * s.cols * x.rows.max(1) / 32;
+        let t0 = Instant::now();
+        let fast = s.bits == 4 && s.group % 2 == 0;
+        if !fast || x.rows == 0 || !self.go_parallel(units) {
+            s.gemm(x, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            if fast && x.rows > 0 {
+                self.observe(false, units, t0);
+            }
+            return;
+        }
+        even_row_ranges(s.rows, self.n_chunks(), &mut es.ranges);
+        let n = self.par_rows(es, x.rows, &|c, r0, r1| s.gemm_rows(x, &mut c.partials, r0, r1));
+        reduce_rows_gemm(&es.chunks[..n], &es.ranges, x.rows, s.rows, &mut y.data);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// BSR row partition under the configured decomposition: slice-k is
+    /// the data-centric equal-*row* split (stragglers under skew);
+    /// stream-k snaps the equal-*volume* cuts to row boundaries (the
+    /// elementwise per-row chain cannot split mid-row).
+    fn bsr_ranges(&self, b: &BsrMatrix, out: &mut Vec<(usize, usize)>) {
+        match self.cfg.decomposition {
+            Decomposition::SliceK => even_row_ranges(b.rows, self.n_chunks(), out),
+            _ => balanced_row_ranges(&b.row_index, self.n_chunks(), out),
+        }
+    }
+
+    /// Parallel BSR f32 GEMV (see `bsr_ranges` for the decomposition
+    /// semantics; the uniform-row dense kinds use the even split for
+    /// both decompositions, where data- and task-centric coincide).
+    pub fn gemv_bsr(&self, b: &BsrMatrix, x: &[f32], y: &mut [f32], es: &mut ExecScratch) {
+        let units = b.values.len() / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            b.matvec_into(x, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        self.bsr_ranges(b, &mut es.ranges);
+        let n = self.par_rows(es, 1, &|c, r0, r1| b.matvec_rows(x, &mut c.partials, r0, r1));
+        reduce_rows_gemv(&es.chunks[..n], &es.ranges, y);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel BSR f32 GEMM (see `bsr_ranges`).
+    pub fn gemm_bsr(&self, b: &BsrMatrix, x: &Mat, y: &mut Mat, es: &mut ExecScratch) {
+        let units = b.values.len() * x.rows.max(1) / 16;
+        let t0 = Instant::now();
+        if x.rows == 0 || !self.go_parallel(units) {
+            b.matmul_into(x, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        self.bsr_ranges(b, &mut es.ranges);
+        let n = self.par_rows(es, x.rows, &|c, r0, r1| b.matmul_rows(x, &mut c.partials, r0, r1));
+        reduce_rows_gemm(&es.chunks[..n], &es.ranges, x.rows, b.rows, &mut y.data);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Run a region-relative row-range kernel over the partition in
+    /// `es.ranges`: task i fills chunk buffer i's private `partials`
+    /// (zeroed, `(r1-r0) * width` long) — no shared-output aliasing —
+    /// and the `reduce_rows_*` helpers copy the buffers into the real
+    /// output afterwards (bitwise copies; every accumulation chain
+    /// lives inside the kernel). Returns the task count.
+    fn par_rows(
+        &self,
+        es: &mut ExecScratch,
+        width: usize,
+        kernel: &(dyn Fn(&mut GqsChunk, usize, usize) + Sync),
+    ) -> usize {
+        let n = prepare_chunks(es);
+        let ranges: &[(usize, usize)] = &es.ranges;
+        let chunks = ChunkPtr(es.chunks.as_mut_ptr());
+        let task = move |i: usize| {
+            let (r0, r1) = ranges[i];
+            // SAFETY: task i touches only chunk buffer i — disjoint &mut.
+            let c = unsafe { chunks.get(i) };
+            c.partials.clear();
+            c.partials.resize((r1 - r0) * width, 0.0);
+            kernel(c, r0, r1);
+        };
+        self.run_tasks(n, &task);
+        n
+    }
+
+    fn finish_par(&self, n_chunks: u64, fixups: u64, units: usize, t0: Instant) {
+        self.chunks_executed.fetch_add(n_chunks, Ordering::Relaxed);
+        self.fixup_reductions.fetch_add(fixups, Ordering::Relaxed);
+        self.parallel_calls.fetch_add(1, Ordering::Relaxed);
+        self.observe(true, units, t0);
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Size the chunk-buffer pool to the range list; returns the task count.
+fn prepare_chunks(es: &mut ExecScratch) -> usize {
+    let n = es.ranges.len();
+    if es.chunks.len() < n {
+        es.chunks.resize_with(n, GqsChunk::default);
+    }
+    for (c, &grp) in es.chunks.iter_mut().zip(&es.ranges) {
+        c.grp = grp;
+    }
+    n
+}
+
+/// Copy per-task GEMV row buffers back into the shared output (bitwise
+/// — the accumulation chains were completed inside the kernels).
+fn reduce_rows_gemv(chunks: &[GqsChunk], ranges: &[(usize, usize)], y: &mut [f32]) {
+    for (c, &(r0, r1)) in chunks.iter().zip(ranges) {
+        y[r0..r1].copy_from_slice(&c.partials[..r1 - r0]);
+    }
+}
+
+/// Copy per-task region-relative (T, r1-r0) GEMM buffers into the
+/// (T, N) output.
+fn reduce_rows_gemm(
+    chunks: &[GqsChunk],
+    ranges: &[(usize, usize)],
+    t: usize,
+    n: usize,
+    yd: &mut [f32],
+) {
+    for (c, &(r0, r1)) in chunks.iter().zip(ranges) {
+        let width = r1 - r0;
+        for ti in 0..t {
+            yd[ti * n + r0..ti * n + r1].copy_from_slice(&c.partials[ti * width..(ti + 1) * width]);
+        }
+    }
+}
+
+/// Contiguous equal-count row ranges (uniform-cost kinds).
+fn even_row_ranges(rows: usize, n_chunks: usize, out: &mut Vec<(usize, usize)>) {
+    out.clear();
+    if rows == 0 {
+        return;
+    }
+    let n = n_chunks.clamp(1, rows);
+    for i in 0..n {
+        let r0 = rows * i / n;
+        let r1 = rows * (i + 1) / n;
+        if r1 > r0 {
+            out.push((r0, r1));
+        }
+    }
+}
+
+/// Row ranges balanced by group volume (BSR): the row-aligned Stream-K
+/// split — boundaries land on the rows nearest the equal-volume cuts.
+fn balanced_row_ranges(row_index: &[u32], n_chunks: usize, out: &mut Vec<(usize, usize)>) {
+    out.clear();
+    let rows = row_index.len().saturating_sub(1);
+    let total = *row_index.last().unwrap_or(&0) as usize;
+    if rows == 0 {
+        return;
+    }
+    if total == 0 {
+        out.push((0, rows));
+        return;
+    }
+    let n = n_chunks.max(1);
+    let mut r_prev = 0usize;
+    for i in 1..=n {
+        // the final cut is pinned to `rows`, so the ranges always cover
+        // every row exactly once
+        let target = total * i / n;
+        let r = if i == n {
+            rows
+        } else {
+            row_index[..rows].partition_point(|&p| (p as usize) < target)
+        };
+        if r > r_prev {
+            out.push((r_prev, r));
+            r_prev = r;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gqs::gemv::gqs_gemv;
+    use crate::sparse::group_prune::group_prune;
+    use crate::sparse::saliency::SaliencyMetric;
+    use crate::util::XorShift;
+
+    fn forced(threads: usize, decomposition: Decomposition) -> Arc<Executor> {
+        Executor::new(ExecConfig {
+            threads,
+            decomposition,
+            chunks_per_lane: 1,
+            min_units: 0,
+            adaptive: false,
+        })
+    }
+
+    fn gqs_layer(seed: u64, rows: usize, cols: usize, g: usize, bits: u32, s: f64) -> (GqsLayer, XorShift) {
+        let mut rng = XorShift::new(seed);
+        let w = Mat::randn(rows, cols, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, s);
+        (GqsLayer::encode(&w, &mask, bits), rng)
+    }
+
+    #[test]
+    fn gemv_gqs_bit_exact_across_threads_and_decomps() {
+        for (bits, g) in [(4u32, 16usize), (4, 8), (8, 16), (2, 16), (4, 5)] {
+            let (layer, mut rng) = gqs_layer(1 + bits as u64, 64, 20 * g, g, bits, 0.5);
+            let x = rng.normal_vec(20 * g);
+            let mut y_seq = vec![0.0f32; 64];
+            let mut sc = Vec::new();
+            gqs_gemv(&layer, &x, &mut y_seq, &mut sc);
+            for threads in [1usize, 2, 3, 4, 8] {
+                for d in [Decomposition::StreamK, Decomposition::SliceK] {
+                    let exec = forced(threads, d);
+                    let mut es = ExecScratch::default();
+                    let mut gsum = Vec::new();
+                    let mut y = vec![0.0f32; 64];
+                    exec.gemv_gqs(&layer, &x, &mut y, &mut gsum, &mut es);
+                    assert_eq!(y, y_seq, "bits {bits} g {g} threads {threads} {d:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_gqs_bit_exact_across_threads() {
+        let (layer, mut rng) = gqs_layer(9, 48, 128, 16, 4, 0.4);
+        let x = Mat::randn(5, 128, &mut rng);
+        let mut y_seq = Mat::zeros(5, 48);
+        let mut mm = MatmulScratch::new();
+        crate::gqs::gemm::gqs_gemm(&layer, &x, &mut y_seq, &mut mm);
+        for threads in [1usize, 2, 4, 8] {
+            let exec = forced(threads, Decomposition::StreamK);
+            let mut es = ExecScratch::default();
+            let mut mm2 = MatmulScratch::new();
+            let mut y = Mat::zeros(5, 48);
+            exec.gemm_gqs(&layer, &x, &mut y, &mut mm2, &mut es);
+            assert_eq!(y.data, y_seq.data, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn row_kinds_bit_exact_across_threads() {
+        use crate::gqs::gemv_dense::dense_gemv;
+        use crate::sparse::semi24::prune_24;
+        let mut rng = XorShift::new(31);
+        let w = Mat::randn(40, 128, &mut rng);
+        let x = rng.normal_vec(128);
+        let xm = Mat::randn(4, 128, &mut rng);
+
+        let q = QuantDense::encode(&w, 4, 16);
+        let s24 = Semi24Kernel::encode(&prune_24(&w, None, SaliencyMetric::Magnitude), 4, 16);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.4);
+        let b = BsrMatrix::encode(&w, &mask);
+
+        // sequential references
+        let mut yd = vec![0.0f32; 40];
+        dense_gemv(&w, &x, &mut yd);
+        let mut yq = vec![0.0f32; 40];
+        let mut sc = Vec::new();
+        q.gemv(&x, &mut yq, &mut sc);
+        let mut ys = vec![0.0f32; 40];
+        s24.gemv(&x, &mut ys);
+        let yb = b.matvec(&x);
+        let mut ydm = Mat::zeros(4, 40);
+        crate::gqs::gemv_dense::dense_gemm(&w, &xm, &mut ydm);
+        let mut ybm = Mat::zeros(4, 40);
+        b.matmul_into(&xm, &mut ybm);
+
+        for threads in [2usize, 4, 8] {
+            let exec = forced(threads, Decomposition::StreamK);
+            let mut es = ExecScratch::default();
+            let mut y = vec![0.0f32; 40];
+            exec.gemv_dense(&w, &x, &mut y, &mut es);
+            assert_eq!(y, yd, "dense threads {threads}");
+            let mut gsum = Vec::new();
+            exec.gemv_quant(&q, &x, &mut y, &mut gsum, &mut es);
+            assert_eq!(y, yq, "quant threads {threads}");
+            exec.gemv_semi24(&s24, &x, &mut y, &mut es);
+            assert_eq!(y, ys, "semi24 threads {threads}");
+            exec.gemv_bsr(&b, &x, &mut y, &mut es);
+            assert_eq!(y, yb, "bsr threads {threads}");
+            let mut ym = Mat::zeros(4, 40);
+            exec.gemm_dense(&w, &xm, &mut ym, &mut es);
+            assert_eq!(ym.data, ydm.data, "dense gemm threads {threads}");
+            exec.gemm_bsr(&b, &xm, &mut ym, &mut es);
+            assert_eq!(ym.data, ybm.data, "bsr gemm threads {threads}");
+        }
+    }
+
+    #[test]
+    fn quant_and_semi24_gemm_bit_exact() {
+        use crate::sparse::semi24::prune_24;
+        let mut rng = XorShift::new(41);
+        let w = Mat::randn(36, 96, &mut rng);
+        let xm = Mat::randn(3, 96, &mut rng);
+        let q = QuantDense::encode(&w, 4, 16);
+        let s24 = Semi24Kernel::encode(&prune_24(&w, None, SaliencyMetric::Magnitude), 4, 16);
+        let mut mm = MatmulScratch::new();
+        let mut yq = Mat::zeros(3, 36);
+        q.gemm(&xm, &mut yq, &mut mm);
+        let mut ys = Mat::zeros(3, 36);
+        s24.gemm(&xm, &mut ys);
+        let exec = forced(4, Decomposition::StreamK);
+        let mut es = ExecScratch::default();
+        let mut mm2 = MatmulScratch::new();
+        let mut y = Mat::zeros(3, 36);
+        exec.gemm_quant(&q, &xm, &mut y, &mut mm2, &mut es);
+        assert_eq!(y.data, yq.data, "quant gemm");
+        exec.gemm_semi24(&s24, &xm, &mut y, &mut es);
+        assert_eq!(y.data, ys.data, "semi24 gemm");
+    }
+
+    #[test]
+    fn adaptive_gate_falls_back_on_tiny_layers() {
+        let (layer, mut rng) = gqs_layer(51, 8, 32, 16, 4, 0.5);
+        let x = rng.normal_vec(32);
+        let exec = Executor::new(ExecConfig {
+            threads: 4,
+            min_units: 1_000_000, // floor above any tiny layer
+            ..ExecConfig::default()
+        });
+        let mut es = ExecScratch::default();
+        let mut gsum = Vec::new();
+        let mut y = vec![0.0f32; 8];
+        exec.gemv_gqs(&layer, &x, &mut y, &mut gsum, &mut es);
+        let st = exec.stats();
+        assert_eq!(st.parallel_calls, 0);
+        assert_eq!(st.sequential_calls, 1);
+        let mut y_seq = vec![0.0f32; 8];
+        let mut sc = Vec::new();
+        gqs_gemv(&layer, &x, &mut y_seq, &mut sc);
+        assert_eq!(y, y_seq);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let (layer, mut rng) = gqs_layer(61, 64, 256, 16, 4, 0.5);
+        let x = rng.normal_vec(256);
+        let exec = forced(4, Decomposition::StreamK);
+        let mut es = ExecScratch::default();
+        let mut gsum = Vec::new();
+        let mut y = vec![0.0f32; 64];
+        exec.gemv_gqs(&layer, &x, &mut y, &mut gsum, &mut es);
+        let st = exec.stats();
+        assert_eq!(st.parallel_calls, 1);
+        assert!(st.chunks_executed >= 2, "{st:?}");
+    }
+
+    #[test]
+    fn pool_runs_all_tasks_once() {
+        let exec = Executor::new(ExecConfig {
+            threads: 4,
+            adaptive: false,
+            ..Default::default()
+        });
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        exec.run_tasks(64, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // pool reusable across dispatches
+        exec.run_tasks(64, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 2));
+    }
+
+    #[test]
+    fn even_ranges_cover() {
+        let mut out = Vec::new();
+        even_row_ranges(10, 4, &mut out);
+        assert_eq!(out.iter().map(|r| r.1 - r.0).sum::<usize>(), 10);
+        assert_eq!(out.first().unwrap().0, 0);
+        assert_eq!(out.last().unwrap().1, 10);
+        even_row_ranges(2, 8, &mut out);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn balanced_ranges_follow_load() {
+        // rows: [8, 1, 1, 1, 1, 4] groups — 2 chunks should split near 8
+        let prefix = [0u32, 8, 9, 10, 11, 12, 16];
+        let mut out = Vec::new();
+        balanced_row_ranges(&prefix, 2, &mut out);
+        assert_eq!(out.iter().map(|r| r.1 - r.0).sum::<usize>(), 6);
+        assert_eq!(out[0], (0, 1), "heavy row isolated: {out:?}");
+    }
+}

@@ -1,19 +1,26 @@
-//! GPU-analogue execution engine (paper §3.5, Fig. 4-5).
+//! Task-centric execution engine (paper §3.5, Fig. 4-5).
 //!
 //! The paper's engineering contribution is *task-centric* (Stream-K)
 //! work decomposition for sparse GEMV, replacing the *data-centric*
 //! (Slice-K) output-tile assignment that suffers stragglers under
-//! row-skewed sparsity. Real CTAs need a GPU; scheduling is a
-//! hardware-independent phenomenon, so we reproduce it with a
-//! discrete-event multi-SM simulator driven by a roofline cost model
-//! (see DESIGN.md §Hardware-Adaptation).
+//! row-skewed sparsity. Two realizations live here:
+//!
+//! * `simulator` — a discrete-event multi-SM simulator driven by a
+//!   roofline cost model (the GPU-shaped study of Fig. 5; see
+//!   DESIGN.md §Hardware-Adaptation), and
+//! * `executor` — the real thing: a persistent worker-thread pool that
+//!   *runs* the GQS kernels over the same decompositions, with a
+//!   deterministic fixup reduction that keeps parallel output bit-exact
+//!   with the sequential kernels.
 
 pub mod cost_model;
+pub mod executor;
 pub mod simulator;
 pub mod slice_k;
 pub mod stream_k;
 pub mod workload;
 
-pub use cost_model::{CostModel, GpuSpec};
+pub use cost_model::{CostModel, DispatchModel, GpuSpec};
+pub use executor::{Decomposition, ExecConfig, ExecScratch, ExecStats, Executor};
 pub use simulator::{simulate, SimResult};
 pub use workload::{Cta, Workload};

@@ -10,13 +10,40 @@ pub fn decompose(wl: &Workload, bn: usize) -> Vec<Cta> {
     let n = wl.row_groups.len();
     let mut ctas = Vec::with_capacity(n.div_ceil(bn));
     let mut r = 0;
+    let mut done = 0usize;
     while r < n {
         let end = (r + bn).min(n);
         let groups: usize = wl.row_groups[r..end].iter().sum();
-        ctas.push(Cta { cost: wl.groups_cost(groups, 0), rows: (r, end) });
+        ctas.push(Cta {
+            cost: wl.groups_cost(groups, 0),
+            rows: (r, end),
+            grp: (done, done + groups),
+        });
+        done += groups;
         r = end;
     }
     ctas
+}
+
+/// Row-tile split driven by a BSR row prefix, emitting one flattened
+/// group range per tile of `rows/n_ctas` output rows — the executor's
+/// data-centric baseline. Ranges are row-aligned, so per-chunk cost
+/// inherits the full row skew (the straggler behavior Stream-K fixes).
+pub fn decompose_prefix(row_index: &[u32], n_ctas: usize, out: &mut Vec<(usize, usize)>) {
+    out.clear();
+    let n = row_index.len().saturating_sub(1);
+    if n == 0 || n_ctas == 0 {
+        return;
+    }
+    let n_ctas = n_ctas.min(n);
+    for i in 0..n_ctas {
+        let r0 = n * i / n_ctas;
+        let r1 = n * (i + 1) / n_ctas;
+        let (lo, hi) = (row_index[r0] as usize, row_index[r1] as usize);
+        if hi > lo {
+            out.push((lo, hi));
+        }
+    }
 }
 
 #[cfg(test)]

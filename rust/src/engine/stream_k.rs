@@ -39,9 +39,33 @@ pub fn decompose(wl: &Workload, n_ctas: usize) -> Vec<Cta> {
         if prefix[row_hi + 1] > hi {
             reductions += 1; // ends mid-row
         }
-        ctas.push(Cta { cost: wl.groups_cost(hi - lo, reductions), rows: (row_lo, row_hi + 1) });
+        ctas.push(Cta {
+            cost: wl.groups_cost(hi - lo, reductions),
+            rows: (row_lo, row_hi + 1),
+            grp: (lo, hi),
+        });
     }
     ctas
+}
+
+/// The same equal-volume split, driven directly by a BSR row prefix
+/// (`row_index[r]` = groups before row r) — the executor's entry point:
+/// no `Workload` allocation on the GEMV hot path, just the chunk group
+/// ranges appended to `out`.
+pub fn decompose_prefix(row_index: &[u32], n_ctas: usize, out: &mut Vec<(usize, usize)>) {
+    out.clear();
+    let total = *row_index.last().unwrap_or(&0) as usize;
+    if total == 0 || n_ctas == 0 {
+        return;
+    }
+    let n_ctas = n_ctas.min(total);
+    for i in 0..n_ctas {
+        let lo = total * i / n_ctas;
+        let hi = total * (i + 1) / n_ctas;
+        if hi > lo {
+            out.push((lo, hi));
+        }
+    }
 }
 
 /// The natural CTA count: enough waves to cover all SMs evenly.

@@ -68,6 +68,9 @@ pub struct Cta {
     pub cost: CtaCost,
     /// output rows this CTA touches (for bookkeeping/asserts).
     pub rows: (usize, usize),
+    /// half-open range in the flattened group-iteration space — the
+    /// executor runs exactly these groups; the simulator only costs them.
+    pub grp: (usize, usize),
 }
 
 #[cfg(test)]

@@ -15,6 +15,7 @@
 //! the same logits, which keeps greedy decode deterministic across
 //! batch shapes.
 
+use crate::gqs::gemv::{chunk_layout, kernel_path, GqsChunk, KernelPath};
 use crate::gqs::layer::GqsLayer;
 use crate::quant::unpack_codes;
 use crate::util::Mat;
@@ -67,158 +68,345 @@ pub fn gqs_gemm(layer: &GqsLayer, x: &Mat, y: &mut Mat, scratch: &mut MatmulScra
         return;
     }
     let g = layer.group;
-    match (layer.bits, g) {
-        (4, 16) => {
+    match kernel_path(layer.bits, g) {
+        KernelPath::B4G16 => {
             group_sums_batch(x, g, &mut scratch.xsum);
             gemm_b4_g16(layer, x, y, &scratch.xsum);
         }
-        (4, _) if g % 2 == 0 => {
+        KernelPath::B4 => {
             group_sums_batch(x, g, &mut scratch.xsum);
             gemm_b4_generic(layer, x, y, &scratch.xsum, &mut scratch.deq);
         }
-        (8, _) => {
+        KernelPath::B8 => {
             group_sums_batch(x, g, &mut scratch.xsum);
             gemm_b8(layer, x, y, &scratch.xsum, &mut scratch.deq);
         }
-        (2, _) if g % 4 == 0 => {
+        KernelPath::B2 => {
             group_sums_batch(x, g, &mut scratch.xsum);
             gemm_b2(layer, x, y, &scratch.xsum, &mut scratch.deq);
         }
-        _ => gqs_gemm_ref(layer, x, y),
+        KernelPath::Ref => gqs_gemm_ref(layer, x, y),
     }
 }
 
+// ---------------------------------------------------------------------
+// Per-group batched helpers: one surviving group's fused contribution
+// to all T activation rows (dequantization hoisted out of the T loop).
+// `dst[ti * stride]` receives (add=true) or is set to (add=false) the
+// term; the full kernels below and the Stream-K chunk kernel both fold
+// these exact values, keeping the paths bit-identical per (row, token).
+// ---------------------------------------------------------------------
+
 /// 4-bit, G=16: mirrors `gemv_b4_g16`'s two-chain unrolled inner loop,
 /// with the nibble unpack hoisted out of the T loop.
-fn gemm_b4_g16(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32]) {
+#[inline(always)]
+fn gemm_group_b4_g16(
+    layer: &GqsLayer,
+    j: usize,
+    x: &Mat,
+    xsum: &[f32],
+    dst: &mut [f32],
+    stride: usize,
+    add: bool,
+) {
     const G: usize = 16;
     const GB: usize = 8; // packed bytes per group
     let t = x.rows;
     let ng = layer.cols / G;
-    let n = layer.rows;
-    for r in 0..n {
-        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
-        for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let qb: &[u8; GB] = layer.qvals[j * GB..j * GB + GB].try_into().unwrap();
-            let mut deq = [0.0f32; G];
-            for i in 0..GB {
-                deq[2 * i] = (qb[i] & 0xF) as f32;
-                deq[2 * i + 1] = (qb[i] >> 4) as f32;
-            }
-            let s = layer.scales[j];
-            let z = layer.zeros[j] as f32;
-            for ti in 0..t {
-                let xs: &[f32; G] = x.row(ti)[gc * G..gc * G + G].try_into().unwrap();
-                let mut d0 = 0.0f32;
-                let mut d1 = 0.0f32;
-                let mut i = 0;
-                while i < GB {
-                    d0 += deq[2 * i] * xs[2 * i] + deq[2 * i + 1] * xs[2 * i + 1];
-                    d1 += deq[2 * i + 2] * xs[2 * i + 2] + deq[2 * i + 3] * xs[2 * i + 3];
-                    i += 2;
-                }
-                y.data[ti * n + r] += s * ((d0 + d1) - z * xsum[ti * ng + gc]);
-            }
+    let gc = layer.groups[j] as usize;
+    let qb: &[u8; GB] = layer.qvals[j * GB..j * GB + GB].try_into().unwrap();
+    let mut deq = [0.0f32; G];
+    for i in 0..GB {
+        deq[2 * i] = (qb[i] & 0xF) as f32;
+        deq[2 * i + 1] = (qb[i] >> 4) as f32;
+    }
+    let s = layer.scales[j];
+    let z = layer.zeros[j] as f32;
+    for ti in 0..t {
+        let xs: &[f32; G] = x.row(ti)[gc * G..gc * G + G].try_into().unwrap();
+        let mut d0 = 0.0f32;
+        let mut d1 = 0.0f32;
+        let mut i = 0;
+        while i < GB {
+            d0 += deq[2 * i] * xs[2 * i] + deq[2 * i + 1] * xs[2 * i + 1];
+            d1 += deq[2 * i + 2] * xs[2 * i + 2] + deq[2 * i + 3] * xs[2 * i + 3];
+            i += 2;
+        }
+        let v = s * ((d0 + d1) - z * xsum[ti * ng + gc]);
+        if add {
+            dst[ti * stride] += v;
+        } else {
+            dst[ti * stride] = v;
         }
     }
 }
 
 /// 4-bit, any even group size (mirrors `gemv_b4_generic`).
-fn gemm_b4_generic(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32], deq: &mut Vec<f32>) {
+#[inline(always)]
+fn gemm_group_b4(
+    layer: &GqsLayer,
+    j: usize,
+    x: &Mat,
+    xsum: &[f32],
+    deq: &mut [f32],
+    dst: &mut [f32],
+    stride: usize,
+    add: bool,
+) {
     let g = layer.group;
     let gb = g / 2;
     let t = x.rows;
     let ng = layer.cols / g;
-    let n = layer.rows;
-    deq.resize(g, 0.0);
-    for r in 0..n {
-        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
-        for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let qb = &layer.qvals[j * gb..(j + 1) * gb];
-            for i in 0..gb {
-                deq[2 * i] = (qb[i] & 0xF) as f32;
-                deq[2 * i + 1] = (qb[i] >> 4) as f32;
-            }
-            let s = layer.scales[j];
-            let z = layer.zeros[j] as f32;
-            for ti in 0..t {
-                let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-                let mut dot = 0.0f32;
-                for i in 0..gb {
-                    dot += deq[2 * i] * xs[2 * i];
-                    dot += deq[2 * i + 1] * xs[2 * i + 1];
-                }
-                y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
-            }
+    let gc = layer.groups[j] as usize;
+    let qb = &layer.qvals[j * gb..(j + 1) * gb];
+    for i in 0..gb {
+        deq[2 * i] = (qb[i] & 0xF) as f32;
+        deq[2 * i + 1] = (qb[i] >> 4) as f32;
+    }
+    let s = layer.scales[j];
+    let z = layer.zeros[j] as f32;
+    for ti in 0..t {
+        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+        let mut dot = 0.0f32;
+        for i in 0..gb {
+            dot += deq[2 * i] * xs[2 * i];
+            dot += deq[2 * i + 1] * xs[2 * i + 1];
+        }
+        let v = s * (dot - z * xsum[ti * ng + gc]);
+        if add {
+            dst[ti * stride] += v;
+        } else {
+            dst[ti * stride] = v;
         }
     }
 }
 
 /// 8-bit path (mirrors `gemv_b8`).
-fn gemm_b8(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32], deq: &mut Vec<f32>) {
+#[inline(always)]
+fn gemm_group_b8(
+    layer: &GqsLayer,
+    j: usize,
+    x: &Mat,
+    xsum: &[f32],
+    deq: &mut [f32],
+    dst: &mut [f32],
+    stride: usize,
+    add: bool,
+) {
     let g = layer.group;
     let t = x.rows;
     let ng = layer.cols / g;
-    let n = layer.rows;
-    deq.resize(g, 0.0);
-    for r in 0..n {
-        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
-        for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let qb = &layer.qvals[j * g..(j + 1) * g];
-            for i in 0..g {
-                deq[i] = qb[i] as f32;
-            }
-            let s = layer.scales[j];
-            let z = layer.zeros[j] as f32;
-            for ti in 0..t {
-                let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-                let mut dot = 0.0f32;
-                for i in 0..g {
-                    dot += deq[i] * xs[i];
-                }
-                y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
-            }
+    let gc = layer.groups[j] as usize;
+    let qb = &layer.qvals[j * g..(j + 1) * g];
+    for i in 0..g {
+        deq[i] = qb[i] as f32;
+    }
+    let s = layer.scales[j];
+    let z = layer.zeros[j] as f32;
+    for ti in 0..t {
+        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+        let mut dot = 0.0f32;
+        for i in 0..g {
+            dot += deq[i] * xs[i];
+        }
+        let v = s * (dot - z * xsum[ti * ng + gc]);
+        if add {
+            dst[ti * stride] += v;
+        } else {
+            dst[ti * stride] = v;
         }
     }
 }
 
 /// 2-bit path (mirrors `gemv_b2`).
-fn gemm_b2(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32], deq: &mut Vec<f32>) {
+#[inline(always)]
+fn gemm_group_b2(
+    layer: &GqsLayer,
+    j: usize,
+    x: &Mat,
+    xsum: &[f32],
+    deq: &mut [f32],
+    dst: &mut [f32],
+    stride: usize,
+    add: bool,
+) {
     let g = layer.group;
     let gb = g / 4;
     let t = x.rows;
     let ng = layer.cols / g;
+    let gc = layer.groups[j] as usize;
+    let qb = &layer.qvals[j * gb..(j + 1) * gb];
+    for i in 0..gb {
+        deq[4 * i] = (qb[i] & 0x3) as f32;
+        deq[4 * i + 1] = ((qb[i] >> 2) & 0x3) as f32;
+        deq[4 * i + 2] = ((qb[i] >> 4) & 0x3) as f32;
+        deq[4 * i + 3] = (qb[i] >> 6) as f32;
+    }
+    let s = layer.scales[j];
+    let z = layer.zeros[j] as f32;
+    for ti in 0..t {
+        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+        let mut dot = 0.0f32;
+        for i in 0..gb {
+            dot += deq[4 * i] * xs[4 * i];
+            dot += deq[4 * i + 1] * xs[4 * i + 1];
+            dot += deq[4 * i + 2] * xs[4 * i + 2];
+            dot += deq[4 * i + 3] * xs[4 * i + 3];
+        }
+        let v = s * (dot - z * xsum[ti * ng + gc]);
+        if add {
+            dst[ti * stride] += v;
+        } else {
+            dst[ti * stride] = v;
+        }
+    }
+}
+
+#[inline(always)]
+fn gemm_rows_fold<F: FnMut(usize, &mut [f32], usize, bool)>(
+    layer: &GqsLayer,
+    y: &mut Mat,
+    mut group_into: F,
+) {
     let n = layer.rows;
-    deq.resize(g, 0.0);
     for r in 0..n {
         let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
         for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let qb = &layer.qvals[j * gb..(j + 1) * gb];
-            for i in 0..gb {
-                deq[4 * i] = (qb[i] & 0x3) as f32;
-                deq[4 * i + 1] = ((qb[i] >> 2) & 0x3) as f32;
-                deq[4 * i + 2] = ((qb[i] >> 4) & 0x3) as f32;
-                deq[4 * i + 3] = (qb[i] >> 6) as f32;
-            }
-            let s = layer.scales[j];
-            let z = layer.zeros[j] as f32;
-            for ti in 0..t {
-                let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-                let mut dot = 0.0f32;
-                for i in 0..gb {
-                    dot += deq[4 * i] * xs[4 * i];
-                    dot += deq[4 * i + 1] * xs[4 * i + 1];
-                    dot += deq[4 * i + 2] * xs[4 * i + 2];
-                    dot += deq[4 * i + 3] * xs[4 * i + 3];
-                }
-                y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
-            }
+            group_into(j, &mut y.data[r..], n, true);
         }
     }
+}
+
+fn gemm_b4_g16(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32]) {
+    gemm_rows_fold(layer, y, |j, dst, stride, add| {
+        gemm_group_b4_g16(layer, j, x, xsum, dst, stride, add)
+    });
+}
+
+fn gemm_b4_generic(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32], deq: &mut Vec<f32>) {
+    deq.resize(layer.group, 0.0);
+    gemm_rows_fold(layer, y, |j, dst, stride, add| {
+        gemm_group_b4(layer, j, x, xsum, deq, dst, stride, add)
+    });
+}
+
+fn gemm_b8(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32], deq: &mut Vec<f32>) {
+    deq.resize(layer.group, 0.0);
+    gemm_rows_fold(layer, y, |j, dst, stride, add| {
+        gemm_group_b8(layer, j, x, xsum, deq, dst, stride, add)
+    });
+}
+
+fn gemm_b2(layer: &GqsLayer, x: &Mat, y: &mut Mat, xsum: &[f32], deq: &mut Vec<f32>) {
+    deq.resize(layer.group, 0.0);
+    gemm_rows_fold(layer, y, |j, dst, stride, add| {
+        gemm_group_b2(layer, j, x, xsum, deq, dst, stride, add)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Chunk-level kernel: the Stream-K execution path for batched GEMM.
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+fn gemm_chunk_fold<F: FnMut(usize, &mut [f32], usize, bool)>(
+    layer: &GqsLayer,
+    t: usize,
+    chunk: &mut GqsChunk,
+    mut group_into: F,
+) {
+    let (lo, hi) = chunk.grp;
+    let (head_row, head_hi, row0, row1) = chunk_layout(&layer.row_index, lo, hi);
+    chunk.head_row = head_row;
+    chunk.head_terms.clear();
+    if head_row != usize::MAX {
+        for j in lo..head_hi {
+            let base = chunk.head_terms.len();
+            chunk.head_terms.resize(base + t, 0.0);
+            group_into(j, &mut chunk.head_terms[base..], 1, false);
+        }
+    }
+    chunk.row0 = row0;
+    chunk.n_rows = row1 - row0;
+    chunk.partials.clear();
+    chunk.partials.resize(chunk.n_rows * t, 0.0);
+    for r in row0..row1 {
+        let a = layer.row_index[r] as usize;
+        let b = (layer.row_index[r + 1] as usize).min(hi);
+        let dst = &mut chunk.partials[(r - row0) * t..];
+        for j in a..b {
+            group_into(j, dst, 1, true);
+        }
+    }
+}
+
+/// Execute one chunk of the flattened group space for the whole block:
+/// the batched analogue of `gqs_gemv_chunk` (see there for the
+/// ownership/fixup contract). Per (row, token) the folded terms are the
+/// exact values `gqs_gemm` accumulates, so `reduce_gemm` reproduces its
+/// output bit for bit. Gate with `chunkable(layer.bits, layer.group)`.
+pub fn gqs_gemm_chunk(layer: &GqsLayer, x: &Mat, xsum: &[f32], chunk: &mut GqsChunk) {
+    let t = x.rows;
+    let g = layer.group;
+    match kernel_path(layer.bits, g) {
+        KernelPath::B4G16 => gemm_chunk_fold(layer, t, chunk, |j, dst, stride, add| {
+            gemm_group_b4_g16(layer, j, x, xsum, dst, stride, add)
+        }),
+        KernelPath::B4 => {
+            let mut deq = std::mem::take(&mut chunk.deq);
+            deq.resize(g, 0.0);
+            gemm_chunk_fold(layer, t, chunk, |j, dst, stride, add| {
+                gemm_group_b4(layer, j, x, xsum, &mut deq, dst, stride, add)
+            });
+            chunk.deq = deq;
+        }
+        KernelPath::B8 => {
+            let mut deq = std::mem::take(&mut chunk.deq);
+            deq.resize(g, 0.0);
+            gemm_chunk_fold(layer, t, chunk, |j, dst, stride, add| {
+                gemm_group_b8(layer, j, x, xsum, &mut deq, dst, stride, add)
+            });
+            chunk.deq = deq;
+        }
+        KernelPath::B2 => {
+            let mut deq = std::mem::take(&mut chunk.deq);
+            deq.resize(g, 0.0);
+            gemm_chunk_fold(layer, t, chunk, |j, dst, stride, add| {
+                gemm_group_b2(layer, j, x, xsum, &mut deq, dst, stride, add)
+            });
+            chunk.deq = deq;
+        }
+        KernelPath::Ref => {
+            unreachable!("gqs_gemm_chunk on a non-chunkable shape — gate with chunkable()")
+        }
+    }
+}
+
+/// Deterministic fixed-order fixup reduction for the batched path:
+/// identical association to `gqs_gemm`'s per-(row, token) chains (see
+/// `reduce_gemv`). Returns the number of fixup reductions.
+pub fn reduce_gemm(chunks: &[GqsChunk], t: usize, y: &mut Mat) -> u64 {
+    let n = y.cols;
+    y.data.fill(0.0);
+    let mut fixups = 0u64;
+    for c in chunks {
+        for i in 0..c.n_rows {
+            let r = c.row0 + i;
+            for ti in 0..t {
+                y.data[ti * n + r] = c.partials[i * t + ti];
+            }
+        }
+        if c.head_row != usize::MAX {
+            let n_head = c.head_terms.len() / t.max(1);
+            for h in 0..n_head {
+                for ti in 0..t {
+                    y.data[ti * n + c.head_row] += c.head_terms[h * t + ti];
+                }
+            }
+            fixups += 1;
+        }
+    }
+    fixups
 }
 
 /// Code-indexed fallback for group sizes that straddle packed-byte
@@ -317,6 +505,34 @@ mod tests {
         let (l, mut rng) = layer(4, 32, 64, 16, 4, 0.3);
         let x = Mat::randn(1, 64, &mut rng);
         assert_rows_match_gemv(&l, &x, 0.0);
+    }
+
+    #[test]
+    fn chunked_gemm_bit_exact_with_sequential() {
+        for (bits, g, s) in [(4u32, 16usize, 0.5f64), (4, 8, 0.4), (8, 16, 0.5), (2, 16, 0.4)] {
+            let (l, mut rng) = layer(200 + bits as u64, 40, 128, g, bits, s);
+            let x = Mat::randn(6, 128, &mut rng);
+            let mut y_seq = Mat::zeros(6, 40);
+            let mut mm = MatmulScratch::new();
+            gqs_gemm(&l, &x, &mut y_seq, &mut mm);
+            // xsum as the executor computes it
+            let mut xsum = Vec::new();
+            group_sums_batch(&x, g, &mut xsum);
+            for n_chunks in [1usize, 3, 8, 17] {
+                let mut ranges = Vec::new();
+                crate::engine::stream_k::decompose_prefix(&l.row_index, n_chunks, &mut ranges);
+                let mut chunks: Vec<crate::gqs::gemv::GqsChunk> = ranges
+                    .iter()
+                    .map(|&grp| crate::gqs::gemv::GqsChunk { grp, ..Default::default() })
+                    .collect();
+                for c in &mut chunks {
+                    gqs_gemm_chunk(&l, &x, &xsum, c);
+                }
+                let mut y = Mat::zeros(6, 40);
+                reduce_gemm(&chunks, 6, &mut y);
+                assert_eq!(y.data, y_seq.data, "bits {bits} g {g} chunks {n_chunks}");
+            }
+        }
     }
 
     #[test]

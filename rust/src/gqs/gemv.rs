@@ -55,121 +55,287 @@ pub fn group_sums(x: &[f32], group: usize, out: &mut Vec<f32>) {
 pub fn gqs_gemv(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum_scratch: &mut Vec<f32>) {
     assert_eq!(x.len(), layer.cols);
     assert_eq!(y.len(), layer.rows);
-    let g = layer.group;
-    group_sums(x, g, gsum_scratch);
-    let gsum = &gsum_scratch[..];
+    group_sums(x, layer.group, gsum_scratch);
+    gqs_gemv_with_gsum(layer, x, y, gsum_scratch);
+}
 
-    // Group sizes that are not a multiple of the packing factor (2
-    // codes/byte at 4-bit, 4 at 2-bit) straddle byte boundaries in the
-    // packed stream, so the byte-sliced fast paths would silently drop
-    // trailing weights — route them to the code-indexed reference.
-    match (layer.bits, g) {
-        (4, 16) => gemv_b4_g16(layer, x, y, gsum),
-        (4, _) if g % 2 == 0 => gemv_b4_generic(layer, x, y, gsum),
-        (8, _) => gemv_b8(layer, x, y, gsum),
-        (2, _) if g % 4 == 0 => gemv_b2(layer, x, y, gsum),
-        _ => gqs_gemv_ref(layer, x, y),
+/// `gqs_gemv` with caller-precomputed group sums (the executor computes
+/// them once and shares them with every chunk).
+pub fn gqs_gemv_with_gsum(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+    match kernel_path(layer.bits, layer.group) {
+        KernelPath::B4G16 => gemv_b4_g16(layer, x, y, gsum),
+        KernelPath::B4 => gemv_b4_generic(layer, x, y, gsum),
+        KernelPath::B8 => gemv_b8(layer, x, y, gsum),
+        KernelPath::B2 => gemv_b2(layer, x, y, gsum),
+        KernelPath::Ref => gqs_gemv_ref(layer, x, y),
     }
 }
 
-/// 4-bit, G=16 specialization: 8 packed bytes per group, fully unrolled
-/// via fixed-size array views (elides bounds checks; two accumulator
-/// chains break the FMA dependency — §Perf L3 iteration 2).
-fn gemv_b4_g16(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+/// Which inner kernel a (bits, group) shape dispatches to — the single
+/// source of truth shared by the sequential GEMV/GEMM drivers and the
+/// Stream-K chunk kernels, so the dispatch sites cannot drift apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum KernelPath {
+    B4G16,
+    B4,
+    B8,
+    B2,
+    /// Group sizes that are not a multiple of the packing factor (2
+    /// codes/byte at 4-bit, 4 at 2-bit) straddle byte boundaries in the
+    /// packed stream, so the byte-sliced fast paths would silently drop
+    /// trailing weights — route them to the code-indexed reference,
+    /// whose per-*element* chain the chunk kernels cannot resume.
+    Ref,
+}
+
+pub(crate) fn kernel_path(bits: u32, group: usize) -> KernelPath {
+    match (bits, group) {
+        (4, 16) => KernelPath::B4G16,
+        (4, g) if g % 2 == 0 => KernelPath::B4,
+        (8, _) => KernelPath::B8,
+        (2, g) if g % 4 == 0 => KernelPath::B2,
+        _ => KernelPath::Ref,
+    }
+}
+
+/// Does this (bits, group) shape have a group-term-structured fast path
+/// that the parallel executor can split mid-row? `Ref` shapes run
+/// sequentially.
+pub fn chunkable(bits: u32, group: usize) -> bool {
+    kernel_path(bits, group) != KernelPath::Ref
+}
+
+// ---------------------------------------------------------------------
+// Per-group term helpers — the single source of truth for the fused
+// dequantized contribution s·(Σq·x − z·Σx) of one surviving group.
+// Sequential rows, batched GEMM rows, and executor chunks all fold the
+// *same* term values in the same left-to-right order, which is what
+// makes the parallel path bit-exact with the sequential one.
+// ---------------------------------------------------------------------
+
+/// 4-bit, G=16: 8 packed bytes, fully unrolled via fixed-size array
+/// views (elides bounds checks; two accumulator chains break the FMA
+/// dependency — §Perf L3 iteration 2).
+#[inline(always)]
+fn term_b4_g16(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     const G: usize = 16;
     const GB: usize = 8; // packed bytes per group
-    for r in 0..layer.rows {
-        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
-        let mut acc = 0.0f32;
-        for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let xs: &[f32; G] = x[gc * G..gc * G + G].try_into().unwrap();
-            let qb: &[u8; GB] = layer.qvals[j * GB..j * GB + GB].try_into().unwrap();
-            // Σ q_i * x_i with inline nibble unpack, 2 chains
-            let mut d0 = 0.0f32;
-            let mut d1 = 0.0f32;
-            let mut i = 0;
-            while i < GB {
-                let b0 = qb[i];
-                let b1 = qb[i + 1];
-                d0 += (b0 & 0xF) as f32 * xs[2 * i] + (b0 >> 4) as f32 * xs[2 * i + 1];
-                d1 += (b1 & 0xF) as f32 * xs[2 * i + 2] + (b1 >> 4) as f32 * xs[2 * i + 3];
-                i += 2;
-            }
-            let s = layer.scales[j];
-            let z = layer.zeros[j] as f32;
-            acc += s * ((d0 + d1) - z * gsum[gc]);
-        }
-        y[r] = acc;
+    let gc = layer.groups[j] as usize;
+    let xs: &[f32; G] = x[gc * G..gc * G + G].try_into().unwrap();
+    let qb: &[u8; GB] = layer.qvals[j * GB..j * GB + GB].try_into().unwrap();
+    // Σ q_i * x_i with inline nibble unpack, 2 chains
+    let mut d0 = 0.0f32;
+    let mut d1 = 0.0f32;
+    let mut i = 0;
+    while i < GB {
+        let b0 = qb[i];
+        let b1 = qb[i + 1];
+        d0 += (b0 & 0xF) as f32 * xs[2 * i] + (b0 >> 4) as f32 * xs[2 * i + 1];
+        d1 += (b1 & 0xF) as f32 * xs[2 * i + 2] + (b1 >> 4) as f32 * xs[2 * i + 3];
+        i += 2;
     }
+    let s = layer.scales[j];
+    let z = layer.zeros[j] as f32;
+    s * ((d0 + d1) - z * gsum[gc])
 }
 
 /// 4-bit, any (even) group size.
-fn gemv_b4_generic(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+#[inline(always)]
+fn term_b4(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     let g = layer.group;
     let gb = g / 2;
-    for r in 0..layer.rows {
-        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
-        let mut acc = 0.0f32;
-        for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let xs = &x[gc * g..(gc + 1) * g];
-            let qb = &layer.qvals[j * gb..(j + 1) * gb];
-            let mut dot = 0.0f32;
-            for i in 0..gb {
-                let byte = qb[i];
-                dot += (byte & 0xF) as f32 * xs[2 * i];
-                dot += (byte >> 4) as f32 * xs[2 * i + 1];
-            }
-            acc += layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc]);
-        }
-        y[r] = acc;
+    let gc = layer.groups[j] as usize;
+    let xs = &x[gc * g..(gc + 1) * g];
+    let qb = &layer.qvals[j * gb..(j + 1) * gb];
+    let mut dot = 0.0f32;
+    for i in 0..gb {
+        let byte = qb[i];
+        dot += (byte & 0xF) as f32 * xs[2 * i];
+        dot += (byte >> 4) as f32 * xs[2 * i + 1];
     }
+    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
 }
 
-/// 8-bit path.
-fn gemv_b8(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+/// 8-bit.
+#[inline(always)]
+fn term_b8(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     let g = layer.group;
-    for r in 0..layer.rows {
-        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
-        let mut acc = 0.0f32;
-        for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let xs = &x[gc * g..(gc + 1) * g];
-            let qb = &layer.qvals[j * g..(j + 1) * g];
-            let mut dot = 0.0f32;
-            for i in 0..g {
-                dot += qb[i] as f32 * xs[i];
-            }
-            acc += layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc]);
-        }
-        y[r] = acc;
+    let gc = layer.groups[j] as usize;
+    let xs = &x[gc * g..(gc + 1) * g];
+    let qb = &layer.qvals[j * g..(j + 1) * g];
+    let mut dot = 0.0f32;
+    for i in 0..g {
+        dot += qb[i] as f32 * xs[i];
     }
+    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
 }
 
-/// 2-bit path (four codes per byte).
-fn gemv_b2(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+/// 2-bit (four codes per byte).
+#[inline(always)]
+fn term_b2(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     let g = layer.group;
     let gb = g / 4;
+    let gc = layer.groups[j] as usize;
+    let xs = &x[gc * g..(gc + 1) * g];
+    let qb = &layer.qvals[j * gb..(j + 1) * gb];
+    let mut dot = 0.0f32;
+    for i in 0..gb {
+        let byte = qb[i];
+        dot += (byte & 0x3) as f32 * xs[4 * i];
+        dot += ((byte >> 2) & 0x3) as f32 * xs[4 * i + 1];
+        dot += ((byte >> 4) & 0x3) as f32 * xs[4 * i + 2];
+        dot += (byte >> 6) as f32 * xs[4 * i + 3];
+    }
+    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
+}
+
+#[inline(always)]
+fn gemv_rows_fold<F: Fn(usize) -> f32>(layer: &GqsLayer, y: &mut [f32], term: F) {
     for r in 0..layer.rows {
         let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
         let mut acc = 0.0f32;
         for j in a..b {
-            let gc = layer.groups[j] as usize;
-            let xs = &x[gc * g..(gc + 1) * g];
-            let qb = &layer.qvals[j * gb..(j + 1) * gb];
-            let mut dot = 0.0f32;
-            for i in 0..gb {
-                let byte = qb[i];
-                dot += (byte & 0x3) as f32 * xs[4 * i];
-                dot += ((byte >> 2) & 0x3) as f32 * xs[4 * i + 1];
-                dot += ((byte >> 4) & 0x3) as f32 * xs[4 * i + 2];
-                dot += (byte >> 6) as f32 * xs[4 * i + 3];
-            }
-            acc += layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc]);
+            acc += term(j);
         }
         y[r] = acc;
     }
+}
+
+fn gemv_b4_g16(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+    gemv_rows_fold(layer, y, |j| term_b4_g16(layer, j, x, gsum));
+}
+
+fn gemv_b4_generic(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+    gemv_rows_fold(layer, y, |j| term_b4(layer, j, x, gsum));
+}
+
+fn gemv_b8(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+    gemv_rows_fold(layer, y, |j| term_b8(layer, j, x, gsum));
+}
+
+fn gemv_b2(layer: &GqsLayer, x: &[f32], y: &mut [f32], gsum: &[f32]) {
+    gemv_rows_fold(layer, y, |j| term_b2(layer, j, x, gsum));
+}
+
+// ---------------------------------------------------------------------
+// Chunk-level kernels: the Stream-K execution path. A chunk is a
+// half-open range of the flattened group-iteration space and may start
+// and stop mid-row over the BSR stream.
+// ---------------------------------------------------------------------
+
+/// Output buffer of one executed chunk. Reused across calls (the
+/// executor scratch owns a pool of these — no hot-path allocation after
+/// warmup).
+#[derive(Clone, Debug, Default)]
+pub struct GqsChunk {
+    /// half-open flattened group range this chunk executes.
+    pub grp: (usize, usize),
+    /// row this chunk enters mid-stream (`usize::MAX` when the chunk
+    /// begins exactly at a row boundary). Its groups' terms go to
+    /// `head_terms` for the fixup reduction.
+    pub head_row: usize,
+    /// per-head-group terms — GEMV: one f32 per group; GEMM: `t` f32s
+    /// per group, group-major.
+    pub head_terms: Vec<f32>,
+    /// first row whose accumulation chain *starts* in this chunk.
+    pub row0: usize,
+    /// number of such rows.
+    pub n_rows: usize,
+    /// their chain values — complete for interior rows, a chain prefix
+    /// for the final row when the chunk stops mid-row. GEMV: one f32
+    /// per row; GEMM: `t` per row, row-major.
+    pub partials: Vec<f32>,
+    /// per-worker dequantization staging for the GEMM chunk path.
+    pub deq: Vec<f32>,
+}
+
+/// Split a chunk's group range `[lo, hi)` against the BSR row prefix:
+/// returns (head_row | `usize::MAX`, head end, first owned row, owned
+/// row end). "Owned" rows are those whose accumulation chain starts in
+/// this chunk; a head exists when `lo` falls strictly inside a row that
+/// started in an earlier chunk.
+#[inline]
+pub(crate) fn chunk_layout(row_index: &[u32], lo: usize, hi: usize) -> (usize, usize, usize, usize) {
+    let n = row_index.len() - 1;
+    // first row starting at group >= lo / >= hi
+    let row0 = row_index[..n].partition_point(|&p| (p as usize) < lo);
+    let row1 = row_index[..n].partition_point(|&p| (p as usize) < hi);
+    let (head_row, head_hi) = if row0 == n {
+        // every row starts before lo: the whole range continues row n-1
+        (n - 1, hi)
+    } else if (row_index[row0] as usize) > lo {
+        // lo inside row0-1's span (row0-1 is the last row starting < lo)
+        (row0 - 1, hi.min(row_index[row0] as usize))
+    } else {
+        (usize::MAX, lo)
+    };
+    (head_row, head_hi, row0, row1)
+}
+
+#[inline(always)]
+fn chunk_fold<F: Fn(usize) -> f32>(layer: &GqsLayer, chunk: &mut GqsChunk, term: F) {
+    let (lo, hi) = chunk.grp;
+    let (head_row, head_hi, row0, row1) = chunk_layout(&layer.row_index, lo, hi);
+    chunk.head_row = head_row;
+    chunk.head_terms.clear();
+    if head_row != usize::MAX {
+        for j in lo..head_hi {
+            chunk.head_terms.push(term(j));
+        }
+    }
+    chunk.row0 = row0;
+    chunk.n_rows = row1 - row0;
+    chunk.partials.clear();
+    for r in row0..row1 {
+        let a = layer.row_index[r] as usize;
+        let b = (layer.row_index[r + 1] as usize).min(hi);
+        let mut acc = 0.0f32;
+        for j in a..b {
+            acc += term(j);
+        }
+        chunk.partials.push(acc);
+    }
+}
+
+/// Execute one chunk of the flattened group space: rows whose chain
+/// starts here get their (possibly complete) chain value in
+/// `chunk.partials`; groups continuing an earlier chunk's row are
+/// emitted as individual terms in `chunk.head_terms`. `reduce_gemv`
+/// then replays exactly the sequential accumulation chain, making the
+/// parallel result bit-exact with `gqs_gemv` for any chunking. The
+/// caller must pre-check `chunkable(layer.bits, layer.group)`.
+pub fn gqs_gemv_chunk(layer: &GqsLayer, x: &[f32], gsum: &[f32], chunk: &mut GqsChunk) {
+    match kernel_path(layer.bits, layer.group) {
+        KernelPath::B4G16 => chunk_fold(layer, chunk, |j| term_b4_g16(layer, j, x, gsum)),
+        KernelPath::B4 => chunk_fold(layer, chunk, |j| term_b4(layer, j, x, gsum)),
+        KernelPath::B8 => chunk_fold(layer, chunk, |j| term_b8(layer, j, x, gsum)),
+        KernelPath::B2 => chunk_fold(layer, chunk, |j| term_b2(layer, j, x, gsum)),
+        KernelPath::Ref => {
+            unreachable!("gqs_gemv_chunk on a non-chunkable shape — gate with chunkable()")
+        }
+    }
+}
+
+/// Deterministic fixed-order fixup reduction: chunks are folded in
+/// chunk-index order, so a split row receives its chain prefix from its
+/// owner first and every continuation term in group order after — the
+/// identical f32 addition sequence the sequential kernel performs.
+/// Returns the number of fixup (partially-owned row) reductions.
+pub fn reduce_gemv(chunks: &[GqsChunk], y: &mut [f32]) -> u64 {
+    y.fill(0.0);
+    let mut fixups = 0u64;
+    for c in chunks {
+        for (i, &p) in c.partials.iter().enumerate() {
+            y[c.row0 + i] = p;
+        }
+        if c.head_row != usize::MAX {
+            for &t in &c.head_terms {
+                y[c.head_row] += t;
+            }
+            fixups += 1;
+        }
+    }
+    fixups
 }
 
 #[cfg(test)]
@@ -249,6 +415,91 @@ mod tests {
         let mut out = Vec::new();
         group_sums(&x, 2, &mut out);
         assert_eq!(out, vec![3.0, 7.0, 11.0]);
+    }
+
+    /// Execute a layer via chunk kernels over the given group ranges
+    /// and reduce — must equal `gqs_gemv` bit for bit.
+    fn run_chunked(layer: &GqsLayer, x: &[f32], ranges: &[(usize, usize)]) -> Vec<f32> {
+        let mut gsum = Vec::new();
+        group_sums(x, layer.group, &mut gsum);
+        let mut chunks: Vec<GqsChunk> = ranges
+            .iter()
+            .map(|&grp| GqsChunk { grp, ..Default::default() })
+            .collect();
+        for c in &mut chunks {
+            gqs_gemv_chunk(layer, x, &gsum, c);
+        }
+        let mut y = vec![9.9f32; layer.rows];
+        reduce_gemv(&chunks, &mut y);
+        y
+    }
+
+    #[test]
+    fn chunked_bit_exact_with_sequential() {
+        // mid-row splits at every granularity, all chunkable widths
+        for (bits, g, s) in [(4u32, 16usize, 0.5f64), (4, 8, 0.3), (8, 16, 0.6), (2, 16, 0.4)] {
+            let mut rng = XorShift::new(100 + bits as u64);
+            let w = Mat::randn(48, 256, &mut rng);
+            let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, s);
+            let layer = GqsLayer::encode(&w, &mask, bits);
+            let x = rng.normal_vec(256);
+            let mut y_seq = vec![0.0f32; 48];
+            let mut scratch = Vec::new();
+            gqs_gemv(&layer, &x, &mut y_seq, &mut scratch);
+            let total = layer.nnz_groups();
+            for n_chunks in [1usize, 2, 3, 7, 16, 61] {
+                let mut ranges = Vec::new();
+                crate::engine::stream_k::decompose_prefix(
+                    &layer.row_index,
+                    n_chunks.min(total),
+                    &mut ranges,
+                );
+                let y = run_chunked(&layer, &x, &ranges);
+                assert_eq!(y, y_seq, "bits {bits} g {g} chunks {n_chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_handles_empty_rows_and_giant_rows() {
+        // hand-built mask: row 0 empty, row 1 giant (every group), rows
+        // interleaved empty — exercises head-only chunks and rows
+        // spanning 3+ chunks
+        let mut rng = XorShift::new(77);
+        let w = Mat::randn(6, 128, &mut rng);
+        let ng = 8;
+        let mut keep = vec![false; 6 * ng];
+        for gc in 0..ng {
+            keep[ng + gc] = true; // row 1 keeps everything
+        }
+        keep[3 * ng + 2] = true; // row 3 keeps one group
+        let mask = crate::sparse::group_prune::GroupMask { rows: 6, ngroups: ng, group: 16, keep };
+        let layer = GqsLayer::encode(&w, &mask, 4);
+        let x = rng.normal_vec(128);
+        let mut y_seq = vec![0.0f32; 6];
+        let mut scratch = Vec::new();
+        gqs_gemv(&layer, &x, &mut y_seq, &mut scratch);
+        // row 1's 8 groups forced across 4 chunks
+        for n_chunks in [2usize, 4, 9] {
+            let mut ranges = Vec::new();
+            crate::engine::stream_k::decompose_prefix(
+                &layer.row_index,
+                n_chunks,
+                &mut ranges,
+            );
+            let y = run_chunked(&layer, &x, &ranges);
+            assert_eq!(y, y_seq, "chunks {n_chunks}");
+        }
+    }
+
+    #[test]
+    fn chunkable_matches_dispatch() {
+        assert!(chunkable(4, 16));
+        assert!(chunkable(4, 8));
+        assert!(chunkable(8, 5)); // 8-bit never straddles bytes
+        assert!(chunkable(2, 8));
+        assert!(!chunkable(4, 5)); // routes to ref — per-element chain
+        assert!(!chunkable(2, 6));
     }
 
     #[test]

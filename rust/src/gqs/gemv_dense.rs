@@ -9,13 +9,22 @@ use crate::util::Mat;
 /// relative speedups are what matter).
 pub fn dense_gemv(w: &Mat, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), w.cols);
-    for r in 0..w.rows {
+    dense_gemv_rows(w, x, y, 0, w.rows);
+}
+
+/// Row-range form of `dense_gemv`: computes rows r0..r1 into
+/// `y[..r1-r0]` (region-relative, so executor tasks fill disjoint
+/// private buffers with no shared-output aliasing). Output rows are
+/// independent single chains, so any partition of rows reproduces
+/// `dense_gemv` bit for bit; the full range makes indices absolute.
+pub fn dense_gemv_rows(w: &Mat, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
+    for r in r0..r1 {
         let row = w.row(r);
         let mut acc = 0.0f32;
         for i in 0..row.len() {
             acc += row[i] * x[i];
         }
-        y[r] = acc;
+        y[r - r0] = acc;
     }
 }
 
@@ -25,8 +34,15 @@ pub fn dense_gemv(w: &Mat, x: &[f32], y: &mut [f32]) {
 pub fn dense_gemm(w: &Mat, x: &Mat, y: &mut Mat) {
     assert_eq!(x.cols, w.cols);
     assert_eq!((y.rows, y.cols), (x.rows, w.rows));
-    let n = w.rows;
-    for r in 0..n {
+    dense_gemm_rows(w, x, &mut y.data, 0, w.rows);
+}
+
+/// Row-range form of `dense_gemm` into a region-relative (T, r1-r0)
+/// buffer: element (ti, r) lands at `yd[ti*(r1-r0) + (r-r0)]`, which
+/// for the full range is exactly the (T, N) layout `dense_gemm` uses.
+pub fn dense_gemm_rows(w: &Mat, x: &Mat, yd: &mut [f32], r0: usize, r1: usize) {
+    let width = r1 - r0;
+    for r in r0..r1 {
         let row = w.row(r);
         for ti in 0..x.rows {
             let xr = x.row(ti);
@@ -34,7 +50,7 @@ pub fn dense_gemm(w: &Mat, x: &Mat, y: &mut Mat) {
             for i in 0..row.len() {
                 acc += row[i] * xr[i];
             }
-            y.data[ti * n + r] = acc;
+            yd[ti * width + (r - r0)] = acc;
         }
     }
 }
@@ -89,12 +105,18 @@ impl QuantDense {
     pub fn gemv(&self, x: &[f32], y: &mut [f32], gsum_scratch: &mut Vec<f32>) {
         assert_eq!(x.len(), self.cols);
         super::gemv::group_sums(x, self.group, gsum_scratch);
-        let gsum = &gsum_scratch[..];
+        self.gemv_rows(x, y, gsum_scratch, 0, self.rows);
+    }
+
+    /// Row-range form of `gemv` with caller-supplied group sums,
+    /// writing rows r0..r1 into `y[..r1-r0]` (region-relative — see
+    /// `dense_gemv_rows`; rows are independent chains).
+    pub fn gemv_rows(&self, x: &[f32], y: &mut [f32], gsum: &[f32], r0: usize, r1: usize) {
         let ng = self.cols / self.group;
         match self.bits {
             4 => {
                 let gb = self.group / 2;
-                for r in 0..self.rows {
+                for r in r0..r1 {
                     let mut acc = 0.0f32;
                     for gc in 0..ng {
                         let j = r * ng + gc;
@@ -108,11 +130,11 @@ impl QuantDense {
                         }
                         acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
                     }
-                    y[r] = acc;
+                    y[r - r0] = acc;
                 }
             }
             8 => {
-                for r in 0..self.rows {
+                for r in r0..r1 {
                     let mut acc = 0.0f32;
                     for gc in 0..ng {
                         let j = r * ng + gc;
@@ -124,12 +146,12 @@ impl QuantDense {
                         }
                         acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
                     }
-                    y[r] = acc;
+                    y[r - r0] = acc;
                 }
             }
             2 => {
                 let gb = self.group / 4;
-                for r in 0..self.rows {
+                for r in r0..r1 {
                     let mut acc = 0.0f32;
                     for gc in 0..ng {
                         let j = r * ng + gc;
@@ -145,7 +167,7 @@ impl QuantDense {
                         }
                         acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
                     }
-                    y[r] = acc;
+                    y[r - r0] = acc;
                 }
             }
             _ => panic!("bits {}", self.bits),
@@ -162,18 +184,34 @@ impl QuantDense {
         if x.rows == 0 {
             return;
         }
+        crate::gqs::gemm::group_sums_batch(x, self.group, &mut scratch.xsum);
+        let xsum = std::mem::take(&mut scratch.xsum);
+        self.gemm_rows(x, &mut y.data, &xsum, &mut scratch.deq, 0, self.rows);
+        scratch.xsum = xsum;
+    }
+
+    /// Row-range form of `gemm` over the raw (T, N) output buffer with
+    /// caller-supplied batched group sums (the executor partition
+    /// point). Does not zero the output; callers zero once before
+    /// partitioning.
+    pub fn gemm_rows(
+        &self,
+        x: &Mat,
+        yd: &mut [f32],
+        xsum: &[f32],
+        deq: &mut Vec<f32>,
+        r0: usize,
+        r1: usize,
+    ) {
         let g = self.group;
         let t = x.rows;
         let ng = self.cols / g;
-        let n = self.rows;
-        crate::gqs::gemm::group_sums_batch(x, g, &mut scratch.xsum);
-        let xsum = &scratch.xsum[..];
-        let deq = &mut scratch.deq;
+        let width = r1 - r0;
         deq.resize(g, 0.0);
         match self.bits {
             4 => {
                 let gb = g / 2;
-                for r in 0..n {
+                for r in r0..r1 {
                     for gc in 0..ng {
                         let j = r * ng + gc;
                         let qb = &self.qvals[j * gb..(j + 1) * gb];
@@ -190,13 +228,13 @@ impl QuantDense {
                                 dot += deq[2 * i] * xs[2 * i];
                                 dot += deq[2 * i + 1] * xs[2 * i + 1];
                             }
-                            y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
+                            yd[ti * width + (r - r0)] += s * (dot - z * xsum[ti * ng + gc]);
                         }
                     }
                 }
             }
             8 => {
-                for r in 0..n {
+                for r in r0..r1 {
                     for gc in 0..ng {
                         let j = r * ng + gc;
                         let qb = &self.qvals[j * g..(j + 1) * g];
@@ -211,14 +249,14 @@ impl QuantDense {
                             for i in 0..g {
                                 dot += deq[i] * xs[i];
                             }
-                            y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
+                            yd[ti * width + (r - r0)] += s * (dot - z * xsum[ti * ng + gc]);
                         }
                     }
                 }
             }
             2 => {
                 let gb = g / 4;
-                for r in 0..n {
+                for r in r0..r1 {
                     for gc in 0..ng {
                         let j = r * ng + gc;
                         let qb = &self.qvals[j * gb..(j + 1) * gb];
@@ -239,7 +277,7 @@ impl QuantDense {
                                 dot += deq[4 * i + 2] * xs[4 * i + 2];
                                 dot += deq[4 * i + 3] * xs[4 * i + 3];
                             }
-                            y.data[ti * n + r] += s * (dot - z * xsum[ti * ng + gc]);
+                            yd[ti * width + (r - r0)] += s * (dot - z * xsum[ti * ng + gc]);
                         }
                     }
                 }
@@ -350,27 +388,7 @@ impl Semi24Kernel {
         assert!(self.group % 2 == 0, "semi24 fast path needs even group");
         let kept_per_row = self.cols / 2;
         match self.bits {
-            4 => {
-                for r in 0..self.rows {
-                    let kbase = r * kept_per_row;
-                    let mut acc = 0.0f32;
-                    for qi in 0..self.cols / 4 {
-                        let j = kbase + qi * 2; // even: both codes share a byte
-                        let code_byte = self.qvals[j / 2];
-                        let meta_byte = self.meta[j / 4];
-                        let shift = (j % 4) * 2;
-                        // j even + even group => j and j+1 share a quant group
-                        let g = j / self.group;
-                        let s = self.scales[g];
-                        let z = self.zeros[g] as f32;
-                        let x0 = x[qi * 4 + ((meta_byte >> shift) & 3) as usize];
-                        let x1 = x[qi * 4 + ((meta_byte >> (shift + 2)) & 3) as usize];
-                        acc += s * (((code_byte & 0xF) as f32 - z) * x0
-                            + ((code_byte >> 4) as f32 - z) * x1);
-                    }
-                    y[r] = acc;
-                }
-            }
+            4 => self.gemv_rows(x, y, 0, self.rows),
             _ => {
                 // generic path (8-bit etc.): decode per element
                 let codes =
@@ -411,28 +429,7 @@ impl Semi24Kernel {
         let n = self.rows;
         let kept_per_row = self.cols / 2;
         match self.bits {
-            4 => {
-                for r in 0..n {
-                    let kbase = r * kept_per_row;
-                    for qi in 0..self.cols / 4 {
-                        let j = kbase + qi * 2; // even: both codes share a byte
-                        let code_byte = self.qvals[j / 2];
-                        let meta_byte = self.meta[j / 4];
-                        let shift = (j % 4) * 2;
-                        let g = j / self.group;
-                        let s = self.scales[g];
-                        let z = self.zeros[g] as f32;
-                        let a0 = (code_byte & 0xF) as f32 - z;
-                        let a1 = (code_byte >> 4) as f32 - z;
-                        let i0 = qi * 4 + ((meta_byte >> shift) & 3) as usize;
-                        let i1 = qi * 4 + ((meta_byte >> (shift + 2)) & 3) as usize;
-                        for ti in 0..t {
-                            let xr = x.row(ti);
-                            y.data[ti * n + r] += s * (a0 * xr[i0] + a1 * xr[i1]);
-                        }
-                    }
-                }
-            }
+            4 => self.gemm_rows(x, &mut y.data, 0, n),
             _ => {
                 let codes =
                     crate::quant::unpack_codes(&self.qvals, self.bits, self.rows * kept_per_row);
@@ -453,6 +450,64 @@ impl Semi24Kernel {
                             }
                         }
                     }
+                }
+            }
+        }
+    }
+
+    /// Row-range form of the 4-bit `gemv` fast path, writing rows
+    /// r0..r1 into `y[..r1-r0]` (region-relative — see
+    /// `dense_gemv_rows`; the generic bit-widths decode whole streams
+    /// per call and stay sequential).
+    pub fn gemv_rows(&self, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
+        debug_assert_eq!(self.bits, 4);
+        let kept_per_row = self.cols / 2;
+        for r in r0..r1 {
+            let kbase = r * kept_per_row;
+            let mut acc = 0.0f32;
+            for qi in 0..self.cols / 4 {
+                let j = kbase + qi * 2; // even: both codes share a byte
+                let code_byte = self.qvals[j / 2];
+                let meta_byte = self.meta[j / 4];
+                let shift = (j % 4) * 2;
+                // j even + even group => j and j+1 share a quant group
+                let g = j / self.group;
+                let s = self.scales[g];
+                let z = self.zeros[g] as f32;
+                let x0 = x[qi * 4 + ((meta_byte >> shift) & 3) as usize];
+                let x1 = x[qi * 4 + ((meta_byte >> (shift + 2)) & 3) as usize];
+                acc += s
+                    * (((code_byte & 0xF) as f32 - z) * x0 + ((code_byte >> 4) as f32 - z) * x1);
+            }
+            y[r - r0] = acc;
+        }
+    }
+
+    /// Row-range form of the 4-bit `gemm` fast path into a
+    /// region-relative (T, r1-r0) buffer (see `dense_gemm_rows`).
+    /// Accumulates — the caller supplies a zeroed buffer.
+    pub fn gemm_rows(&self, x: &Mat, yd: &mut [f32], r0: usize, r1: usize) {
+        debug_assert_eq!(self.bits, 4);
+        let t = x.rows;
+        let width = r1 - r0;
+        let kept_per_row = self.cols / 2;
+        for r in r0..r1 {
+            let kbase = r * kept_per_row;
+            for qi in 0..self.cols / 4 {
+                let j = kbase + qi * 2; // even: both codes share a byte
+                let code_byte = self.qvals[j / 2];
+                let meta_byte = self.meta[j / 4];
+                let shift = (j % 4) * 2;
+                let g = j / self.group;
+                let s = self.scales[g];
+                let z = self.zeros[g] as f32;
+                let a0 = (code_byte & 0xF) as f32 - z;
+                let a1 = (code_byte >> 4) as f32 - z;
+                let i0 = qi * 4 + ((meta_byte >> shift) & 3) as usize;
+                let i1 = qi * 4 + ((meta_byte >> (shift + 2)) & 3) as usize;
+                for ti in 0..t {
+                    let xr = x.row(ti);
+                    yd[ti * width + (r - r0)] += s * (a0 * xr[i0] + a1 * xr[i1]);
                 }
             }
         }

@@ -5,7 +5,7 @@
 //!   generate  [--model SPEC] [--family F] [--prompt S] [--max-new N] [--backend native|pjrt]
 //!   serve-demo [--requests N] [--batch B]    continuous-batching demo
 //!   eval      [--family F] [--model SPEC]    ppl + zero-shot for one variant
-//!   bench-table <t1..t16|f1|f5|f6|f7|f8|all> regenerate a paper table/figure
+//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock)
 //!   engine-sim [--rows N] [--skew X]         Slice-K vs Stream-K simulator
 
 use std::collections::HashMap;
@@ -66,7 +66,7 @@ fn run() -> Result<()> {
         "serve-demo" => serve_demo(&art, &flags),
         "eval" => eval_cmd(&art, &flags),
         "bench-table" => {
-            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5-f8, all)")?;
+            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, all)")?;
             let mut wb = Workbench::new(art);
             experiments::run(id, &mut wb)
         }
@@ -160,7 +160,7 @@ fn generate(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()
     let mut engine = EngineCore::new(
         backend,
         &cfg,
-        EngineConfig { max_batch: 1, prefill_chunk: 32, kv_capacity: prompt.len() + max_new + 2 },
+        EngineConfig { max_batch: 1, prefill_chunk: 32, kv_capacity: prompt.len() + max_new + 2, ..Default::default() },
     )?;
     engine.submit(Request::new(0, prompt, max_new));
     let t0 = std::time::Instant::now();
@@ -191,7 +191,7 @@ fn serve_demo(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<
         EngineCore::new(
             Backend::Native(model),
             &cfg,
-            EngineConfig { max_batch: batch, prefill_chunk: 15, kv_capacity: 160 },
+            EngineConfig { max_batch: batch, prefill_chunk: 15, kv_capacity: 160, ..Default::default() },
         )
     });
     let t0 = std::time::Instant::now();

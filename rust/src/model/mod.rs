@@ -10,4 +10,4 @@ pub mod transformer;
 
 pub use config::ModelConfig;
 pub use kv_cache::KvCache;
-pub use transformer::{BlockScratch, LinearKind, Scratch, Transformer};
+pub use transformer::{BlockScratch, ExecHandle, LinearKind, Scratch, Transformer};

@@ -11,9 +11,11 @@
 //! paper's tables.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::engine::executor::{ExecScratch, Executor};
 use crate::gqs::format::{FpModel, GqsModel};
 use crate::gqs::gemm::{gqs_gemm, MatmulScratch};
 use crate::gqs::gemv::gqs_gemv;
@@ -75,7 +77,7 @@ impl LinearKind {
             LinearKind::Gqs(l) => gqs_gemv(l, x, y, scratch),
             LinearKind::QuantDense(q) => q.gemv(x, y, scratch),
             LinearKind::Semi24(s) => s.gemv(x, y),
-            LinearKind::BsrF32(b) => y.copy_from_slice(&b.matvec(x)),
+            LinearKind::BsrF32(b) => b.matvec_into(x, y),
         }
     }
 
@@ -91,6 +93,51 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.gemm(x, y, scratch),
             LinearKind::Semi24(s) => s.gemm(x, y),
             LinearKind::BsrF32(b) => b.matmul_into(x, y),
+        }
+    }
+}
+
+/// Handle to the Stream-K parallel executor, threaded through the
+/// forward-pass scratch. `None` runs the plain sequential kernels with
+/// zero overhead; with a pool attached, every `LinearKind` dispatches
+/// through `engine::executor` — which is bit-exact with the sequential
+/// path, so attaching a pool never changes logits.
+#[derive(Default)]
+pub struct ExecHandle {
+    pub exec: Option<Arc<Executor>>,
+    pub scratch: ExecScratch,
+}
+
+impl ExecHandle {
+    pub fn sequential() -> Self {
+        Self::default()
+    }
+
+    pub fn with(exec: Arc<Executor>) -> Self {
+        Self { exec: Some(exec), scratch: ExecScratch::default() }
+    }
+
+    /// Executor-aware `LinearKind::matvec`.
+    pub fn matvec(&mut self, l: &LinearKind, x: &[f32], y: &mut [f32], gsum: &mut Vec<f32>) {
+        match (&self.exec, l) {
+            (Some(e), LinearKind::Gqs(g)) => e.gemv_gqs(g, x, y, gsum, &mut self.scratch),
+            (Some(e), LinearKind::Dense(m)) => e.gemv_dense(m, x, y, &mut self.scratch),
+            (Some(e), LinearKind::QuantDense(q)) => e.gemv_quant(q, x, y, gsum, &mut self.scratch),
+            (Some(e), LinearKind::Semi24(s)) => e.gemv_semi24(s, x, y, &mut self.scratch),
+            (Some(e), LinearKind::BsrF32(b)) => e.gemv_bsr(b, x, y, &mut self.scratch),
+            (None, _) => l.matvec(x, y, gsum),
+        }
+    }
+
+    /// Executor-aware `LinearKind::matmul`.
+    pub fn matmul(&mut self, l: &LinearKind, x: &Mat, y: &mut Mat, mm: &mut MatmulScratch) {
+        match (&self.exec, l) {
+            (Some(e), LinearKind::Gqs(g)) => e.gemm_gqs(g, x, y, mm, &mut self.scratch),
+            (Some(e), LinearKind::Dense(m)) => e.gemm_dense(m, x, y, &mut self.scratch),
+            (Some(e), LinearKind::QuantDense(q)) => e.gemm_quant(q, x, y, mm, &mut self.scratch),
+            (Some(e), LinearKind::Semi24(s)) => e.gemm_semi24(s, x, y, &mut self.scratch),
+            (Some(e), LinearKind::BsrF32(b)) => e.gemm_bsr(b, x, y, &mut self.scratch),
+            (None, _) => l.matmul(x, y, mm),
         }
     }
 }
@@ -111,10 +158,16 @@ pub struct Scratch {
     pub att: Vec<f32>,
     pub logits: Vec<f32>,
     pub gsum: Vec<f32>,
+    /// parallel-executor handle (`ExecHandle::sequential()` by default).
+    pub exec: ExecHandle,
 }
 
 impl Scratch {
     pub fn new(cfg: &ModelConfig) -> Self {
+        Self::with_executor(cfg, ExecHandle::sequential())
+    }
+
+    pub fn with_executor(cfg: &ModelConfig, exec: ExecHandle) -> Self {
         let d = cfg.d_model;
         let ff = cfg.d_ff;
         Self {
@@ -131,6 +184,7 @@ impl Scratch {
             att: vec![0.0; cfg.max_seq],
             logits: vec![0.0; cfg.vocab],
             gsum: Vec::new(),
+            exec,
         }
     }
 }
@@ -158,10 +212,16 @@ pub struct BlockScratch {
     /// per-row KV positions (batched decode).
     pub pos: Vec<usize>,
     pub mm: MatmulScratch,
+    /// parallel-executor handle (`ExecHandle::sequential()` by default).
+    pub exec: ExecHandle,
 }
 
 impl BlockScratch {
     pub fn new(cfg: &ModelConfig, t_max: usize) -> Self {
+        Self::with_executor(cfg, t_max, ExecHandle::sequential())
+    }
+
+    pub fn with_executor(cfg: &ModelConfig, t_max: usize, exec: ExecHandle) -> Self {
         let t = t_max.max(1);
         let d = cfg.d_model;
         let ff = cfg.d_ff;
@@ -180,6 +240,7 @@ impl BlockScratch {
             logits: Mat::zeros(t, cfg.vocab),
             pos: Vec::with_capacity(t),
             mm: MatmulScratch::new(),
+            exec,
         }
     }
 
@@ -426,7 +487,14 @@ impl Transformer {
         }
     }
 
-    fn lin(&self, name: &str, x: &mut [f32], y: &mut [f32], gsum: &mut Vec<f32>) -> Result<()> {
+    fn lin(
+        &self,
+        name: &str,
+        x: &mut [f32],
+        y: &mut [f32],
+        gsum: &mut Vec<f32>,
+        exec: &mut ExecHandle,
+    ) -> Result<()> {
         if self.act_quant_i8 {
             fake_quant_i8(x);
         }
@@ -446,7 +514,7 @@ impl Transformer {
             }
         }
         let l = self.linears.get(name).with_context(|| format!("linear '{name}' missing"))?;
-        l.matvec(x, y, gsum);
+        exec.matvec(l, x, y, gsum);
         Ok(())
     }
 
@@ -495,9 +563,9 @@ impl Transformer {
                 let (xn, x) = (&mut s.xn, &s.x);
                 self.norm(&format!("{pre}norm1"), x, xn)?;
             }
-            self.lin(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.gsum)?;
-            self.lin(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.gsum)?;
-            self.lin(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.gsum)?;
+            self.lin(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.gsum, &mut s.exec)?;
+            self.lin(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.gsum, &mut s.exec)?;
+            self.lin(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.gsum, &mut s.exec)?;
             if cfg.qkv_bias {
                 let bq = self.small(&format!("{pre}attn.bq"))?;
                 let bk = self.small(&format!("{pre}attn.bk"))?;
@@ -514,7 +582,13 @@ impl Transformer {
             }
             kv.layers[l].append(&s.k, &s.v);
             self.attend(&kv.layers[l], &s.q, &mut s.att, &mut s.attn_out);
-            self.lin(&format!("{pre}attn.wo"), &mut s.attn_out, &mut s.proj, &mut s.gsum)?;
+            self.lin(
+                &format!("{pre}attn.wo"),
+                &mut s.attn_out,
+                &mut s.proj,
+                &mut s.gsum,
+                &mut s.exec,
+            )?;
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -524,19 +598,37 @@ impl Transformer {
                 self.norm(&format!("{pre}norm2"), x, xn)?;
             }
             if cfg.act == "swiglu" {
-                self.lin(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.gsum)?;
-                self.lin(&format!("{pre}mlp.w2"), &mut s.xn, &mut s.ff_b, &mut s.gsum)?;
+                self.lin(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.gsum,
+                    &mut s.exec,
+                )?;
+                self.lin(
+                    &format!("{pre}mlp.w2"),
+                    &mut s.xn,
+                    &mut s.ff_b,
+                    &mut s.gsum,
+                    &mut s.exec,
+                )?;
                 for i in 0..cfg.d_ff {
                     let a = s.ff_a[i];
                     s.ff_n[i] = a / (1.0 + (-a).exp()) * s.ff_b[i]; // silu(a)*b
                 }
             } else {
-                self.lin(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.gsum)?;
+                self.lin(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.gsum,
+                    &mut s.exec,
+                )?;
                 for i in 0..cfg.d_ff {
                     s.ff_n[i] = gelu_tanh(s.ff_a[i]);
                 }
             }
-            self.lin(&format!("{pre}mlp.w3"), &mut s.ff_n, &mut s.proj, &mut s.gsum)?;
+            self.lin(&format!("{pre}mlp.w3"), &mut s.ff_n, &mut s.proj, &mut s.gsum, &mut s.exec)?;
             for i in 0..d {
                 s.x[i] += s.proj[i];
             }
@@ -559,6 +651,7 @@ impl Transformer {
         x: &mut Mat,
         y: &mut Mat,
         mm: &mut MatmulScratch,
+        exec: &mut ExecHandle,
     ) -> Result<()> {
         if self.act_quant_i8 {
             for ti in 0..x.rows {
@@ -584,7 +677,7 @@ impl Transformer {
             }
         }
         let l = self.linears.get(name).with_context(|| format!("linear '{name}' missing"))?;
-        l.matmul(x, y, mm);
+        exec.matmul(l, x, y, mm);
         Ok(())
     }
 
@@ -628,9 +721,9 @@ impl Transformer {
             for ti in 0..t {
                 self.norm(&n1, s.x.row(ti), s.xn.row_mut(ti))?;
             }
-            self.lin_block(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.mm)?;
-            self.lin_block(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.mm)?;
-            self.lin_block(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.mm)?;
+            self.lin_block(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.mm, &mut s.exec)?;
+            self.lin_block(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.mm, &mut s.exec)?;
+            self.lin_block(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.mm, &mut s.exec)?;
             if cfg.qkv_bias {
                 let bq = self.small(&format!("{pre}attn.bq"))?;
                 let bk = self.small(&format!("{pre}attn.bk"))?;
@@ -662,7 +755,13 @@ impl Transformer {
                 kv.layers[l].append(s.k.row(ti), s.v.row(ti));
                 self.attend(&kv.layers[l], s.q.row(ti), &mut s.att, s.attn_out.row_mut(ti));
             }
-            self.lin_block(&format!("{pre}attn.wo"), &mut s.attn_out, &mut s.proj, &mut s.mm)?;
+            self.lin_block(
+                &format!("{pre}attn.wo"),
+                &mut s.attn_out,
+                &mut s.proj,
+                &mut s.mm,
+                &mut s.exec,
+            )?;
             for ti in 0..t {
                 let pr = s.proj.row(ti);
                 let xr = s.x.row_mut(ti);
@@ -676,8 +775,20 @@ impl Transformer {
                 self.norm(&n2, s.x.row(ti), s.xn.row_mut(ti))?;
             }
             if cfg.act == "swiglu" {
-                self.lin_block(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.mm)?;
-                self.lin_block(&format!("{pre}mlp.w2"), &mut s.xn, &mut s.ff_b, &mut s.mm)?;
+                self.lin_block(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.mm,
+                    &mut s.exec,
+                )?;
+                self.lin_block(
+                    &format!("{pre}mlp.w2"),
+                    &mut s.xn,
+                    &mut s.ff_b,
+                    &mut s.mm,
+                    &mut s.exec,
+                )?;
                 for ti in 0..t {
                     let ar = s.ff_a.row(ti);
                     let br = s.ff_b.row(ti);
@@ -688,7 +799,13 @@ impl Transformer {
                     }
                 }
             } else {
-                self.lin_block(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.mm)?;
+                self.lin_block(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.mm,
+                    &mut s.exec,
+                )?;
                 for ti in 0..t {
                     let ar = s.ff_a.row(ti);
                     let nr = s.ff_n.row_mut(ti);
@@ -697,7 +814,13 @@ impl Transformer {
                     }
                 }
             }
-            self.lin_block(&format!("{pre}mlp.w3"), &mut s.ff_n, &mut s.proj, &mut s.mm)?;
+            self.lin_block(
+                &format!("{pre}mlp.w3"),
+                &mut s.ff_n,
+                &mut s.proj,
+                &mut s.mm,
+                &mut s.exec,
+            )?;
             for ti in 0..t {
                 let pr = s.proj.row(ti);
                 let xr = s.x.row_mut(ti);
@@ -759,9 +882,9 @@ impl Transformer {
             for ti in 0..t {
                 self.norm(&n1, s.x.row(ti), s.xn.row_mut(ti))?;
             }
-            self.lin_block(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.mm)?;
-            self.lin_block(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.mm)?;
-            self.lin_block(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.mm)?;
+            self.lin_block(&format!("{pre}attn.wq"), &mut s.xn, &mut s.q, &mut s.mm, &mut s.exec)?;
+            self.lin_block(&format!("{pre}attn.wk"), &mut s.xn, &mut s.k, &mut s.mm, &mut s.exec)?;
+            self.lin_block(&format!("{pre}attn.wv"), &mut s.xn, &mut s.v, &mut s.mm, &mut s.exec)?;
             if cfg.qkv_bias {
                 let bq = self.small(&format!("{pre}attn.bq"))?;
                 let bk = self.small(&format!("{pre}attn.bk"))?;
@@ -791,7 +914,13 @@ impl Transformer {
                 kvs[ti].layers[l].append(s.k.row(ti), s.v.row(ti));
                 self.attend(&kvs[ti].layers[l], s.q.row(ti), &mut s.att, s.attn_out.row_mut(ti));
             }
-            self.lin_block(&format!("{pre}attn.wo"), &mut s.attn_out, &mut s.proj, &mut s.mm)?;
+            self.lin_block(
+                &format!("{pre}attn.wo"),
+                &mut s.attn_out,
+                &mut s.proj,
+                &mut s.mm,
+                &mut s.exec,
+            )?;
             for ti in 0..t {
                 let pr = s.proj.row(ti);
                 let xr = s.x.row_mut(ti);
@@ -804,8 +933,20 @@ impl Transformer {
                 self.norm(&n2, s.x.row(ti), s.xn.row_mut(ti))?;
             }
             if cfg.act == "swiglu" {
-                self.lin_block(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.mm)?;
-                self.lin_block(&format!("{pre}mlp.w2"), &mut s.xn, &mut s.ff_b, &mut s.mm)?;
+                self.lin_block(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.mm,
+                    &mut s.exec,
+                )?;
+                self.lin_block(
+                    &format!("{pre}mlp.w2"),
+                    &mut s.xn,
+                    &mut s.ff_b,
+                    &mut s.mm,
+                    &mut s.exec,
+                )?;
                 for ti in 0..t {
                     let ar = s.ff_a.row(ti);
                     let br = s.ff_b.row(ti);
@@ -816,7 +957,13 @@ impl Transformer {
                     }
                 }
             } else {
-                self.lin_block(&format!("{pre}mlp.w1"), &mut s.xn, &mut s.ff_a, &mut s.mm)?;
+                self.lin_block(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.mm,
+                    &mut s.exec,
+                )?;
                 for ti in 0..t {
                     let ar = s.ff_a.row(ti);
                     let nr = s.ff_n.row_mut(ti);
@@ -825,7 +972,13 @@ impl Transformer {
                     }
                 }
             }
-            self.lin_block(&format!("{pre}mlp.w3"), &mut s.ff_n, &mut s.proj, &mut s.mm)?;
+            self.lin_block(
+                &format!("{pre}mlp.w3"),
+                &mut s.ff_n,
+                &mut s.proj,
+                &mut s.mm,
+                &mut s.exec,
+            )?;
             for ti in 0..t {
                 let pr = s.proj.row(ti);
                 let xr = s.x.row_mut(ti);

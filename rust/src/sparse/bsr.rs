@@ -62,9 +62,24 @@ impl BsrMatrix {
 
     /// y = BSR @ x without densifying.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0f32; self.rows];
-        for r in 0..self.rows {
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Allocation-free `matvec` (the serving hot path).
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        self.matvec_rows(x, y, 0, self.rows);
+    }
+
+    /// Row-range form of `matvec`, writing rows r0..r1 into
+    /// `y[..r1-r0]` (region-relative, so executor tasks fill disjoint
+    /// private buffers). The elementwise per-row chain cannot be split
+    /// mid-row, so the executor balances whole rows by group load.
+    pub fn matvec_rows(&self, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
+        for r in r0..r1 {
             let (a, b) = (self.row_index[r] as usize, self.row_index[r + 1] as usize);
             let mut acc = 0.0f32;
             for j in a..b {
@@ -75,9 +90,8 @@ impl BsrMatrix {
                     acc += v * xv;
                 }
             }
-            y[r] = acc;
+            y[r - r0] = acc;
         }
-        y
     }
 
     /// Batched Y (T, N) = X (T, K) @ BSRᵀ: walks the row/group metadata
@@ -87,15 +101,22 @@ impl BsrMatrix {
         assert_eq!(x.cols, self.cols);
         assert_eq!((y.rows, y.cols), (x.rows, self.rows));
         y.data.fill(0.0);
-        let n = self.rows;
-        for r in 0..n {
+        self.matmul_rows(x, &mut y.data, 0, self.rows);
+    }
+
+    /// Row-range form of `matmul_into` into a region-relative
+    /// (T, r1-r0) buffer (see `dense_gemm_rows`). Accumulates — the
+    /// caller supplies a zeroed buffer.
+    pub fn matmul_rows(&self, x: &Mat, yd: &mut [f32], r0: usize, r1: usize) {
+        let width = r1 - r0;
+        for r in r0..r1 {
             let (a, b) = (self.row_index[r] as usize, self.row_index[r + 1] as usize);
             for j in a..b {
                 let gc = self.groups[j] as usize;
                 let vals = &self.values[j * self.group..(j + 1) * self.group];
                 for ti in 0..x.rows {
                     let xs = &x.row(ti)[gc * self.group..(gc + 1) * self.group];
-                    let yv = &mut y.data[ti * n + r];
+                    let yv = &mut yd[ti * width + (r - r0)];
                     for (v, xv) in vals.iter().zip(xs) {
                         *yv += v * xv;
                     }

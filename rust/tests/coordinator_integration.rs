@@ -34,7 +34,7 @@ fn serve_gqsa_model_end_to_end() {
         EngineCore::new(
             Backend::Native(model),
             &cfg,
-            EngineConfig { max_batch: 3, prefill_chunk: 8, kv_capacity: 128 },
+            EngineConfig { max_batch: 3, prefill_chunk: 8, kv_capacity: 128, ..Default::default() },
         )
     });
     let mut handles = Vec::new();
@@ -69,7 +69,7 @@ fn greedy_output_identical_native_all_sparsities() {
             let mut e = EngineCore::new(
                 Backend::Native(m),
                 &cfg,
-                EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64 },
+                EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64, ..Default::default() },
             )
             .unwrap();
             e.submit(Request::new(0, vec![116, 104, 101, 32], 16));
@@ -95,7 +95,7 @@ fn pjrt_backend_serves_requests() {
         EngineCore::new(
             Backend::Pjrt(PjrtBackend::new(artifact)?),
             &cfg,
-            EngineConfig { max_batch: 2, prefill_chunk: 8, kv_capacity: 64 },
+            EngineConfig { max_batch: 2, prefill_chunk: 8, kv_capacity: 64, ..Default::default() },
         )
     });
     let c = srv.client();
@@ -121,7 +121,7 @@ fn pjrt_and_native_agree_on_greedy_tokens() {
         let mut e = EngineCore::new(
             Backend::Native(model),
             &cfg,
-            EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64 },
+            EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64, ..Default::default() },
         )
         .unwrap();
         e.submit(Request::new(0, prompt.clone(), 12));
@@ -134,7 +134,7 @@ fn pjrt_and_native_agree_on_greedy_tokens() {
         let mut e = EngineCore::new(
             Backend::Pjrt(PjrtBackend::new(artifact).unwrap()),
             &cfg,
-            EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64 },
+            EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 64, ..Default::default() },
         )
         .unwrap();
         e.submit(Request::new(0, prompt, 12));

@@ -223,7 +223,7 @@ fn tiny_engine(rng: &mut XorShift, max_batch: usize) -> (EngineCore, ModelConfig
     let e = EngineCore::new(
         Backend::Native(t),
         &cfg,
-        EngineConfig { max_batch, prefill_chunk: 4, kv_capacity: 128 },
+        EngineConfig { max_batch, prefill_chunk: 4, kv_capacity: 128, ..Default::default() },
     )
     .unwrap();
     (e, cfg)
