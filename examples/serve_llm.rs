@@ -27,7 +27,15 @@ fn main() -> anyhow::Result<()> {
     let tok = ByteTokenizer;
 
     // --- native backend through the threaded server ---
-    println!("== native GQS engine (W4S50%, BQPO+E2E-OQP) ==");
+    // KV is paged by default (16-position blocks from a shared pool);
+    // GQSA_KV_DTYPE=q8|q4 group-quantizes sealed blocks, and
+    // GQSA_KV_LAYOUT=slab restores the legacy fixed slab.
+    let kv_cfg = EngineConfig::default();
+    println!(
+        "== native GQS engine (W4S50%, BQPO+E2E-OQP) — kv {} {} ==",
+        if kv_cfg.kv_paged { "paged" } else { "slab" },
+        kv_cfg.kv_dtype.name()
+    );
     let art2 = art.clone();
     let srv = Server::start(move || {
         let mut wb = Workbench::new(art2);

@@ -16,9 +16,27 @@ use anyhow::Result;
 
 use crate::engine::executor::Executor;
 use crate::model::transformer::ExecHandle;
-use crate::model::{BlockScratch, KvCache, Scratch, Transformer};
+use crate::model::{BlockScratch, KvBlockPool, KvCache, Scratch, Transformer};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Artifact;
+
+/// KV storage mode for Native sequences: the legacy fixed slab, or the
+/// paged layout drawing sealed blocks from a shared [`KvBlockPool`]
+/// (owned by the coordinator, recycled across requests).
+#[derive(Clone)]
+pub enum KvMode {
+    Slab,
+    Paged(Arc<KvBlockPool>),
+}
+
+impl KvMode {
+    pub fn pool(&self) -> Option<&Arc<KvBlockPool>> {
+        match self {
+            KvMode::Paged(p) => Some(p),
+            KvMode::Slab => None,
+        }
+    }
+}
 
 pub enum Backend {
     Native(Transformer),
@@ -147,14 +165,40 @@ impl Backend {
         }
     }
 
-    /// Allocate per-sequence state with `capacity` KV slots.
-    pub fn new_seq(&self, capacity: usize) -> Result<SeqState> {
+    /// Allocate per-sequence state with `capacity` KV slots. Paged mode
+    /// allocates only the f32 tail up front; sealed blocks come from
+    /// the pool as the sequence grows.
+    pub fn new_seq(&self, capacity: usize, kv_mode: &KvMode) -> Result<SeqState> {
         match self {
             Backend::Native(t) => Ok(SeqState::Native {
-                kv: KvCache::new(t.cfg.n_layers, t.cfg.n_heads, t.cfg.head_dim(), capacity),
+                kv: match kv_mode {
+                    KvMode::Slab => {
+                        KvCache::new(t.cfg.n_layers, t.cfg.n_heads, t.cfg.head_dim(), capacity)
+                    }
+                    KvMode::Paged(pool) => KvCache::paged(t.cfg.n_layers, pool, capacity),
+                },
             }),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(p) => Ok(SeqState::Pjrt { kv: p.fresh_kv()?, pos: 0 }),
+        }
+    }
+
+    /// New pool blocks a sequence would consume appending `t` positions
+    /// (0 for slab / PJRT states).
+    pub fn kv_blocks_needed(&self, seq: &SeqState, t: usize) -> usize {
+        match seq {
+            SeqState::Native { kv } => kv.blocks_needed(t),
+            #[cfg(feature = "pjrt")]
+            SeqState::Pjrt { .. } => 0,
+        }
+    }
+
+    /// Sealed pool blocks a sequence currently holds.
+    pub fn kv_blocks_held(&self, seq: &SeqState) -> usize {
+        match seq {
+            SeqState::Native { kv } => kv.blocks_held(),
+            #[cfg(feature = "pjrt")]
+            SeqState::Pjrt { .. } => 0,
         }
     }
 

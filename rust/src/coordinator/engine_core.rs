@@ -25,10 +25,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::backend::{Backend, SeqState};
+use crate::coordinator::backend::{Backend, KvMode, SeqState};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, RequestTiming, Response};
+use crate::coordinator::request::{FinishReason, Request, RequestTiming, Response};
 use crate::engine::executor::{Decomposition, ExecConfig, Executor};
+use crate::model::kv_cache::{blocks_for, CacheFull, KvBlockPool, KvDtype, KV_BLOCK};
 use crate::model::sampler::sample;
 use crate::model::BlockScratch;
 use crate::util::XorShift;
@@ -46,17 +47,33 @@ pub struct EngineConfig {
     /// work decomposition the executor runs; the default honors
     /// `GQSA_EXEC_DECOMP`.
     pub decomposition: Decomposition,
+    /// paged (block-pool) KV vs the legacy fixed slab. The default
+    /// honors `GQSA_KV_LAYOUT` ("slab" opts out). Paged-f32 is
+    /// bit-exact with the slab, so flipping this never changes tokens.
+    pub kv_paged: bool,
+    /// sealed-KV-block dtype (paged mode only); the default honors
+    /// `GQSA_KV_DTYPE` (f32 | q8 | q4).
+    pub kv_dtype: KvDtype,
+    /// block-pool budget in blocks; 0 = auto-size so `max_batch`
+    /// full-capacity sequences fit (matching the old slab admission).
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         let exec = ExecConfig::default().from_env();
+        let kv_paged = !std::env::var("GQSA_KV_LAYOUT")
+            .map(|s| s.trim().eq_ignore_ascii_case("slab"))
+            .unwrap_or(false);
         Self {
             max_batch: 8,
             prefill_chunk: 16,
             kv_capacity: 288,
             threads: exec.threads,
             decomposition: exec.decomposition,
+            kv_paged,
+            kv_dtype: KvDtype::from_env(),
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -69,6 +86,9 @@ struct ActiveSeq {
     generated: Vec<u32>,
     submitted: Instant,
     timing: RequestTiming,
+    /// set when the KV pool ran dry under this sequence — it retires
+    /// at the end of the tick with whatever it generated so far
+    evicted: bool,
 }
 
 /// Single-threaded engine with continuous batching. Drive it with
@@ -80,6 +100,10 @@ pub struct EngineCore {
     /// the Stream-K worker pool; every linear of every forward in this
     /// engine dispatches through it (bit-exact with sequential).
     pub exec: Arc<Executor>,
+    /// KV storage mode; `Paged` owns the shared block pool that
+    /// admission and eviction budget against.
+    kv_mode: KvMode,
+    n_layers: usize,
     waiting: VecDeque<(Request, Instant)>,
     active: Vec<ActiveSeq>,
     pool: Vec<SeqState>,
@@ -90,9 +114,29 @@ pub struct EngineCore {
 
 impl EngineCore {
     pub fn new(backend: Backend, model_cfg: &crate::model::ModelConfig, cfg: EngineConfig) -> Result<Self> {
+        // KV block pool: only Native sequences page (PJRT KV lives in
+        // runtime literals). Auto-sizing reproduces the old fixed-slot
+        // admission ceiling: max_batch sequences at full capacity.
+        let native = matches!(backend, Backend::Native(_));
+        let kv_mode = if native && cfg.kv_paged {
+            let per_seq = cfg.kv_capacity.div_ceil(KV_BLOCK);
+            let total = if cfg.kv_pool_blocks > 0 {
+                cfg.kv_pool_blocks
+            } else {
+                cfg.max_batch * model_cfg.n_layers * per_seq
+            };
+            KvMode::Paged(KvBlockPool::new(
+                model_cfg.n_heads,
+                model_cfg.head_dim(),
+                cfg.kv_dtype,
+                total,
+            ))
+        } else {
+            KvMode::Slab
+        };
         let mut pool = Vec::with_capacity(cfg.max_batch);
         for _ in 0..cfg.max_batch {
-            pool.push(backend.new_seq(cfg.kv_capacity)?);
+            pool.push(backend.new_seq(cfg.kv_capacity, &kv_mode)?);
         }
         // cfg.threads/decomposition are authoritative here (env reaches
         // them only through EngineConfig::default()); GQSA_EXEC_FORCE
@@ -120,6 +164,8 @@ impl EngineCore {
             cfg,
             metrics: Metrics::default(),
             exec,
+            kv_mode,
+            n_layers: model_cfg.n_layers,
             waiting: VecDeque::new(),
             active: Vec::new(),
             pool,
@@ -127,6 +173,11 @@ impl EngineCore {
             rng: XorShift::new(0xC0FFEE),
             finished: Vec::new(),
         })
+    }
+
+    /// The shared KV block pool (None in slab mode / PJRT).
+    pub fn kv_pool(&self) -> Option<&Arc<KvBlockPool>> {
+        self.kv_mode.pool()
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -154,12 +205,30 @@ impl EngineCore {
     pub fn tick(&mut self) -> Result<usize> {
         let t0 = Instant::now();
         self.metrics.engine_iterations += 1;
-        // 1. admit
+        // 1. admit — paged mode gates on the pool's free-block count
+        // (a waiting request needs room for its clamped prompt plus
+        // one decode token across every layer), not just a slot count.
+        // With no active sequences we admit regardless: the request
+        // either fits or retires via the CacheFull guard, and blocking
+        // here would deadlock an empty engine.
+        let mut admit_reserved = 0usize;
         while self.active.len() < self.cfg.max_batch && !self.waiting.is_empty() {
+            if let KvMode::Paged(pool) = &self.kv_mode {
+                let (req, _) = self.waiting.front().unwrap();
+                let fit = req.prompt.len().min(self.cfg.kv_capacity.saturating_sub(1));
+                let needed = self.n_layers * blocks_for(fit + 1);
+                // reservations accumulate across the loop so an admit
+                // burst can't hand the same free blocks to everyone
+                if !self.active.is_empty() && admit_reserved + needed > pool.free_blocks() {
+                    self.metrics.kv_admission_blocked += 1;
+                    break;
+                }
+                admit_reserved += needed;
+            }
             let (req, submitted) = self.waiting.pop_front().unwrap();
             let mut state = match self.pool.pop() {
                 Some(s) => s,
-                None => self.backend.new_seq(self.cfg.kv_capacity)?,
+                None => self.backend.new_seq(self.cfg.kv_capacity, &self.kv_mode)?,
             };
             self.backend.reset_seq(&mut state)?;
             let mut timing = RequestTiming::default();
@@ -171,20 +240,24 @@ impl EngineCore {
                 generated: Vec::new(),
                 submitted,
                 timing,
+                evicted: false,
             });
         }
+
+        self.metrics.note_active(self.active.len());
 
         let mut processed = 0usize;
         // sequences already past prefill at tick start decode this tick
         // (a sequence that finishes prefill below samples its first
         // token from the chunk logits and starts decoding next tick,
         // exactly like the per-token engine did)
-        let decode_idx: Vec<usize> = (0..self.active.len())
+        let mut decode_idx: Vec<usize> = (0..self.active.len())
             .filter(|&i| self.active[i].fed >= self.active[i].req.prompt.len())
             .collect();
 
         // 2. chunked prefill: ONE step_block per sequence per tick
         let chunk_cap = self.cfg.prefill_chunk.max(1);
+        let mut prefill_stalled = 0usize;
         for seq in &mut self.active {
             let prompt_len = seq.req.prompt.len();
             if seq.fed >= prompt_len {
@@ -194,12 +267,31 @@ impl EngineCore {
             // via the capacity guard instead of erroring mid-chunk
             let cap_left =
                 self.cfg.kv_capacity.saturating_sub(self.backend.seq_len(&seq.state));
-            let take = chunk_cap.min(prompt_len - seq.fed).min(cap_left);
+            let mut take = chunk_cap.min(prompt_len - seq.fed).min(cap_left);
+            // clamp to the pool's free blocks: feed what fits now and
+            // let a later tick (after someone retires) feed the rest
+            if let KvMode::Paged(pool) = &self.kv_mode {
+                let free = pool.free_blocks();
+                while take > 0 && self.backend.kv_blocks_needed(&seq.state, take) > free {
+                    take -= 1;
+                    prefill_stalled += 1;
+                }
+            }
             if take == 0 {
                 continue;
             }
             let chunk = &seq.req.prompt[seq.fed..seq.fed + take];
-            self.backend.step_block(chunk, &mut seq.state, &mut self.block)?;
+            match self.backend.step_block(chunk, &mut seq.state, &mut self.block) {
+                Ok(()) => {}
+                Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                    // pre-flight failed before any mutation: retire this
+                    // sequence with what it has instead of killing the tick
+                    seq.evicted = true;
+                    self.metrics.kv_evictions += 1;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
             processed += take;
             seq.fed += take;
             if seq.fed == prompt_len {
@@ -214,7 +306,29 @@ impl EngineCore {
             }
         }
 
-        // 3. batched decode: one weight walk for every decoding sequence
+        // 3. batched decode: one weight walk for every decoding sequence.
+        // Paged mode first fits the batch to the pool's free blocks
+        // (FIFO: earlier-admitted sequences get theirs first); a
+        // sequence that doesn't fit is *deferred* — it keeps its state
+        // and decodes once a retiring sequence returns blocks — rather
+        // than poisoning batch-mates by failing mid-forward.
+        let mut decode_deferred = 0usize;
+        if let KvMode::Paged(pool) = &self.kv_mode {
+            let free = pool.free_blocks();
+            let mut reserved = 0usize;
+            let mut keep = Vec::with_capacity(decode_idx.len());
+            for &i in &decode_idx {
+                let need = self.backend.kv_blocks_needed(&self.active[i].state, 1);
+                if reserved + need <= free {
+                    reserved += need;
+                    keep.push(i);
+                } else {
+                    decode_deferred += 1;
+                }
+            }
+            self.metrics.kv_decode_deferred += decode_deferred as u64;
+            decode_idx = keep;
+        }
         if !decode_idx.is_empty() {
             let tokens: Vec<u32> = decode_idx
                 .iter()
@@ -239,7 +353,26 @@ impl EngineCore {
             }
         }
 
-        // 4. retire finished sequences
+        // stall breaker: if the whole tick made zero progress because
+        // every active sequence is waiting on pool blocks that only
+        // another *active* sequence could free, evict the youngest
+        // block-holding sequence so its blocks recycle and the rest
+        // can move next tick. (With any forward progress this never
+        // fires — deferral alone resolves transient pressure.)
+        if processed == 0 && (prefill_stalled > 0 || decode_deferred > 0) {
+            let victim = (0..self.active.len())
+                .rev()
+                .filter(|&i| !self.active[i].evicted)
+                .find(|&i| self.backend.kv_blocks_held(&self.active[i].state) > 0)
+                .or_else(|| (0..self.active.len()).rev().find(|&i| !self.active[i].evicted));
+            if let Some(i) = victim {
+                self.active[i].evicted = true;
+                self.metrics.kv_evictions += 1;
+            }
+        }
+
+        // 4. retire finished sequences, recycling their KV blocks into
+        // the pool immediately (not lazily at next admission)
         let mut still_active = Vec::with_capacity(self.active.len());
         for mut seq in std::mem::take(&mut self.active) {
             if !self.seq_finished(&seq) {
@@ -251,15 +384,34 @@ impl EngineCore {
             seq.timing.decode_us =
                 seq.timing.total_us - seq.timing.queued_us - seq.timing.prefill_us;
             self.metrics.record(&seq.timing, prompt_len, seq.generated.len());
+            let finish = if seq.evicted {
+                FinishReason::Evicted
+            } else if seq.fed < prompt_len {
+                // retired mid-prefill by the capacity guard
+                FinishReason::CapacityFull
+            } else if seq.req.stop_token.is_some()
+                && seq.generated.last() == seq.req.stop_token.as_ref()
+            {
+                FinishReason::Stop
+            } else if seq.generated.len() >= seq.req.max_new_tokens {
+                FinishReason::Length
+            } else {
+                FinishReason::CapacityFull
+            };
             self.finished.push(Response {
                 id: seq.req.id,
                 tokens: seq.generated,
                 timing: seq.timing,
                 n_prompt: prompt_len,
+                finish,
             });
+            self.backend.reset_seq(&mut seq.state)?;
             self.pool.push(seq.state);
         }
         self.active = still_active;
+        if let KvMode::Paged(pool) = &self.kv_mode {
+            self.metrics.set_kv_stats(pool.stats(), Some(self.cfg.kv_dtype));
+        }
         self.metrics.add_busy(t0.elapsed());
         self.metrics.set_exec_stats(self.exec.stats());
         Ok(processed)
@@ -276,6 +428,10 @@ impl EngineCore {
     }
 
     fn seq_finished(&self, seq: &ActiveSeq) -> bool {
+        // KV pool ran dry under this sequence: retire with what it has
+        if seq.evicted {
+            return true;
+        }
         // still prefilling: only the KV guard can end a sequence early
         if seq.fed < seq.req.prompt.len() {
             return self.backend.seq_len(&seq.state) + 1 >= self.cfg.kv_capacity;
@@ -332,6 +488,7 @@ mod tests {
         assert_eq!(out[0].tokens.len(), 5);
         assert!(out[0].tokens.iter().all(|&t| t < 64));
         assert!(out[0].timing.total_us > 0);
+        assert_eq!(out[0].finish, crate::coordinator::request::FinishReason::Length);
     }
 
     #[test]
@@ -411,10 +568,19 @@ mod tests {
         }
 
         let t2 = Transformer::from_fp(&fp).unwrap();
+        // pin f32 KV: the reference above uses an exact slab cache, so
+        // this comparison must not pick up a quantized dtype from the
+        // CI matrix env (paged-f32 itself is bit-exact with the slab)
         let mut e = EngineCore::new(
             Backend::Native(t2),
             &cfg,
-            EngineConfig { max_batch: 2, prefill_chunk: 3, kv_capacity: 96, ..Default::default() },
+            EngineConfig {
+                max_batch: 2,
+                prefill_chunk: 3,
+                kv_capacity: 96,
+                kv_dtype: crate::model::KvDtype::F32,
+                ..Default::default()
+            },
         )
         .unwrap();
         e.submit(Request::new(1, prompt.to_vec(), 6));
@@ -451,6 +617,7 @@ mod tests {
                     kv_capacity: 96,
                     threads,
                     decomposition: crate::engine::executor::Decomposition::StreamK,
+                    ..Default::default()
                 },
             )
             .unwrap();
@@ -475,6 +642,7 @@ mod tests {
         e2.submit(req);
         let out = e2.run_to_completion().unwrap();
         assert_eq!(out[0].tokens.len(), 1);
+        assert_eq!(out[0].finish, crate::coordinator::request::FinishReason::Stop);
     }
 
     #[test]
@@ -496,6 +664,7 @@ mod tests {
         e.submit(Request::new(1, vec![1; 4], 1000));
         let out = e.run_to_completion().unwrap();
         assert!(out[0].tokens.len() + 4 + 1 <= 96 + 1);
+        assert_eq!(out[0].finish, crate::coordinator::request::FinishReason::CapacityFull);
     }
 
     #[test]
@@ -521,5 +690,115 @@ mod tests {
             assert_eq!(out.len(), 4);
         }
         assert_eq!(e.metrics.requests_completed, 12);
+        // every KV block allocated across the rounds was recycled
+        if let Some(pool) = e.kv_pool() {
+            let s = pool.stats();
+            assert_eq!(s.blocks_in_use, 0, "leaked kv blocks: {s:?}");
+            assert_eq!(s.allocs, s.frees, "alloc/free imbalance: {s:?}");
+        }
+    }
+
+    fn engine_kv(
+        kv_paged: bool,
+        kv_dtype: crate::model::KvDtype,
+        pool_blocks: usize,
+    ) -> EngineCore {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 55);
+        let t = Transformer::from_fp(&fp).unwrap();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: 3,
+                prefill_chunk: 4,
+                kv_capacity: 96,
+                kv_paged,
+                kv_dtype,
+                kv_pool_blocks: pool_blocks,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paged_f32_tokens_identical_to_slab_engine() {
+        // the tentpole acceptance: flipping the KV layout must not
+        // change a single greedy token
+        use crate::model::KvDtype;
+        let reqs = |e: &mut EngineCore| {
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 12));
+            e.submit(Request::new(2, vec![10, 11], 9));
+            e.submit(Request::new(3, vec![12; 20], 7));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let slab = reqs(&mut engine_kv(false, KvDtype::F32, 0));
+        let paged = reqs(&mut engine_kv(true, KvDtype::F32, 0));
+        assert_eq!(slab, paged, "paged-f32 diverged from slab");
+    }
+
+    #[test]
+    fn quantized_kv_engine_completes_all_requests() {
+        use crate::model::KvDtype;
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let mut e = engine_kv(true, dtype, 0);
+            for i in 0..5u64 {
+                // 20 prompt + 15 generated = 35 positions: crosses two
+                // block boundaries so sealed blocks really quantize
+                e.submit(Request::new(i, vec![(i % 60) as u32 + 1; 20], 15));
+            }
+            let out = e.run_to_completion().unwrap();
+            assert_eq!(out.len(), 5);
+            assert!(out.iter().all(|r| r.tokens.len() == 15));
+            let s = e.kv_pool().unwrap().stats();
+            assert_eq!(s.blocks_in_use, 0);
+            assert!(s.allocs > 0, "quantized engine never sealed a block");
+        }
+    }
+
+    #[test]
+    fn starved_pool_evicts_gracefully_instead_of_erroring() {
+        // a pool far too small for the workload: every request must
+        // still produce a response (possibly truncated), the engine
+        // must never return Err, and all blocks must recycle
+        use crate::model::KvDtype;
+        let mut e = engine_kv(true, KvDtype::F32, 3); // 3 blocks for 2 layers
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![3; 40], 30));
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 4, "requests dropped under pool pressure");
+        let s = e.kv_pool().unwrap().stats();
+        assert_eq!(s.blocks_in_use, 0, "evicted sequences leaked blocks");
+        assert!(
+            e.metrics.kv_evictions > 0 || e.metrics.kv_admission_blocked > 0,
+            "starved pool never pushed back"
+        );
+        // truncation is visible to clients, not silent
+        use crate::coordinator::request::FinishReason;
+        assert!(
+            out.iter().any(|r| r.finish == FinishReason::Evicted),
+            "evictions not surfaced in responses"
+        );
+    }
+
+    #[test]
+    fn report_contains_kv_counters() {
+        let mut e = engine_kv(true, crate::model::KvDtype::Q8, 0);
+        e.submit(Request::new(1, vec![1; 20], 20));
+        e.run_to_completion().unwrap();
+        let r = e.metrics.report();
+        assert!(r.contains("layout=paged"), "{r}");
+        assert!(r.contains("dtype=q8"), "{r}");
+        assert!(r.contains("allocs="), "{r}");
     }
 }

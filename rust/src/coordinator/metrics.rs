@@ -3,6 +3,7 @@
 use std::time::Duration;
 
 use crate::engine::executor::ExecStats;
+use crate::model::kv_cache::{KvDtype, KvPoolStats};
 use crate::util::stats::Summary;
 
 pub use crate::coordinator::request::RequestTiming as RequestMetrics;
@@ -17,6 +18,19 @@ pub struct Metrics {
     /// Stream-K executor counters (chunks run, fixup reductions,
     /// worker busy time) — snapshotted from the pool each tick.
     pub exec: ExecStats,
+    /// KV block-pool counters (block churn = allocs/frees), snapshotted
+    /// each tick; None until a paged engine reports.
+    pub kv: Option<KvPoolStats>,
+    /// sealed-block dtype of the paged cache feeding `kv`.
+    pub kv_dtype: Option<KvDtype>,
+    /// sequences retired early because the KV pool ran dry.
+    pub kv_evictions: u64,
+    /// admissions deferred for lack of free KV blocks.
+    pub kv_admission_blocked: u64,
+    /// decode steps deferred a tick while waiting for free KV blocks.
+    pub kv_decode_deferred: u64,
+    /// high-water mark of concurrently active sequences.
+    pub peak_active_seqs: usize,
     ttft_samples: Vec<f64>,
     total_samples: Vec<f64>,
 }
@@ -56,18 +70,47 @@ impl Metrics {
         self.exec = s;
     }
 
+    /// Install the latest KV block-pool snapshot.
+    pub fn set_kv_stats(&mut self, s: KvPoolStats, dtype: Option<KvDtype>) {
+        self.kv = Some(s);
+        self.kv_dtype = dtype;
+    }
+
+    /// Track the high-water mark of concurrently active sequences.
+    pub fn note_active(&mut self, n: usize) {
+        self.peak_active_seqs = self.peak_active_seqs.max(n);
+    }
+
     pub fn report(&self) -> String {
         let lat = self.latency_ms();
         let ttft = self.ttft_ms();
+        let kv = match &self.kv {
+            Some(k) => format!(
+                "kv: layout=paged dtype={} blocks={}/{} peak={} allocs={} frees={} \
+                 bytes_in_use={} evictions={} deferred={} adm_blocked={}",
+                self.kv_dtype.map_or("f32", |d| d.name()),
+                k.blocks_in_use,
+                k.total_blocks,
+                k.peak_in_use,
+                k.allocs,
+                k.frees,
+                k.bytes_in_use(),
+                self.kv_evictions,
+                self.kv_decode_deferred,
+                self.kv_admission_blocked,
+            ),
+            None => "kv: layout=slab".to_string(),
+        };
         format!(
             "requests={} prefill_toks={} gen_toks={} iters={} tok/s={:.1} \
-             latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms, \
-             exec: chunks={} fixups={} busy_us={} par/seq={}/{}",
+             peak_active={} latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms, \
+             exec: chunks={} fixups={} busy_us={} par/seq={}/{}, {kv}",
             self.requests_completed,
             self.tokens_prefilled,
             self.tokens_generated,
             self.engine_iterations,
             self.decode_throughput(),
+            self.peak_active_seqs,
             lat.p50,
             lat.p95,
             ttft.p50,

@@ -18,8 +18,8 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use backend::Backend;
+pub use backend::{Backend, KvMode};
 pub use engine_core::{EngineConfig, EngineCore};
 pub use metrics::{Metrics, RequestMetrics};
-pub use request::{Request, Response, SamplingCfg};
+pub use request::{FinishReason, Request, Response, SamplingCfg};
 pub use server::Server;

@@ -57,12 +57,27 @@ pub struct RequestTiming {
     pub total_us: u64,
 }
 
+/// Why a sequence stopped generating — lets clients distinguish a
+/// naturally finished answer from one truncated under KV pressure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// reached `max_new_tokens`
+    Length,
+    /// emitted the configured stop token
+    Stop,
+    /// hit the per-sequence `kv_capacity` ceiling
+    CapacityFull,
+    /// retired early because the shared KV block pool ran dry
+    Evicted,
+}
+
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub timing: RequestTiming,
     pub n_prompt: usize,
+    pub finish: FinishReason,
 }
 
 #[cfg(test)]

@@ -97,7 +97,17 @@ impl Server {
                     Some(Msg::Report(reply)) => {
                         let _ = reply.send(engine.metrics.report());
                     }
-                    Some(Msg::Shutdown) => break,
+                    Some(Msg::Shutdown) => {
+                        // deliver anything already finished before the
+                        // pending senders drop (clients would otherwise
+                        // see a spurious error for completed work)
+                        for resp in engine.take_finished() {
+                            if let Some(reply) = pending.remove(&resp.id) {
+                                let _ = reply.send(resp);
+                            }
+                        }
+                        break;
+                    }
                     None => {}
                 }
                 if engine.has_work() {

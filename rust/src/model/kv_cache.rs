@@ -1,76 +1,689 @@
-//! KV cache for the rust-native decode path.
+//! KV cache for the rust-native decode path: slab and paged layouts.
 //!
-//! Layout: per layer, `k`/`v` as (n_heads, capacity, head_dim) row-major
-//! slabs, preallocated once per sequence (the serving coordinator pools
-//! and reuses them across requests — no allocation on the decode path).
+//! Two storage modes behind one `LayerKv` API:
+//!
+//! * **Slab** — per layer, `k`/`v` as (n_heads, capacity, head_dim)
+//!   row-major slabs preallocated at fixed capacity (the original
+//!   layout; kept as the bit-exactness reference and for the PJRT
+//!   backend whose KV lives in literals anyway).
+//! * **Paged** — a process-wide [`KvBlockPool`] hands out fixed-size
+//!   blocks of [`KV_BLOCK`] positions × (n_heads, head_dim); each
+//!   sequence-layer holds a table of sealed blocks plus one partial
+//!   f32 tail. Blocks are recycled when a request completes, so KV
+//!   memory scales with *live tokens*, not `max_batch × capacity`.
+//!
+//! On top of paging, sealed blocks can be group-quantized
+//! ([`KvDtype::Q8`]/[`KvDtype::Q4`]) with per-group scales reusing the
+//! paper's Eq. 1–3 quantizer (`quant/group.rs`). The newest partial
+//! block always stays f32; attention dequantizes sealed blocks into
+//! scratch block-wise (`key_segment`/`value_segment`).
+//!
+//! Overflow is a typed [`CacheFull`] error (not a panic), so the
+//! serving engine can evict or reject a sequence instead of poisoning
+//! the router thread.
 
-#[derive(Clone, Debug)]
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::quant::group::QuantParams;
+
+/// Positions per paged KV block. 16 matches the vLLM default and keeps
+/// per-block quantization groups aligned with the weight-side G=16.
+pub const KV_BLOCK: usize = 16;
+
+/// Storage dtype of *sealed* KV blocks (the partial tail is always f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvDtype {
+    F32,
+    Q8,
+    Q4,
+}
+
+impl KvDtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Q8 => "q8",
+            KvDtype::Q4 => "q4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "" => Some(KvDtype::F32),
+            "q8" | "int8" => Some(KvDtype::Q8),
+            "q4" | "int4" => Some(KvDtype::Q4),
+            _ => None,
+        }
+    }
+
+    /// Default dtype, honoring `GQSA_KV_DTYPE` (how CI pins its KV
+    /// matrix legs). Unknown values fall back to f32.
+    pub fn from_env() -> Self {
+        std::env::var("GQSA_KV_DTYPE")
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or(KvDtype::F32)
+    }
+
+    /// Quantization bit width (None for f32).
+    pub fn bits(self) -> Option<u32> {
+        match self {
+            KvDtype::F32 => None,
+            KvDtype::Q8 => Some(8),
+            KvDtype::Q4 => Some(4),
+        }
+    }
+}
+
+/// Typed cache-overflow error: the engine catches this to evict or
+/// reject a sequence instead of crashing the router thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheFull {
+    /// The sequence hit its per-sequence position capacity.
+    Capacity { len: usize, capacity: usize },
+    /// The shared block pool has no free blocks left.
+    PoolExhausted { needed: usize, free: usize },
+}
+
+impl fmt::Display for CacheFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CacheFull::Capacity { len, capacity } => {
+                write!(f, "kv cache full: len {len} at capacity {capacity}")
+            }
+            CacheFull::PoolExhausted { needed, free } => {
+                write!(f, "kv block pool exhausted: need {needed} blocks, {free} free")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheFull {}
+
+/// Pool blocks sealed after appending `n` positions from zero (the
+/// lazy-seal rule: position p triggers a seal iff p > 0 and p % B == 0,
+/// so a just-filled tail is sealed by the *next* append).
+#[inline]
+pub fn blocks_for(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (n - 1) / KV_BLOCK
+    }
+}
+
+/// New pool blocks consumed by appending `t` more positions to a
+/// sequence currently at `len`.
+#[inline]
+pub fn blocks_needed(len: usize, t: usize) -> usize {
+    blocks_for(len + t) - blocks_for(len)
+}
+
+/// Block geometry + dtype shared by a pool and its blocks.
+#[derive(Clone, Copy, Debug)]
+struct KvGeom {
+    n_heads: usize,
+    head_dim: usize,
+    dtype: KvDtype,
+    /// per-row quantization group (a divisor of head_dim)
+    qgroup: usize,
+}
+
+impl KvGeom {
+    fn new(n_heads: usize, head_dim: usize, dtype: KvDtype) -> Self {
+        // largest power-of-two divisor of head_dim up to 32, so groups
+        // stay fine-grained without straddling rows
+        let mut qgroup = head_dim.max(1);
+        for cand in [32usize, 16, 8, 4] {
+            if head_dim % cand == 0 {
+                qgroup = cand;
+                break;
+            }
+        }
+        Self { n_heads, head_dim, dtype, qgroup }
+    }
+
+    /// f32 elements per tensor (K or V) in one block.
+    fn elems(&self) -> usize {
+        self.n_heads * KV_BLOCK * self.head_dim
+    }
+
+    /// packed code bytes per (head, slot) row.
+    fn row_bytes(&self) -> usize {
+        match self.dtype {
+            KvDtype::F32 => 0,
+            KvDtype::Q8 => self.head_dim,
+            KvDtype::Q4 => self.head_dim.div_ceil(2),
+        }
+    }
+
+    fn groups_per_row(&self) -> usize {
+        self.head_dim.div_ceil(self.qgroup)
+    }
+
+    /// On-device bytes of one sealed block (K + V).
+    fn block_bytes(&self) -> usize {
+        match self.dtype {
+            KvDtype::F32 => 2 * self.elems() * 4,
+            _ => {
+                let rows = self.n_heads * KV_BLOCK;
+                // codes + (f32 scale + f32 zero) per group
+                2 * (rows * self.row_bytes() + rows * self.groups_per_row() * 8)
+            }
+        }
+    }
+}
+
+/// One sealed block: K/V for `KV_BLOCK` positions of one layer, either
+/// f32 planes or per-group quantized codes. Owned by the sequence that
+/// allocated it; returned to the pool on release.
+#[derive(Debug, Default)]
+pub struct KvBlock {
+    kf: Vec<f32>,
+    vf: Vec<f32>,
+    kq: Vec<u8>,
+    vq: Vec<u8>,
+    kp: Vec<QuantParams>,
+    vp: Vec<QuantParams>,
+}
+
+impl KvBlock {
+    /// Seal `tail_k`/`tail_v` ((n_heads, KV_BLOCK, head_dim) planes)
+    /// into this block, fully overwriting any previous payload.
+    fn seal_from(&mut self, g: &KvGeom, tail_k: &[f32], tail_v: &[f32]) {
+        match g.dtype {
+            KvDtype::F32 => {
+                self.kf.clear();
+                self.vf.clear();
+                self.kf.extend_from_slice(tail_k);
+                self.vf.extend_from_slice(tail_v);
+            }
+            KvDtype::Q8 | KvDtype::Q4 => {
+                let bits = g.dtype.bits().unwrap();
+                quantize_plane(g, bits, tail_k, &mut self.kq, &mut self.kp);
+                quantize_plane(g, bits, tail_v, &mut self.vq, &mut self.vp);
+            }
+        }
+    }
+
+    /// Dequantize (or copy) this block's rows of head `h` for one
+    /// tensor into `out` ((KV_BLOCK, head_dim) row-major).
+    fn deq_head(&self, g: &KvGeom, value: bool, h: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), KV_BLOCK * g.head_dim);
+        match g.dtype {
+            KvDtype::F32 => {
+                let src = if value { &self.vf } else { &self.kf };
+                let o = h * KV_BLOCK * g.head_dim;
+                out.copy_from_slice(&src[o..o + KV_BLOCK * g.head_dim]);
+            }
+            KvDtype::Q8 | KvDtype::Q4 => {
+                let (codes, params) =
+                    if value { (&self.vq, &self.vp) } else { (&self.kq, &self.kp) };
+                let rb = g.row_bytes();
+                let gpr = g.groups_per_row();
+                for slot in 0..KV_BLOCK {
+                    let row = h * KV_BLOCK + slot;
+                    let crow = &codes[row * rb..(row + 1) * rb];
+                    let prow = &params[row * gpr..(row + 1) * gpr];
+                    let orow = &mut out[slot * g.head_dim..(slot + 1) * g.head_dim];
+                    dequant_row(g, crow, prow, orow);
+                }
+            }
+        }
+    }
+
+    /// f32 plane slice of head `h` (F32 dtype only).
+    fn f32_head(&self, g: &KvGeom, value: bool, h: usize) -> &[f32] {
+        let src = if value { &self.vf } else { &self.kf };
+        let o = h * KV_BLOCK * g.head_dim;
+        &src[o..o + KV_BLOCK * g.head_dim]
+    }
+
+    /// Overwrite payload with poison so any stale read after release
+    /// surfaces as NaN logits instead of silent data leakage.
+    fn poison(&mut self) {
+        for v in self.kf.iter_mut().chain(self.vf.iter_mut()) {
+            *v = f32::NAN;
+        }
+        for b in self.kq.iter_mut().chain(self.vq.iter_mut()) {
+            *b = 0xFF;
+        }
+        for p in self.kp.iter_mut().chain(self.vp.iter_mut()) {
+            *p = QuantParams { scale: f32::NAN, zero: 0.0 };
+        }
+    }
+}
+
+/// Quantize one (n_heads, KV_BLOCK, head_dim) plane row-by-row in
+/// groups of `g.qgroup` (paper Eq. 1–3 via `QuantParams`).
+fn quantize_plane(
+    g: &KvGeom,
+    bits: u32,
+    plane: &[f32],
+    codes: &mut Vec<u8>,
+    params: &mut Vec<QuantParams>,
+) {
+    let rows = g.n_heads * KV_BLOCK;
+    let rb = g.row_bytes();
+    codes.clear();
+    codes.resize(rows * rb, 0);
+    params.clear();
+    params.reserve(rows * g.groups_per_row());
+    for r in 0..rows {
+        let row = &plane[r * g.head_dim..(r + 1) * g.head_dim];
+        let crow = &mut codes[r * rb..(r + 1) * rb];
+        let mut ci = 0usize; // element index within the row
+        for chunk in row.chunks(g.qgroup) {
+            let p = QuantParams::fit(chunk, bits);
+            for &w in chunk {
+                let q = p.quantize(w, bits);
+                match g.dtype {
+                    KvDtype::Q8 => crow[ci] = q,
+                    KvDtype::Q4 => {
+                        let byte = &mut crow[ci / 2];
+                        if ci % 2 == 0 {
+                            *byte = (*byte & 0xF0) | (q & 0x0F);
+                        } else {
+                            *byte = (*byte & 0x0F) | (q << 4);
+                        }
+                    }
+                    KvDtype::F32 => unreachable!(),
+                }
+                ci += 1;
+            }
+            params.push(p);
+        }
+    }
+}
+
+/// Dequantize one packed row back to f32.
+fn dequant_row(g: &KvGeom, codes: &[u8], params: &[QuantParams], out: &mut [f32]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let q = match g.dtype {
+            KvDtype::Q8 => codes[i],
+            KvDtype::Q4 => {
+                let b = codes[i / 2];
+                if i % 2 == 0 {
+                    b & 0x0F
+                } else {
+                    b >> 4
+                }
+            }
+            KvDtype::F32 => unreachable!(),
+        };
+        *o = params[i / g.qgroup].dequantize(q);
+    }
+}
+
+#[derive(Default)]
+struct PoolInner {
+    free: Vec<KvBlock>,
+    in_use: usize,
+    allocs: u64,
+    frees: u64,
+    peak_in_use: usize,
+}
+
+/// Counter snapshot for metrics / the `/report` string.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvPoolStats {
+    pub total_blocks: usize,
+    pub blocks_in_use: usize,
+    pub peak_in_use: usize,
+    pub allocs: u64,
+    pub frees: u64,
+    pub bytes_per_block: usize,
+}
+
+impl KvPoolStats {
+    pub fn bytes_in_use(&self) -> usize {
+        self.blocks_in_use * self.bytes_per_block
+    }
+}
+
+/// Process-wide allocator of fixed-size KV blocks. Hands out owned
+/// [`KvBlock`] storage (so reads never take the lock); tracks a hard
+/// budget so the engine can admit by free-block count. Released blocks
+/// are poisoned, then recycled.
+pub struct KvBlockPool {
+    geom: KvGeom,
+    total: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvBlockPool {
+    pub fn new(n_heads: usize, head_dim: usize, dtype: KvDtype, total_blocks: usize) -> Arc<Self> {
+        Arc::new(Self {
+            geom: KvGeom::new(n_heads, head_dim, dtype),
+            total: total_blocks.max(1),
+            inner: Mutex::new(PoolInner::default()),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.geom.dtype
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.total - self.lock().in_use
+    }
+
+    /// On-device bytes of one sealed block (K + V payload).
+    pub fn bytes_per_block(&self) -> usize {
+        self.geom.block_bytes()
+    }
+
+    /// Take a block, or None when the budget is exhausted.
+    pub fn alloc(&self) -> Option<KvBlock> {
+        let mut g = self.lock();
+        if g.in_use >= self.total {
+            return None;
+        }
+        g.in_use += 1;
+        g.allocs += 1;
+        g.peak_in_use = g.peak_in_use.max(g.in_use);
+        Some(g.free.pop().unwrap_or_default())
+    }
+
+    /// Return a block to the pool (poisons the payload first).
+    pub fn release(&self, mut b: KvBlock) {
+        b.poison();
+        let mut g = self.lock();
+        debug_assert!(g.in_use > 0, "kv pool release without matching alloc");
+        g.in_use = g.in_use.saturating_sub(1);
+        g.frees += 1;
+        g.free.push(b);
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let g = self.lock();
+        KvPoolStats {
+            total_blocks: self.total,
+            blocks_in_use: g.in_use,
+            peak_in_use: g.peak_in_use,
+            allocs: g.allocs,
+            frees: g.frees,
+            bytes_per_block: self.geom.block_bytes(),
+        }
+    }
+}
+
+enum Store {
+    Slab {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Paged {
+        pool: Arc<KvBlockPool>,
+        sealed: Vec<KvBlock>,
+        /// newest partial block, always f32, (n_heads, KV_BLOCK, head_dim)
+        tail_k: Vec<f32>,
+        tail_v: Vec<f32>,
+    },
+}
+
+/// One layer's KV store (slab or paged — see module docs).
 pub struct LayerKv {
     pub n_heads: usize,
     pub head_dim: usize,
     pub capacity: usize,
     pub len: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    store: Store,
 }
 
 impl LayerKv {
+    /// Fixed-capacity slab layout (the original, bit-exactness baseline).
     pub fn new(n_heads: usize, head_dim: usize, capacity: usize) -> Self {
         Self {
             n_heads,
             head_dim,
             capacity,
             len: 0,
-            k: vec![0.0; n_heads * capacity * head_dim],
-            v: vec![0.0; n_heads * capacity * head_dim],
+            store: Store::Slab {
+                k: vec![0.0; n_heads * capacity * head_dim],
+                v: vec![0.0; n_heads * capacity * head_dim],
+            },
+        }
+    }
+
+    /// Paged layout drawing sealed blocks from `pool`.
+    pub fn paged(pool: Arc<KvBlockPool>, capacity: usize) -> Self {
+        let g = pool.geom;
+        Self {
+            n_heads: g.n_heads,
+            head_dim: g.head_dim,
+            capacity,
+            len: 0,
+            store: Store::Paged {
+                tail_k: vec![0.0; g.elems()],
+                tail_v: vec![0.0; g.elems()],
+                sealed: Vec::with_capacity(capacity.div_ceil(KV_BLOCK)),
+                pool,
+            },
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, Store::Paged { .. })
+    }
+
+    /// The shared pool, when paged.
+    pub fn pool(&self) -> Option<&Arc<KvBlockPool>> {
+        match &self.store {
+            Store::Paged { pool, .. } => Some(pool),
+            Store::Slab { .. } => None,
+        }
+    }
+
+    /// New pool blocks an append of `t` positions would consume (0 for
+    /// slab layers).
+    pub fn blocks_needed(&self, t: usize) -> usize {
+        match &self.store {
+            Store::Slab { .. } => 0,
+            Store::Paged { .. } => blocks_needed(self.len, t),
+        }
+    }
+
+    /// Sealed pool blocks this layer currently holds (0 for slab).
+    pub fn sealed_blocks(&self) -> usize {
+        match &self.store {
+            Store::Slab { .. } => 0,
+            Store::Paged { sealed, .. } => sealed.len(),
         }
     }
 
     /// Append one position's K/V (already head-major: (H, Dh) flat).
-    pub fn append(&mut self, k: &[f32], v: &[f32]) {
-        assert!(self.len < self.capacity, "kv cache overflow");
+    pub fn append(&mut self, k: &[f32], v: &[f32]) -> Result<(), CacheFull> {
+        if self.len >= self.capacity {
+            return Err(CacheFull::Capacity { len: self.len, capacity: self.capacity });
+        }
         assert_eq!(k.len(), self.n_heads * self.head_dim);
-        for h in 0..self.n_heads {
-            let dst = (h * self.capacity + self.len) * self.head_dim;
-            let src = h * self.head_dim;
-            self.k[dst..dst + self.head_dim].copy_from_slice(&k[src..src + self.head_dim]);
-            self.v[dst..dst + self.head_dim].copy_from_slice(&v[src..src + self.head_dim]);
+        let (n_heads, head_dim, len) = (self.n_heads, self.head_dim, self.len);
+        match &mut self.store {
+            Store::Slab { k: ks, v: vs } => {
+                for h in 0..n_heads {
+                    let dst = (h * self.capacity + len) * head_dim;
+                    let src = h * head_dim;
+                    ks[dst..dst + head_dim].copy_from_slice(&k[src..src + head_dim]);
+                    vs[dst..dst + head_dim].copy_from_slice(&v[src..src + head_dim]);
+                }
+            }
+            Store::Paged { pool, sealed, tail_k, tail_v } => {
+                let mut tail_len = len - sealed.len() * KV_BLOCK;
+                if tail_len == KV_BLOCK {
+                    // tail full: seal it into a fresh pool block
+                    let mut block = pool.alloc().ok_or(CacheFull::PoolExhausted {
+                        needed: 1,
+                        free: 0,
+                    })?;
+                    block.seal_from(&pool.geom, tail_k, tail_v);
+                    sealed.push(block);
+                    tail_len = 0;
+                }
+                for h in 0..n_heads {
+                    let dst = (h * KV_BLOCK + tail_len) * head_dim;
+                    let src = h * head_dim;
+                    tail_k[dst..dst + head_dim].copy_from_slice(&k[src..src + head_dim]);
+                    tail_v[dst..dst + head_dim].copy_from_slice(&v[src..src + head_dim]);
+                }
+            }
         }
         self.len += 1;
+        Ok(())
     }
 
-    /// Key vector of head h at position t.
+    /// Key vector of head h at position t. Works for slab and paged-f32
+    /// layers; quantized positions require `key_segment` (scratch).
     #[inline]
     pub fn key(&self, h: usize, t: usize) -> &[f32] {
-        let o = (h * self.capacity + t) * self.head_dim;
-        &self.k[o..o + self.head_dim]
+        self.vec_at(false, h, t)
     }
 
     #[inline]
     pub fn value(&self, h: usize, t: usize) -> &[f32] {
-        let o = (h * self.capacity + t) * self.head_dim;
-        &self.v[o..o + self.head_dim]
+        self.vec_at(true, h, t)
+    }
+
+    fn vec_at(&self, value: bool, h: usize, t: usize) -> &[f32] {
+        debug_assert!(t < self.len);
+        match &self.store {
+            Store::Slab { k, v } => {
+                let src = if value { v } else { k };
+                let o = (h * self.capacity + t) * self.head_dim;
+                &src[o..o + self.head_dim]
+            }
+            Store::Paged { pool, sealed, tail_k, tail_v } => {
+                let b = t / KV_BLOCK;
+                let slot = t % KV_BLOCK;
+                if b < sealed.len() {
+                    assert!(
+                        pool.geom.dtype == KvDtype::F32,
+                        "quantized KV blocks need key_segment/value_segment (scratch dequant)"
+                    );
+                    let plane = sealed[b].f32_head(&pool.geom, value, h);
+                    &plane[slot * self.head_dim..(slot + 1) * self.head_dim]
+                } else {
+                    let src = if value { tail_v } else { tail_k };
+                    let o = (h * KV_BLOCK + slot) * self.head_dim;
+                    &src[o..o + self.head_dim]
+                }
+            }
+        }
+    }
+
+    /// Number of contiguous storage segments covering positions 0..len
+    /// (slab: 1; paged: one per sealed block, plus the non-empty tail).
+    pub fn n_segments(&self) -> usize {
+        match &self.store {
+            Store::Slab { .. } => usize::from(self.len > 0),
+            Store::Paged { sealed, .. } => {
+                sealed.len() + usize::from(self.len > sealed.len() * KV_BLOCK)
+            }
+        }
+    }
+
+    /// Keys of head `h` in segment `seg` as a flat (rows, head_dim)
+    /// slice, dequantized into `scratch` when the segment is a
+    /// quantized block. Segments cover positions in ascending order, so
+    /// walking seg 0..n_segments visits t = 0..len exactly once.
+    pub fn key_segment<'a>(&'a self, h: usize, seg: usize, scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        self.segment(false, h, seg, scratch)
+    }
+
+    pub fn value_segment<'a>(
+        &'a self,
+        h: usize,
+        seg: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        self.segment(true, h, seg, scratch)
+    }
+
+    fn segment<'a>(
+        &'a self,
+        value: bool,
+        h: usize,
+        seg: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        match &self.store {
+            Store::Slab { k, v } => {
+                let src = if value { v } else { k };
+                let o = h * self.capacity * self.head_dim;
+                &src[o..o + self.len * self.head_dim]
+            }
+            Store::Paged { pool, sealed, tail_k, tail_v } => {
+                if seg < sealed.len() {
+                    match pool.geom.dtype {
+                        KvDtype::F32 => sealed[seg].f32_head(&pool.geom, value, h),
+                        _ => {
+                            scratch.resize(KV_BLOCK * self.head_dim, 0.0);
+                            sealed[seg].deq_head(&pool.geom, value, h, scratch);
+                            &scratch[..]
+                        }
+                    }
+                } else {
+                    let tail_len = self.len - sealed.len() * KV_BLOCK;
+                    let src = if value { tail_v } else { tail_k };
+                    let o = h * KV_BLOCK * self.head_dim;
+                    &src[o..o + tail_len * self.head_dim]
+                }
+            }
+        }
     }
 
     pub fn reset(&mut self) {
         self.len = 0;
+        if let Store::Paged { pool, sealed, .. } = &mut self.store {
+            for b in sealed.drain(..) {
+                pool.release(b);
+            }
+        }
     }
 
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
+        match &self.store {
+            Store::Slab { k, v } => (k.len() + v.len()) * 4,
+            Store::Paged { pool, sealed, tail_k, tail_v } => {
+                sealed.len() * pool.bytes_per_block() + (tail_k.len() + tail_v.len()) * 4
+            }
+        }
+    }
+}
+
+impl Drop for LayerKv {
+    fn drop(&mut self) {
+        // return paged blocks to the pool budget on teardown
+        self.reset();
     }
 }
 
 /// Whole-model cache: one LayerKv per transformer block.
-#[derive(Clone, Debug)]
 pub struct KvCache {
     pub layers: Vec<LayerKv>,
 }
 
 impl KvCache {
+    /// Slab layout (original API, unchanged semantics).
     pub fn new(n_layers: usize, n_heads: usize, head_dim: usize, capacity: usize) -> Self {
         Self {
             layers: (0..n_layers).map(|_| LayerKv::new(n_heads, head_dim, capacity)).collect(),
+        }
+    }
+
+    /// Paged layout: every layer draws sealed blocks from `pool`.
+    pub fn paged(n_layers: usize, pool: &Arc<KvBlockPool>, capacity: usize) -> Self {
+        Self {
+            layers: (0..n_layers).map(|_| LayerKv::paged(Arc::clone(pool), capacity)).collect(),
         }
     }
 
@@ -80,6 +693,44 @@ impl KvCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.capacity)
+    }
+
+    /// Total new pool blocks needed to append `t` positions to every
+    /// layer (0 when slab).
+    pub fn blocks_needed(&self, t: usize) -> usize {
+        self.layers.iter().map(|l| l.blocks_needed(t)).sum()
+    }
+
+    /// Sealed pool blocks currently held across all layers.
+    pub fn blocks_held(&self) -> usize {
+        self.layers.iter().map(|l| l.sealed_blocks()).sum()
+    }
+
+    /// The shared pool, when paged.
+    pub fn pool(&self) -> Option<&Arc<KvBlockPool>> {
+        self.layers.first().and_then(|l| l.pool())
+    }
+
+    /// Pre-flight check that `t` more positions fit (per-sequence
+    /// capacity AND shared pool headroom), without mutating anything —
+    /// so a failing forward leaves the cache unpoisoned.
+    pub fn ensure_room(&self, t: usize) -> Result<(), CacheFull> {
+        let len = self.len();
+        if len + t > self.capacity() {
+            return Err(CacheFull::Capacity { len, capacity: self.capacity() });
+        }
+        if let Some(pool) = self.pool() {
+            let needed = self.blocks_needed(t);
+            let free = pool.free_blocks();
+            if needed > free {
+                return Err(CacheFull::PoolExhausted { needed, free });
+            }
+        }
+        Ok(())
     }
 
     pub fn reset(&mut self) {
@@ -102,7 +753,7 @@ mod tests {
         let mut kv = LayerKv::new(2, 3, 4);
         let k1: Vec<f32> = (0..6).map(|i| i as f32).collect();
         let v1: Vec<f32> = (0..6).map(|i| 10.0 + i as f32).collect();
-        kv.append(&k1, &v1);
+        kv.append(&k1, &v1).unwrap();
         assert_eq!(kv.len, 1);
         assert_eq!(kv.key(0, 0), &[0.0, 1.0, 2.0]);
         assert_eq!(kv.key(1, 0), &[3.0, 4.0, 5.0]);
@@ -110,18 +761,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "overflow")]
-    fn overflow_panics() {
+    fn overflow_is_typed_error_not_panic() {
         let mut kv = LayerKv::new(1, 2, 1);
-        kv.append(&[0.0, 0.0], &[0.0, 0.0]);
-        kv.append(&[0.0, 0.0], &[0.0, 0.0]);
+        kv.append(&[0.0, 0.0], &[0.0, 0.0]).unwrap();
+        let err = kv.append(&[0.0, 0.0], &[0.0, 0.0]).unwrap_err();
+        assert_eq!(err, CacheFull::Capacity { len: 1, capacity: 1 });
+        assert_eq!(kv.len, 1, "failed append must not change state");
     }
 
     #[test]
     fn reset_allows_reuse() {
         let mut kv = KvCache::new(2, 1, 2, 3);
-        kv.layers[0].append(&[1.0, 2.0], &[3.0, 4.0]);
-        kv.layers[1].append(&[1.0, 2.0], &[3.0, 4.0]);
+        kv.layers[0].append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        kv.layers[1].append(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
         assert_eq!(kv.len(), 1);
         kv.reset();
         assert_eq!(kv.len(), 0);
@@ -131,5 +783,142 @@ mod tests {
     fn bytes_accounting() {
         let kv = KvCache::new(4, 4, 64, 288);
         assert_eq!(kv.bytes(), 4 * 2 * 4 * 64 * 288 * 4);
+    }
+
+    #[test]
+    fn blocks_needed_math() {
+        let b = KV_BLOCK;
+        assert_eq!(blocks_for(0), 0);
+        assert_eq!(blocks_for(b), 0); // full tail seals on the NEXT append
+        assert_eq!(blocks_for(b + 1), 1);
+        assert_eq!(blocks_for(3 * b), 2);
+        assert_eq!(blocks_needed(0, b), 0);
+        assert_eq!(blocks_needed(0, b + 1), 1);
+        assert_eq!(blocks_needed(b, 1), 1);
+        assert_eq!(blocks_needed(b + 1, b), 1);
+    }
+
+    fn fill(kv: &mut LayerKv, n: usize, seed: f32) {
+        let d = kv.n_heads * kv.head_dim;
+        for t in 0..n {
+            let k: Vec<f32> = (0..d).map(|i| seed + (t * d + i) as f32 * 0.01).collect();
+            let v: Vec<f32> = (0..d).map(|i| -seed - (t * d + i) as f32 * 0.02).collect();
+            kv.append(&k, &v).unwrap();
+        }
+    }
+
+    #[test]
+    fn paged_f32_matches_slab_reads() {
+        let pool = KvBlockPool::new(2, 8, KvDtype::F32, 16);
+        let n = 3 * KV_BLOCK + 5; // straddles block boundaries
+        let mut slab = LayerKv::new(2, 8, n + 1);
+        let mut paged = LayerKv::paged(Arc::clone(&pool), n + 1);
+        fill(&mut slab, n, 0.5);
+        fill(&mut paged, n, 0.5);
+        for h in 0..2 {
+            for t in 0..n {
+                assert_eq!(slab.key(h, t), paged.key(h, t), "h{h} t{t}");
+                assert_eq!(slab.value(h, t), paged.value(h, t), "h{h} t{t}");
+            }
+            // segment walk visits the same values in order
+            let mut scratch = Vec::new();
+            let mut t = 0usize;
+            for seg in 0..paged.n_segments() {
+                let ks = paged.key_segment(h, seg, &mut scratch).to_vec();
+                for row in ks.chunks_exact(8) {
+                    assert_eq!(row, slab.key(h, t));
+                    t += 1;
+                }
+            }
+            assert_eq!(t, n);
+        }
+    }
+
+    #[test]
+    fn quantized_error_bounded_per_group() {
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let pool = KvBlockPool::new(2, 8, dtype, 8);
+            let n = 2 * KV_BLOCK; // one sealed block + full tail
+            let mut slab = LayerKv::new(2, 8, n + 1);
+            let mut paged = LayerKv::paged(Arc::clone(&pool), n + 1);
+            fill(&mut slab, n, 1.5);
+            fill(&mut paged, n, 1.5);
+            // force the full tail to seal so block 1 is quantized too
+            let d = 2 * 8;
+            slab.append(&vec![0.25; d], &vec![0.5; d]).unwrap();
+            paged.append(&vec![0.25; d], &vec![0.5; d]).unwrap();
+            let mut scratch = Vec::new();
+            for h in 0..2 {
+                let mut t = 0usize;
+                for seg in 0..paged.n_segments() {
+                    let ks = paged.key_segment(h, seg, &mut scratch).to_vec();
+                    for row in ks.chunks_exact(8) {
+                        let exact = slab.key(h, t);
+                        // per-group bound: |w - deq| <= scale (Eq. 1-3)
+                        let span = exact.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+                            - exact.iter().cloned().fold(f32::INFINITY, f32::min);
+                        let qmax = (1u32 << dtype.bits().unwrap()) as f32 - 1.0;
+                        let bound = (span / qmax).max(1e-6) * 1.0001 + 1e-6;
+                        for (a, b) in row.iter().zip(exact) {
+                            assert!(
+                                (a - b).abs() <= bound,
+                                "{:?} h{h} t{t}: {a} vs {b} (bound {bound})",
+                                dtype
+                            );
+                        }
+                        t += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_budget_and_recycling() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 2);
+        assert_eq!(pool.free_blocks(), 2);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        // 2 sealed blocks max: appending past 2*B+B positions must fail
+        let d = 4;
+        let mut appended = 0usize;
+        let err = loop {
+            match kv.append(&vec![1.0; d], &vec![2.0; d]) {
+                Ok(()) => appended += 1,
+                Err(e) => break e,
+            }
+            assert!(appended < 200, "pool budget never enforced");
+        };
+        assert!(matches!(err, CacheFull::PoolExhausted { .. }));
+        assert_eq!(appended, 3 * KV_BLOCK); // 2 sealed + 1 full tail
+        assert_eq!(pool.free_blocks(), 0);
+        kv.reset();
+        assert_eq!(pool.free_blocks(), 2, "reset must return blocks");
+        let s = pool.stats();
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.frees, 2);
+    }
+
+    #[test]
+    fn released_blocks_are_poisoned() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 1);
+        let mut b = pool.alloc().unwrap();
+        let g = KvGeom::new(1, 4, KvDtype::F32);
+        b.seal_from(&g, &vec![7.0; g.elems()], &vec![8.0; g.elems()]);
+        pool.release(b);
+        let b2 = pool.alloc().unwrap();
+        assert!(b2.kf.iter().all(|v| v.is_nan()), "stale K payload leaked");
+        assert!(b2.vf.iter().all(|v| v.is_nan()), "stale V payload leaked");
+        pool.release(b2);
+    }
+
+    #[test]
+    fn drop_returns_blocks_to_pool() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::Q8, 4);
+        {
+            let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+            fill(&mut kv, 2 * KV_BLOCK + 3, 0.1);
+            assert_eq!(pool.free_blocks(), 2);
+        }
+        assert_eq!(pool.free_blocks(), 4);
     }
 }

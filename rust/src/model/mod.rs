@@ -9,5 +9,5 @@ pub mod tokenizer;
 pub mod transformer;
 
 pub use config::ModelConfig;
-pub use kv_cache::KvCache;
+pub use kv_cache::{CacheFull, KvBlockPool, KvCache, KvDtype, KvPoolStats, KV_BLOCK};
 pub use transformer::{BlockScratch, ExecHandle, LinearKind, Scratch, Transformer};

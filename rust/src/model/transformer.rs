@@ -22,7 +22,7 @@ use crate::gqs::gemv::gqs_gemv;
 use crate::gqs::gemv_dense::{dense_gemm, dense_gemv, QuantDense, Semi24Kernel};
 use crate::gqs::layer::GqsLayer;
 use crate::model::config::ModelConfig;
-use crate::model::kv_cache::{KvCache, LayerKv};
+use crate::model::kv_cache::{CacheFull, KvCache, LayerKv};
 use crate::quant::act::fake_quant_i8;
 use crate::sparse::group_prune::group_prune;
 use crate::sparse::saliency::SaliencyMetric;
@@ -158,6 +158,8 @@ pub struct Scratch {
     pub att: Vec<f32>,
     pub logits: Vec<f32>,
     pub gsum: Vec<f32>,
+    /// block-dequant scratch for quantized paged KV segments.
+    pub kv_deq: Vec<f32>,
     /// parallel-executor handle (`ExecHandle::sequential()` by default).
     pub exec: ExecHandle,
 }
@@ -184,6 +186,7 @@ impl Scratch {
             att: vec![0.0; cfg.max_seq],
             logits: vec![0.0; cfg.vocab],
             gsum: Vec::new(),
+            kv_deq: Vec::new(),
             exec,
         }
     }
@@ -207,6 +210,8 @@ pub struct BlockScratch {
     pub ff_n: Mat,
     /// attention scores for one (query, head) — max_seq long.
     pub att: Vec<f32>,
+    /// block-dequant scratch for quantized paged KV segments.
+    pub kv_deq: Vec<f32>,
     /// (T, vocab) logits, one row per block token.
     pub logits: Mat,
     /// per-row KV positions (batched decode).
@@ -237,6 +242,7 @@ impl BlockScratch {
             ff_b: Mat::zeros(t, ff),
             ff_n: Mat::zeros(t, ff),
             att: vec![0.0; cfg.max_seq],
+            kv_deq: Vec::new(),
             logits: Mat::zeros(t, cfg.vocab),
             pos: Vec::with_capacity(t),
             mm: MatmulScratch::new(),
@@ -452,24 +458,43 @@ impl Transformer {
     /// Causal attention of one query row against a layer cache (its
     /// first `cache.len` positions): softmax scores in `att_buf`,
     /// per-head context written into `out` (a full d_model row).
-    fn attend(&self, cache: &LayerKv, q: &[f32], att_buf: &mut [f32], out: &mut [f32]) {
+    ///
+    /// Walks the cache's storage segments in position order — for a
+    /// slab that is one contiguous plane, for a paged cache one sealed
+    /// block at a time (quantized blocks dequantize into `kv_deq`).
+    /// The per-position float op order is identical across layouts, so
+    /// paged-f32 logits are bit-exact with the slab path.
+    fn attend(
+        &self,
+        cache: &LayerKv,
+        q: &[f32],
+        att_buf: &mut [f32],
+        kv_deq: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
         let h = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
         let t_now = cache.len;
         let inv_sqrt = 1.0 / (dh as f32).sqrt();
+        let n_seg = cache.n_segments();
         for head in 0..h {
             let qh = &q[head * dh..(head + 1) * dh];
             let att = &mut att_buf[..t_now];
             let mut maxv = f32::NEG_INFINITY;
-            for (t, a) in att.iter_mut().enumerate() {
-                let kt = cache.key(head, t);
-                let mut dot = 0.0;
-                for i in 0..dh {
-                    dot += qh[i] * kt[i];
+            let mut t = 0usize;
+            for seg in 0..n_seg {
+                let ks = cache.key_segment(head, seg, kv_deq);
+                for kt in ks.chunks_exact(dh) {
+                    let mut dot = 0.0;
+                    for i in 0..dh {
+                        dot += qh[i] * kt[i];
+                    }
+                    att[t] = dot * inv_sqrt;
+                    maxv = maxv.max(att[t]);
+                    t += 1;
                 }
-                *a = dot * inv_sqrt;
-                maxv = maxv.max(*a);
             }
+            debug_assert_eq!(t, t_now);
             let mut denom = 0.0;
             for a in att.iter_mut() {
                 *a = (*a - maxv).exp();
@@ -477,11 +502,15 @@ impl Transformer {
             }
             let o = &mut out[head * dh..(head + 1) * dh];
             o.fill(0.0);
-            for t in 0..t_now {
-                let wgt = att[t] / denom;
-                let vt = cache.value(head, t);
-                for i in 0..dh {
-                    o[i] += wgt * vt[i];
+            let mut t = 0usize;
+            for seg in 0..n_seg {
+                let vs = cache.value_segment(head, seg, kv_deq);
+                for vt in vs.chunks_exact(dh) {
+                    let wgt = att[t] / denom;
+                    for i in 0..dh {
+                        o[i] += wgt * vt[i];
+                    }
+                    t += 1;
                 }
             }
         }
@@ -544,9 +573,9 @@ impl Transformer {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let pos = kv.len();
-        if pos >= kv.layers[0].capacity {
-            bail!("kv capacity exceeded");
-        }
+        // typed pre-flight: leaves the cache unpoisoned on failure so
+        // the engine can retire just this sequence
+        kv.ensure_room(1)?;
 
         let s = scratch;
         s.x.copy_from_slice(self.tok_emb.row(token as usize));
@@ -580,8 +609,8 @@ impl Transformer {
                 self.rope(&mut s.q, pos);
                 self.rope(&mut s.k, pos);
             }
-            kv.layers[l].append(&s.k, &s.v);
-            self.attend(&kv.layers[l], &s.q, &mut s.att, &mut s.attn_out);
+            kv.layers[l].append(&s.k, &s.v)?;
+            self.attend(&kv.layers[l], &s.q, &mut s.att, &mut s.kv_deq, &mut s.attn_out);
             self.lin(
                 &format!("{pre}attn.wo"),
                 &mut s.attn_out,
@@ -700,9 +729,7 @@ impl Transformer {
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let base = kv.len();
-        if base + t > kv.layers[0].capacity {
-            bail!("kv capacity exceeded");
-        }
+        kv.ensure_room(t)?;
         s.prepare(t);
         for (ti, &tok) in tokens.iter().enumerate() {
             let row = s.x.row_mut(ti);
@@ -752,8 +779,14 @@ impl Transformer {
             // causal: append position base+ti before attending query ti,
             // so token ti sees exactly positions 0..=base+ti
             for ti in 0..t {
-                kv.layers[l].append(s.k.row(ti), s.v.row(ti));
-                self.attend(&kv.layers[l], s.q.row(ti), &mut s.att, s.attn_out.row_mut(ti));
+                kv.layers[l].append(s.k.row(ti), s.v.row(ti))?;
+                self.attend(
+                    &kv.layers[l],
+                    s.q.row(ti),
+                    &mut s.att,
+                    &mut s.kv_deq,
+                    s.attn_out.row_mut(ti),
+                );
             }
             self.lin_block(
                 &format!("{pre}attn.wo"),
@@ -859,11 +892,25 @@ impl Transformer {
         let d = cfg.d_model;
         s.prepare(t);
         s.pos.clear();
+        // aggregate pre-flight: per-sequence capacity plus the SHARED
+        // pool's headroom summed across the whole batch, so a mid-batch
+        // allocation failure can never poison batch-mates' caches
+        let mut pool_needed = 0usize;
+        let mut pool_free: Option<usize> = None;
         for kv in kvs.iter() {
-            if kv.len() >= kv.layers[0].capacity {
-                bail!("kv capacity exceeded");
+            if kv.len() >= kv.capacity() {
+                return Err(CacheFull::Capacity { len: kv.len(), capacity: kv.capacity() }.into());
+            }
+            pool_needed += kv.blocks_needed(1);
+            if pool_free.is_none() {
+                pool_free = kv.pool().map(|p| p.free_blocks());
             }
             s.pos.push(kv.len());
+        }
+        if let Some(free) = pool_free {
+            if pool_needed > free {
+                return Err(CacheFull::PoolExhausted { needed: pool_needed, free }.into());
+            }
         }
         for (ti, &tok) in tokens.iter().enumerate() {
             let pos = s.pos[ti];
@@ -911,8 +958,14 @@ impl Transformer {
                 }
             }
             for ti in 0..t {
-                kvs[ti].layers[l].append(s.k.row(ti), s.v.row(ti));
-                self.attend(&kvs[ti].layers[l], s.q.row(ti), &mut s.att, s.attn_out.row_mut(ti));
+                kvs[ti].layers[l].append(s.k.row(ti), s.v.row(ti))?;
+                self.attend(
+                    &kvs[ti].layers[l],
+                    s.q.row(ti),
+                    &mut s.att,
+                    &mut s.kv_deq,
+                    s.attn_out.row_mut(ti),
+                );
             }
             self.lin_block(
                 &format!("{pre}attn.wo"),
