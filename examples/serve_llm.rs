@@ -30,11 +30,20 @@ fn main() -> anyhow::Result<()> {
     // KV is paged by default (16-position blocks from a shared pool);
     // GQSA_KV_DTYPE=q8|q4 group-quantizes sealed blocks, and
     // GQSA_KV_LAYOUT=slab restores the legacy fixed slab.
+    // Speculative decoding: GQSA_SPEC_K=4 drafts 4 tokens per round on
+    // a W2S75 re-encoding of the same checkpoint (GQSA_SPEC_DRAFT
+    // overrides) and verifies them in one target weight walk. Greedy
+    // output is token-identical to plain decode.
     let kv_cfg = EngineConfig::default();
     println!(
-        "== native GQS engine (W4S50%, BQPO+E2E-OQP) — kv {} {} ==",
+        "== native GQS engine (W4S50%, BQPO+E2E-OQP) — kv {} {}, spec {} ==",
         if kv_cfg.kv_paged { "paged" } else { "slab" },
-        kv_cfg.kv_dtype.name()
+        kv_cfg.kv_dtype.name(),
+        if kv_cfg.spec_k > 0 {
+            format!("k={} draft={}", kv_cfg.spec_k, kv_cfg.spec_draft.name())
+        } else {
+            "off".into()
+        }
     );
     let art2 = art.clone();
     let srv = Server::start(move || {
@@ -63,11 +72,12 @@ fn main() -> anyhow::Result<()> {
         total += resp.tokens.len();
         if i < 4 {
             println!(
-                "  [{}] {:?} -> {:?} (ttft {:.1} ms)",
+                "  [{}] {:?} -> {:?} (ttft {:.1} ms, finish {:?})",
                 resp.id,
                 prompts[i % prompts.len()],
                 tok.decode(&resp.tokens[..resp.tokens.len().min(32)]),
-                resp.timing.ttft_us as f64 / 1000.0
+                resp.timing.ttft_us as f64 / 1000.0,
+                resp.finish,
             );
         }
     }

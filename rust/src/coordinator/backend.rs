@@ -45,6 +45,18 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// The native transformer, when this backend is the rust GQS
+    /// engine. Speculative decoding is native-only (it re-encodes the
+    /// loaded linears into a draft tier and drives `forward_block`
+    /// directly); PJRT backends return None and decode plainly.
+    pub fn native(&self) -> Option<&Transformer> {
+        match self {
+            Backend::Native(t) => Some(t),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
     pub fn vocab(&self) -> usize {
         match self {
             Backend::Native(t) => t.cfg.vocab,

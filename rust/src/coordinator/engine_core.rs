@@ -7,9 +7,12 @@
 //!      `prefill_chunk` prompt tokens as ONE `step_block` call — the
 //!      backend walks each weight once per chunk instead of once per
 //!      token,
-//!   3. gather the next token of every sequence in decode into a single
-//!      `step_batch` call — one batched weight walk serves the whole
-//!      decode batch (attention stays per-sequence),
+//!   3. decode: sequences with a draft tier run a self-speculative
+//!      round (draft k tokens cheaply, verify all k+1 in ONE target
+//!      `forward_block`, roll rejected positions out of the KV); the
+//!      rest gather into a single `step_batch` call — one batched
+//!      weight walk serves the whole decode batch (attention stays
+//!      per-sequence),
 //!   4. retire finished sequences, returning their KV slot to the pool.
 //!
 //! Prefill and decode interleave across iterations, so a long prompt
@@ -31,7 +34,8 @@ use crate::coordinator::request::{FinishReason, Request, RequestTiming, Response
 use crate::engine::executor::{Decomposition, ExecConfig, Executor};
 use crate::model::kv_cache::{blocks_for, CacheFull, KvBlockPool, KvDtype, KV_BLOCK};
 use crate::model::sampler::sample;
-use crate::model::BlockScratch;
+use crate::model::{BlockScratch, KvCache};
+use crate::spec::{build_draft, DraftConfig, SpecController, SpecRound};
 use crate::util::XorShift;
 
 #[derive(Clone, Copy, Debug)]
@@ -57,6 +61,14 @@ pub struct EngineConfig {
     /// block-pool budget in blocks; 0 = auto-size so `max_batch`
     /// full-capacity sequences fit (matching the old slab admission).
     pub kv_pool_blocks: usize,
+    /// draft tokens per self-speculative decode round (0 = off); the
+    /// default honors `GQSA_SPEC_K`. Greedy speculative output is
+    /// token-identical to plain greedy decode, so flipping this never
+    /// changes content — only latency. Native backend only.
+    pub spec_k: usize,
+    /// the draft tier's GQS operating point (bits/sparsity/group); the
+    /// default honors `GQSA_SPEC_DRAFT` (e.g. "w2s75g16").
+    pub spec_draft: DraftConfig,
 }
 
 impl Default for EngineConfig {
@@ -74,6 +86,11 @@ impl Default for EngineConfig {
             kv_paged,
             kv_dtype: KvDtype::from_env(),
             kv_pool_blocks: 0,
+            spec_k: std::env::var("GQSA_SPEC_K")
+                .ok()
+                .and_then(|s| s.trim().parse().ok())
+                .unwrap_or(0),
+            spec_draft: DraftConfig::from_env(),
         }
     }
 }
@@ -89,6 +106,12 @@ struct ActiveSeq {
     /// set when the KV pool ran dry under this sequence — it retires
     /// at the end of the tick with whatever it generated so far
     evicted: bool,
+    /// draft-tier KV for speculative decode (None = plain decode).
+    /// Shares the engine's block pool in paged mode, so draft blocks
+    /// count against the same budget as target blocks.
+    draft_kv: Option<KvCache>,
+    /// resolved draft length for this sequence (0 = plain decode)
+    spec_k: usize,
 }
 
 /// Single-threaded engine with continuous batching. Drive it with
@@ -103,7 +126,12 @@ pub struct EngineCore {
     /// KV storage mode; `Paged` owns the shared block pool that
     /// admission and eviction budget against.
     kv_mode: KvMode,
+    /// self-speculative decoding: the draft tier + round driver
+    /// (built when `cfg.spec_k > 0` on a Native backend).
+    spec: Option<SpecController>,
     n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
     waiting: VecDeque<(Request, Instant)>,
     active: Vec<ActiveSeq>,
     pool: Vec<SeqState>,
@@ -120,10 +148,13 @@ impl EngineCore {
         let native = matches!(backend, Backend::Native(_));
         let kv_mode = if native && cfg.kv_paged {
             let per_seq = cfg.kv_capacity.div_ceil(KV_BLOCK);
+            // speculative sequences hold a draft KV mirroring the
+            // target's fed context, so the auto-sized budget doubles
+            let tiers = if cfg.spec_k > 0 { 2 } else { 1 };
             let total = if cfg.kv_pool_blocks > 0 {
                 cfg.kv_pool_blocks
             } else {
-                cfg.max_batch * model_cfg.n_layers * per_seq
+                cfg.max_batch * model_cfg.n_layers * per_seq * tiers
             };
             KvMode::Paged(KvBlockPool::new(
                 model_cfg.n_heads,
@@ -155,17 +186,40 @@ impl EngineCore {
             exec_cfg.adaptive = false;
         }
         let exec = Executor::new(exec_cfg);
-        // one block scratch serves both roles: prefill chunks (rows =
-        // chunk) and batched decode (rows = batch)
-        let t_max = cfg.prefill_chunk.max(cfg.max_batch).max(1);
+        // one block scratch serves three roles: prefill chunks (rows =
+        // chunk), batched decode (rows = batch), and speculative verify
+        // blocks (rows = spec_k + 1)
+        let t_max = cfg.prefill_chunk.max(cfg.max_batch).max(cfg.spec_k + 1).max(1);
         let block = backend.new_block_scratch(model_cfg, t_max, Arc::clone(&exec));
+        // self-speculative decoding: re-encode the loaded linears into
+        // the draft operating point (embeddings/norms Arc-shared, so
+        // the tier costs only its own compressed matrices)
+        let spec = if cfg.spec_k > 0 {
+            match backend.native() {
+                Some(t) => {
+                    let draft = build_draft(t, &cfg.spec_draft)?;
+                    Some(SpecController::new(
+                        draft,
+                        cfg.spec_k,
+                        cfg.spec_draft,
+                        Some(Arc::clone(&exec)),
+                    ))
+                }
+                None => None, // PJRT decodes plainly
+            }
+        } else {
+            None
+        };
         Ok(Self {
             backend,
             cfg,
             metrics: Metrics::default(),
             exec,
             kv_mode,
+            spec,
             n_layers: model_cfg.n_layers,
+            n_heads: model_cfg.n_heads,
+            head_dim: model_cfg.head_dim(),
             waiting: VecDeque::new(),
             active: Vec::new(),
             pool,
@@ -173,6 +227,16 @@ impl EngineCore {
             rng: XorShift::new(0xC0FFEE),
             finished: Vec::new(),
         })
+    }
+
+    /// Resolved draft length for a request: per-request override
+    /// clamped to the engine's configured maximum, 0 when speculative
+    /// decoding is unavailable (disabled, or non-native backend).
+    fn spec_k_for(&self, req: &Request) -> usize {
+        if self.spec.is_none() {
+            return 0;
+        }
+        req.spec_k.map_or(self.cfg.spec_k, |k| k.min(self.cfg.spec_k))
     }
 
     /// The shared KV block pool (None in slab mode / PJRT).
@@ -216,7 +280,12 @@ impl EngineCore {
             if let KvMode::Paged(pool) = &self.kv_mode {
                 let (req, _) = self.waiting.front().unwrap();
                 let fit = req.prompt.len().min(self.cfg.kv_capacity.saturating_sub(1));
-                let needed = self.n_layers * blocks_for(fit + 1);
+                let mut needed = self.n_layers * blocks_for(fit + 1);
+                // a speculative sequence's draft KV mirrors the fed
+                // context, so budget a second copy for it up front
+                if self.spec_k_for(req) > 0 {
+                    needed *= 2;
+                }
                 // reservations accumulate across the loop so an admit
                 // burst can't hand the same free blocks to everyone
                 if !self.active.is_empty() && admit_reserved + needed > pool.free_blocks() {
@@ -231,6 +300,22 @@ impl EngineCore {
                 None => self.backend.new_seq(self.cfg.kv_capacity, &self.kv_mode)?,
             };
             self.backend.reset_seq(&mut state)?;
+            let spec_k = self.spec_k_for(&req);
+            let draft_kv = if spec_k > 0 {
+                Some(match &self.kv_mode {
+                    KvMode::Paged(pool) => {
+                        KvCache::paged(self.n_layers, pool, self.cfg.kv_capacity)
+                    }
+                    KvMode::Slab => KvCache::new(
+                        self.n_layers,
+                        self.n_heads,
+                        self.head_dim,
+                        self.cfg.kv_capacity,
+                    ),
+                })
+            } else {
+                None
+            };
             let mut timing = RequestTiming::default();
             timing.queued_us = submitted.elapsed().as_micros() as u64;
             self.active.push(ActiveSeq {
@@ -241,6 +326,8 @@ impl EngineCore {
                 submitted,
                 timing,
                 evicted: false,
+                draft_kv,
+                spec_k,
             });
         }
 
@@ -306,7 +393,83 @@ impl EngineCore {
             }
         }
 
-        // 3. batched decode: one weight walk for every decoding sequence.
+        // 3a. speculative decode: sequences with a draft tier run one
+        // draft+verify round — k cheap draft steps, then ONE target
+        // forward_block over all k+1 positions, keeping the longest
+        // valid prefix and rolling rejected positions out of both KV
+        // caches. Greedy rounds emit exactly the plain greedy stream.
+        // A round that cannot get KV resources falls back to the plain
+        // batched path below for this tick.
+        if self.spec.is_some() {
+            let Self { spec, backend, active, block, rng, metrics, .. } = &mut *self;
+            let ctrl = spec.as_mut().unwrap();
+            let target = backend.native().expect("spec controller implies native backend");
+            let mut plain: Vec<usize> = Vec::with_capacity(decode_idx.len());
+            for &i in &decode_idx {
+                let seq = &mut active[i];
+                if seq.spec_k == 0 || seq.draft_kv.is_none() {
+                    plain.push(i);
+                    continue;
+                }
+                let kv = match &mut seq.state {
+                    SeqState::Native { kv } => kv,
+                    #[cfg(feature = "pjrt")]
+                    _ => {
+                        plain.push(i);
+                        continue;
+                    }
+                };
+                let remaining = seq.req.max_new_tokens.saturating_sub(seq.generated.len());
+                if remaining == 0 {
+                    continue; // retirement below handles it
+                }
+                let draft_kv = seq.draft_kv.as_mut().unwrap();
+                let mode = seq.req.sampling.to_sampling();
+                match ctrl.round(
+                    target,
+                    kv,
+                    draft_kv,
+                    &seq.req.prompt,
+                    &seq.generated,
+                    seq.spec_k,
+                    remaining,
+                    mode,
+                    rng,
+                    block,
+                )? {
+                    SpecRound::Emitted { tokens, drafted, accepted } => {
+                        metrics.note_spec_round(drafted, accepted);
+                        for tok in tokens {
+                            if seq.generated.len() >= seq.req.max_new_tokens {
+                                break;
+                            }
+                            seq.generated.push(tok);
+                            processed += 1;
+                            if seq.req.stop_token == Some(tok) {
+                                break;
+                            }
+                        }
+                    }
+                    SpecRound::Skip => {
+                        // one token left to emit — decode it plainly,
+                        // keep the draft (this is not pool pressure)
+                        plain.push(i);
+                    }
+                    SpecRound::Fallback => {
+                        // shed the draft tier for this sequence: its
+                        // blocks return to the pool immediately, so a
+                        // speculative sequence can never starve its own
+                        // (or batch-mates') plain decode path
+                        metrics.spec_fallbacks += 1;
+                        seq.draft_kv = None;
+                        plain.push(i);
+                    }
+                }
+            }
+            decode_idx = plain;
+        }
+
+        // 3b. batched decode: one weight walk for every decoding sequence.
         // Paged mode first fits the batch to the pool's free blocks
         // (FIFO: earlier-admitted sequences get theirs first); a
         // sequence that doesn't fit is *deferred* — it keeps its state
@@ -360,10 +523,14 @@ impl EngineCore {
         // can move next tick. (With any forward progress this never
         // fires — deferral alone resolves transient pressure.)
         if processed == 0 && (prefill_stalled > 0 || decode_deferred > 0) {
+            let held = |seq: &ActiveSeq| {
+                self.backend.kv_blocks_held(&seq.state)
+                    + seq.draft_kv.as_ref().map_or(0, |d| d.blocks_held())
+            };
             let victim = (0..self.active.len())
                 .rev()
                 .filter(|&i| !self.active[i].evicted)
-                .find(|&i| self.backend.kv_blocks_held(&self.active[i].state) > 0)
+                .find(|&i| held(&self.active[i]) > 0)
                 .or_else(|| (0..self.active.len()).rev().find(|&i| !self.active[i].evicted));
             if let Some(i) = victim {
                 self.active[i].evicted = true;
@@ -800,5 +967,102 @@ mod tests {
         assert!(r.contains("layout=paged"), "{r}");
         assert!(r.contains("dtype=q8"), "{r}");
         assert!(r.contains("allocs="), "{r}");
+    }
+
+    fn engine_spec(spec_k: usize) -> EngineCore {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 131);
+        let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: 3,
+                prefill_chunk: 4,
+                kv_capacity: 96,
+                spec_k,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn speculative_greedy_tokens_identical_to_plain() {
+        // THE spec contract: turning speculation on never changes a
+        // greedy token, even with batching and mixed prompt lengths
+        let reqs = |e: &mut EngineCore| {
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 18));
+            e.submit(Request::new(2, vec![10, 11], 12));
+            e.submit(Request::new(3, vec![12; 20], 9));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let plain = reqs(&mut engine_spec(0));
+        let mut e = engine_spec(4);
+        let spec = reqs(&mut e);
+        assert_eq!(plain, spec, "speculative greedy diverged from plain decode");
+        assert!(e.metrics.spec_rounds > 0, "speculation never ran");
+        // no KV blocks (target or draft) may leak across retirement
+        if let Some(pool) = e.kv_pool() {
+            assert_eq!(pool.stats().blocks_in_use, 0, "leaked blocks: {:?}", pool.stats());
+        }
+    }
+
+    #[test]
+    fn spec_metrics_and_report() {
+        let mut e = engine_spec(4);
+        e.submit(Request::new(1, vec![5; 12], 20));
+        e.run_to_completion().unwrap();
+        assert!(e.metrics.spec_rounds > 0);
+        assert!(e.metrics.spec_accepted <= e.metrics.spec_drafted);
+        assert!(e.metrics.spec_acceptance_rate() >= 0.0);
+        let r = e.metrics.report();
+        assert!(r.contains("spec: rounds="), "{r}");
+    }
+
+    #[test]
+    fn per_request_spec_override_mixes_with_plain() {
+        let mut e = engine_spec(4);
+        e.submit(Request::new(1, vec![3; 8], 10).with_spec_k(0));
+        e.submit(Request::new(2, vec![4; 8], 10));
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.tokens.len() == 10));
+        assert!(e.metrics.spec_rounds > 0, "spec'd request never speculated");
+        // and the opted-out request matches a fully plain engine
+        let mut plain = engine_spec(0);
+        plain.submit(Request::new(1, vec![3; 8], 10));
+        let pout = plain.run_to_completion().unwrap();
+        let r1 = out.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.tokens, pout[0].tokens);
+    }
+
+    #[test]
+    fn speculative_stop_token_matches_plain() {
+        // a stop token emitted mid-round must cut acceptance exactly
+        // where plain decode would have stopped
+        let mut probe = engine_spec(0);
+        probe.submit(Request::new(1, vec![2, 3, 4], 30));
+        let stream = probe.run_to_completion().unwrap()[0].tokens.clone();
+        let stop = stream[stream.len() / 2]; // a token mid-stream
+        let run = |spec_k: usize| {
+            let mut e = engine_spec(spec_k);
+            let mut req = Request::new(1, vec![2, 3, 4], 30);
+            req.stop_token = Some(stop);
+            e.submit(req);
+            e.run_to_completion().unwrap()[0].clone()
+        };
+        let plain = run(0);
+        let spec = run(4);
+        assert_eq!(plain.tokens, spec.tokens);
+        assert_eq!(plain.finish, spec.finish);
     }
 }

@@ -29,6 +29,14 @@ pub struct Metrics {
     pub kv_admission_blocked: u64,
     /// decode steps deferred a tick while waiting for free KV blocks.
     pub kv_decode_deferred: u64,
+    /// speculative rounds completed (draft + verify + rollback).
+    pub spec_rounds: u64,
+    /// draft tokens proposed across all speculative rounds.
+    pub spec_drafted: u64,
+    /// draft tokens accepted by target verification.
+    pub spec_accepted: u64,
+    /// speculative rounds abandoned for plain decode (KV pressure).
+    pub spec_fallbacks: u64,
     /// high-water mark of concurrently active sequences.
     pub peak_active_seqs: usize,
     ttft_samples: Vec<f64>,
@@ -81,6 +89,32 @@ impl Metrics {
         self.peak_active_seqs = self.peak_active_seqs.max(n);
     }
 
+    /// Record one speculative round's outcome.
+    pub fn note_spec_round(&mut self, drafted: usize, accepted: usize) {
+        self.spec_rounds += 1;
+        self.spec_drafted += drafted as u64;
+        self.spec_accepted += accepted as u64;
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 when no
+    /// drafting happened yet).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
+    /// Mean accepted draft tokens per speculative round.
+    pub fn spec_mean_accepted(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_rounds as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         let lat = self.latency_ms();
         let ttft = self.ttft_ms();
@@ -101,10 +135,23 @@ impl Metrics {
             ),
             None => "kv: layout=slab".to_string(),
         };
+        let spec = if self.spec_rounds > 0 || self.spec_fallbacks > 0 {
+            format!(
+                ", spec: rounds={} drafted={} accepted={} rate={:.2} mean_acc={:.2} fallbacks={}",
+                self.spec_rounds,
+                self.spec_drafted,
+                self.spec_accepted,
+                self.spec_acceptance_rate(),
+                self.spec_mean_accepted(),
+                self.spec_fallbacks,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests={} prefill_toks={} gen_toks={} iters={} tok/s={:.1} \
              peak_active={} latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms, \
-             exec: chunks={} fixups={} busy_us={} par/seq={}/{}, {kv}",
+             exec: chunks={} fixups={} busy_us={} par/seq={}/{}, {kv}{spec}",
             self.requests_completed,
             self.tokens_prefilled,
             self.tokens_generated,

@@ -7,17 +7,20 @@ pub struct SamplingCfg {
     pub mode: SamplingMode,
     pub temperature: f32,
     pub top_k: usize,
+    /// nucleus mass for `SamplingMode::TopP`
+    pub top_p: f32,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SamplingMode {
     Greedy,
     TopK,
+    TopP,
 }
 
 impl Default for SamplingCfg {
     fn default() -> Self {
-        Self { mode: SamplingMode::Greedy, temperature: 1.0, top_k: 40 }
+        Self { mode: SamplingMode::Greedy, temperature: 1.0, top_k: 40, top_p: 0.95 }
     }
 }
 
@@ -26,6 +29,7 @@ impl SamplingCfg {
         match self.mode {
             SamplingMode::Greedy => Sampling::Greedy,
             SamplingMode::TopK => Sampling::TopK { temperature: self.temperature, k: self.top_k },
+            SamplingMode::TopP => Sampling::TopP { temperature: self.temperature, p: self.top_p },
         }
     }
 }
@@ -38,11 +42,29 @@ pub struct Request {
     pub sampling: SamplingCfg,
     /// stop generation at this byte (e.g. b'.'), if set
     pub stop_token: Option<u32>,
+    /// per-request speculative-decoding override: `None` follows the
+    /// engine's `EngineConfig::spec_k`, `Some(0)` forces plain decode,
+    /// `Some(k)` requests k draft tokens per round (clamped to the
+    /// engine's configured maximum).
+    pub spec_k: Option<usize>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
-        Self { id, prompt, max_new_tokens, sampling: SamplingCfg::default(), stop_token: None }
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingCfg::default(),
+            stop_token: None,
+            spec_k: None,
+        }
+    }
+
+    /// Builder-style per-request speculative override (see `spec_k`).
+    pub fn with_spec_k(mut self, k: usize) -> Self {
+        self.spec_k = Some(k);
+        self
     }
 }
 
@@ -89,5 +111,7 @@ mod tests {
         let r = Request::new(1, vec![1, 2, 3], 8);
         assert_eq!(r.sampling.mode, SamplingMode::Greedy);
         assert!(r.stop_token.is_none());
+        assert!(r.spec_k.is_none());
+        assert_eq!(r.with_spec_k(2).spec_k, Some(2));
     }
 }

@@ -24,6 +24,7 @@ pub mod engine;
 pub mod gqs;
 pub mod quant;
 pub mod sparse;
+pub mod spec;
 pub mod util;
 pub mod model;
 pub mod runtime;

@@ -21,6 +21,18 @@
 //! Overflow is a typed [`CacheFull`] error (not a panic), so the
 //! serving engine can evict or reject a sequence instead of poisoning
 //! the router thread.
+//!
+//! **Rollback.** [`LayerKv::truncate`] rewinds a sequence to a shorter
+//! length, releasing whole sealed blocks back to the pool (poisoned,
+//! like any release). Speculative decoding appends draft positions it
+//! may later reject; for quantized pools the original f32 data of a
+//! sealed block is gone, so a caller that intends to roll back first
+//! declares a *commit watermark* ([`LayerKv::set_commit`]): blocks
+//! sealed while they still contain uncommitted positions keep an f32
+//! shadow copy, and truncating through such a block restores the exact
+//! pre-quantization tail — the rolled-back cache is bit-identical to
+//! one that never overshot. Shadows are dropped as the watermark
+//! advances. F32 pools restore exactly without shadows.
 
 use std::fmt;
 use std::sync::{Arc, Mutex};
@@ -240,6 +252,26 @@ impl KvBlock {
         &src[o..o + KV_BLOCK * g.head_dim]
     }
 
+    /// Dequantize (or copy) this block's full K or V plane into `out`
+    /// ((n_heads, KV_BLOCK, head_dim) row-major). Exact for F32 blocks;
+    /// bounded-error for quantized ones (rollback prefers the f32
+    /// shadow and only falls back to this).
+    fn deq_plane(&self, g: &KvGeom, value: bool, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), g.elems());
+        match g.dtype {
+            KvDtype::F32 => {
+                let src = if value { &self.vf } else { &self.kf };
+                out.copy_from_slice(src);
+            }
+            KvDtype::Q8 | KvDtype::Q4 => {
+                let per_head = KV_BLOCK * g.head_dim;
+                for h in 0..g.n_heads {
+                    self.deq_head(g, value, h, &mut out[h * per_head..(h + 1) * per_head]);
+                }
+            }
+        }
+    }
+
     /// Overwrite payload with poison so any stale read after release
     /// surfaces as NaN logits instead of silent data leakage.
     fn poison(&mut self) {
@@ -417,6 +449,16 @@ impl KvBlockPool {
     }
 }
 
+/// f32 copy of a sealed block that may still be rolled back past
+/// (speculative positions): restoring it on truncate keeps the cache
+/// bit-identical to one that never appended the rejected positions.
+struct ShadowTail {
+    /// index into the layer's `sealed` block table
+    idx: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
 enum Store {
     Slab {
         k: Vec<f32>,
@@ -428,6 +470,8 @@ enum Store {
         /// newest partial block, always f32, (n_heads, KV_BLOCK, head_dim)
         tail_k: Vec<f32>,
         tail_v: Vec<f32>,
+        /// f32 copies of sealed-but-uncommitted blocks (see `set_commit`)
+        shadow: Vec<ShadowTail>,
     },
 }
 
@@ -437,6 +481,10 @@ pub struct LayerKv {
     pub head_dim: usize,
     pub capacity: usize,
     pub len: usize,
+    /// positions below this watermark can never be truncated away;
+    /// `usize::MAX` (the default) means rollback is not in use and
+    /// sealed blocks never need f32 shadows.
+    commit_len: usize,
     store: Store,
 }
 
@@ -448,6 +496,7 @@ impl LayerKv {
             head_dim,
             capacity,
             len: 0,
+            commit_len: usize::MAX,
             store: Store::Slab {
                 k: vec![0.0; n_heads * capacity * head_dim],
                 v: vec![0.0; n_heads * capacity * head_dim],
@@ -463,11 +512,13 @@ impl LayerKv {
             head_dim: g.head_dim,
             capacity,
             len: 0,
+            commit_len: usize::MAX,
             store: Store::Paged {
                 tail_k: vec![0.0; g.elems()],
                 tail_v: vec![0.0; g.elems()],
                 sealed: Vec::with_capacity(capacity.div_ceil(KV_BLOCK)),
                 pool,
+                shadow: Vec::new(),
             },
         }
     }
@@ -508,6 +559,7 @@ impl LayerKv {
         }
         assert_eq!(k.len(), self.n_heads * self.head_dim);
         let (n_heads, head_dim, len) = (self.n_heads, self.head_dim, self.len);
+        let commit_len = self.commit_len;
         match &mut self.store {
             Store::Slab { k: ks, v: vs } => {
                 for h in 0..n_heads {
@@ -517,7 +569,7 @@ impl LayerKv {
                     vs[dst..dst + head_dim].copy_from_slice(&v[src..src + head_dim]);
                 }
             }
-            Store::Paged { pool, sealed, tail_k, tail_v } => {
+            Store::Paged { pool, sealed, tail_k, tail_v, shadow } => {
                 let mut tail_len = len - sealed.len() * KV_BLOCK;
                 if tail_len == KV_BLOCK {
                     // tail full: seal it into a fresh pool block
@@ -526,6 +578,18 @@ impl LayerKv {
                         free: 0,
                     })?;
                     block.seal_from(&pool.geom, tail_k, tail_v);
+                    let idx = sealed.len();
+                    // quantized block that a truncate may still restore:
+                    // keep an exact f32 copy so rollback recovers
+                    // pre-quantization data (F32 blocks restore exactly
+                    // from themselves). `>=` is load-bearing: when the
+                    // rollback floor sits exactly on this block's end,
+                    // truncating TO the floor re-opens the block as the
+                    // f32 tail (lazy-seal invariant), so it needs its
+                    // shadow even though all its positions are committed.
+                    if pool.geom.dtype != KvDtype::F32 && (idx + 1) * KV_BLOCK >= commit_len {
+                        shadow.push(ShadowTail { idx, k: tail_k.clone(), v: tail_v.clone() });
+                    }
                     sealed.push(block);
                     tail_len = 0;
                 }
@@ -561,7 +625,7 @@ impl LayerKv {
                 let o = (h * self.capacity + t) * self.head_dim;
                 &src[o..o + self.head_dim]
             }
-            Store::Paged { pool, sealed, tail_k, tail_v } => {
+            Store::Paged { pool, sealed, tail_k, tail_v, .. } => {
                 let b = t / KV_BLOCK;
                 let slot = t % KV_BLOCK;
                 if b < sealed.len() {
@@ -621,7 +685,7 @@ impl LayerKv {
                 let o = h * self.capacity * self.head_dim;
                 &src[o..o + self.len * self.head_dim]
             }
-            Store::Paged { pool, sealed, tail_k, tail_v } => {
+            Store::Paged { pool, sealed, tail_k, tail_v, .. } => {
                 if seg < sealed.len() {
                     match pool.geom.dtype {
                         KvDtype::F32 => sealed[seg].f32_head(&pool.geom, value, h),
@@ -641,9 +705,75 @@ impl LayerKv {
         }
     }
 
+    /// Declare positions below `upto` committed: they will never be
+    /// rolled back by `truncate`, so their sealed blocks need no f32
+    /// shadow. Speculative callers raise the watermark to the rollback
+    /// floor before appending draft positions; shadows of blocks that
+    /// fall entirely below the watermark are dropped. Plain sequences
+    /// never call this (the default watermark is `usize::MAX`,
+    /// i.e. everything committed, zero shadow overhead).
+    pub fn set_commit(&mut self, upto: usize) {
+        self.commit_len = upto;
+        if let Store::Paged { shadow, .. } = &mut self.store {
+            // `>=` matches the seal-time keep rule: a block whose end
+            // equals the watermark is still the restore target of
+            // `truncate(upto)` when upto is block-aligned
+            shadow.retain(|s| (s.idx + 1) * KV_BLOCK >= upto);
+        }
+    }
+
+    /// Rewind the sequence to `to` positions (no-op when `to >= len`).
+    ///
+    /// Paged layers release whole blocks past the new length back to
+    /// the pool (poisoned on release, like any free). A sealed block
+    /// that becomes the new f32 tail is restored from its shadow copy
+    /// (exact — see `set_commit`); an F32 block restores exactly from
+    /// its own payload; a quantized block sealed *before* rollback was
+    /// declared falls back to dequantization (bounded error), which the
+    /// speculative controller never hits because it declares the floor
+    /// before drafting.
+    pub fn truncate(&mut self, to: usize) {
+        if to >= self.len {
+            return;
+        }
+        if let Store::Paged { pool, sealed, tail_k, tail_v, shadow } = &mut self.store {
+            let keep = blocks_for(to);
+            while sealed.len() > keep {
+                let idx = sealed.len() - 1;
+                let block = sealed.pop().unwrap();
+                if idx == keep && to > idx * KV_BLOCK {
+                    // this block becomes the (partial or full) f32 tail
+                    if let Some(si) = shadow.iter().position(|s| s.idx == idx) {
+                        let s = shadow.swap_remove(si);
+                        tail_k.copy_from_slice(&s.k);
+                        tail_v.copy_from_slice(&s.v);
+                    } else {
+                        block.deq_plane(&pool.geom, false, tail_k);
+                        block.deq_plane(&pool.geom, true, tail_v);
+                    }
+                } else {
+                    shadow.retain(|s| s.idx != idx);
+                }
+                pool.release(block);
+            }
+        }
+        self.len = to;
+    }
+
+    /// Sealed blocks currently holding an f32 shadow copy (rollback
+    /// bookkeeping; 0 for slab layers and non-speculative sequences).
+    pub fn shadow_blocks(&self) -> usize {
+        match &self.store {
+            Store::Slab { .. } => 0,
+            Store::Paged { shadow, .. } => shadow.len(),
+        }
+    }
+
     pub fn reset(&mut self) {
         self.len = 0;
-        if let Store::Paged { pool, sealed, .. } = &mut self.store {
+        self.commit_len = usize::MAX;
+        if let Store::Paged { pool, sealed, shadow, .. } = &mut self.store {
+            shadow.clear();
             for b in sealed.drain(..) {
                 pool.release(b);
             }
@@ -653,8 +783,10 @@ impl LayerKv {
     pub fn bytes(&self) -> usize {
         match &self.store {
             Store::Slab { k, v } => (k.len() + v.len()) * 4,
-            Store::Paged { pool, sealed, tail_k, tail_v } => {
-                sealed.len() * pool.bytes_per_block() + (tail_k.len() + tail_v.len()) * 4
+            Store::Paged { pool, sealed, tail_k, tail_v, shadow } => {
+                sealed.len() * pool.bytes_per_block()
+                    + (tail_k.len() + tail_v.len()) * 4
+                    + shadow.iter().map(|s| (s.k.len() + s.v.len()) * 4).sum::<usize>()
             }
         }
     }
@@ -731,6 +863,26 @@ impl KvCache {
             }
         }
         Ok(())
+    }
+
+    /// Rewind every layer to `to` positions (see [`LayerKv::truncate`]).
+    pub fn truncate(&mut self, to: usize) {
+        for l in &mut self.layers {
+            l.truncate(to);
+        }
+    }
+
+    /// Raise the commit watermark on every layer (see
+    /// [`LayerKv::set_commit`]).
+    pub fn set_commit(&mut self, upto: usize) {
+        for l in &mut self.layers {
+            l.set_commit(upto);
+        }
+    }
+
+    /// f32 shadow copies held across all layers (rollback bookkeeping).
+    pub fn shadow_blocks(&self) -> usize {
+        self.layers.iter().map(|l| l.shadow_blocks()).sum()
     }
 
     pub fn reset(&mut self) {
@@ -920,5 +1072,158 @@ mod tests {
             assert_eq!(pool.free_blocks(), 2);
         }
         assert_eq!(pool.free_blocks(), 4);
+    }
+
+    /// Every key/value read of `a` equals `b` over 0..len (assumes
+    /// equal lengths), via the segment walk so quantized blocks count.
+    fn assert_reads_equal(a: &LayerKv, b: &LayerKv) {
+        assert_eq!(a.len, b.len);
+        let mut sa = Vec::new();
+        let mut sb = Vec::new();
+        for h in 0..a.n_heads {
+            for value in [false, true] {
+                let mut ra: Vec<f32> = Vec::new();
+                for seg in 0..a.n_segments() {
+                    ra.extend_from_slice(a.segment(value, h, seg, &mut sa));
+                }
+                let mut rb: Vec<f32> = Vec::new();
+                for seg in 0..b.n_segments() {
+                    rb.extend_from_slice(b.segment(value, h, seg, &mut sb));
+                }
+                assert_eq!(ra, rb, "h{h} value={value} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn slab_truncate_and_refill_matches_fresh() {
+        let mut kv = LayerKv::new(2, 4, 64);
+        fill(&mut kv, 20, 0.3);
+        kv.truncate(12);
+        assert_eq!(kv.len, 12);
+        let mut fresh = LayerKv::new(2, 4, 64);
+        fill(&mut fresh, 12, 0.3);
+        assert_reads_equal(&kv, &fresh);
+        // re-append continues cleanly past the truncation point
+        kv.append(&vec![9.0; 8], &vec![-9.0; 8]).unwrap();
+        assert_eq!(kv.key(0, 12), &[9.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn paged_f32_truncate_frees_blocks_and_matches_fresh() {
+        let pool = KvBlockPool::new(2, 4, KvDtype::F32, 16);
+        // lengths that cross block boundaries in both directions
+        for (n, to) in [
+            (3 * KV_BLOCK + 5, KV_BLOCK + 3), // through 2 sealed blocks
+            (3 * KV_BLOCK + 5, 2 * KV_BLOCK), // exactly onto a boundary
+            (2 * KV_BLOCK + 4, 2 * KV_BLOCK + 1), // within the tail
+            (KV_BLOCK + 1, 1),                // back into block 0
+        ] {
+            let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+            fill(&mut kv, n, 0.7);
+            let before = pool.free_blocks();
+            kv.truncate(to);
+            let freed = blocks_for(n) - blocks_for(to);
+            assert_eq!(pool.free_blocks(), before + freed, "n{n}->to{to}: wrong free count");
+            let mut fresh = LayerKv::paged(Arc::clone(&pool), 1000);
+            fill(&mut fresh, to, 0.7);
+            assert_reads_equal(&kv, &fresh);
+            // both caches must keep growing identically after the rewind
+            fill(&mut kv, KV_BLOCK, 1.3);
+            fill(&mut fresh, KV_BLOCK, 1.3);
+            assert_reads_equal(&kv, &fresh);
+        }
+        assert_eq!(pool.free_blocks(), 16, "truncate/drop leaked blocks");
+    }
+
+    #[test]
+    fn quantized_truncate_with_commit_is_bit_identical_to_never_overshooting() {
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let qpool = KvBlockPool::new(2, 8, dtype, 32);
+            let base = KV_BLOCK + 5;
+            let mut kv = LayerKv::paged(Arc::clone(&qpool), 1000);
+            fill(&mut kv, base, 0.9);
+            // speculative overshoot: declare the floor, then run past two
+            // block boundaries so a quantized seal happens mid-speculation
+            kv.set_commit(base);
+            fill(&mut kv, 2 * KV_BLOCK, 2.2);
+            assert!(kv.shadow_blocks() > 0, "{dtype:?}: no shadow kept for uncommitted seal");
+            kv.truncate(base + 3);
+            // reference: a cache that only ever appended the kept prefix
+            let mut fresh = LayerKv::paged(Arc::clone(&qpool), 1000);
+            fill(&mut fresh, base, 0.9);
+            fill_offset(&mut fresh, 3, 2.2, 0);
+            assert_reads_equal(&kv, &fresh);
+            // and future growth stays identical (tail data was restored
+            // exactly, so re-sealing quantizes the same f32 inputs)
+            fill_offset(&mut kv, 2 * KV_BLOCK, 3.1, 0);
+            fill_offset(&mut fresh, 2 * KV_BLOCK, 3.1, 0);
+            assert_reads_equal(&kv, &fresh);
+            // committing drops shadows once rollback can no longer reach
+            kv.set_commit(kv.len);
+            assert_eq!(kv.shadow_blocks(), 0, "{dtype:?}: commit did not drop shadows");
+        }
+    }
+
+    /// Like `fill` but with a deterministic per-call token stream, so
+    /// two caches can append identical continuations.
+    fn fill_offset(kv: &mut LayerKv, n: usize, seed: f32, salt: usize) {
+        let d = kv.n_heads * kv.head_dim;
+        for t in 0..n {
+            let k: Vec<f32> = (0..d).map(|i| seed + ((t + salt) * d + i) as f32 * 0.01).collect();
+            let v: Vec<f32> = (0..d).map(|i| -seed - ((t + salt) * d + i) as f32 * 0.02).collect();
+            kv.append(&k, &v).unwrap();
+        }
+    }
+
+    #[test]
+    fn quantized_rollback_floor_on_block_boundary_restores_exactly() {
+        // regression: when the commit watermark sits EXACTLY on a block
+        // end, truncating to the watermark re-opens that block as the
+        // f32 tail — it must restore from a shadow even though all its
+        // positions are committed (the `>=` in the seal-keep rule).
+        for dtype in [KvDtype::Q8, KvDtype::Q4] {
+            let pool = KvBlockPool::new(2, 8, dtype, 32);
+            let floor = 2 * KV_BLOCK; // block-aligned rollback floor
+            let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+            fill(&mut kv, floor, 0.6); // full tail, seal deferred
+            kv.set_commit(floor);
+            // overshoot: the first append seals the boundary block
+            fill_offset(&mut kv, 3, 4.4, 0);
+            kv.truncate(floor); // reject everything (m = 0)
+            let mut fresh = LayerKv::paged(Arc::clone(&pool), 1000);
+            fill(&mut fresh, floor, 0.6);
+            assert_reads_equal(&kv, &fresh);
+            // identical growth: the re-seal quantizes identical f32 data
+            fill_offset(&mut kv, KV_BLOCK + 2, 5.5, 0);
+            fill_offset(&mut fresh, KV_BLOCK + 2, 5.5, 0);
+            assert_reads_equal(&kv, &fresh);
+        }
+    }
+
+    #[test]
+    fn truncate_released_blocks_are_poisoned_on_reuse() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 2);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut kv, 2 * KV_BLOCK + 1, 0.2); // 2 sealed blocks
+        kv.truncate(1);
+        assert_eq!(pool.free_blocks(), 2);
+        let b = pool.alloc().unwrap();
+        assert!(b.kf.iter().all(|v| v.is_nan()), "truncate-freed block not poisoned");
+        pool.release(b);
+    }
+
+    #[test]
+    fn truncate_to_zero_and_past_len_are_safe() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::Q8, 4);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut kv, KV_BLOCK + 2, 0.4);
+        kv.truncate(KV_BLOCK + 10); // no-op
+        assert_eq!(kv.len, KV_BLOCK + 2);
+        kv.truncate(0);
+        assert_eq!(kv.len, 0);
+        assert_eq!(pool.free_blocks(), 4);
+        fill(&mut kv, 2, 0.4);
+        assert_eq!(kv.len, 2);
     }
 }

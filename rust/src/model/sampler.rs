@@ -1,38 +1,124 @@
-//! Token sampling for generation: greedy, temperature, top-k.
+//! Token sampling for generation: greedy, temperature + top-k, and
+//! nucleus (top-p) truncation.
+//!
+//! Besides plain [`sample`], the module exposes the pieces speculative
+//! decoding needs: [`sample_with_probs`] returns the chosen token's
+//! probability under the (truncated, renormalized) sampling
+//! distribution, and [`dist_probs`] materializes that distribution over
+//! the full vocab — the `p(x)`/`q(x)` terms of the rejection-sampling
+//! accept rule `min(1, p_target(x)/p_draft(x))`.
 
 use crate::util::XorShift;
 
 #[derive(Clone, Copy, Debug)]
 pub enum Sampling {
     Greedy,
-    /// softmax temperature + optional top-k truncation
+    /// softmax temperature + top-k truncation
     TopK { temperature: f32, k: usize },
+    /// softmax temperature + nucleus (cumulative-probability) truncation
+    TopP { temperature: f32, p: f32 },
 }
 
 pub fn sample(logits: &[f32], mode: Sampling, rng: &mut XorShift) -> u32 {
+    sample_with_probs(logits, mode, rng).0
+}
+
+/// Sample a token and return `(token, prob)` where `prob` is the
+/// token's probability under the truncated, renormalized distribution
+/// actually sampled from (1.0 for greedy).
+pub fn sample_with_probs(logits: &[f32], mode: Sampling, rng: &mut XorShift) -> (u32, f32) {
     match mode {
-        Sampling::Greedy => argmax(logits) as u32,
-        Sampling::TopK { temperature, k } => {
-            let temp = temperature.max(1e-4);
-            let mut idx: Vec<usize> = (0..logits.len()).collect();
-            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal));
-            let k = k.clamp(1, logits.len());
-            let top = &idx[..k];
-            let maxv = logits[top[0]];
-            let weights: Vec<f64> = top
-                .iter()
-                .map(|&i| (((logits[i] - maxv) / temp) as f64).exp())
-                .collect();
-            let total: f64 = weights.iter().sum();
-            let mut u = rng.next_f32() as f64 * total;
-            for (i, w) in top.iter().zip(&weights) {
-                if u < *w {
-                    return *i as u32;
-                }
-                u -= w;
-            }
-            top[k - 1] as u32
+        Sampling::Greedy => (argmax(logits) as u32, 1.0),
+        Sampling::TopK { .. } | Sampling::TopP { .. } => {
+            let mut probs = Vec::with_capacity(logits.len());
+            dist_probs(logits, mode, &mut probs);
+            let tok = sample_from_probs(&probs, rng);
+            (tok, probs[tok as usize])
         }
+    }
+}
+
+/// Materialize the sampling distribution over the full vocab into
+/// `out`: softmax at the mode's temperature, truncated to the top-k set
+/// / smallest nucleus with cumulative mass ≥ p, renormalized; entries
+/// outside the kept set are exactly 0. Greedy yields a one-hot argmax.
+pub fn dist_probs(logits: &[f32], mode: Sampling, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(logits.len(), 0.0);
+    match mode {
+        Sampling::Greedy => {
+            out[argmax(logits)] = 1.0;
+        }
+        Sampling::TopK { temperature, k } => {
+            let idx = sorted_desc(logits);
+            let k = k.clamp(1, logits.len());
+            softmax_over(logits, &idx[..k], temperature, out);
+        }
+        Sampling::TopP { temperature, p } => {
+            // one full softmax into `out`, then truncate to the nucleus
+            // and renormalize by its accumulated mass in place
+            let idx = sorted_desc(logits);
+            softmax_over(logits, &idx, temperature, out);
+            let p = f64::from(p.clamp(1e-6, 1.0));
+            let mut cum = 0.0f64;
+            let mut keep = 0usize;
+            for &i in &idx {
+                cum += f64::from(out[i]);
+                keep += 1;
+                if cum >= p {
+                    break;
+                }
+            }
+            let keep = keep.max(1);
+            for &i in &idx[keep..] {
+                out[i] = 0.0;
+            }
+            for &i in &idx[..keep] {
+                out[i] = (f64::from(out[i]) / cum) as f32;
+            }
+        }
+    }
+}
+
+/// Sample an index from an explicit probability vector (entries may be
+/// zero; need not sum exactly to 1 — the walk normalizes by the sum).
+pub fn sample_from_probs(probs: &[f32], rng: &mut XorShift) -> u32 {
+    let total: f64 = probs.iter().map(|&p| p as f64).sum();
+    let mut u = rng.next_f32() as f64 * total;
+    let mut last_nonzero = 0usize;
+    for (i, &p) in probs.iter().enumerate() {
+        if p <= 0.0 {
+            continue;
+        }
+        last_nonzero = i;
+        if u < p as f64 {
+            return i as u32;
+        }
+        u -= p as f64;
+    }
+    last_nonzero as u32
+}
+
+/// Indices of `v` sorted by value descending (ties keep index order).
+fn sorted_desc(v: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).collect();
+    idx.sort_by(|&a, &b| v[b].partial_cmp(&v[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Renormalized softmax restricted to `kept` indices, written into the
+/// full-vocab `out` (other entries untouched — caller zeroes them).
+fn softmax_over(logits: &[f32], kept: &[usize], temperature: f32, out: &mut [f32]) {
+    let temp = temperature.max(1e-4);
+    let maxv = kept.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let mut total = 0.0f64;
+    for &i in kept {
+        let w = (((logits[i] - maxv) / temp) as f64).exp();
+        out[i] = w as f32;
+        total += w;
+    }
+    for &i in kept {
+        out[i] = (out[i] as f64 / total) as f32;
     }
 }
 
@@ -75,5 +161,56 @@ mod tests {
             .filter(|_| sample(&logits, Sampling::TopK { temperature: 0.01, k: 3 }, &mut rng) == 1)
             .count();
         assert!(hits >= 48);
+    }
+
+    #[test]
+    fn topp_truncates_tail() {
+        let mut rng = XorShift::new(3);
+        // two heads carry ~all the mass; p=0.5 keeps only the top one
+        let logits = vec![10.0, 9.9, -50.0, -50.0];
+        for _ in 0..100 {
+            let t = sample(&logits, Sampling::TopP { temperature: 1.0, p: 0.5 }, &mut rng);
+            assert_eq!(t, 0);
+        }
+        // p=1.0 keeps everything reachable in the top set
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            let t = sample(&logits, Sampling::TopP { temperature: 1.0, p: 1.0 }, &mut rng);
+            seen[t as usize] = true;
+        }
+        assert!(seen[0] && seen[1], "high-mass tokens never sampled");
+    }
+
+    #[test]
+    fn sample_with_probs_returns_consistent_probability() {
+        let mut rng = XorShift::new(4);
+        let logits = vec![2.0, 1.0, 0.0, -1.0];
+        let mode = Sampling::TopK { temperature: 1.0, k: 3 };
+        let mut probs = Vec::new();
+        dist_probs(&logits, mode, &mut probs);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(probs[3], 0.0, "truncated entry must be exactly zero");
+        for _ in 0..50 {
+            let (tok, p) = sample_with_probs(&logits, mode, &mut rng);
+            assert!((p - probs[tok as usize]).abs() < 1e-6);
+            assert!(p > 0.0);
+        }
+    }
+
+    #[test]
+    fn dist_probs_greedy_is_one_hot() {
+        let mut probs = Vec::new();
+        dist_probs(&[0.3, 0.1, 7.0], Sampling::Greedy, &mut probs);
+        assert_eq!(probs, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn sample_from_probs_respects_zero_entries() {
+        let mut rng = XorShift::new(5);
+        let probs = vec![0.0, 0.5, 0.0, 0.5];
+        for _ in 0..100 {
+            let t = sample_from_probs(&probs, &mut rng);
+            assert!(t == 1 || t == 3);
+        }
     }
 }

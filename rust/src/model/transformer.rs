@@ -95,6 +95,19 @@ impl LinearKind {
             LinearKind::BsrF32(b) => b.matmul_into(x, y),
         }
     }
+
+    /// Reconstruct the dense (dequantized, zero-filled) weight matrix.
+    /// Used by the speculative tier builder to re-encode a loaded model
+    /// at a second, more aggressive GQS operating point.
+    pub fn decode_dense(&self) -> Mat {
+        match self {
+            LinearKind::Dense(m) => m.clone(),
+            LinearKind::Gqs(l) => l.decode(),
+            LinearKind::QuantDense(q) => q.decode(),
+            LinearKind::Semi24(s) => s.decode(),
+            LinearKind::BsrF32(b) => b.decode(),
+        }
+    }
 }
 
 /// Handle to the Stream-K parallel executor, threaded through the
@@ -277,11 +290,16 @@ impl BlockScratch {
 }
 
 /// The model: small dense tensors + compressible linears.
+///
+/// Embeddings and the small tensors (norms/biases) are `Arc`-shared so
+/// a second operating point over the same checkpoint — the speculative
+/// draft tier built by [`crate::spec`] — costs only its own compressed
+/// linear matrices, not a second copy of the embedding table.
 pub struct Transformer {
     pub cfg: ModelConfig,
-    pub tok_emb: Mat,
-    pub pos_emb: Option<Mat>,
-    pub dense_small: BTreeMap<String, Vec<f32>>, // norms + biases
+    pub tok_emb: Arc<Mat>,
+    pub pos_emb: Option<Arc<Mat>>,
+    pub dense_small: Arc<BTreeMap<String, Vec<f32>>>, // norms + biases
     pub linears: BTreeMap<String, LinearKind>,
     /// dynamic INT8 activation fake-quant before every linear (W4A8 mode)
     pub act_quant_i8: bool,
@@ -386,13 +404,35 @@ impl Transformer {
         }
         Ok(Self {
             cfg,
-            tok_emb,
-            pos_emb,
-            dense_small,
+            tok_emb: Arc::new(tok_emb),
+            pos_emb: pos_emb.map(Arc::new),
+            dense_small: Arc::new(dense_small),
             linears: BTreeMap::new(),
             act_quant_i8: false,
             capture_hessians: None,
         })
+    }
+
+    /// A second tier over the same checkpoint: config, embeddings and
+    /// norms shared by `Arc` (no extra weight memory), only `linears`
+    /// differ. The speculative draft tier is built this way — one
+    /// weight store, two operating points.
+    pub fn with_linears(&self, linears: BTreeMap<String, LinearKind>) -> Self {
+        Self {
+            cfg: self.cfg.clone(),
+            tok_emb: Arc::clone(&self.tok_emb),
+            pos_emb: self.pos_emb.as_ref().map(Arc::clone),
+            dense_small: Arc::clone(&self.dense_small),
+            linears,
+            act_quant_i8: self.act_quant_i8,
+            capture_hessians: None,
+        }
+    }
+
+    /// Bytes unique to this tier: the compressed linear matrices only
+    /// (embeddings/norms may be Arc-shared with another tier).
+    pub fn linear_bytes(&self) -> usize {
+        self.linears.values().map(|l| l.storage_bytes()).sum()
     }
 
     fn small(&self, name: &str) -> Result<&[f32]> {

@@ -1,0 +1,494 @@
+//! The speculative controller: draft k tokens cheaply, verify them all
+//! in one target weight walk, keep the longest valid prefix.
+//!
+//! Per round (one active sequence, `last` = newest generated token not
+//! yet fed to the target):
+//!
+//! 1. **catch-up** — the draft KV lags the target whenever a previous
+//!    round fully accepted or the sequence fell back to plain decode;
+//!    feed it the missing history tokens with the draft's *block*
+//!    forward (one draft weight walk for the whole gap, which also
+//!    covers initial prompt prefill lazily).
+//! 2. **draft** — `k` autoregressive single-token steps on the draft
+//!    tier, sampling with the request's mode (distributions recorded
+//!    for rejection sampling when temperature > 0).
+//! 3. **verify** — ONE target `forward_block` over `[last, d1..dk]`:
+//!    row `i` is exactly the logits plain decode would produce after
+//!    feeding that token (the batched kernels replicate per-row
+//!    accumulation order), so greedy acceptance reproduces the plain
+//!    greedy stream token for token.
+//! 4. **rollback** — rejected positions are truncated out of both KV
+//!    caches; `set_commit` was raised to the rollback floor first, so
+//!    even group-quantized sealed blocks rewind bit-exactly.
+//!
+//! Any `CacheFull` (capacity or shared-pool pressure) at any stage
+//! rewinds whatever the round appended and returns
+//! [`SpecRound::Fallback`] — the engine then decodes that sequence
+//! plainly this tick, which is always safe because fallback emits the
+//! same greedy token the verify path would have.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::engine::executor::Executor;
+use crate::model::kv_cache::CacheFull;
+use crate::model::sampler::{argmax, dist_probs, sample_from_probs, Sampling};
+use crate::model::transformer::ExecHandle;
+use crate::model::{BlockScratch, KvCache, Scratch, Transformer};
+use crate::spec::tier::DraftConfig;
+use crate::util::XorShift;
+
+/// Outcome of one speculative round.
+pub enum SpecRound {
+    /// `tokens` to append (1..=k+1: accepted drafts + one corrected or
+    /// bonus token); `accepted` of `drafted` draft tokens survived.
+    Emitted { tokens: Vec<u32>, drafted: usize, accepted: usize },
+    /// Nothing worth speculating (one token of budget/capacity left):
+    /// decode plainly this round — NOT a resource failure, so the
+    /// caller should keep the draft tier for later requests/rounds.
+    Skip,
+    /// KV resources unavailable (shared-pool pressure): nothing was
+    /// appended anywhere; the caller should decode this sequence
+    /// plainly and may shed the draft tier to relieve the pool.
+    Fallback,
+}
+
+/// Owns the draft tier and its scratch. One controller serves every
+/// sequence of an engine (rounds are sequential on the router thread).
+pub struct SpecController {
+    pub draft: Transformer,
+    pub draft_cfg: DraftConfig,
+    /// engine-default draft length (a per-request k is clamped to it)
+    pub k: usize,
+    scratch: Scratch,
+    block: BlockScratch,
+    /// rows the catch-up block scratch was sized for
+    catch_chunk: usize,
+    /// target-distribution scratch (rejection sampling)
+    dist_t: Vec<f32>,
+    /// per-position draft distributions (rejection sampling)
+    draft_dists: Vec<Vec<f32>>,
+}
+
+impl SpecController {
+    pub fn new(
+        draft: Transformer,
+        k: usize,
+        draft_cfg: DraftConfig,
+        exec: Option<Arc<Executor>>,
+    ) -> Self {
+        let cfg = draft.cfg.clone();
+        let t_max = 16usize.max(k + 1);
+        let (scratch, block) = match exec {
+            Some(e) => (
+                Scratch::with_executor(&cfg, ExecHandle::with(Arc::clone(&e))),
+                BlockScratch::with_executor(&cfg, t_max, ExecHandle::with(e)),
+            ),
+            None => (Scratch::new(&cfg), BlockScratch::new(&cfg, t_max)),
+        };
+        Self {
+            draft,
+            draft_cfg,
+            k: k.max(1),
+            scratch,
+            block,
+            catch_chunk: t_max,
+            dist_t: Vec::new(),
+            draft_dists: Vec::new(),
+        }
+    }
+
+    /// Extra weight bytes the draft tier costs (its compressed linears;
+    /// embeddings/norms are shared with the target).
+    pub fn draft_bytes(&self) -> usize {
+        self.draft.linear_bytes()
+    }
+
+    /// Run one speculative round for a sequence whose target KV is
+    /// `target_kv` and pending token is `generated.last()`.
+    /// `max_emit` is the remaining new-token budget (tokens the caller
+    /// can still accept); `k` is the requested draft length (clamped to
+    /// the controller's configured maximum).
+    #[allow(clippy::too_many_arguments)]
+    pub fn round(
+        &mut self,
+        target: &Transformer,
+        target_kv: &mut KvCache,
+        draft_kv: &mut KvCache,
+        prompt: &[u32],
+        generated: &[u32],
+        k: usize,
+        max_emit: usize,
+        mode: Sampling,
+        rng: &mut XorShift,
+        verify: &mut BlockScratch,
+    ) -> Result<SpecRound> {
+        let t_len = target_kv.len();
+        debug_assert_eq!(t_len + 1, prompt.len() + generated.len(), "pending-token invariant");
+        // clamp the draft length: the verify block appends k+1 target
+        // positions, and emitting more than max_emit tokens is wasted
+        let k_eff = k
+            .min(self.k)
+            .min(target_kv.capacity().saturating_sub(t_len + 1))
+            .min(draft_kv.capacity().saturating_sub(t_len))
+            .min(max_emit.saturating_sub(1));
+        if k_eff == 0 {
+            // at most one token can still be emitted (end of budget or
+            // capacity): drafting would be pure overhead
+            return Ok(SpecRound::Skip);
+        }
+        // shared-pool pre-flight: catch-up + drafting + verify must all
+        // fit, or we decode plainly and retry when blocks free up
+        if draft_kv.len() > t_len {
+            // a caller rewound the target externally: resync the draft
+            draft_kv.truncate(t_len);
+        }
+        let d_len = draft_kv.len();
+        let gap = t_len - d_len;
+        if let Some(pool) = target_kv.pool() {
+            let needed =
+                target_kv.blocks_needed(k_eff + 1) + draft_kv.blocks_needed(gap + k_eff);
+            if needed > pool.free_blocks() {
+                return Ok(SpecRound::Fallback);
+            }
+        }
+
+        // 1. catch-up: feed the draft the fed history it is missing
+        // (prompt prefill on first use, accepted tokens after full-
+        // accept rounds or plain-decode fallbacks)
+        if gap > 0 {
+            let feed: Vec<u32> = (d_len..t_len)
+                .map(|pos| {
+                    if pos < prompt.len() {
+                        prompt[pos]
+                    } else {
+                        generated[pos - prompt.len()]
+                    }
+                })
+                .collect();
+            let chunk = self.catch_chunk;
+            match self.draft.prefill_block(&feed, draft_kv, &mut self.block, chunk) {
+                Ok(()) => {}
+                Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                    // a partial catch-up stays (it is committed history,
+                    // still correct); retry next round under less pressure
+                    return Ok(SpecRound::Fallback);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        // rollback floor: position t_len (the pending token `last`) is
+        // always kept, everything past it may be rewound — declare it
+        // BEFORE appending so quantized seals keep their f32 shadows
+        draft_kv.set_commit(t_len + 1);
+        target_kv.set_commit(t_len + 1);
+
+        // 2. draft k_eff tokens autoregressively on the cheap tier
+        let last = *generated.last().expect("decode-phase sequence has a pending token");
+        let greedy = matches!(mode, Sampling::Greedy);
+        while self.draft_dists.len() < k_eff {
+            self.draft_dists.push(Vec::new());
+        }
+        let mut drafts: Vec<u32> = Vec::with_capacity(k_eff);
+        let mut cur = last;
+        for i in 0..k_eff {
+            match self.draft.decode_step(cur, draft_kv, &mut self.scratch) {
+                Ok(()) => {}
+                Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                    draft_kv.truncate(t_len);
+                    return Ok(SpecRound::Fallback);
+                }
+                Err(e) => return Err(e),
+            }
+            let tok = if greedy {
+                argmax(&self.scratch.logits) as u32
+            } else {
+                dist_probs(&self.scratch.logits, mode, &mut self.draft_dists[i]);
+                sample_from_probs(&self.draft_dists[i], rng)
+            };
+            drafts.push(tok);
+            cur = tok;
+        }
+
+        // 3. verify all k_eff+1 positions in ONE target weight walk
+        let mut vtok = Vec::with_capacity(k_eff + 1);
+        vtok.push(last);
+        vtok.extend_from_slice(&drafts);
+        match target.forward_block(&vtok, target_kv, verify) {
+            Ok(()) => {}
+            Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                // forward_block pre-flights before mutating: target is
+                // untouched, only the draft needs rewinding
+                draft_kv.truncate(t_len);
+                return Ok(SpecRound::Fallback);
+            }
+            Err(e) => return Err(e),
+        }
+
+        // 4. accept the longest valid prefix + one extra token
+        let mut emitted: Vec<u32> = Vec::with_capacity(k_eff + 1);
+        let mut m = 0usize;
+        if greedy {
+            // exact-match acceptance: every emitted token IS the greedy
+            // target token, so output is identical to plain decode
+            while m < k_eff {
+                let t_tok = argmax(verify.logits.row(m)) as u32;
+                emitted.push(t_tok);
+                if drafts[m] != t_tok {
+                    break;
+                }
+                m += 1;
+            }
+            if m == k_eff {
+                emitted.push(argmax(verify.logits.row(k_eff)) as u32);
+            }
+        } else {
+            // rejection sampling: accept d ~ q with prob min(1, p/q);
+            // on reject, sample the correction from max(p - q, 0)
+            for i in 0..k_eff {
+                dist_probs(verify.logits.row(i), mode, &mut self.dist_t);
+                let d = drafts[i] as usize;
+                let p_t = self.dist_t[d] as f64;
+                let p_d = (self.draft_dists[i][d] as f64).max(1e-12);
+                if (rng.next_f32() as f64) < (p_t / p_d).min(1.0) {
+                    emitted.push(drafts[i]);
+                    m += 1;
+                    continue;
+                }
+                let mut residual_mass = 0.0f64;
+                for (t, q) in self.dist_t.iter_mut().zip(&self.draft_dists[i]) {
+                    *t = (*t - *q).max(0.0);
+                    residual_mass += *t as f64;
+                }
+                if residual_mass <= 0.0 {
+                    // distributions coincide numerically: resample p
+                    dist_probs(verify.logits.row(i), mode, &mut self.dist_t);
+                }
+                emitted.push(sample_from_probs(&self.dist_t, rng));
+                break;
+            }
+            if m == k_eff {
+                dist_probs(verify.logits.row(k_eff), mode, &mut self.dist_t);
+                emitted.push(sample_from_probs(&self.dist_t, rng));
+            }
+        }
+
+        // 5. rewind rejected positions out of both caches and commit
+        // the surviving prefix (drops rollback shadows)
+        let new_len = t_len + 1 + m;
+        target_kv.truncate(new_len);
+        draft_kv.truncate(new_len.min(draft_kv.len()));
+        target_kv.set_commit(new_len);
+        draft_kv.set_commit(new_len.min(draft_kv.len()));
+
+        Ok(SpecRound::Emitted { tokens: emitted, drafted: k_eff, accepted: m })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::demo_config;
+    use crate::model::transformer::random_fp;
+    use crate::model::{KvBlockPool, KvDtype};
+    use crate::spec::tier::build_draft;
+
+    fn models(seed: u64) -> (Transformer, Transformer) {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 128;
+        let fp = random_fp(&cfg, seed);
+        let target = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        let draft = build_draft(&target, &DraftConfig::default()).unwrap();
+        (target, draft)
+    }
+
+    /// Plain greedy reference: prefill + n decode steps.
+    fn plain_greedy(target: &Transformer, prompt: &[u32], n: usize, kv: &mut KvCache) -> Vec<u32> {
+        let mut s = Scratch::new(&target.cfg);
+        for &t in prompt {
+            target.decode_step(t, kv, &mut s).unwrap();
+        }
+        let mut out = vec![argmax(&s.logits) as u32];
+        for _ in 1..n {
+            let last = *out.last().unwrap();
+            target.decode_step(last, kv, &mut s).unwrap();
+            out.push(argmax(&s.logits) as u32);
+        }
+        out
+    }
+
+    fn spec_greedy(
+        target: &Transformer,
+        draft: Transformer,
+        prompt: &[u32],
+        n: usize,
+        target_kv: &mut KvCache,
+        draft_kv: &mut KvCache,
+    ) -> (Vec<u32>, usize, usize) {
+        let mut ctrl = SpecController::new(draft, 4, DraftConfig::default(), None);
+        let mut verify = BlockScratch::new(&target.cfg, prompt.len().max(8));
+        let mut rng = XorShift::new(1);
+        // prefill target through the block path (as the engine does)
+        target.forward_block(prompt, target_kv, &mut verify).unwrap();
+        let mut generated = vec![argmax(verify.logits.row(prompt.len() - 1)) as u32];
+        let (mut drafted, mut accepted) = (0usize, 0usize);
+        while generated.len() < n {
+            let left = n - generated.len();
+            match ctrl
+                .round(
+                    target,
+                    target_kv,
+                    draft_kv,
+                    prompt,
+                    &generated,
+                    4,
+                    left,
+                    Sampling::Greedy,
+                    &mut rng,
+                    &mut verify,
+                )
+                .unwrap()
+            {
+                SpecRound::Emitted { tokens, drafted: d, accepted: a } => {
+                    drafted += d;
+                    accepted += a;
+                    for t in tokens {
+                        if generated.len() < n {
+                            generated.push(t);
+                        }
+                    }
+                }
+                SpecRound::Skip | SpecRound::Fallback => {
+                    // plain single step
+                    let mut s = Scratch::new(&target.cfg);
+                    target.decode_step(*generated.last().unwrap(), target_kv, &mut s).unwrap();
+                    generated.push(argmax(&s.logits) as u32);
+                }
+            }
+        }
+        (generated, drafted, accepted)
+    }
+
+    #[test]
+    fn greedy_spec_rounds_match_plain_decode_slab() {
+        let (target, draft) = models(42);
+        let prompt = [5u32, 9, 2, 7, 11];
+        let n = 24;
+        let mut kv_ref = KvCache::new(2, 2, 32, 128);
+        let expect = plain_greedy(&target, &prompt, n, &mut kv_ref);
+        let mut tkv = KvCache::new(2, 2, 32, 128);
+        let mut dkv = KvCache::new(2, 2, 32, 128);
+        let (got, drafted, accepted) = spec_greedy(&target, draft, &prompt, n, &mut tkv, &mut dkv);
+        assert_eq!(got, expect, "speculative greedy diverged from plain greedy");
+        assert!(drafted > 0, "no drafting happened");
+        assert!(accepted <= drafted);
+        // pending-token invariant held to the end
+        assert_eq!(tkv.len(), prompt.len() + n - 1);
+    }
+
+    #[test]
+    fn greedy_spec_rounds_match_plain_decode_paged_quantized() {
+        for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+            let (target, draft) = models(77);
+            let prompt: Vec<u32> = (0..20).map(|i| (i * 3 % 60) as u32).collect();
+            let n = 30; // crosses multiple 16-position block boundaries
+            let pool = KvBlockPool::new(2, 32, dtype, 64);
+            let mut kv_ref = KvCache::paged(2, &pool, 128);
+            let expect = plain_greedy(&target, &prompt, n, &mut kv_ref);
+            let mut tkv = KvCache::paged(2, &pool, 128);
+            let mut dkv = KvCache::paged(2, &pool, 128);
+            let (got, _, _) = spec_greedy(&target, draft, &prompt, n, &mut tkv, &mut dkv);
+            assert_eq!(got, expect, "{dtype:?}: speculative greedy diverged");
+            drop(kv_ref);
+            drop(tkv);
+            drop(dkv);
+            assert_eq!(pool.stats().blocks_in_use, 0, "{dtype:?}: leaked blocks");
+        }
+    }
+
+    #[test]
+    fn rejection_sampling_round_is_well_formed() {
+        let (target, draft) = models(7);
+        let mut ctrl = SpecController::new(draft, 4, DraftConfig::default(), None);
+        let mut verify = BlockScratch::new(&target.cfg, 8);
+        let mut rng = XorShift::new(9);
+        let prompt = [3u32, 1, 4];
+        let mut tkv = KvCache::new(2, 2, 32, 128);
+        let mut dkv = KvCache::new(2, 2, 32, 128);
+        target.forward_block(&prompt, &mut tkv, &mut verify).unwrap();
+        let generated = vec![argmax(verify.logits.row(2)) as u32];
+        let mode = Sampling::TopK { temperature: 0.8, k: 40 };
+        for _ in 0..4 {
+            // fresh round each time from the same state is fine: rounds
+            // roll their speculation back to a consistent prefix
+            let before = tkv.len();
+            match ctrl
+                .round(
+                    &target,
+                    &mut tkv,
+                    &mut dkv,
+                    &prompt,
+                    &generated,
+                    4,
+                    16,
+                    mode,
+                    &mut rng,
+                    &mut verify,
+                )
+                .unwrap()
+            {
+                SpecRound::Emitted { tokens, drafted, accepted } => {
+                    assert!(!tokens.is_empty() && tokens.len() <= drafted + 1);
+                    assert!(accepted <= drafted);
+                    assert!(tokens.iter().all(|&t| t < 64));
+                    assert_eq!(tkv.len(), before + 1 + accepted);
+                    // rewind for the next iteration of this loop
+                    tkv.truncate(before);
+                    dkv.truncate(before.min(dkv.len()));
+                }
+                SpecRound::Skip | SpecRound::Fallback => panic!("unexpected skip/fallback"),
+            }
+        }
+    }
+
+    #[test]
+    fn pool_pressure_falls_back_without_touching_state() {
+        let (target, draft) = models(13);
+        // pool with barely enough blocks for the target prefill alone
+        let pool = KvBlockPool::new(2, 32, KvDtype::F32, 2 * 2 + 1);
+        let mut tkv = KvCache::paged(2, &pool, 128);
+        let mut dkv = KvCache::paged(2, &pool, 128);
+        let mut ctrl = SpecController::new(draft, 8, DraftConfig::default(), None);
+        let mut verify = BlockScratch::new(&target.cfg, 40);
+        let mut rng = XorShift::new(3);
+        let prompt: Vec<u32> = (0..33).map(|i| (i % 60) as u32).collect();
+        target.forward_block(&prompt, &mut tkv, &mut verify).unwrap();
+        let generated = vec![argmax(verify.logits.row(32)) as u32];
+        let before_t = tkv.len();
+        let before_d = dkv.len();
+        let r = ctrl
+            .round(
+                &target,
+                &mut tkv,
+                &mut dkv,
+                &prompt,
+                &generated,
+                8,
+                16,
+                Sampling::Greedy,
+                &mut rng,
+                &mut verify,
+            )
+            .unwrap();
+        assert!(matches!(r, SpecRound::Fallback), "starved pool should force fallback");
+        assert_eq!(tkv.len(), before_t, "fallback mutated the target KV");
+        assert_eq!(dkv.len(), before_d, "fallback left draft KV inconsistent");
+    }
+}

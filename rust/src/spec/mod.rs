@@ -1,0 +1,31 @@
+//! Self-speculative decoding — L4 of the stack.
+//!
+//! GQSA's headline knob is a *flexible sparsity rate*: the same
+//! checkpoint can be encoded at W4S50% for fidelity and W2S75% for raw
+//! speed (paper §4). This module exploits that to speculate against
+//! the model itself:
+//!
+//! * [`tier`] re-encodes a loaded model's linears into a second, more
+//!   aggressive GQS configuration (the **draft tier**), sharing
+//!   embeddings/norms by `Arc` so weight memory grows only by the
+//!   draft's compressed matrices;
+//! * [`controller`] drives the decode loop: per round it drafts `k`
+//!   tokens autoregressively with the draft tier (own KV), then
+//!   verifies all `k+1` positions in **one** target `forward_block`
+//!   call — one weight walk amortized over the whole speculation —
+//!   accepting the longest matching prefix (greedy) or
+//!   rejection-sampling (temperature > 0);
+//! * rejected positions are rewound with [`crate::model::kv_cache`]'s
+//!   `truncate`/`set_commit` rollback, which keeps even quantized
+//!   paged KV bit-identical to a cache that never overshot.
+//!
+//! Greedy speculative output is therefore token-identical to plain
+//! greedy decode on the same backend — speculation changes *latency*,
+//! never *content* (enforced by `tests/spec_decode.rs` across KV
+//! dtypes and executor thread counts).
+
+pub mod controller;
+pub mod tier;
+
+pub use controller::{SpecController, SpecRound};
+pub use tier::{build_draft, DraftConfig};

