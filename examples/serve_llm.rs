@@ -34,16 +34,20 @@ fn main() -> anyhow::Result<()> {
     // a W2S75 re-encoding of the same checkpoint (GQSA_SPEC_DRAFT
     // overrides) and verifies them in one target weight walk. Greedy
     // output is token-identical to plain decode.
+    // Shared-prefix cache: GQSA_PREFIX_CACHE=1 reuses sealed prompt-
+    // prefix KV blocks across requests (the repeated prompts below then
+    // skip most of their prefill; hit/evict counters land in /report).
     let kv_cfg = EngineConfig::default();
     println!(
-        "== native GQS engine (W4S50%, BQPO+E2E-OQP) — kv {} {}, spec {} ==",
+        "== native GQS engine (W4S50%, BQPO+E2E-OQP) — kv {} {}, spec {}, prefix cache {} ==",
         if kv_cfg.kv_paged { "paged" } else { "slab" },
         kv_cfg.kv_dtype.name(),
         if kv_cfg.spec_k > 0 {
             format!("k={} draft={}", kv_cfg.spec_k, kv_cfg.spec_draft.name())
         } else {
             "off".into()
-        }
+        },
+        if kv_cfg.prefix_cache { "on" } else { "off" }
     );
     let art2 = art.clone();
     let srv = Server::start(move || {

@@ -86,6 +86,27 @@ pub enum SeqState {
     },
 }
 
+impl SeqState {
+    /// The native KV cache behind this state (None for PJRT literals).
+    /// The engine uses this for shared-prefix adoption/publication,
+    /// which are Native-only concepts.
+    pub fn native_kv(&self) -> Option<&KvCache> {
+        match self {
+            SeqState::Native { kv } => Some(kv),
+            #[cfg(feature = "pjrt")]
+            _ => None,
+        }
+    }
+
+    pub fn native_kv_mut(&mut self) -> Option<&mut KvCache> {
+        match self {
+            SeqState::Native { kv } => Some(kv),
+            #[cfg(feature = "pjrt")]
+            _ => None,
+        }
+    }
+}
+
 /// PJRT decode backend: one compiled decode artifact, KV as literals.
 #[cfg(feature = "pjrt")]
 pub struct PjrtBackend {

@@ -32,9 +32,12 @@ use crate::coordinator::backend::{Backend, KvMode, SeqState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{FinishReason, Request, RequestTiming, Response};
 use crate::engine::executor::{Decomposition, ExecConfig, Executor};
-use crate::model::kv_cache::{blocks_for, CacheFull, KvBlockPool, KvDtype, KV_BLOCK};
+use crate::model::kv_cache::{
+    blocks_for, blocks_spanning, CacheFull, KvBlockPool, KvDtype, KV_BLOCK,
+};
 use crate::model::sampler::sample;
 use crate::model::{BlockScratch, KvCache};
+use crate::prefix::PrefixCache;
 use crate::spec::{build_draft, DraftConfig, SpecController, SpecRound};
 use crate::util::XorShift;
 
@@ -69,6 +72,29 @@ pub struct EngineConfig {
     /// the draft tier's GQS operating point (bits/sparsity/group); the
     /// default honors `GQSA_SPEC_DRAFT` (e.g. "w2s75g16").
     pub spec_draft: DraftConfig,
+    /// adapt each sequence's draft length k online: additive increase
+    /// on a fully accepted round, multiplicative decrease when fewer
+    /// than half the drafts survive, bounded to `[1, spec_k]`. The
+    /// default honors `GQSA_SPEC_ADAPTIVE`. Greedy tokens are identical
+    /// at any k, so adapting never changes content — only latency.
+    pub spec_adaptive: bool,
+    /// share sealed prompt-prefix KV blocks across requests through a
+    /// radix-tree cache (paged Native mode only; see [`crate::prefix`]).
+    /// The default honors `GQSA_PREFIX_CACHE`. A prefix hit is
+    /// bit-identical to a cold run, so flipping this never changes
+    /// tokens — only prefill cost and KV bytes. Requests opt out
+    /// individually via `Request::prefix_cache`.
+    pub prefix_cache: bool,
+}
+
+/// Boolean env knob: "1" / "true" / "on" (any case) enables.
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|s| {
+            let s = s.trim();
+            s == "1" || s.eq_ignore_ascii_case("true") || s.eq_ignore_ascii_case("on")
+        })
+        .unwrap_or(false)
 }
 
 impl Default for EngineConfig {
@@ -91,6 +117,8 @@ impl Default for EngineConfig {
                 .and_then(|s| s.trim().parse().ok())
                 .unwrap_or(0),
             spec_draft: DraftConfig::from_env(),
+            spec_adaptive: env_flag("GQSA_SPEC_ADAPTIVE"),
+            prefix_cache: env_flag("GQSA_PREFIX_CACHE"),
         }
     }
 }
@@ -112,6 +140,9 @@ struct ActiveSeq {
     draft_kv: Option<KvCache>,
     /// resolved draft length for this sequence (0 = plain decode)
     spec_k: usize,
+    /// the AIMD-adapted draft length actually used per round, bounded
+    /// `[1, spec_k]` (== spec_k when `spec_adaptive` is off)
+    k_now: usize,
 }
 
 /// Single-threaded engine with continuous batching. Drive it with
@@ -129,6 +160,9 @@ pub struct EngineCore {
     /// self-speculative decoding: the draft tier + round driver
     /// (built when `cfg.spec_k > 0` on a Native backend).
     spec: Option<SpecController>,
+    /// shared-prefix KV cache: radix trees (target + draft tier) over
+    /// the block pool (built when `cfg.prefix_cache` and paged).
+    prefix: Option<PrefixCache>,
     n_layers: usize,
     n_heads: usize,
     head_dim: usize,
@@ -147,7 +181,7 @@ impl EngineCore {
         // admission ceiling: max_batch sequences at full capacity.
         let native = matches!(backend, Backend::Native(_));
         let kv_mode = if native && cfg.kv_paged {
-            let per_seq = cfg.kv_capacity.div_ceil(KV_BLOCK);
+            let per_seq = blocks_spanning(cfg.kv_capacity);
             // speculative sequences hold a draft KV mirroring the
             // target's fed context, so the auto-sized budget doubles
             let tiers = if cfg.spec_k > 0 { 2 } else { 1 };
@@ -210,6 +244,13 @@ impl EngineCore {
         } else {
             None
         };
+        // shared-prefix cache: paged Native mode only (slab has no
+        // blocks to share; PJRT KV lives in runtime literals)
+        let prefix = if cfg.prefix_cache && matches!(kv_mode, KvMode::Paged(_)) {
+            Some(PrefixCache::new(model_cfg.n_layers))
+        } else {
+            None
+        };
         Ok(Self {
             backend,
             cfg,
@@ -217,6 +258,7 @@ impl EngineCore {
             exec,
             kv_mode,
             spec,
+            prefix,
             n_layers: model_cfg.n_layers,
             n_heads: model_cfg.n_heads,
             head_dim: model_cfg.head_dim(),
@@ -242,6 +284,20 @@ impl EngineCore {
     /// The shared KV block pool (None in slab mode / PJRT).
     pub fn kv_pool(&self) -> Option<&Arc<KvBlockPool>> {
         self.kv_mode.pool()
+    }
+
+    /// Shared-prefix cache counters (None when the cache is disabled,
+    /// slab mode, or PJRT).
+    pub fn prefix_stats(&self) -> Option<crate::prefix::PrefixStats> {
+        self.prefix.as_ref().map(|c| c.stats())
+    }
+
+    /// Blocks the prefix cache currently keeps alive (0 when off).
+    /// Reconciles pool accounting at idle:
+    /// `blocks_in_use == prefix_cached_blocks()` once all sequences
+    /// have retired.
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |c| c.shared_blocks())
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -277,14 +333,42 @@ impl EngineCore {
         // here would deadlock an empty engine.
         let mut admit_reserved = 0usize;
         while self.active.len() < self.cfg.max_batch && !self.waiting.is_empty() {
-            if let KvMode::Paged(pool) = &self.kv_mode {
+            // probe the shared-prefix cache for the FRONT request
+            // before budgeting: cached blocks it adopts are blocks
+            // admission no longer needs to reserve. The probe refreshes
+            // the chain's LRU stamps, so the ensure_free below cannot
+            // reclaim the very blocks this request is about to adopt.
+            let (fit, wants_spec, cache_opted, probe_t, probe_d) = {
                 let (req, _) = self.waiting.front().unwrap();
                 let fit = req.prompt.len().min(self.cfg.kv_capacity.saturating_sub(1));
-                let mut needed = self.n_layers * blocks_for(fit + 1);
-                // a speculative sequence's draft KV mirrors the fed
-                // context, so budget a second copy for it up front
-                if self.spec_k_for(req) > 0 {
-                    needed *= 2;
+                let wants_spec = self.spec_k_for(req) > 0;
+                let opted = req.prefix_cache.unwrap_or(true);
+                let (pt, pd) = match self.prefix.as_mut() {
+                    Some(c) if opted => (
+                        c.target.probe(&req.prompt, blocks_for(fit)),
+                        if wants_spec {
+                            c.draft.probe(&req.prompt, blocks_for(fit))
+                        } else {
+                            0
+                        },
+                    ),
+                    _ => (0, 0),
+                };
+                (fit, wants_spec, opted, pt, pd)
+            };
+            if let KvMode::Paged(pool) = &self.kv_mode {
+                // a waiting request needs room for its clamped prompt
+                // plus one decode token across every layer, minus the
+                // prefix-cache hit; a speculative sequence's draft KV
+                // mirrors the fed context, so budget a second copy
+                let mut needed = self.n_layers * (blocks_for(fit + 1) - probe_t);
+                if wants_spec {
+                    needed += self.n_layers * (blocks_for(fit + 1) - probe_d);
+                }
+                // reclaim unreferenced cached blocks BEFORE deciding to
+                // block admission: the cache must never starve it
+                if let Some(cache) = self.prefix.as_mut() {
+                    cache.ensure_free(pool, admit_reserved + needed);
                 }
                 // reservations accumulate across the loop so an admit
                 // burst can't hand the same free blocks to everyone
@@ -300,9 +384,22 @@ impl EngineCore {
                 None => self.backend.new_seq(self.cfg.kv_capacity, &self.kv_mode)?,
             };
             self.backend.reset_seq(&mut state)?;
+            // adopt the longest cached prompt prefix: chunked prefill
+            // then starts AFTER the hit (fed jumps to its coverage)
+            let mut fed = 0usize;
+            if cache_opted {
+                if let (Some(cache), Some(kv)) = (self.prefix.as_mut(), state.native_kv_mut())
+                {
+                    let hit = cache.target.lookup(&req.prompt, blocks_for(fit));
+                    if !hit.is_empty() {
+                        fed = hit.len() * KV_BLOCK;
+                        kv.adopt_prefix(&hit);
+                    }
+                }
+            }
             let spec_k = self.spec_k_for(&req);
             let draft_kv = if spec_k > 0 {
-                Some(match &self.kv_mode {
+                let mut draft = match &self.kv_mode {
                     KvMode::Paged(pool) => {
                         KvCache::paged(self.n_layers, pool, self.cfg.kv_capacity)
                     }
@@ -312,7 +409,18 @@ impl EngineCore {
                         self.head_dim,
                         self.cfg.kv_capacity,
                     ),
-                })
+                };
+                // the draft tier consults its OWN tree: draft K/V are
+                // numerically different objects from target K/V
+                if cache_opted {
+                    if let Some(cache) = self.prefix.as_mut() {
+                        let hit = cache.draft.lookup(&req.prompt, blocks_for(fit));
+                        if !hit.is_empty() {
+                            draft.adopt_prefix(&hit);
+                        }
+                    }
+                }
+                Some(draft)
             } else {
                 None
             };
@@ -321,17 +429,63 @@ impl EngineCore {
             self.active.push(ActiveSeq {
                 req,
                 state,
-                fed: 0,
+                fed,
                 generated: Vec::new(),
                 submitted,
                 timing,
                 evicted: false,
                 draft_kv,
                 spec_k,
+                k_now: spec_k,
             });
         }
 
         self.metrics.note_active(self.active.len());
+
+        // re-admit shed drafts: a sequence that dropped its draft tier
+        // under pool pressure (SpecRound::Fallback) resumes speculation
+        // once the free-block count recovers past a 2x watermark (so a
+        // rebuilt draft isn't immediately shed again). The catch-up
+        // prefill this implies is cheap when the draft prefix tree
+        // still holds the prompt's blocks.
+        if self.spec.is_some() {
+            if let KvMode::Paged(pool) = &self.kv_mode {
+                for seq in &mut self.active {
+                    if seq.spec_k == 0
+                        || seq.draft_kv.is_some()
+                        || seq.evicted
+                        || seq.fed < seq.req.prompt.len()
+                    {
+                        continue;
+                    }
+                    let len = self.backend.seq_len(&seq.state);
+                    let need = self.n_layers * blocks_for(len + seq.spec_k + 1);
+                    // cached-but-unreferenced blocks yield to speculation
+                    // resumption too (same ordering as every other
+                    // pressure path) — otherwise an idle cache could pin
+                    // the pool below the watermark forever
+                    if let Some(cache) = self.prefix.as_mut() {
+                        cache.ensure_free(pool, need.saturating_mul(2));
+                    }
+                    if pool.free_blocks() < need.saturating_mul(2) {
+                        continue;
+                    }
+                    let mut draft = KvCache::paged(self.n_layers, pool, self.cfg.kv_capacity);
+                    if seq.req.prefix_cache.unwrap_or(true) {
+                        if let Some(cache) = self.prefix.as_mut() {
+                            let fit =
+                                seq.req.prompt.len().min(self.cfg.kv_capacity.saturating_sub(1));
+                            let hit = cache.draft.lookup(&seq.req.prompt, blocks_for(fit));
+                            if !hit.is_empty() {
+                                draft.adopt_prefix(&hit);
+                            }
+                        }
+                    }
+                    seq.draft_kv = Some(draft);
+                    self.metrics.spec_draft_readmitted += 1;
+                }
+            }
+        }
 
         let mut processed = 0usize;
         // sequences already past prefill at tick start decode this tick
@@ -357,7 +511,12 @@ impl EngineCore {
             let mut take = chunk_cap.min(prompt_len - seq.fed).min(cap_left);
             // clamp to the pool's free blocks: feed what fits now and
             // let a later tick (after someone retires) feed the rest
+            // (reclaiming unreferenced cached blocks first, so the
+            // prefix cache can never stall a prefill)
             if let KvMode::Paged(pool) = &self.kv_mode {
+                if let Some(cache) = self.prefix.as_mut() {
+                    cache.ensure_free(pool, self.backend.kv_blocks_needed(&seq.state, take));
+                }
                 let free = pool.free_blocks();
                 while take > 0 && self.backend.kv_blocks_needed(&seq.state, take) > free {
                     take -= 1;
@@ -401,7 +560,8 @@ impl EngineCore {
         // A round that cannot get KV resources falls back to the plain
         // batched path below for this tick.
         if self.spec.is_some() {
-            let Self { spec, backend, active, block, rng, metrics, .. } = &mut *self;
+            let Self { spec, backend, active, block, rng, metrics, prefix, cfg, .. } =
+                &mut *self;
             let ctrl = spec.as_mut().unwrap();
             let target = backend.native().expect("spec controller implies native backend");
             let mut plain: Vec<usize> = Vec::with_capacity(decode_idx.len());
@@ -424,6 +584,18 @@ impl EngineCore {
                     continue; // retirement below handles it
                 }
                 let draft_kv = seq.draft_kv.as_mut().unwrap();
+                let k_round = if cfg.spec_adaptive { seq.k_now } else { seq.spec_k };
+                // reclaim cached blocks first, so a round doesn't fall
+                // back (shedding its draft) while the prefix cache is
+                // holding memory nobody references
+                if let Some(cache) = prefix.as_mut() {
+                    if let Some(pool) = kv.pool().cloned() {
+                        let gap = kv.len().saturating_sub(draft_kv.len());
+                        let need = kv.blocks_needed(k_round + 1)
+                            + draft_kv.blocks_needed(gap + k_round);
+                        cache.ensure_free(&pool, need);
+                    }
+                }
                 let mode = seq.req.sampling.to_sampling();
                 match ctrl.round(
                     target,
@@ -431,14 +603,23 @@ impl EngineCore {
                     draft_kv,
                     &seq.req.prompt,
                     &seq.generated,
-                    seq.spec_k,
+                    k_round,
                     remaining,
                     mode,
                     rng,
                     block,
                 )? {
                     SpecRound::Emitted { tokens, drafted, accepted } => {
-                        metrics.note_spec_round(drafted, accepted);
+                        metrics.note_spec_round(drafted, accepted, k_round);
+                        // AIMD: grow k by one on a clean sweep, halve it
+                        // when under half the drafts survived
+                        if cfg.spec_adaptive && drafted > 0 {
+                            if accepted == drafted {
+                                seq.k_now = (seq.k_now + 1).min(seq.spec_k);
+                            } else if accepted * 2 < drafted {
+                                seq.k_now = (seq.k_now / 2).max(1);
+                            }
+                        }
                         for tok in tokens {
                             if seq.generated.len() >= seq.req.max_new_tokens {
                                 break;
@@ -477,6 +658,15 @@ impl EngineCore {
         // than poisoning batch-mates by failing mid-forward.
         let mut decode_deferred = 0usize;
         if let KvMode::Paged(pool) = &self.kv_mode {
+            // cached-but-unreferenced blocks are reclaimed BEFORE any
+            // decode deferral fires: the prefix cache yields first
+            if let Some(cache) = self.prefix.as_mut() {
+                let total_need: usize = decode_idx
+                    .iter()
+                    .map(|&i| self.backend.kv_blocks_needed(&self.active[i].state, 1))
+                    .sum();
+                cache.ensure_free(pool, total_need);
+            }
             let free = pool.free_blocks();
             let mut reserved = 0usize;
             let mut keep = Vec::with_capacity(decode_idx.len());
@@ -551,6 +741,28 @@ impl EngineCore {
             seq.timing.decode_us =
                 seq.timing.total_us - seq.timing.queued_us - seq.timing.prefill_us;
             self.metrics.record(&seq.timing, prompt_len, seq.generated.len());
+            // publish the retiring sequence's sealed prompt blocks into
+            // the shared-prefix trees before its KV resets. Evicted and
+            // mid-prefill retirees publish too: whatever prompt prefix
+            // they DID seal is valid for the next request. Only blocks
+            // fully covered by the prompt qualify (generated positions
+            // are sampling-dependent and never shared).
+            if seq.req.prefix_cache.unwrap_or(true) {
+                if let Some(cache) = self.prefix.as_mut() {
+                    if let Some(kv) = seq.state.native_kv() {
+                        let n = (prompt_len / KV_BLOCK).min(kv.sealed_blocks_min());
+                        if n > 0 {
+                            cache.target.insert(&seq.req.prompt, &kv.share_prefix_blocks(n));
+                        }
+                    }
+                    if let Some(draft) = &seq.draft_kv {
+                        let n = (prompt_len / KV_BLOCK).min(draft.sealed_blocks_min());
+                        if n > 0 {
+                            cache.draft.insert(&seq.req.prompt, &draft.share_prefix_blocks(n));
+                        }
+                    }
+                }
+            }
             let finish = if seq.evicted {
                 FinishReason::Evicted
             } else if seq.fed < prompt_len {
@@ -578,6 +790,9 @@ impl EngineCore {
         self.active = still_active;
         if let KvMode::Paged(pool) = &self.kv_mode {
             self.metrics.set_kv_stats(pool.stats(), Some(self.cfg.kv_dtype));
+        }
+        if let Some(cache) = &self.prefix {
+            self.metrics.set_prefix_stats(cache.stats());
         }
         self.metrics.add_busy(t0.elapsed());
         self.metrics.set_exec_stats(self.exec.stats());
@@ -857,11 +1072,14 @@ mod tests {
             assert_eq!(out.len(), 4);
         }
         assert_eq!(e.metrics.requests_completed, 12);
-        // every KV block allocated across the rounds was recycled
+        // every KV block allocated across the rounds was recycled —
+        // modulo what the shared-prefix cache (when the CI leg enables
+        // it) intentionally keeps alive for the next request
         if let Some(pool) = e.kv_pool() {
+            let cached = e.prefix_cached_blocks();
             let s = pool.stats();
-            assert_eq!(s.blocks_in_use, 0, "leaked kv blocks: {s:?}");
-            assert_eq!(s.allocs, s.frees, "alloc/free imbalance: {s:?}");
+            assert_eq!(s.blocks_in_use, cached, "leaked kv blocks: {s:?}");
+            assert_eq!(s.allocs - s.frees, cached as u64, "alloc/free imbalance: {s:?}");
         }
     }
 
@@ -927,7 +1145,7 @@ mod tests {
             assert_eq!(out.len(), 5);
             assert!(out.iter().all(|r| r.tokens.len() == 15));
             let s = e.kv_pool().unwrap().stats();
-            assert_eq!(s.blocks_in_use, 0);
+            assert_eq!(s.blocks_in_use, e.prefix_cached_blocks());
             assert!(s.allocs > 0, "quantized engine never sealed a block");
         }
     }
@@ -945,7 +1163,11 @@ mod tests {
         let out = e.run_to_completion().unwrap();
         assert_eq!(out.len(), 4, "requests dropped under pool pressure");
         let s = e.kv_pool().unwrap().stats();
-        assert_eq!(s.blocks_in_use, 0, "evicted sequences leaked blocks");
+        assert_eq!(
+            s.blocks_in_use,
+            e.prefix_cached_blocks(),
+            "evicted sequences leaked blocks"
+        );
         assert!(
             e.metrics.kv_evictions > 0 || e.metrics.kv_admission_blocked > 0,
             "starved pool never pushed back"
@@ -1012,7 +1234,12 @@ mod tests {
         assert!(e.metrics.spec_rounds > 0, "speculation never ran");
         // no KV blocks (target or draft) may leak across retirement
         if let Some(pool) = e.kv_pool() {
-            assert_eq!(pool.stats().blocks_in_use, 0, "leaked blocks: {:?}", pool.stats());
+            assert_eq!(
+                pool.stats().blocks_in_use,
+                e.prefix_cached_blocks(),
+                "leaked blocks: {:?}",
+                pool.stats()
+            );
         }
     }
 
@@ -1043,6 +1270,160 @@ mod tests {
         let pout = plain.run_to_completion().unwrap();
         let r1 = out.iter().find(|r| r.id == 1).unwrap();
         assert_eq!(r1.tokens, pout[0].tokens);
+    }
+
+    fn engine_prefix(prefix_cache: bool, spec_k: usize) -> EngineCore {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 160;
+        let fp = random_fp(&cfg, 919);
+        let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: 2,
+                prefill_chunk: 8,
+                kv_capacity: 160,
+                prefix_cache,
+                spec_k,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn prefix_hit_tokens_identical_to_cold_and_counters_move() {
+        // the tentpole contract at engine level: resubmitting a prompt
+        // must produce IDENTICAL greedy tokens while skipping most of
+        // its prefill via adopted blocks
+        let prompt: Vec<u32> = (0..40).map(|i| ((i * 7 + 3) % 60) as u32).collect();
+        let mut e = engine_prefix(true, 0);
+        e.submit(Request::new(1, prompt.clone(), 12));
+        let cold = e.run_to_completion().unwrap()[0].tokens.clone();
+        e.submit(Request::new(2, prompt.clone(), 12));
+        let warm = e.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(cold, warm, "prefix hit changed greedy tokens");
+        let s = e.prefix_stats().unwrap();
+        assert!(s.hits >= 1, "second request never hit the cache: {s:?}");
+        // 40-token prompt: blocks_for(40) = 2 full blocks adopted
+        assert_eq!(s.hit_positions, 2 * KV_BLOCK as u64, "{s:?}");
+        assert!(s.published_blocks > 0, "{s:?}");
+        assert_eq!(s.shared_blocks, e.prefix_cached_blocks());
+        // and a third, diverging-mid-prompt request still matches its
+        // own cold run on a cache-off engine
+        let mut div = prompt.clone();
+        div[20] = 59; // diverges inside block 1
+        e.submit(Request::new(3, div.clone(), 12));
+        let warm_div = e.run_to_completion().unwrap()[0].tokens.clone();
+        let mut off = engine_prefix(false, 0);
+        off.submit(Request::new(3, div, 12));
+        let cold_div = off.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(cold_div, warm_div, "partial prefix hit changed greedy tokens");
+        let r = e.metrics.report();
+        assert!(r.contains("prefix: hits="), "{r}");
+    }
+
+    #[test]
+    fn prefix_opt_out_request_neither_adopts_nor_publishes() {
+        let prompt: Vec<u32> = (0..36).map(|i| (i % 50) as u32).collect();
+        let mut e = engine_prefix(true, 0);
+        e.submit(Request::new(1, prompt.clone(), 6).with_prefix_cache(false));
+        e.run_to_completion().unwrap();
+        let s = e.prefix_stats().unwrap();
+        assert_eq!(s.published_blocks, 0, "opted-out request published: {s:?}");
+        assert_eq!(s.hits + s.misses, 0, "opted-out request was looked up: {s:?}");
+        // a later opted-in request with the same prompt is a clean miss
+        e.submit(Request::new(2, prompt.clone(), 6));
+        e.run_to_completion().unwrap();
+        let s = e.prefix_stats().unwrap();
+        assert_eq!(s.hits, 0);
+        assert!(s.misses >= 1);
+        assert!(s.published_blocks > 0, "opted-in request must publish");
+        // opt-out again: tokens still identical to the cache-off engine
+        e.submit(Request::new(3, prompt.clone(), 6).with_prefix_cache(false));
+        let warm = e.run_to_completion().unwrap()[0].tokens.clone();
+        let mut off = engine_prefix(false, 0);
+        off.submit(Request::new(3, prompt, 6));
+        let cold = off.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(cold, warm);
+    }
+
+    #[test]
+    fn spec_engine_prefix_hits_both_tiers_and_tokens_match() {
+        let prompt: Vec<u32> = (0..38).map(|i| ((i * 5 + 1) % 60) as u32).collect();
+        let run = |e: &mut EngineCore| {
+            e.submit(Request::new(1, prompt.clone(), 14));
+            let a = e.run_to_completion().unwrap()[0].tokens.clone();
+            e.submit(Request::new(2, prompt.clone(), 14));
+            let b = e.run_to_completion().unwrap()[0].tokens.clone();
+            (a, b)
+        };
+        let (cold_on, warm_on) = run(&mut engine_prefix(true, 4));
+        let (cold_off, warm_off) = run(&mut engine_prefix(false, 4));
+        assert_eq!(cold_on, cold_off, "cache on/off diverged on the cold run");
+        assert_eq!(warm_on, warm_off, "cache on/off diverged on the warm run");
+        assert_eq!(cold_on, warm_on, "spec warm run diverged from cold");
+        let mut e = engine_prefix(true, 4);
+        let _ = run(&mut e);
+        // target AND draft tier trees both hit on the resubmission
+        // (the merged snapshot counts request-facing hits once, from
+        // the target tier; the draft tier is checked directly)
+        let s = e.prefix_stats().unwrap();
+        assert!(s.hits >= 1, "target tier never hit: {s:?}");
+        let d = e.prefix.as_ref().unwrap().draft.stats();
+        assert!(d.hits >= 1, "draft tier never hit: {d:?}");
+    }
+
+    #[test]
+    fn adaptive_spec_k_stays_bounded_and_reports() {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 131);
+        let mk = |adaptive: bool| {
+            let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+            EngineCore::new(
+                Backend::Native(t),
+                &cfg,
+                EngineConfig {
+                    max_batch: 2,
+                    prefill_chunk: 4,
+                    kv_capacity: 96,
+                    spec_k: 4,
+                    spec_adaptive: adaptive,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let run = |e: &mut EngineCore| {
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 30));
+            e.submit(Request::new(2, vec![12; 20], 24));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        // AIMD changes pacing, never greedy content
+        let plain = run(&mut mk(false));
+        let mut e = mk(true);
+        let adapt = run(&mut e);
+        assert_eq!(plain, adapt, "adaptive k changed greedy tokens");
+        assert!(e.metrics.spec_rounds > 0);
+        // every round's chosen k respected the [1, spec_k] bounds
+        let mean = e.metrics.spec_k_mean();
+        assert!(mean >= 1.0 && mean <= 4.0, "k_mean {mean} out of bounds");
+        let r = e.metrics.report();
+        assert!(r.contains("k_mean="), "{r}");
     }
 
     #[test]

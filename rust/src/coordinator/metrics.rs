@@ -4,6 +4,7 @@ use std::time::Duration;
 
 use crate::engine::executor::ExecStats;
 use crate::model::kv_cache::{KvDtype, KvPoolStats};
+use crate::prefix::PrefixStats;
 use crate::util::stats::Summary;
 
 pub use crate::coordinator::request::RequestTiming as RequestMetrics;
@@ -37,6 +38,15 @@ pub struct Metrics {
     pub spec_accepted: u64,
     /// speculative rounds abandoned for plain decode (KV pressure).
     pub spec_fallbacks: u64,
+    /// draft tiers rebuilt after a pressure shed, once blocks recovered.
+    pub spec_draft_readmitted: u64,
+    /// sum of the per-round chosen draft length k (AIMD-adapted when
+    /// `GQSA_SPEC_ADAPTIVE=1`); mean = spec_k_sum / spec_rounds.
+    pub spec_k_sum: u64,
+    /// shared-prefix cache counters (hits/misses/evictions/held
+    /// blocks), snapshotted each tick; None until a caching engine
+    /// reports.
+    pub prefix: Option<PrefixStats>,
     /// high-water mark of concurrently active sequences.
     pub peak_active_seqs: usize,
     ttft_samples: Vec<f64>,
@@ -89,11 +99,28 @@ impl Metrics {
         self.peak_active_seqs = self.peak_active_seqs.max(n);
     }
 
-    /// Record one speculative round's outcome.
-    pub fn note_spec_round(&mut self, drafted: usize, accepted: usize) {
+    /// Record one speculative round's outcome. `k_chosen` is the draft
+    /// length the round ran with (== the engine's spec_k unless the
+    /// AIMD controller is adapting it per sequence).
+    pub fn note_spec_round(&mut self, drafted: usize, accepted: usize, k_chosen: usize) {
         self.spec_rounds += 1;
         self.spec_drafted += drafted as u64;
         self.spec_accepted += accepted as u64;
+        self.spec_k_sum += k_chosen as u64;
+    }
+
+    /// Mean chosen draft length per round (tracks the adaptive k).
+    pub fn spec_k_mean(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            self.spec_k_sum as f64 / self.spec_rounds as f64
+        }
+    }
+
+    /// Install the latest shared-prefix-cache snapshot.
+    pub fn set_prefix_stats(&mut self, s: PrefixStats) {
+        self.prefix = Some(s);
     }
 
     /// Fraction of drafted tokens the target accepted (0 when no
@@ -137,21 +164,39 @@ impl Metrics {
         };
         let spec = if self.spec_rounds > 0 || self.spec_fallbacks > 0 {
             format!(
-                ", spec: rounds={} drafted={} accepted={} rate={:.2} mean_acc={:.2} fallbacks={}",
+                ", spec: rounds={} drafted={} accepted={} rate={:.2} mean_acc={:.2} \
+                 k_mean={:.2} fallbacks={} readmits={}",
                 self.spec_rounds,
                 self.spec_drafted,
                 self.spec_accepted,
                 self.spec_acceptance_rate(),
                 self.spec_mean_accepted(),
+                self.spec_k_mean(),
                 self.spec_fallbacks,
+                self.spec_draft_readmitted,
             )
         } else {
             String::new()
         };
+        let prefix = match &self.prefix {
+            Some(p) => format!(
+                ", prefix: hits={} misses={} hit_blocks={} hit_pos={} published={} \
+                 evicted={} shared={} nodes={}",
+                p.hits,
+                p.misses,
+                p.hit_blocks,
+                p.hit_positions,
+                p.published_blocks,
+                p.evicted_blocks,
+                p.shared_blocks,
+                p.nodes,
+            ),
+            None => String::new(),
+        };
         format!(
             "requests={} prefill_toks={} gen_toks={} iters={} tok/s={:.1} \
              peak_active={} latency p50/p95 = {:.1}/{:.1} ms, ttft p50 = {:.1} ms, \
-             exec: chunks={} fixups={} busy_us={} par/seq={}/{}, {kv}{spec}",
+             exec: chunks={} fixups={} busy_us={} par/seq={}/{}, {kv}{spec}{prefix}",
             self.requests_completed,
             self.tokens_prefilled,
             self.tokens_generated,

@@ -47,6 +47,12 @@ pub struct Request {
     /// `Some(k)` requests k draft tokens per round (clamped to the
     /// engine's configured maximum).
     pub spec_k: Option<usize>,
+    /// per-request shared-prefix-cache override: `None` follows the
+    /// engine's `EngineConfig::prefix_cache`, `Some(false)` opts this
+    /// request out of BOTH adopting cached prompt blocks and publishing
+    /// its own (e.g. prompts carrying per-user secrets that must not be
+    /// shared), `Some(true)` is a no-op when the engine cache is off.
+    pub prefix_cache: Option<bool>,
 }
 
 impl Request {
@@ -58,12 +64,19 @@ impl Request {
             sampling: SamplingCfg::default(),
             stop_token: None,
             spec_k: None,
+            prefix_cache: None,
         }
     }
 
     /// Builder-style per-request speculative override (see `spec_k`).
     pub fn with_spec_k(mut self, k: usize) -> Self {
         self.spec_k = Some(k);
+        self
+    }
+
+    /// Builder-style shared-prefix-cache override (see `prefix_cache`).
+    pub fn with_prefix_cache(mut self, on: bool) -> Self {
+        self.prefix_cache = Some(on);
         self
     }
 }
@@ -112,6 +125,8 @@ mod tests {
         assert_eq!(r.sampling.mode, SamplingMode::Greedy);
         assert!(r.stop_token.is_none());
         assert!(r.spec_k.is_none());
-        assert_eq!(r.with_spec_k(2).spec_k, Some(2));
+        assert!(r.prefix_cache.is_none());
+        assert_eq!(r.clone().with_spec_k(2).spec_k, Some(2));
+        assert_eq!(r.with_prefix_cache(false).prefix_cache, Some(false));
     }
 }

@@ -22,6 +22,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod engine;
 pub mod gqs;
+pub mod prefix;
 pub mod quant;
 pub mod sparse;
 pub mod spec;

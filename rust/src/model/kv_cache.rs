@@ -22,6 +22,17 @@
 //! serving engine can evict or reject a sequence instead of poisoning
 //! the router thread.
 //!
+//! **Sharing.** Sealed blocks are handed out behind [`SharedKvBlock`]
+//! — a refcounted handle that returns the block to its pool (poisoned)
+//! when the *last* handle drops. The shared-prefix cache
+//! ([`crate::prefix`]) holds handles to retired sequences' prompt
+//! blocks; a new request with the same prompt prefix adopts them via
+//! [`LayerKv::adopt_prefix`] instead of recomputing prefill. A shared
+//! block is immutable; rewinding a sequence never mutates one — a
+//! truncate that re-opens a block as the f32 tail copies the payload
+//! into the sequence-local tail first (copy-on-write) and only drops
+//! its handle.
+//!
 //! **Rollback.** [`LayerKv::truncate`] rewinds a sequence to a shorter
 //! length, releasing whole sealed blocks back to the pool (poisoned,
 //! like any release). Speculative decoding appends draft positions it
@@ -116,6 +127,11 @@ impl std::error::Error for CacheFull {}
 /// Pool blocks sealed after appending `n` positions from zero (the
 /// lazy-seal rule: position p triggers a seal iff p > 0 and p % B == 0,
 /// so a just-filled tail is sealed by the *next* append).
+///
+/// This is THE audited rounding primitive for block arithmetic: the
+/// other helpers ([`blocks_needed`], [`blocks_spanning`],
+/// [`LayerKv::blocks_needed`]) are all defined in terms of it or of the
+/// layer's actual sealed count, never re-derived inline.
 #[inline]
 pub fn blocks_for(n: usize) -> usize {
     if n == 0 {
@@ -126,10 +142,22 @@ pub fn blocks_for(n: usize) -> usize {
 }
 
 /// New pool blocks consumed by appending `t` more positions to a
-/// sequence currently at `len`.
+/// sequence currently at `len`, assuming the lazy-seal state (sealed
+/// count == `blocks_for(len)`). A layer that adopted a shared prefix
+/// can be ahead of that state — use [`LayerKv::blocks_needed`], which
+/// consults the actual sealed count, when a layer is at hand.
 #[inline]
 pub fn blocks_needed(len: usize, t: usize) -> usize {
     blocks_for(len + t) - blocks_for(len)
+}
+
+/// Blocks that *span* `n` positions: sealed blocks plus the open f32
+/// tail (`ceil(n / B)`). This is the sizing rule (how many blocks a
+/// sequence of length n touches), not the allocation rule —
+/// [`blocks_for`] is the allocation rule.
+#[inline]
+pub fn blocks_spanning(n: usize) -> usize {
+    n.div_ceil(KV_BLOCK)
 }
 
 /// Block geometry + dtype shared by a pool and its blocks.
@@ -348,6 +376,47 @@ fn dequant_row(g: &KvGeom, codes: &[u8], params: &[QuantParams], out: &mut [f32]
     }
 }
 
+/// Refcounted handle to a sealed pool block. The payload is immutable
+/// behind the handle; the block returns to its pool (poisoned) when the
+/// LAST handle drops, so a sealed block can be shared between a live
+/// sequence and the cross-request prefix cache — or between many
+/// sequences with a common prompt prefix — and is recycled exactly
+/// once. Pool accounting is unchanged: a shared block counts as one
+/// `in_use` block however many handles reference it.
+#[derive(Clone)]
+pub struct SharedKvBlock {
+    inner: Arc<SharedBlockInner>,
+}
+
+struct SharedBlockInner {
+    pool: Arc<KvBlockPool>,
+    block: KvBlock,
+}
+
+impl Drop for SharedBlockInner {
+    fn drop(&mut self) {
+        // hand the payload back to the pool; `take` leaves an empty
+        // husk behind so the release is observed exactly once
+        self.pool.release(std::mem::take(&mut self.block));
+    }
+}
+
+impl SharedKvBlock {
+    fn new(pool: Arc<KvBlockPool>, block: KvBlock) -> Self {
+        Self { inner: Arc::new(SharedBlockInner { pool, block }) }
+    }
+
+    fn block(&self) -> &KvBlock {
+        &self.inner.block
+    }
+
+    /// True when no other handle (sequence or cache) references this
+    /// block — the prefix cache's eviction eligibility test.
+    pub fn is_unshared(&self) -> bool {
+        Arc::strong_count(&self.inner) == 1
+    }
+}
+
 #[derive(Default)]
 struct PoolInner {
     free: Vec<KvBlock>,
@@ -466,7 +535,7 @@ enum Store {
     },
     Paged {
         pool: Arc<KvBlockPool>,
-        sealed: Vec<KvBlock>,
+        sealed: Vec<SharedKvBlock>,
         /// newest partial block, always f32, (n_heads, KV_BLOCK, head_dim)
         tail_k: Vec<f32>,
         tail_v: Vec<f32>,
@@ -516,7 +585,7 @@ impl LayerKv {
             store: Store::Paged {
                 tail_k: vec![0.0; g.elems()],
                 tail_v: vec![0.0; g.elems()],
-                sealed: Vec::with_capacity(capacity.div_ceil(KV_BLOCK)),
+                sealed: Vec::with_capacity(blocks_spanning(capacity)),
                 pool,
                 shadow: Vec::new(),
             },
@@ -536,11 +605,16 @@ impl LayerKv {
     }
 
     /// New pool blocks an append of `t` positions would consume (0 for
-    /// slab layers).
+    /// slab layers). Consults the actual sealed count rather than
+    /// assuming the lazy-seal state, so it stays exact for layers that
+    /// adopted a shared prefix (which start with `len = B·n` AND n
+    /// blocks already sealed — one ahead of the lazy-seal rule).
     pub fn blocks_needed(&self, t: usize) -> usize {
         match &self.store {
             Store::Slab { .. } => 0,
-            Store::Paged { .. } => blocks_needed(self.len, t),
+            Store::Paged { sealed, .. } => {
+                blocks_for(self.len + t).saturating_sub(sealed.len())
+            }
         }
     }
 
@@ -549,6 +623,54 @@ impl LayerKv {
         match &self.store {
             Store::Slab { .. } => 0,
             Store::Paged { sealed, .. } => sealed.len(),
+        }
+    }
+
+    /// Adopt `blocks` — sealed elsewhere and published into the
+    /// shared-prefix cache — as this layer's leading sealed blocks. The
+    /// layer must be empty (a freshly admitted sequence); its length
+    /// jumps to the adopted coverage and subsequent appends continue in
+    /// the f32 tail. Adoption leaves the layer one seal AHEAD of the
+    /// lazy-seal state (`sealed == len / B` instead of
+    /// `blocks_for(len)`), which `append`'s tail arithmetic and
+    /// `blocks_needed` both handle — and which exactly matches the
+    /// storage state a cold sequence reaches the moment it first
+    /// *reads* position `len`, so adopted reads are bit-identical to a
+    /// cold run's at every subsequent step.
+    ///
+    /// Caveat for future callers: the adopter holds no f32 source for
+    /// adopted blocks, so a `truncate` that rewinds INTO one on a
+    /// quantized pool restores by dequantization (bounded error, same
+    /// as `truncate`'s documented no-shadow fallback) — it can never be
+    /// shadow-exact. The serving engine never does this (speculative
+    /// rollback floors sit past the prompt); an edit/continue API that
+    /// rewinds into the prompt would need to re-prefill the re-opened
+    /// block instead.
+    pub fn adopt_prefix(&mut self, blocks: &[SharedKvBlock]) {
+        assert_eq!(self.len, 0, "adopt_prefix requires a fresh (empty) sequence");
+        let positions = blocks.len() * KV_BLOCK;
+        assert!(
+            positions < self.capacity.max(1),
+            "adopted prefix ({positions} positions) must leave tail room below capacity {}",
+            self.capacity
+        );
+        match &mut self.store {
+            Store::Paged { sealed, .. } => {
+                sealed.clear();
+                sealed.extend(blocks.iter().cloned());
+                self.len = positions;
+            }
+            Store::Slab { .. } => panic!("adopt_prefix is paged-only"),
+        }
+    }
+
+    /// Handles to this layer's first `n` sealed blocks (cloned
+    /// refcounts) for publication into the shared-prefix cache. Empty
+    /// for slab layers; panics if fewer than `n` blocks are sealed.
+    pub fn share_prefix_blocks(&self, n: usize) -> Vec<SharedKvBlock> {
+        match &self.store {
+            Store::Slab { .. } => Vec::new(),
+            Store::Paged { sealed, .. } => sealed[..n].to_vec(),
         }
     }
 
@@ -590,7 +712,7 @@ impl LayerKv {
                     if pool.geom.dtype != KvDtype::F32 && (idx + 1) * KV_BLOCK >= commit_len {
                         shadow.push(ShadowTail { idx, k: tail_k.clone(), v: tail_v.clone() });
                     }
-                    sealed.push(block);
+                    sealed.push(SharedKvBlock::new(Arc::clone(pool), block));
                     tail_len = 0;
                 }
                 for h in 0..n_heads {
@@ -633,7 +755,7 @@ impl LayerKv {
                         pool.geom.dtype == KvDtype::F32,
                         "quantized KV blocks need key_segment/value_segment (scratch dequant)"
                     );
-                    let plane = sealed[b].f32_head(&pool.geom, value, h);
+                    let plane = sealed[b].block().f32_head(&pool.geom, value, h);
                     &plane[slot * self.head_dim..(slot + 1) * self.head_dim]
                 } else {
                     let src = if value { tail_v } else { tail_k };
@@ -688,10 +810,10 @@ impl LayerKv {
             Store::Paged { pool, sealed, tail_k, tail_v, .. } => {
                 if seg < sealed.len() {
                     match pool.geom.dtype {
-                        KvDtype::F32 => sealed[seg].f32_head(&pool.geom, value, h),
+                        KvDtype::F32 => sealed[seg].block().f32_head(&pool.geom, value, h),
                         _ => {
                             scratch.resize(KV_BLOCK * self.head_dim, 0.0);
-                            sealed[seg].deq_head(&pool.geom, value, h, scratch);
+                            sealed[seg].block().deq_head(&pool.geom, value, h, scratch);
                             &scratch[..]
                         }
                     }
@@ -742,19 +864,26 @@ impl LayerKv {
                 let idx = sealed.len() - 1;
                 let block = sealed.pop().unwrap();
                 if idx == keep && to > idx * KV_BLOCK {
-                    // this block becomes the (partial or full) f32 tail
+                    // this block becomes the (partial or full) f32 tail.
+                    // Copy-on-write: the payload is copied into the
+                    // sequence-local tail; the handle is merely dropped,
+                    // so a block still referenced by the prefix cache
+                    // (or another sequence) is never mutated or poisoned
+                    // by this sequence's rewind.
                     if let Some(si) = shadow.iter().position(|s| s.idx == idx) {
                         let s = shadow.swap_remove(si);
                         tail_k.copy_from_slice(&s.k);
                         tail_v.copy_from_slice(&s.v);
                     } else {
-                        block.deq_plane(&pool.geom, false, tail_k);
-                        block.deq_plane(&pool.geom, true, tail_v);
+                        block.block().deq_plane(&pool.geom, false, tail_k);
+                        block.block().deq_plane(&pool.geom, true, tail_v);
                     }
                 } else {
                     shadow.retain(|s| s.idx != idx);
                 }
-                pool.release(block);
+                // dropping the handle releases the block to the pool
+                // iff this was the last reference
+                drop(block);
             }
         }
         self.len = to;
@@ -772,11 +901,11 @@ impl LayerKv {
     pub fn reset(&mut self) {
         self.len = 0;
         self.commit_len = usize::MAX;
-        if let Store::Paged { pool, sealed, shadow, .. } = &mut self.store {
+        if let Store::Paged { sealed, shadow, .. } = &mut self.store {
             shadow.clear();
-            for b in sealed.drain(..) {
-                pool.release(b);
-            }
+            // dropping the handles returns unshared blocks to the pool;
+            // blocks the prefix cache still references stay alive there
+            sealed.clear();
         }
     }
 
@@ -840,6 +969,34 @@ impl KvCache {
     /// Sealed pool blocks currently held across all layers.
     pub fn blocks_held(&self) -> usize {
         self.layers.iter().map(|l| l.sealed_blocks()).sum()
+    }
+
+    /// Adopt a shared prompt prefix across every layer. `chain` is
+    /// indexed `[block][layer]` (the shape the prefix tree returns);
+    /// every depth must carry exactly one block per layer. See
+    /// [`LayerKv::adopt_prefix`].
+    pub fn adopt_prefix(&mut self, chain: &[Vec<SharedKvBlock>]) {
+        for depth in chain {
+            assert_eq!(depth.len(), self.layers.len(), "adopt_prefix layer-count mismatch");
+        }
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            let per_layer: Vec<SharedKvBlock> =
+                chain.iter().map(|depth| depth[l].clone()).collect();
+            layer.adopt_prefix(&per_layer);
+        }
+    }
+
+    /// Clone handles to the first `n` sealed blocks of every layer,
+    /// shaped `[block][layer]` for [`crate::prefix`] publication.
+    pub fn share_prefix_blocks(&self, n: usize) -> Vec<Vec<SharedKvBlock>> {
+        let per_layer: Vec<Vec<SharedKvBlock>> =
+            self.layers.iter().map(|l| l.share_prefix_blocks(n)).collect();
+        (0..n).map(|d| per_layer.iter().map(|pl| pl[d].clone()).collect()).collect()
+    }
+
+    /// Sealed blocks every layer has in common (the publishable depth).
+    pub fn sealed_blocks_min(&self) -> usize {
+        self.layers.iter().map(|l| l.sealed_blocks()).min().unwrap_or(0)
     }
 
     /// The shared pool, when paged.
@@ -941,13 +1098,132 @@ mod tests {
     fn blocks_needed_math() {
         let b = KV_BLOCK;
         assert_eq!(blocks_for(0), 0);
+        assert_eq!(blocks_for(1), 0);
+        assert_eq!(blocks_for(b - 1), 0);
         assert_eq!(blocks_for(b), 0); // full tail seals on the NEXT append
         assert_eq!(blocks_for(b + 1), 1);
+        assert_eq!(blocks_for(2 * b), 1);
+        assert_eq!(blocks_for(2 * b + 1), 2);
         assert_eq!(blocks_for(3 * b), 2);
         assert_eq!(blocks_needed(0, b), 0);
         assert_eq!(blocks_needed(0, b + 1), 1);
         assert_eq!(blocks_needed(b, 1), 1);
         assert_eq!(blocks_needed(b + 1, b), 1);
+        assert_eq!(blocks_needed(b - 1, 1), 0);
+        assert_eq!(blocks_needed(b - 1, 2), 1);
+        // spanning (sizing) vs sealing (allocation) at the boundaries
+        assert_eq!(blocks_spanning(0), 0);
+        assert_eq!(blocks_spanning(1), 1);
+        assert_eq!(blocks_spanning(b - 1), 1);
+        assert_eq!(blocks_spanning(b), 1);
+        assert_eq!(blocks_spanning(b + 1), 2);
+        assert_eq!(blocks_spanning(3 * b), 3);
+        // the layer-level count agrees with the free function in the
+        // lazy-seal state (the adopted/eager state is covered by
+        // adopted_layer_blocks_needed_is_exact below)
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 8);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        for len in 0..(2 * b + 2) {
+            for t in 0..(2 * b) {
+                assert_eq!(kv.blocks_needed(t), blocks_needed(len, t), "len {len} t {t}");
+            }
+            kv.append(&[0.0; 4], &[0.0; 4]).unwrap();
+        }
+    }
+
+    #[test]
+    fn shared_blocks_release_once_on_last_handle() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 4);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut kv, KV_BLOCK + 1, 0.3); // one sealed block
+        assert_eq!(pool.free_blocks(), 3);
+        let shared = kv.share_prefix_blocks(1);
+        assert!(!shared[0].is_unshared(), "sequence still references the block");
+        kv.reset();
+        // the cloned handle keeps the block alive (and un-poisoned)
+        assert_eq!(pool.free_blocks(), 3, "shared block freed early");
+        assert!(shared[0].is_unshared());
+        assert!(
+            shared[0].block().kf.iter().all(|v| v.is_finite()),
+            "shared block poisoned while a handle lives"
+        );
+        drop(shared);
+        assert_eq!(pool.free_blocks(), 4, "last handle did not release");
+        let s = pool.stats();
+        assert_eq!(s.allocs, s.frees, "double free or leak: {s:?}");
+    }
+
+    #[test]
+    fn adopt_prefix_reads_and_growth_match_donor() {
+        let pool = KvBlockPool::new(2, 8, KvDtype::F32, 32);
+        let n = 2 * KV_BLOCK + 5;
+        let mut donor = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut donor, n, 0.8);
+        let shared = donor.share_prefix_blocks(donor.sealed_blocks());
+        let mut adopter = LayerKv::paged(Arc::clone(&pool), 1000);
+        adopter.adopt_prefix(&shared);
+        assert_eq!(adopter.len, 2 * KV_BLOCK);
+        // re-append the donor's tail positions: reads must now be
+        // identical to the donor across the whole range
+        let d = 2 * 8;
+        for t in (2 * KV_BLOCK)..n {
+            let k: Vec<f32> = (0..d).map(|i| 0.8 + (t * d + i) as f32 * 0.01).collect();
+            let v: Vec<f32> = (0..d).map(|i| -0.8 - (t * d + i) as f32 * 0.02).collect();
+            adopter.append(&k, &v).unwrap();
+        }
+        assert_reads_equal(&donor, &adopter);
+        // growth past the adopted region allocates fresh (own) blocks
+        let free_before = pool.free_blocks();
+        fill_offset(&mut adopter, KV_BLOCK, 2.0, 0);
+        fill_offset(&mut donor, KV_BLOCK, 2.0, 0);
+        assert_reads_equal(&donor, &adopter);
+        assert!(pool.free_blocks() < free_before, "adopter never allocated its own block");
+    }
+
+    #[test]
+    fn adopted_layer_blocks_needed_is_exact() {
+        // an adopted layer is one seal AHEAD of the lazy-seal state:
+        // blocks_needed must consult the sealed count, not blocks_for
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 16);
+        let mut donor = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut donor, KV_BLOCK + 1, 0.1);
+        let shared = donor.share_prefix_blocks(1);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        kv.adopt_prefix(&shared);
+        assert_eq!(kv.len, KV_BLOCK);
+        // the block covering 0..B is already sealed: appending up to a
+        // full second tail consumes ZERO new blocks…
+        assert_eq!(kv.blocks_needed(KV_BLOCK), 0);
+        // …and the alloc happens only at the next boundary crossing
+        assert_eq!(kv.blocks_needed(KV_BLOCK + 1), 1);
+        let free = pool.free_blocks();
+        fill(&mut kv, KV_BLOCK, 0.2);
+        assert_eq!(pool.free_blocks(), free, "eager state allocated early");
+        fill(&mut kv, 1, 0.2);
+        assert_eq!(pool.free_blocks(), free - 1);
+    }
+
+    #[test]
+    fn truncate_through_shared_block_is_cow() {
+        // a rewind that re-opens a shared block as the tail must copy
+        // the payload out and leave the shared copy intact
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 8);
+        let mut donor = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut donor, KV_BLOCK + 1, 0.5);
+        let shared = donor.share_prefix_blocks(1);
+        let mut kv = LayerKv::paged(Arc::clone(&pool), 1000);
+        kv.adopt_prefix(&shared);
+        kv.truncate(3); // rewind INTO the shared block
+        assert_eq!(kv.len, 3);
+        let mut fresh = LayerKv::paged(Arc::clone(&pool), 1000);
+        fill(&mut fresh, 3, 0.5);
+        assert_reads_equal(&kv, &fresh);
+        // the shared copy is untouched: the donor still reads cleanly
+        assert!(donor.key(0, 0).iter().all(|v| v.is_finite()));
+        assert!(
+            shared[0].block().kf.iter().all(|v| v.is_finite()),
+            "cow rewind poisoned a shared block"
+        );
     }
 
     fn fill(kv: &mut LayerKv, n: usize, seed: f32) {

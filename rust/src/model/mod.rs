@@ -9,5 +9,7 @@ pub mod tokenizer;
 pub mod transformer;
 
 pub use config::ModelConfig;
-pub use kv_cache::{CacheFull, KvBlockPool, KvCache, KvDtype, KvPoolStats, KV_BLOCK};
+pub use kv_cache::{
+    CacheFull, KvBlockPool, KvCache, KvDtype, KvPoolStats, SharedKvBlock, KV_BLOCK,
+};
 pub use transformer::{BlockScratch, ExecHandle, LinearKind, Scratch, Transformer};

@@ -1,0 +1,635 @@
+//! Shared-prefix KV cache — radix-tree prompt reuse over the paged
+//! block pool (L5 of the stack).
+//!
+//! Under the north-star workload (millions of users hitting the same
+//! system prompts and few-shot templates) prefill compute and KV bytes
+//! are dominated by redundant prompt *prefixes*. This module shares
+//! them: a radix tree keyed by token-id sequences at [`KV_BLOCK`]
+//! (16-position) granularity holds refcounted handles to sealed
+//! [`KvBlock`]s published by retired sequences. A new request walks the
+//! tree with its prompt, adopts the longest cached chain of full
+//! blocks, and starts chunked prefill *after* the hit. Because blocks
+//! are stored at the pool's sealed dtype, GQSA's group quantization
+//! (paper Eq. 1–3) compresses the cross-request redundancy too.
+//!
+//! **Exactness.** Adoption is capped at `blocks_for(prompt_len)` blocks
+//! (strictly less than the prompt, so the last prompt token is always
+//! fed and produces first-token logits). Under the pool's lazy-seal
+//! rule this leaves the adopter's sealed-vs-tail storage state
+//! identical to a cold sequence's at every position it goes on to
+//! process, and published block bytes are deterministic functions of
+//! the prompt (the batched kernels replicate per-row accumulation
+//! order). A prefix hit is therefore *bit-identical* to a cold run —
+//! at f32 trivially, and at q8/q4 because the adopted codes are byte-
+//! for-byte the codes the cold run would have sealed itself.
+//!
+//! **Tiers.** The engine keeps one tree per KV tier: `target` for the
+//! serving model and `draft` for the self-speculative tier
+//! ([`crate::spec`]), whose K/V are numerically different objects and
+//! must never be adopted across tiers.
+//!
+//! **Eviction.** Tree nodes whose blocks are referenced by no live
+//! sequence (`SharedKvBlock::is_unshared`) are reclaimable. The engine
+//! calls [`PrefixCache::ensure_free`] on every pool-pressure path
+//! (admission, chunked prefill, batched decode, speculation, draft
+//! re-admission) BEFORE it defers or evicts live work, so the cache can
+//! only ever consume memory nobody else wants: least-recently-used
+//! leaves are dropped until the pool has headroom.
+//!
+//! [`KvBlock`]: crate::model::kv_cache::KvBlock
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::model::kv_cache::{KvBlockPool, SharedKvBlock, KV_BLOCK};
+
+/// Counter snapshot for metrics / the `/report` string. When produced
+/// by [`PrefixCache::stats`], the request-facing counters (`hits`,
+/// `misses`, `hit_positions`) are TARGET-tier only — a speculative
+/// request looks up both tiers for the same prompt, and counting both
+/// would double every request — while the block-level counters
+/// (`hit_blocks`, `published_blocks`, `evicted_blocks`,
+/// `shared_blocks`, `nodes`) span both tiers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// lookups that matched at least one block
+    pub hits: u64,
+    /// lookups (with at least one full block of prompt) that matched none
+    pub misses: u64,
+    /// blocks adopted across all hits (all layers)
+    pub hit_blocks: u64,
+    /// prompt positions whose prefill was skipped via adoption
+    pub hit_positions: u64,
+    /// blocks newly published into the tree (all layers)
+    pub published_blocks: u64,
+    /// blocks reclaimed by LRU eviction (all layers)
+    pub evicted_blocks: u64,
+    /// blocks the tree currently keeps alive (all layers)
+    pub shared_blocks: usize,
+    /// radix-tree nodes currently resident
+    pub nodes: usize,
+}
+
+/// One radix-tree node: the sealed blocks (one per layer) for the
+/// 16-token edge leading here, plus LRU bookkeeping and children keyed
+/// by the next 16 tokens.
+struct Node {
+    /// one block per transformer layer, `[layer]`
+    blocks: Vec<SharedKvBlock>,
+    last_used: u64,
+    children: HashMap<Vec<u32>, Node>,
+}
+
+/// Radix tree over token-id sequences at block granularity for ONE KV
+/// tier. Each edge is exactly [`KV_BLOCK`] token ids; a path of depth d
+/// caches the sealed K/V of prompt positions `0..16·d` for every layer.
+pub struct PrefixTree {
+    n_layers: usize,
+    children: HashMap<Vec<u32>, Node>,
+    /// logical LRU clock (bumped per probe/lookup/insert). The two
+    /// trees of a [`PrefixCache`] SHARE one clock, so stamps are
+    /// comparable across tiers and cross-tier eviction is genuinely
+    /// global-LRU (two independent clocks advancing at different rates
+    /// would systematically drain the slower tier first).
+    clock: Arc<AtomicU64>,
+    stats: PrefixStats,
+}
+
+impl PrefixTree {
+    pub fn new(n_layers: usize) -> Self {
+        Self::with_clock(n_layers, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// A tree whose LRU stamps come from `clock` — how [`PrefixCache`]
+    /// keeps its two tiers on one comparable timeline.
+    pub fn with_clock(n_layers: usize, clock: Arc<AtomicU64>) -> Self {
+        Self { n_layers, children: HashMap::new(), clock, stats: PrefixStats::default() }
+    }
+
+    /// Next LRU stamp off the (possibly shared) clock.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Blocks currently kept alive by this tree (all layers).
+    pub fn shared_blocks(&self) -> usize {
+        self.stats.shared_blocks
+    }
+
+    /// Depth (in blocks) the tree would match for `tokens`, without
+    /// touching hit/miss counters — the admission budget probe. It DOES
+    /// refresh the matched chain's LRU stamps: admission calls
+    /// `ensure_free` right after probing, and a stale-stamped chain the
+    /// request is about to adopt must not be the first thing that
+    /// eviction reclaims.
+    pub fn probe(&mut self, tokens: &[u32], max_blocks: usize) -> usize {
+        let max = max_blocks.min(tokens.len() / KV_BLOCK);
+        if max == 0 {
+            return 0;
+        }
+        let clock = self.tick();
+        let mut cur = &mut self.children;
+        let mut depth = 0usize;
+        while depth < max {
+            match cur.get_mut(&tokens[depth * KV_BLOCK..(depth + 1) * KV_BLOCK]) {
+                Some(node) => {
+                    node.last_used = clock;
+                    cur = &mut node.children;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        depth
+    }
+
+    /// Match the longest cached chain of full blocks against `tokens`
+    /// (at most `max_blocks`), bump the chain's LRU stamps, and return
+    /// cloned handles shaped `[block][layer]` — ready for
+    /// [`crate::model::KvCache::adopt_prefix`].
+    pub fn lookup(&mut self, tokens: &[u32], max_blocks: usize) -> Vec<Vec<SharedKvBlock>> {
+        let max = max_blocks.min(tokens.len() / KV_BLOCK);
+        if max == 0 {
+            // a sub-block prompt can never hit; don't count it as a miss
+            return Vec::new();
+        }
+        let clock = self.tick();
+        let mut out: Vec<Vec<SharedKvBlock>> = Vec::new();
+        let mut cur = &mut self.children;
+        while out.len() < max {
+            let d = out.len();
+            match cur.get_mut(&tokens[d * KV_BLOCK..(d + 1) * KV_BLOCK]) {
+                Some(node) => {
+                    node.last_used = clock;
+                    out.push(node.blocks.clone());
+                    cur = &mut node.children;
+                }
+                None => break,
+            }
+        }
+        if out.is_empty() {
+            self.stats.misses += 1;
+        } else {
+            self.stats.hits += 1;
+            self.stats.hit_blocks += (out.len() * self.n_layers) as u64;
+            self.stats.hit_positions += (out.len() * KV_BLOCK) as u64;
+        }
+        out
+    }
+
+    /// Publish a retired sequence's sealed prompt blocks. `chain` is
+    /// shaped `[block][layer]` (from `KvCache::share_prefix_blocks`);
+    /// the caller guarantees every chained block covers prompt-only
+    /// positions. Existing nodes keep their blocks (the bytes are
+    /// identical by construction) and just refresh their LRU stamp.
+    pub fn insert(&mut self, tokens: &[u32], chain: &[Vec<SharedKvBlock>]) {
+        let clock = self.tick();
+        let n_layers = self.n_layers;
+        let mut published = 0usize;
+        let mut new_nodes = 0usize;
+        let mut cur = &mut self.children;
+        for (d, blocks) in chain.iter().enumerate() {
+            if (d + 1) * KV_BLOCK > tokens.len() {
+                debug_assert!(false, "published chain longer than the prompt");
+                break;
+            }
+            debug_assert_eq!(blocks.len(), n_layers, "publish layer-count mismatch");
+            let key = &tokens[d * KV_BLOCK..(d + 1) * KV_BLOCK];
+            if !cur.contains_key(key) {
+                cur.insert(
+                    key.to_vec(),
+                    Node { blocks: blocks.clone(), last_used: clock, children: HashMap::new() },
+                );
+                published += blocks.len();
+                new_nodes += 1;
+            }
+            let node = cur.get_mut(key).expect("just checked/inserted");
+            node.last_used = clock;
+            cur = &mut node.children;
+        }
+        self.stats.published_blocks += published as u64;
+        self.stats.shared_blocks += published;
+        self.stats.nodes += new_nodes;
+    }
+
+    /// LRU stamp of the best evictable node, if any (a leaf whose
+    /// blocks no live sequence references).
+    pub fn peek_lru(&self) -> Option<u64> {
+        self.find_lru().map(|(t, _)| t)
+    }
+
+    /// One DFS collecting EVERY currently evictable leaf (stamp,
+    /// key-path). Only leaves qualify: an inner node's children extend
+    /// its context and would be orphaned without it. Keys are cloned
+    /// per collected leaf, not per node visited.
+    fn evictable_leaves(&self) -> Vec<(u64, Vec<Vec<u32>>)> {
+        fn walk<'a>(
+            children: &'a HashMap<Vec<u32>, Node>,
+            path: &mut Vec<&'a Vec<u32>>,
+            out: &mut Vec<(u64, Vec<Vec<u32>>)>,
+        ) {
+            for (key, node) in children {
+                path.push(key);
+                if node.children.is_empty() {
+                    if node.blocks.iter().all(|b| b.is_unshared()) {
+                        out.push((
+                            node.last_used,
+                            path.iter().map(|k| (*k).clone()).collect(),
+                        ));
+                    }
+                } else {
+                    walk(&node.children, path, out);
+                }
+                path.pop();
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.children, &mut Vec::new(), &mut out);
+        out
+    }
+
+    /// The oldest evictable leaf's (stamp, key-path), if any.
+    fn find_lru(&self) -> Option<(u64, Vec<Vec<u32>>)> {
+        self.evictable_leaves().into_iter().min_by_key(|(t, _)| *t)
+    }
+
+    /// Remove the node at `path`, releasing its blocks back to the
+    /// pool. Returns blocks freed (0 when the path is stale).
+    fn evict_path(&mut self, path: &[Vec<u32>]) -> usize {
+        let Some((last, parents)) = path.split_last() else {
+            return 0;
+        };
+        let mut cur = &mut self.children;
+        for key in parents {
+            match cur.get_mut(key.as_slice()) {
+                Some(n) => cur = &mut n.children,
+                None => return 0,
+            }
+        }
+        let Some(node) = cur.remove(last.as_slice()) else {
+            return 0;
+        };
+        let freed = node.blocks.len();
+        self.stats.evicted_blocks += freed as u64;
+        self.stats.shared_blocks -= freed;
+        self.stats.nodes -= 1;
+        freed // handles drop here -> blocks return to the pool
+    }
+
+    /// Drop the least-recently-used unreferenced leaf, releasing its
+    /// blocks back to the pool. Returns blocks freed (0 = nothing
+    /// evictable: every cached block is still in use by a sequence).
+    pub fn evict_lru(&mut self) -> usize {
+        match self.find_lru() {
+            Some((_, path)) => self.evict_path(&path),
+            None => 0,
+        }
+    }
+}
+
+/// The engine-facing cache: one radix tree per KV tier. The draft tree
+/// exists because the self-speculative draft re-encodes K/V through its
+/// own weights — its blocks are numerically different objects and must
+/// never be adopted into a target-tier sequence (or vice versa).
+pub struct PrefixCache {
+    pub target: PrefixTree,
+    pub draft: PrefixTree,
+}
+
+impl PrefixCache {
+    pub fn new(n_layers: usize) -> Self {
+        // one clock across both tiers: LRU stamps must be comparable
+        // for cross-tier eviction to be genuinely least-recently-used
+        let clock = Arc::new(AtomicU64::new(0));
+        Self {
+            target: PrefixTree::with_clock(n_layers, Arc::clone(&clock)),
+            draft: PrefixTree::with_clock(n_layers, clock),
+        }
+    }
+
+    /// Counter snapshot: request-facing counters (hits / misses /
+    /// hit_positions) are TARGET-tier only — a speculative request
+    /// looks up both tiers for one prompt, and summing would double
+    /// every request — while block-level counters span both tiers.
+    pub fn stats(&self) -> PrefixStats {
+        let t = self.target.stats();
+        let d = self.draft.stats();
+        PrefixStats {
+            hits: t.hits,
+            misses: t.misses,
+            hit_positions: t.hit_positions,
+            hit_blocks: t.hit_blocks + d.hit_blocks,
+            published_blocks: t.published_blocks + d.published_blocks,
+            evicted_blocks: t.evicted_blocks + d.evicted_blocks,
+            shared_blocks: t.shared_blocks + d.shared_blocks,
+            nodes: t.nodes + d.nodes,
+        }
+    }
+
+    /// Blocks currently kept alive by both trees.
+    pub fn shared_blocks(&self) -> usize {
+        self.target.shared_blocks() + self.draft.shared_blocks()
+    }
+
+    /// Evict unreferenced cached blocks (globally least-recently-used
+    /// first, across both tiers) until `pool` has at least `needed`
+    /// free blocks or nothing evictable remains. Returns blocks freed.
+    /// This is the pressure valve: it runs BEFORE any admission block,
+    /// decode deferral, live-sequence eviction, or speculative
+    /// fallback, so caching can never starve real work.
+    pub fn ensure_free(&mut self, pool: &KvBlockPool, needed: usize) -> usize {
+        let mut freed = 0usize;
+        while pool.free_blocks() < needed {
+            // one DFS per tier gathers every currently evictable leaf;
+            // evict oldest-first from the sorted batch (stamps share one
+            // clock, so the cross-tier order is true global LRU).
+            // Evicting a leaf can expose its parent, so the outer loop
+            // re-gathers until the pool is satisfied or nothing is left
+            // — O(depth) gathers per drain instead of one per block.
+            let mut batch: Vec<(u64, bool, Vec<Vec<u32>>)> = Vec::new();
+            batch.extend(
+                self.target.evictable_leaves().into_iter().map(|(t, p)| (t, false, p)),
+            );
+            batch.extend(
+                self.draft.evictable_leaves().into_iter().map(|(t, p)| (t, true, p)),
+            );
+            if batch.is_empty() {
+                break;
+            }
+            batch.sort_by_key(|(t, _, _)| *t);
+            let mut progressed = false;
+            for (_, is_draft, path) in &batch {
+                if pool.free_blocks() >= needed {
+                    return freed;
+                }
+                let n = if *is_draft {
+                    self.draft.evict_path(path)
+                } else {
+                    self.target.evict_path(path)
+                };
+                if n > 0 {
+                    freed += n;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kv_cache::{blocks_for, KvDtype, LayerKv};
+    use crate::model::KvCache;
+    use std::sync::Arc;
+
+    fn fill_cache(kv: &mut KvCache, tokens: &[u32], seed: f32) {
+        // deterministic per-token K/V so equal prompts publish equal bytes
+        let l0 = &kv.layers[0];
+        let d = l0.n_heads * l0.head_dim;
+        for (t, &tok) in tokens.iter().enumerate() {
+            let k: Vec<f32> =
+                (0..d).map(|i| seed + tok as f32 + (t * d + i) as f32 * 0.01).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            for l in &mut kv.layers {
+                l.append(&k, &v).unwrap();
+            }
+        }
+    }
+
+    fn publish(tree: &mut PrefixTree, kv: &KvCache, prompt: &[u32]) {
+        let n = (prompt.len() / KV_BLOCK).min(kv.sealed_blocks_min());
+        if n > 0 {
+            tree.insert(prompt, &kv.share_prefix_blocks(n));
+        }
+    }
+
+    #[test]
+    fn lookup_matches_longest_published_chain() {
+        let n_layers = 2;
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut tree = PrefixTree::new(n_layers);
+        let prompt: Vec<u32> = (0..(3 * KV_BLOCK + 4)).map(|i| (i % 7) as u32).collect();
+        let mut kv = KvCache::paged(n_layers, &pool, 1000);
+        fill_cache(&mut kv, &prompt, 0.5);
+        publish(&mut tree, &kv, &prompt);
+        assert_eq!(tree.stats().nodes, 3);
+
+        // identical prompt: full 3-block hit (capped below the prompt)
+        let hit = tree.lookup(&prompt, blocks_for(prompt.len()));
+        assert_eq!(hit.len(), 3);
+        assert!(hit.iter().all(|d| d.len() == n_layers));
+
+        // diverges inside block 2: only the first 2 blocks match
+        let mut div = prompt.clone();
+        div[2 * KV_BLOCK + 3] = 63;
+        assert_eq!(tree.lookup(&div, blocks_for(div.len())).len(), 2);
+
+        // diverges in block 0: clean miss
+        let mut cold = prompt.clone();
+        cold[0] = 63;
+        assert!(tree.lookup(&cold, blocks_for(cold.len())).is_empty());
+
+        // sub-block prompt: no lookup, no miss counted
+        let misses = tree.stats().misses;
+        assert!(tree.lookup(&prompt[..KV_BLOCK - 1], 0).is_empty());
+        assert_eq!(tree.stats().misses, misses);
+
+        let s = tree.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hit_blocks, (5 * n_layers) as u64);
+    }
+
+    #[test]
+    fn adoption_cap_always_leaves_a_prompt_token_to_feed() {
+        // blocks_for(plen) * B <= plen - 1 for every plen: the hit can
+        // never swallow the whole prompt (first-token logits need a
+        // real forward)
+        for plen in 1..(5 * KV_BLOCK + 3) {
+            assert!(blocks_for(plen) * KV_BLOCK < plen, "plen {plen}");
+        }
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_refreshes_lru() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut tree = PrefixTree::new(1);
+        let prompt: Vec<u32> = (0..(2 * KV_BLOCK)).map(|i| i as u32).collect();
+        let mut kv = KvCache::paged(1, &pool, 1000);
+        fill_cache(&mut kv, &prompt, 0.1);
+        // only block 0 is sealed at len == 2B (lazy seal)
+        publish(&mut tree, &kv, &prompt);
+        assert_eq!(tree.stats().nodes, 1);
+        let in_use_before = pool.stats().blocks_in_use;
+        // a second publisher of the same prompt adds nothing
+        let mut kv2 = KvCache::paged(1, &pool, 1000);
+        fill_cache(&mut kv2, &prompt, 0.1);
+        publish(&mut tree, &kv2, &prompt);
+        assert_eq!(tree.stats().nodes, 1);
+        assert_eq!(tree.stats().published_blocks, 1);
+        drop(kv2);
+        assert_eq!(pool.stats().blocks_in_use, in_use_before, "duplicate publish leaked");
+    }
+
+    #[test]
+    fn lru_eviction_skips_referenced_blocks_and_frees_pool() {
+        let n_layers = 1;
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut tree = PrefixTree::new(n_layers);
+        let mk_prompt = |tag: u32| -> Vec<u32> {
+            (0..(KV_BLOCK + 2)).map(|i| tag * 100 + i as u32).collect()
+        };
+        // publish three distinct single-block prefixes
+        let mut kvs = Vec::new();
+        for tag in 0..3u32 {
+            let p = mk_prompt(tag);
+            let mut kv = KvCache::paged(n_layers, &pool, 1000);
+            fill_cache(&mut kv, &p, tag as f32);
+            publish(&mut tree, &kv, &p);
+            kvs.push((p, kv));
+        }
+        assert_eq!(tree.shared_blocks(), 3);
+        // sequence 0 retires; 1 and 2 stay live (their handles pin the
+        // cached blocks). Touch prefix 2 so prefix 0 is the LRU.
+        kvs.remove(0).1.reset();
+        let p2 = kvs[1].0.clone();
+        let _ = tree.lookup(&p2, 1);
+        // only prefix 0's block is unreferenced -> first eviction takes
+        // it regardless of LRU order among the referenced ones
+        let free_before = pool.free_blocks();
+        assert_eq!(tree.evict_lru(), 1);
+        assert_eq!(pool.free_blocks(), free_before + 1, "eviction did not free the pool");
+        // everything left is pinned by live sequences: nothing evictable
+        assert_eq!(tree.evict_lru(), 0);
+        assert_eq!(tree.shared_blocks(), 2);
+        // once the sequences retire, ensure_free can drain the rest
+        drop(kvs);
+        let freed = PrefixCache { target: tree, draft: PrefixTree::new(n_layers) }
+            .ensure_free(&pool, pool.total_blocks());
+        assert_eq!(freed, 2);
+        assert_eq!(pool.stats().blocks_in_use, 0, "tree teardown leaked blocks");
+    }
+
+    #[test]
+    fn eviction_is_leaf_first() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut tree = PrefixTree::new(1);
+        let prompt: Vec<u32> = (0..(2 * KV_BLOCK + 2)).map(|i| (i % 5) as u32).collect();
+        let mut kv = KvCache::paged(1, &pool, 1000);
+        fill_cache(&mut kv, &prompt, 0.9);
+        publish(&mut tree, &kv, &prompt); // depth-2 chain
+        kv.reset();
+        assert_eq!(tree.stats().nodes, 2);
+        // evicting takes the deeper (leaf) node first even though the
+        // parent shares its LRU stamp
+        assert_eq!(tree.evict_lru(), 1);
+        assert_eq!(tree.stats().nodes, 1);
+        assert_eq!(tree.probe(&prompt, 2), 1, "parent must survive the leaf eviction");
+        assert_eq!(tree.evict_lru(), 1);
+        assert_eq!(pool.stats().blocks_in_use, 0);
+    }
+
+    #[test]
+    fn adopted_blocks_pin_against_eviction_until_dropped() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut tree = PrefixTree::new(1);
+        let prompt: Vec<u32> = (0..(KV_BLOCK + 5)).map(|i| i as u32).collect();
+        {
+            let mut kv = KvCache::paged(1, &pool, 1000);
+            fill_cache(&mut kv, &prompt, 0.2);
+            publish(&mut tree, &kv, &prompt);
+        }
+        let hit = tree.lookup(&prompt, blocks_for(prompt.len()));
+        assert_eq!(hit.len(), 1);
+        let mut adopter = KvCache::paged(1, &pool, 1000);
+        adopter.adopt_prefix(&hit);
+        drop(hit);
+        assert_eq!(tree.evict_lru(), 0, "evicted a block a live sequence adopted");
+        // adopted data stays readable (un-poisoned) while referenced
+        let mut scratch = Vec::new();
+        let seg = adopter.layers[0].key_segment(0, 0, &mut scratch);
+        assert!(seg.iter().all(|v| v.is_finite()), "adopted block poisoned under use");
+        drop(adopter);
+        assert_eq!(tree.evict_lru(), 1);
+        assert_eq!(pool.stats().blocks_in_use, 0);
+    }
+
+    #[test]
+    fn probe_counts_nothing_but_shields_the_chain_from_eviction() {
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut tree = PrefixTree::new(1);
+        let prompt: Vec<u32> = (0..(2 * KV_BLOCK + 1)).map(|i| (i % 9) as u32).collect();
+        let mut kv = KvCache::paged(1, &pool, 1000);
+        fill_cache(&mut kv, &prompt, 0.3);
+        publish(&mut tree, &kv, &prompt);
+        let before = tree.stats();
+        assert_eq!(tree.probe(&prompt, blocks_for(prompt.len())), 2);
+        assert_eq!(tree.probe(&prompt, 1), 1);
+        assert_eq!(tree.probe(&[999; KV_BLOCK], 1), 0);
+        let after = tree.stats();
+        assert_eq!(before.hits, after.hits, "probe must not count as a hit");
+        assert_eq!(before.misses, after.misses, "probe must not count as a miss");
+        // probing refreshes recency: a just-probed chain outlives an
+        // older published-but-unprobed one under eviction pressure
+        let other: Vec<u32> = (0..(KV_BLOCK + 2)).map(|i| 500 + i as u32).collect();
+        let mut kv2 = KvCache::paged(1, &pool, 1000);
+        fill_cache(&mut kv2, &other, 0.4);
+        publish(&mut tree, &kv2, &other);
+        drop(kv);
+        drop(kv2);
+        assert_eq!(tree.probe(&prompt, blocks_for(prompt.len())), 2); // bump again
+        assert_eq!(tree.evict_lru(), 1);
+        assert_eq!(tree.probe(&other, 1), 0, "eviction should take the unprobed chain");
+        assert_eq!(tree.probe(&prompt, 1), 1, "probed chain must survive");
+    }
+
+    #[test]
+    fn cross_tier_eviction_is_globally_lru() {
+        // the two tiers share one clock: a chain refreshed last in the
+        // TARGET tree must outlive an older draft-tree chain even
+        // though per-tree op counts differ
+        let pool = KvBlockPool::new(1, 4, KvDtype::F32, 64);
+        let mut cache = PrefixCache::new(1);
+        let p1: Vec<u32> = (0..(KV_BLOCK + 1)).map(|i| i as u32).collect();
+        let p2: Vec<u32> = (0..(KV_BLOCK + 1)).map(|i| 100 + i as u32).collect();
+        {
+            let mut kv = KvCache::paged(1, &pool, 1000);
+            fill_cache(&mut kv, &p1, 0.1);
+            publish(&mut cache.target, &kv, &p1);
+        }
+        {
+            let mut kv = KvCache::paged(1, &pool, 1000);
+            fill_cache(&mut kv, &p2, 0.2);
+            publish(&mut cache.draft, &kv, &p2);
+        }
+        // refresh the TARGET chain after the draft publish: it is now
+        // the globally newest despite the target tree's lower op count
+        let _ = cache.target.lookup(&p1, 1);
+        let freed = cache.ensure_free(&pool, pool.total_blocks() - 1);
+        assert_eq!(freed, 1);
+        assert_eq!(cache.draft.shared_blocks(), 0, "older draft chain should evict first");
+        assert_eq!(cache.target.shared_blocks(), 1, "freshly used target chain must survive");
+        // and the merged snapshot reports request-facing counters from
+        // the target tier only (no spec double count)
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.evicted_blocks, 1);
+        assert_eq!(s.shared_blocks, 1);
+    }
+
+    // a LayerKv import keeps the cross-module visibility honest: the
+    // prefix tree only ever sees SharedKvBlock handles, never raw
+    // KvBlock payloads
+    #[allow(dead_code)]
+    fn _types(_: &LayerKv) {}
+}

@@ -11,10 +11,12 @@
 use std::sync::Arc;
 
 use gqsa::model::config::demo_config;
+use gqsa::model::kv_cache::blocks_for;
 use gqsa::model::transformer::random_fp;
 use gqsa::model::{
     KvBlockPool, KvCache, KvDtype, ModelConfig, Scratch, Transformer, KV_BLOCK,
 };
+use gqsa::prefix::PrefixTree;
 use gqsa::util::XorShift;
 
 fn small_cfg(d_model: usize, n_layers: usize, n_heads: usize) -> ModelConfig {
@@ -232,6 +234,114 @@ fn pool_survives_1k_request_lifecycles_without_leak_or_double_free() {
     }
     let s = pool.stats();
     assert!(s.allocs >= 1000, "lifecycles never exercised the pool (allocs {})", s.allocs);
+}
+
+#[test]
+fn shared_prefix_lifecycle_1k_iterations_no_leak_no_stale_reuse() {
+    // interleaved admit / adopt / diverge / retire / evict against one
+    // pool and one prefix tree, with a small token alphabet so prompt
+    // prefixes genuinely collide. Invariants checked every iteration:
+    //   * pool accounting: in_use == tree-held + live-sequence blocks
+    //     (no leak), allocs - frees == in_use (no double free),
+    //   * adopted data stays finite (never NaN-poisoned) while any
+    //     handle references it,
+    //   * eviction never claims a block a live sequence adopted.
+    let n_layers = 2;
+    let d = 2 * 8; // n_heads * head_dim
+    let pool = KvBlockPool::new(2, 8, KvDtype::Q8, 48);
+    let mut tree = PrefixTree::new(n_layers);
+    let mut rng = XorShift::new(2026);
+    // deterministic K/V as a function of (token, position) so any two
+    // publishers of the same prompt prefix write identical bytes
+    let fill = |kv: &mut KvCache, tokens: &[u32], from: usize| {
+        for (t, &tok) in tokens.iter().enumerate().skip(from) {
+            let k: Vec<f32> =
+                (0..d).map(|i| tok as f32 + (t * d + i) as f32 * 0.01).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            for l in &mut kv.layers {
+                if l.append(&k, &v).is_err() {
+                    return; // pool pressure is legal; leaking is not
+                }
+            }
+        }
+    };
+    let mut live: Vec<(Vec<u32>, KvCache)> = Vec::new();
+    for life in 0..1000u64 {
+        let action = rng.below(10);
+        if action < 6 || live.is_empty() {
+            // admit: random prompt over a 3-token alphabet, block-ish lengths
+            let plen = 1 + rng.below(4 * KV_BLOCK + 2);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.below(3) as u32).collect();
+            let mut kv = KvCache::paged(n_layers, &pool, 8 * KV_BLOCK);
+            let hit = tree.lookup(&prompt, blocks_for(plen));
+            let adopted = hit.len() * KV_BLOCK;
+            if !hit.is_empty() {
+                kv.adopt_prefix(&hit);
+                // adopted data must be live and finite under refcount
+                let mut scratch = Vec::new();
+                let seg = kv.layers[0].key_segment(0, 0, &mut scratch);
+                assert!(
+                    seg.iter().all(|v| v.is_finite()),
+                    "life {life}: adopted block was poisoned while referenced"
+                );
+            }
+            fill(&mut kv, &prompt, adopted);
+            live.push((prompt, kv));
+        } else if action < 8 {
+            // retire a random sequence: publish its prompt blocks, drop it
+            let idx = rng.below(live.len());
+            let (prompt, kv) = live.swap_remove(idx);
+            let n = (prompt.len() / KV_BLOCK).min(kv.sealed_blocks_min());
+            if n > 0 {
+                tree.insert(&prompt, &kv.share_prefix_blocks(n));
+            }
+            drop(kv);
+        } else if action < 9 {
+            // diverge: truncate a random sequence mid-stream (possibly
+            // into an adopted block — the cow path) and regrow
+            let idx = rng.below(live.len());
+            let (prompt, kv) = &mut live[idx];
+            let to = rng.below(kv.len().max(1));
+            kv.truncate(to);
+            let regrow: Vec<u32> =
+                (0..rng.below(KV_BLOCK + 4)).map(|_| rng.below(3) as u32).collect();
+            // regrown positions are NOT the prompt: make them
+            // unpublishable by truncating the tracked prompt too
+            prompt.truncate(to);
+            fill(kv, &regrow, 0);
+        } else {
+            // pressure: evict LRU unreferenced tree nodes
+            tree.evict_lru();
+        }
+        // pool reconciliation: every in-use block is accounted for by
+        // the tree or a live sequence (shared blocks counted once —
+        // subtract the overlap, i.e. adopted-and-still-cached blocks)
+        let s = pool.stats();
+        assert!(
+            s.blocks_in_use <= pool.total_blocks(),
+            "life {life}: in_use over budget"
+        );
+        assert_eq!(
+            s.allocs - s.frees,
+            s.blocks_in_use as u64,
+            "life {life}: alloc/free imbalance (double free?)"
+        );
+        let held_by_seqs: usize = live.iter().map(|(_, kv)| kv.blocks_held()).sum();
+        assert!(
+            s.blocks_in_use <= tree.shared_blocks() + held_by_seqs,
+            "life {life}: in_use {} exceeds all reachable handles ({} cached + {} live)",
+            s.blocks_in_use,
+            tree.shared_blocks(),
+            held_by_seqs
+        );
+    }
+    // teardown: retire everything, drain the tree — nothing may remain
+    live.clear();
+    while tree.evict_lru() > 0 {}
+    let s = pool.stats();
+    assert_eq!(s.blocks_in_use, 0, "lifecycle leaked blocks: {s:?}");
+    assert_eq!(s.allocs, s.frees, "alloc/free imbalance after teardown: {s:?}");
+    assert!(s.allocs > 100, "lifecycles never exercised the pool (allocs {})", s.allocs);
 }
 
 #[test]

@@ -1,0 +1,244 @@
+//! Shared-prefix KV cache properties:
+//!
+//! * a prefix HIT is bit-identical to a cold run: adopting published
+//!   blocks and prefilling only the remainder produces byte-for-byte
+//!   the logits of a from-scratch prefill — at paged-f32 trivially, and
+//!   at q8/q4 because the adopted codes are the very codes the cold run
+//!   would have sealed (deterministic quantization of bit-identical f32
+//!   tails, with the adoption cap keeping the sealed-vs-tail storage
+//!   state aligned with the lazy-seal rule);
+//! * at engine level, flipping `prefix_cache` never changes a greedy
+//!   token, across KV dtypes {f32, q8, q4} × executor threads {1, 4} ×
+//!   speculation off/on — while the cache-on engine actually hits;
+//! * cached-but-unreferenced blocks are reclaimed under pool pressure
+//!   BEFORE admission blocks or live sequences are evicted.
+
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+use gqsa::engine::executor::Decomposition;
+use gqsa::model::config::demo_config;
+use gqsa::model::kv_cache::blocks_for;
+use gqsa::model::sampler::argmax;
+use gqsa::model::transformer::random_fp;
+use gqsa::model::{
+    BlockScratch, KvBlockPool, KvCache, KvDtype, ModelConfig, Transformer, KV_BLOCK,
+};
+use gqsa::prefix::PrefixTree;
+
+fn small_cfg() -> ModelConfig {
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 160;
+    cfg
+}
+
+/// Prefill `prompt` (16-aligned chunks so cold and hit runs share
+/// chunk boundaries), then decode `n` greedy tokens; returns the logits
+/// row of every computed position plus the greedy continuation.
+fn run_with_adoption(
+    model: &Transformer,
+    kv: &mut KvCache,
+    prompt: &[u32],
+    adopted: usize, // positions already in kv via adopt_prefix
+    n_decode: usize,
+) -> (Vec<Vec<f32>>, Vec<u32>) {
+    let mut bs = BlockScratch::new(&model.cfg, 16);
+    let mut logits_rows: Vec<Vec<f32>> = Vec::new();
+    for chunk in prompt[adopted..].chunks(16) {
+        model.forward_block(chunk, kv, &mut bs).unwrap();
+        for i in 0..chunk.len() {
+            logits_rows.push(bs.logits.row(i).to_vec());
+        }
+    }
+    let mut tokens = vec![argmax(logits_rows.last().unwrap()) as u32];
+    for _ in 1..n_decode {
+        let last = *tokens.last().unwrap();
+        model.forward_block(&[last], kv, &mut bs).unwrap();
+        logits_rows.push(bs.logits.row(0).to_vec());
+        tokens.push(argmax(bs.logits.row(0)) as u32);
+    }
+    (logits_rows, tokens)
+}
+
+#[test]
+fn prefix_hit_is_bit_identical_to_cold_run_across_dtypes() {
+    let cfg = small_cfg();
+    let fp = random_fp(&cfg, 77);
+    let model = Transformer::from_fp(&fp).unwrap();
+    let prompt: Vec<u32> = (0..(3 * KV_BLOCK + 5)).map(|i| ((i * 7 + 2) % 60) as u32).collect();
+    for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        let pool = KvBlockPool::new(cfg.n_heads, cfg.head_dim(), dtype, 64);
+        let mut tree = PrefixTree::new(cfg.n_layers);
+
+        // cold run: full prefill + decode, then publish prompt blocks
+        let mut kv_cold = KvCache::paged(cfg.n_layers, &pool, 8 * KV_BLOCK);
+        let (cold_logits, cold_tokens) =
+            run_with_adoption(&model, &mut kv_cold, &prompt, 0, 8);
+        let n_pub = (prompt.len() / KV_BLOCK).min(kv_cold.sealed_blocks_min());
+        assert_eq!(n_pub, 3, "setup: expected 3 publishable blocks");
+        tree.insert(&prompt, &kv_cold.share_prefix_blocks(n_pub));
+
+        // hit run: adopt the longest cached chain, prefill the rest
+        let hit = tree.lookup(&prompt, blocks_for(prompt.len()));
+        assert_eq!(hit.len(), 3, "{dtype:?}: expected a full 3-block hit");
+        let mut kv_hit = KvCache::paged(cfg.n_layers, &pool, 8 * KV_BLOCK);
+        kv_hit.adopt_prefix(&hit);
+        let adopted = hit.len() * KV_BLOCK;
+        let (hit_logits, hit_tokens) =
+            run_with_adoption(&model, &mut kv_hit, &prompt, adopted, 8);
+
+        // BIT-identical: the hit run's logits for every position it
+        // computes equal the cold run's rows for those same positions
+        let skip = cold_logits.len() - hit_logits.len();
+        assert_eq!(skip, adopted, "{dtype:?}: hit computed the wrong positions");
+        for (i, (h, c)) in hit_logits.iter().zip(&cold_logits[skip..]).enumerate() {
+            assert_eq!(h, c, "{dtype:?}: logits row {i} (pos {}) diverged", skip + i);
+        }
+        assert_eq!(cold_tokens, hit_tokens, "{dtype:?}: greedy continuation diverged");
+
+        // teardown: everything recycles
+        drop(kv_cold);
+        drop(kv_hit);
+        while tree.evict_lru() > 0 {}
+        assert_eq!(pool.stats().blocks_in_use, 0, "{dtype:?}: leaked blocks");
+    }
+}
+
+fn engine(
+    prefix_cache: bool,
+    kv_dtype: KvDtype,
+    threads: usize,
+    spec_k: usize,
+    pool_blocks: usize,
+) -> EngineCore {
+    let cfg = small_cfg();
+    let fp = random_fp(&cfg, 4040);
+    let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+    EngineCore::new(
+        Backend::Native(t),
+        &cfg,
+        EngineConfig {
+            max_batch: 3,
+            prefill_chunk: 8,
+            kv_capacity: 144,
+            kv_paged: true,
+            kv_dtype,
+            kv_pool_blocks: pool_blocks,
+            threads,
+            decomposition: Decomposition::StreamK,
+            spec_k,
+            prefix_cache,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Shared-system-prompt workload: every request opens with the same
+/// 48-token prefix, then a per-request tail — submitted twice so the
+/// second wave hits what the first wave published.
+fn run_workload(e: &mut EngineCore) -> Vec<Vec<u32>> {
+    let system: Vec<u32> = (0..48).map(|i| ((i * 5 + 1) % 60) as u32).collect();
+    let mut all = Vec::new();
+    for wave in 0..2u64 {
+        for i in 0..3u64 {
+            let mut prompt = system.clone();
+            prompt.extend((0..6).map(|j| ((i * 13 + j + wave) % 60) as u32));
+            e.submit(Request::new(wave * 10 + i, prompt, 10));
+        }
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        all.extend(out.into_iter().map(|r| r.tokens));
+    }
+    all
+}
+
+#[test]
+fn cache_on_off_greedy_identity_across_dtypes_threads_and_spec() {
+    for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        for threads in [1usize, 4] {
+            for spec_k in [0usize, 4] {
+                let off = run_workload(&mut engine(false, dtype, threads, spec_k, 0));
+                let mut e = engine(true, dtype, threads, spec_k, 0);
+                let on = run_workload(&mut e);
+                assert_eq!(
+                    off, on,
+                    "{dtype:?} threads={threads} spec_k={spec_k}: cache changed tokens"
+                );
+                let s = e.prefix_stats().unwrap();
+                assert!(
+                    s.hits > 0,
+                    "{dtype:?} threads={threads} spec_k={spec_k}: cache never hit: {s:?}"
+                );
+                assert!(s.hit_positions > 0, "{s:?}");
+                // reconcile: at idle, in_use is exactly what the cache holds
+                let pool = e.kv_pool().unwrap();
+                assert_eq!(
+                    pool.stats().blocks_in_use,
+                    e.prefix_cached_blocks(),
+                    "{dtype:?} threads={threads} spec_k={spec_k}: leak"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_eviction_yields_to_admission_under_pressure() {
+    // a pool sized so the cache's retained blocks MUST be reclaimed for
+    // the next (different-prompt) request to be admitted and finish:
+    // the engine must serve it (evicting cached nodes), never deadlock,
+    // and never have to evict the live sequence
+    // 8 blocks: one 52-position request needs 6 (2 layers x 3), so the
+    // 4 blocks the cache retains after request 1 force reclamation
+    let mut e = engine(true, KvDtype::F32, 1, 0, 8);
+    let p1: Vec<u32> = (0..40).map(|i| (i % 60) as u32).collect();
+    e.submit(Request::new(1, p1, 12));
+    e.run_to_completion().unwrap();
+    let held = e.prefix_cached_blocks();
+    assert!(held > 0, "first request published nothing");
+    // second request with a DISJOINT prompt needs most of the pool
+    let p2: Vec<u32> = (0..40).map(|i| ((i * 11 + 7) % 60) as u32).collect();
+    e.submit(Request::new(2, p2, 12));
+    let out = e.run_to_completion().unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].tokens.len(), 12, "request under cache pressure was truncated");
+    let s = e.prefix_stats().unwrap();
+    assert!(s.evicted_blocks > 0, "pressure never reclaimed cached blocks: {s:?}");
+    assert_eq!(e.metrics.kv_evictions, 0, "live sequence evicted while cache held blocks");
+}
+
+#[test]
+fn identical_concurrent_prompts_share_blocks_within_one_wave() {
+    // two requests with the SAME prompt submitted together: the first
+    // to retire publishes; a later wave shares. Within the batch both
+    // run cold (admission happens before either retires) — tokens must
+    // still be identical to the cache-off engine, and the pool's peak
+    // must not exceed the off engine's (sharing never costs blocks)
+    let prompt: Vec<u32> = (0..33).map(|i| ((i * 3 + 2) % 60) as u32).collect();
+    let run = |on: bool| {
+        let mut e = engine(on, KvDtype::Q8, 1, 0, 0);
+        for i in 0..2u64 {
+            e.submit(Request::new(i, prompt.clone(), 8));
+        }
+        let mut out = e.run_to_completion().unwrap();
+        // second wave: same prompt again, now a guaranteed hit
+        e.submit(Request::new(9, prompt.clone(), 8));
+        out.extend(e.run_to_completion().unwrap());
+        out.sort_by_key(|r| r.id);
+        let peak = e.kv_pool().unwrap().stats().peak_in_use;
+        let hits = e.prefix_stats().map_or(0, |s| s.hits);
+        (out.into_iter().map(|r| r.tokens).collect::<Vec<_>>(), peak, hits)
+    };
+    let (off_tokens, off_peak, _) = run(false);
+    let (on_tokens, on_peak, on_hits) = run(true);
+    assert_eq!(off_tokens, on_tokens, "sharing changed tokens");
+    assert!(on_hits > 0, "wave-2 request never hit");
+    assert!(
+        on_peak <= off_peak,
+        "sharing increased peak block usage: {on_peak} > {off_peak}"
+    );
+}
