@@ -24,6 +24,7 @@ use crate::util::{Mat, XorShift};
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
     "t15", "t16", "f1", "f5", "f5x", "f6", "f7", "f8", "kvpage", "specdec", "prefix",
+    "kernels",
 ];
 
 pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
@@ -53,6 +54,7 @@ pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
         "kvpage" => kvpage(wb),
         "specdec" => specdec(wb),
         "prefix" => prefix_cache(wb),
+        "kernels" => kernels(wb),
         "all" => {
             for id in ALL_IDS {
                 println!("\n##### {id} #####");
@@ -748,6 +750,203 @@ fn fig5_executed(wb: &mut Workbench) -> Result<()> {
         Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
     t.emit(wb.results_dir(), "f5x")
+}
+
+// ---------------------------------------------------------------------
+// kernels — SIMD microkernel bench: per-kernel GB/s, GFLOP/s and
+// ops/cycle for the scalar oracle vs the runtime-dispatched SIMD path
+// vs the W4A8 integer path, on every hot GEMV kernel. Scalar and SIMD
+// are bitwise identical (canonical accumulation order — verified here
+// per kernel before timing), so the ratio is a pure microkernel
+// speedup. Emits BENCH_kernels.json at the repo root.
+// ---------------------------------------------------------------------
+
+fn kernels(wb: &mut Workbench) -> Result<()> {
+    use crate::gqs::gemv::{gqs_gemv, gqs_gemv_i8};
+    use crate::gqs::simd::{self, Simd};
+    use crate::quant::act::ActI8;
+    use crate::sparse::bsr::BsrMatrix;
+
+    const ROWS: usize = 768;
+    const COLS: usize = 2048;
+    const G: usize = 16;
+
+    let mut rng = XorShift::new(91);
+    let w = Mat::randn(ROWS, COLS, &mut rng);
+    let x = rng.normal_vec(COLS);
+    let mask = group_prune(&w, None, SaliencyMetric::Magnitude, G, 0.5);
+    let gqs = GqsLayer::encode(&w, &mask, 4);
+    let bsr = BsrMatrix::encode(&w, &mask);
+    let qd = QuantDense::encode(&w, 4, G);
+    let mut act = ActI8::new();
+    act.ensure(&x);
+    act.ensure_asum(G);
+
+    // TSC cycle estimate (x86_64 only; 0 elsewhere — emitted as-is so
+    // consumers can tell "no counter" from "measured").
+    #[cfg(target_arch = "x86_64")]
+    fn cycles_now() -> u64 {
+        unsafe { core::arch::x86_64::_rdtsc() }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    fn cycles_now() -> u64 {
+        0
+    }
+
+    // bytes a call must touch: stored weights + the activation vector
+    let io = |weight_bytes: usize| (weight_bytes + COLS * 4 + ROWS * 4) as f64;
+    let gqs_bytes = io(gqs.storage_bytes());
+    let gqs_macs = (gqs.groups.len() * G) as f64;
+    let dense_bytes = io(ROWS * COLS * 4);
+    let dense_macs = (ROWS * COLS) as f64;
+    let qd_bytes = io(qd.storage_bytes());
+    let bsr_bytes = io(bsr.storage_bytes());
+    let bsr_macs = (bsr.nnz_groups() * G) as f64;
+
+    type K<'a> = Box<dyn FnMut(&mut [f32]) + 'a>;
+    let (wr, xr, gq, qdr, br, ar) = (&w, &x, &gqs, &qd, &bsr, &act);
+    let mut gsums: Vec<Vec<f32>> = (0..4).map(|_| Vec::new()).collect();
+    let mut gi = gsums.iter_mut();
+    let best = simd::best();
+    let mut cases: Vec<(&str, &str, Simd, f64, f64, K)> = Vec::new();
+    for path in ["scalar", "simd"] {
+        let level = if path == "scalar" { Simd::Scalar } else { best };
+        {
+            let g = gi.next().unwrap();
+            cases.push((
+                "gqs-w4",
+                path,
+                level,
+                gqs_bytes,
+                gqs_macs,
+                Box::new(move |y: &mut [f32]| gqs_gemv(gq, xr, y, g)),
+            ));
+        }
+        cases.push((
+            "dense-f32",
+            path,
+            level,
+            dense_bytes,
+            dense_macs,
+            Box::new(move |y: &mut [f32]| dense_gemv(wr, xr, y)),
+        ));
+        {
+            let g = gi.next().unwrap();
+            cases.push((
+                "quant-dense-w4",
+                path,
+                level,
+                qd_bytes,
+                dense_macs,
+                Box::new(move |y: &mut [f32]| qdr.gemv(xr, y, g)),
+            ));
+        }
+        cases.push((
+            "bsr-f32",
+            path,
+            level,
+            bsr_bytes,
+            bsr_macs,
+            Box::new(move |y: &mut [f32]| br.matvec_into(xr, y)),
+        ));
+    }
+    // integer W4A8 paths (i8 activation codes instead of the f32 x)
+    cases.push((
+        "gqs-w4",
+        "i8",
+        best,
+        gqs_bytes - (COLS * 3) as f64,
+        gqs_macs,
+        Box::new(move |y: &mut [f32]| gqs_gemv_i8(gq, ar, y)),
+    ));
+    cases.push((
+        "quant-dense-w4",
+        "i8",
+        best,
+        qd_bytes - (COLS * 3) as f64,
+        dense_macs,
+        Box::new(move |y: &mut [f32]| qdr.gemv_i8(ar, y)),
+    ));
+
+    let mut t = Table::new(
+        format!("Kernel microbench: scalar vs SIMD vs W4A8 GEMV ({ROWS}x{COLS}, G{G}, {} on {})",
+            best.name(), std::env::consts::ARCH),
+        &["kernel", "path", "us", "GB/s", "GFLOP/s", "ops/cycle"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut scalar_ref: std::collections::BTreeMap<&str, Vec<f32>> = Default::default();
+    let mut gbps_by: std::collections::BTreeMap<(&str, &str), f64> = Default::default();
+    for (kernel, path, level, bytes, macs, mut f) in cases {
+        simd::force(level);
+        let mut y = vec![0.0f32; ROWS];
+        f(&mut y);
+        match path {
+            "scalar" => {
+                scalar_ref.insert(kernel, y.clone());
+            }
+            "simd" => {
+                let r = scalar_ref.get(kernel).expect("scalar case runs first");
+                anyhow::ensure!(&y == r, "SIMD diverged from the scalar oracle on {kernel}");
+            }
+            _ => {} // i8 is a different (integer) numeric path
+        }
+        let r = Bench::quick(format!("{kernel}/{path}")).run(|| f(&mut y));
+        let iters = 10usize;
+        let c0 = cycles_now();
+        for _ in 0..iters {
+            f(&mut y);
+        }
+        let dc = cycles_now().saturating_sub(c0);
+        let opc = if dc > 0 { macs * 2.0 * iters as f64 / dc as f64 } else { 0.0 };
+        let secs = r.us.p50 * 1e-6;
+        let gbps = bytes / secs / 1e9;
+        let gflops = macs * 2.0 / secs / 1e9;
+        gbps_by.insert((kernel, path), gbps);
+        t.row(vec![
+            kernel.into(),
+            path.into(),
+            fmt1(r.us.p50),
+            fmt2(gbps),
+            fmt2(gflops),
+            fmt2(opc),
+        ]);
+        json_rows.push(format!(
+            "    {{\"kernel\": \"{kernel}\", \"path\": \"{path}\", \"us\": {:.2}, \"gb_per_s\": {:.3}, \"gflop_per_s\": {:.3}, \"ops_per_cycle\": {:.3}}}",
+            r.us.p50, gbps, gflops, opc
+        ));
+    }
+    simd::reset();
+
+    let speedup = |k: &str| {
+        let s = gbps_by.get(&(k, "scalar")).copied().unwrap_or(0.0);
+        let v = gbps_by.get(&(k, "simd")).copied().unwrap_or(0.0);
+        if s > 0.0 {
+            v / s
+        } else {
+            0.0
+        }
+    };
+    let (gqs_sp, dense_sp) = (speedup("gqs-w4"), speedup("dense-f32"));
+    t.note(format!(
+        "SIMD-vs-scalar GB/s speedup — gqs {gqs_sp:.2}x, dense {dense_sp:.2}x \
+         (acceptance floor 2x on both); SIMD outputs verified bitwise \
+         identical to the scalar oracle before timing"
+    ));
+
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"generated\": true,\n  \"shape\": [{ROWS}, {COLS}],\n  \"group\": {G},\n  \"arch\": \"{}\",\n  \"simd\": \"{}\",\n  \"gqs_simd_speedup\": {gqs_sp:.3},\n  \"dense_simd_speedup\": {dense_sp:.3},\n  \"results\": [\n{}\n  ]\n}}\n",
+        std::env::consts::ARCH,
+        best.name(),
+        json_rows.join(",\n")
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_kernels.json");
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    t.emit(wb.results_dir(), "kernels")
 }
 
 // ---------------------------------------------------------------------

@@ -78,6 +78,13 @@ pub struct EngineConfig {
     /// default honors `GQSA_SPEC_ADAPTIVE`. Greedy tokens are identical
     /// at any k, so adapting never changes content — only latency.
     pub spec_adaptive: bool,
+    /// quantize activations to int8 once per token and drive the W4A8
+    /// integer MAC kernels on supporting linears (GQS / QuantDense);
+    /// other kinds fake-quantize so everything sees the same A8 grid.
+    /// The default honors `GQSA_ACT_I8`. This is a real numerics change
+    /// (~8-bit activation error), unlike the determinism-preserving
+    /// knobs above — flip it engine-wide, never per-kernel.
+    pub act_i8: bool,
     /// share sealed prompt-prefix KV blocks across requests through a
     /// radix-tree cache (paged Native mode only; see [`crate::prefix`]).
     /// The default honors `GQSA_PREFIX_CACHE`. A prefix hit is
@@ -118,6 +125,7 @@ impl Default for EngineConfig {
                 .unwrap_or(0),
             spec_draft: DraftConfig::from_env(),
             spec_adaptive: env_flag("GQSA_SPEC_ADAPTIVE"),
+            act_i8: env_flag("GQSA_ACT_I8"),
             prefix_cache: env_flag("GQSA_PREFIX_CACHE"),
         }
     }
@@ -176,6 +184,16 @@ pub struct EngineCore {
 
 impl EngineCore {
     pub fn new(backend: Backend, model_cfg: &crate::model::ModelConfig, cfg: EngineConfig) -> Result<Self> {
+        // W4A8: flag the native transformer before anything clones or
+        // re-encodes it — `with_linears` propagates the flag, so the
+        // speculative draft tier built below inherits it and both tiers
+        // run the same activation grid. PJRT artifacts are unaffected.
+        let mut backend = backend;
+        if cfg.act_i8 {
+            if let Backend::Native(t) = &mut backend {
+                t.act_i8 = true;
+            }
+        }
         // KV block pool: only Native sequences page (PJRT KV lives in
         // runtime literals). Auto-sizing reproduces the old fixed-slot
         // admission ceiling: max_batch sequences at full capacity.
@@ -934,7 +952,11 @@ mod tests {
         let fp = random_fp(&cfg, 77);
         let prompt = [5u32, 6, 7, 8];
 
-        let t = Transformer::from_fp(&fp).unwrap();
+        let mut t = Transformer::from_fp(&fp).unwrap();
+        // mirror the engine's env-derived W4A8 flag: under the CI
+        // GQSA_ACT_I8=1 leg the engine quantizes activations, so the
+        // hand-rolled reference must run the same activation grid
+        t.act_i8 = env_flag("GQSA_ACT_I8");
         let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 96);
         let mut s = Scratch::new(&cfg);
         for &tok in &prompt {
@@ -1424,6 +1446,55 @@ mod tests {
         assert!(mean >= 1.0 && mean <= 4.0, "k_mean {mean} out of bounds");
         let r = e.metrics.report();
         assert!(r.contains("k_mean="), "{r}");
+    }
+
+    #[test]
+    fn act_i8_engine_deterministic_and_spec_tier_inherits() {
+        // W4A8 engine: the flag reaches the transformer, generation
+        // completes, repeat runs are bit-identical (integer MACs are
+        // exactly associative), and a speculative engine still holds
+        // its token-identity contract because the draft tier inherits
+        // the same activation grid through with_linears.
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 131);
+        let mk = |spec_k: usize| {
+            let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+            EngineCore::new(
+                Backend::Native(t),
+                &cfg,
+                EngineConfig {
+                    max_batch: 2,
+                    prefill_chunk: 4,
+                    kv_capacity: 96,
+                    spec_k,
+                    act_i8: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let run = |e: &mut EngineCore| {
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 14));
+            e.submit(Request::new(2, vec![10, 11], 10));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let mut e = mk(0);
+        assert!(e.backend.native().unwrap().act_i8, "flag never reached the model");
+        let a = run(&mut e);
+        let b = run(&mut mk(0));
+        assert_eq!(a, b, "i8 engine not deterministic across runs");
+        let mut es = mk(4);
+        let spec = run(&mut es);
+        assert_eq!(a, spec, "speculative i8 greedy diverged from plain i8");
+        assert!(es.metrics.spec_rounds > 0, "speculation never ran");
     }
 
     #[test]

@@ -92,10 +92,13 @@ pub struct DispatchModel {
 
 impl Default for DispatchModel {
     fn default() -> Self {
-        // conservative seeds: ~8ns/group sequential (a G=16 4-bit group
-        // is ~25 scalar FLOPs) and ~40us to wake + drain a pool — both
-        // corrected within a few observed calls.
-        Self { seq_ns_per_unit: 8.0, dispatch_ns: 40_000.0, alpha: 0.2 }
+        // conservative seeds: ~2ns/group sequential (a G=16 4-bit group
+        // is ~25 FLOPs, but the SIMD microkernels retire a whole group
+        // in a handful of vector ops, so the scalar-era 8ns seed would
+        // overestimate sequential cost 4x and fork tiny layers to the
+        // pool) and ~40us to wake + drain a pool — both corrected
+        // within a few observed calls.
+        Self { seq_ns_per_unit: 2.0, dispatch_ns: 40_000.0, alpha: 0.2 }
     }
 }
 

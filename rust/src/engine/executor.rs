@@ -37,12 +37,14 @@ use std::time::Instant;
 
 use crate::engine::cost_model::DispatchModel;
 use crate::engine::{slice_k, stream_k};
-use crate::gqs::gemm::{gqs_gemm_chunk, group_sums_batch, reduce_gemm, MatmulScratch};
+use crate::gqs::gemm::{gqs_gemm_chunk, gqs_gemm_i8_rows, group_sums_batch, reduce_gemm, MatmulScratch};
 use crate::gqs::gemv::{
-    chunkable, gqs_gemv_chunk, gqs_gemv_with_gsum, group_sums, reduce_gemv, GqsChunk,
+    chunkable, gqs_gemv_chunk, gqs_gemv_i8_rows, gqs_gemv_with_gsum, group_sums, reduce_gemv,
+    GqsChunk,
 };
 use crate::gqs::gemv_dense::{dense_gemm_rows, dense_gemv_rows, QuantDense, Semi24Kernel};
 use crate::gqs::layer::GqsLayer;
+use crate::quant::act::{ActI8, ActI8Batch};
 use crate::sparse::bsr::BsrMatrix;
 use crate::util::Mat;
 
@@ -492,6 +494,114 @@ impl Executor {
     }
 
     // -----------------------------------------------------------------
+    // W4A8 integer paths (row-partitioned; i32 dots are exactly
+    // associative, so any split is bit-exact by construction)
+    // -----------------------------------------------------------------
+
+    /// Parallel integer GQS GEMV over pre-quantized activations (the
+    /// caller ran `act.ensure` + `ensure_asum(layer.group)`). Callers
+    /// must check `gemv::supports_i8` first — ref-path shapes have no
+    /// i8 kernel.
+    pub fn gemv_gqs_i8(&self, layer: &GqsLayer, act: &ActI8, y: &mut [f32], es: &mut ExecScratch) {
+        assert_eq!(y.len(), layer.rows);
+        let units = layer.nnz_groups() * layer.group / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            gqs_gemv_i8_rows(layer, act, y, 0, layer.rows);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        match self.cfg.decomposition {
+            Decomposition::SliceK => even_row_ranges(layer.rows, self.n_chunks(), &mut es.ranges),
+            _ => balanced_row_ranges(&layer.row_index, self.n_chunks(), &mut es.ranges),
+        }
+        let n = self.par_rows(es, 1, &|c, r0, r1| {
+            gqs_gemv_i8_rows(layer, act, &mut c.partials, r0, r1)
+        });
+        reduce_rows_gemv(&es.chunks[..n], &es.ranges, y);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel integer GQS GEMM (see `gemv_gqs_i8`).
+    pub fn gemm_gqs_i8(
+        &self,
+        layer: &GqsLayer,
+        acts: &ActI8Batch,
+        y: &mut Mat,
+        es: &mut ExecScratch,
+    ) {
+        assert_eq!((y.rows, y.cols), (acts.rows, layer.rows));
+        if acts.rows == 0 {
+            y.data.fill(0.0);
+            return;
+        }
+        let units = layer.nnz_groups() * layer.group * acts.rows / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            crate::gqs::gemm::gqs_gemm_i8(layer, acts, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        match self.cfg.decomposition {
+            Decomposition::SliceK => even_row_ranges(layer.rows, self.n_chunks(), &mut es.ranges),
+            _ => balanced_row_ranges(&layer.row_index, self.n_chunks(), &mut es.ranges),
+        }
+        let n = self.par_rows(es, acts.rows, &|c, r0, r1| {
+            gqs_gemm_i8_rows(layer, acts, &mut c.partials, r0, r1)
+        });
+        reduce_rows_gemm(&es.chunks[..n], &es.ranges, acts.rows, layer.rows, &mut y.data);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel integer dense-quantized GEMV (even row split).
+    pub fn gemv_quant_i8(&self, q: &QuantDense, act: &ActI8, y: &mut [f32], es: &mut ExecScratch) {
+        assert_eq!(y.len(), q.rows);
+        let units = q.rows * q.cols / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            q.gemv_i8_rows(act, y, 0, q.rows);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        even_row_ranges(q.rows, self.n_chunks(), &mut es.ranges);
+        let n = self.par_rows(es, 1, &|c, r0, r1| q.gemv_i8_rows(act, &mut c.partials, r0, r1));
+        reduce_rows_gemv(&es.chunks[..n], &es.ranges, y);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    /// Parallel integer dense-quantized GEMM.
+    pub fn gemm_quant_i8(
+        &self,
+        q: &QuantDense,
+        acts: &ActI8Batch,
+        y: &mut Mat,
+        es: &mut ExecScratch,
+    ) {
+        assert_eq!((y.rows, y.cols), (acts.rows, q.rows));
+        if acts.rows == 0 {
+            y.data.fill(0.0);
+            return;
+        }
+        let units = q.rows * q.cols * acts.rows / 16;
+        let t0 = Instant::now();
+        if !self.go_parallel(units) {
+            q.gemm_i8(acts, y);
+            self.sequential_calls.fetch_add(1, Ordering::Relaxed);
+            self.observe(false, units, t0);
+            return;
+        }
+        even_row_ranges(q.rows, self.n_chunks(), &mut es.ranges);
+        let n = self.par_rows(es, acts.rows, &|c, r0, r1| {
+            q.gemm_i8_rows(acts, &mut c.partials, r0, r1)
+        });
+        reduce_rows_gemm(&es.chunks[..n], &es.ranges, acts.rows, q.rows, &mut y.data);
+        self.finish_par(n as u64, 0, units, t0);
+    }
+
+    // -----------------------------------------------------------------
     // Row-partitioned kinds (independent per-row chains)
     // -----------------------------------------------------------------
 
@@ -938,6 +1048,48 @@ mod tests {
         assert_eq!(y.data, yq.data, "quant gemm");
         exec.gemm_semi24(&s24, &xm, &mut y, &mut es);
         assert_eq!(y.data, ys.data, "semi24 gemm");
+    }
+
+    #[test]
+    fn i8_kinds_bit_exact_across_threads() {
+        let (layer, mut rng) = gqs_layer(71, 48, 160, 16, 4, 0.5);
+        let w = Mat::randn(48, 160, &mut rng);
+        let q = QuantDense::encode(&w, 4, 16);
+        let x = rng.normal_vec(160);
+        let xm = Mat::randn(3, 160, &mut rng);
+        let mut act = ActI8::new();
+        act.ensure(&x);
+        act.ensure_asum(16);
+        let mut acts = ActI8Batch::new();
+        acts.ensure(&xm);
+        acts.ensure_asum(16);
+
+        // sequential references
+        let mut yg = vec![0.0f32; 48];
+        crate::gqs::gemv::gqs_gemv_i8(&layer, &act, &mut yg);
+        let mut yq = vec![0.0f32; 48];
+        q.gemv_i8(&act, &mut yq);
+        let mut ygm = Mat::zeros(3, 48);
+        crate::gqs::gemm::gqs_gemm_i8(&layer, &acts, &mut ygm);
+        let mut yqm = Mat::zeros(3, 48);
+        q.gemm_i8(&acts, &mut yqm);
+
+        for threads in [1usize, 2, 4, 8] {
+            for d in [Decomposition::StreamK, Decomposition::SliceK] {
+                let exec = forced(threads, d);
+                let mut es = ExecScratch::default();
+                let mut y = vec![0.0f32; 48];
+                exec.gemv_gqs_i8(&layer, &act, &mut y, &mut es);
+                assert_eq!(y, yg, "gqs i8 threads {threads} {d:?}");
+                exec.gemv_quant_i8(&q, &act, &mut y, &mut es);
+                assert_eq!(y, yq, "quant i8 threads {threads} {d:?}");
+                let mut ym = Mat::zeros(3, 48);
+                exec.gemm_gqs_i8(&layer, &acts, &mut ym, &mut es);
+                assert_eq!(ym.data, ygm.data, "gqs i8 gemm threads {threads} {d:?}");
+                exec.gemm_quant_i8(&q, &acts, &mut ym, &mut es);
+                assert_eq!(ym.data, yqm.data, "quant i8 gemm threads {threads} {d:?}");
+            }
+        }
     }
 
     #[test]

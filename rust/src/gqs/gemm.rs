@@ -15,8 +15,10 @@
 //! the same logits, which keeps greedy decode deterministic across
 //! batch shapes.
 
-use crate::gqs::gemv::{chunk_layout, kernel_path, GqsChunk, KernelPath};
+use crate::gqs::gemv::{chunk_layout, kernel_path, term_i8, GqsChunk, KernelPath};
 use crate::gqs::layer::GqsLayer;
+use crate::gqs::simd;
+use crate::quant::act::ActI8Batch;
 use crate::quant::unpack_codes;
 use crate::util::Mat;
 
@@ -97,8 +99,41 @@ pub fn gqs_gemm(layer: &GqsLayer, x: &Mat, y: &mut Mat, scratch: &mut MatmulScra
 // these exact values, keeping the paths bit-identical per (row, token).
 // ---------------------------------------------------------------------
 
-/// 4-bit, G=16: mirrors `gemv_b4_g16`'s two-chain unrolled inner loop,
-/// with the nibble unpack hoisted out of the T loop.
+/// Shared tail of every per-group batched helper: the staged raw code
+/// values (`deq[i]` = code_i as f32, exact) dotted against each token
+/// row with the canonical `simd::dot` order — bitwise identical to the
+/// fused packed-code dot the GEMV term helpers use, since both
+/// implement the same canonical accumulation order over the same
+/// element values.
+#[inline(always)]
+fn gemm_group_tail(
+    layer: &GqsLayer,
+    j: usize,
+    x: &Mat,
+    xsum: &[f32],
+    deq: &[f32],
+    dst: &mut [f32],
+    stride: usize,
+    add: bool,
+) {
+    let g = layer.group;
+    let ng = layer.cols / g;
+    let gc = layer.groups[j] as usize;
+    let s = layer.scales[j];
+    let z = layer.zeros[j] as f32;
+    for ti in 0..x.rows {
+        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+        let v = s * (simd::dot(deq, xs) - z * xsum[ti * ng + gc]);
+        if add {
+            dst[ti * stride] += v;
+        } else {
+            dst[ti * stride] = v;
+        }
+    }
+}
+
+/// 4-bit, G=16: mirrors `term_b4_g16`, nibble unpack hoisted out of
+/// the T loop.
 #[inline(always)]
 fn gemm_group_b4_g16(
     layer: &GqsLayer,
@@ -111,37 +146,16 @@ fn gemm_group_b4_g16(
 ) {
     const G: usize = 16;
     const GB: usize = 8; // packed bytes per group
-    let t = x.rows;
-    let ng = layer.cols / G;
-    let gc = layer.groups[j] as usize;
     let qb: &[u8; GB] = layer.qvals[j * GB..j * GB + GB].try_into().unwrap();
     let mut deq = [0.0f32; G];
     for i in 0..GB {
         deq[2 * i] = (qb[i] & 0xF) as f32;
         deq[2 * i + 1] = (qb[i] >> 4) as f32;
     }
-    let s = layer.scales[j];
-    let z = layer.zeros[j] as f32;
-    for ti in 0..t {
-        let xs: &[f32; G] = x.row(ti)[gc * G..gc * G + G].try_into().unwrap();
-        let mut d0 = 0.0f32;
-        let mut d1 = 0.0f32;
-        let mut i = 0;
-        while i < GB {
-            d0 += deq[2 * i] * xs[2 * i] + deq[2 * i + 1] * xs[2 * i + 1];
-            d1 += deq[2 * i + 2] * xs[2 * i + 2] + deq[2 * i + 3] * xs[2 * i + 3];
-            i += 2;
-        }
-        let v = s * ((d0 + d1) - z * xsum[ti * ng + gc]);
-        if add {
-            dst[ti * stride] += v;
-        } else {
-            dst[ti * stride] = v;
-        }
-    }
+    gemm_group_tail(layer, j, x, xsum, &deq, dst, stride, add);
 }
 
-/// 4-bit, any even group size (mirrors `gemv_b4_generic`).
+/// 4-bit, any even group size (mirrors `term_b4`).
 #[inline(always)]
 fn gemm_group_b4(
     layer: &GqsLayer,
@@ -153,35 +167,16 @@ fn gemm_group_b4(
     stride: usize,
     add: bool,
 ) {
-    let g = layer.group;
-    let gb = g / 2;
-    let t = x.rows;
-    let ng = layer.cols / g;
-    let gc = layer.groups[j] as usize;
+    let gb = layer.group / 2;
     let qb = &layer.qvals[j * gb..(j + 1) * gb];
     for i in 0..gb {
         deq[2 * i] = (qb[i] & 0xF) as f32;
         deq[2 * i + 1] = (qb[i] >> 4) as f32;
     }
-    let s = layer.scales[j];
-    let z = layer.zeros[j] as f32;
-    for ti in 0..t {
-        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-        let mut dot = 0.0f32;
-        for i in 0..gb {
-            dot += deq[2 * i] * xs[2 * i];
-            dot += deq[2 * i + 1] * xs[2 * i + 1];
-        }
-        let v = s * (dot - z * xsum[ti * ng + gc]);
-        if add {
-            dst[ti * stride] += v;
-        } else {
-            dst[ti * stride] = v;
-        }
-    }
+    gemm_group_tail(layer, j, x, xsum, deq, dst, stride, add);
 }
 
-/// 8-bit path (mirrors `gemv_b8`).
+/// 8-bit path (mirrors `term_b8`).
 #[inline(always)]
 fn gemm_group_b8(
     layer: &GqsLayer,
@@ -194,31 +189,14 @@ fn gemm_group_b8(
     add: bool,
 ) {
     let g = layer.group;
-    let t = x.rows;
-    let ng = layer.cols / g;
-    let gc = layer.groups[j] as usize;
     let qb = &layer.qvals[j * g..(j + 1) * g];
     for i in 0..g {
         deq[i] = qb[i] as f32;
     }
-    let s = layer.scales[j];
-    let z = layer.zeros[j] as f32;
-    for ti in 0..t {
-        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-        let mut dot = 0.0f32;
-        for i in 0..g {
-            dot += deq[i] * xs[i];
-        }
-        let v = s * (dot - z * xsum[ti * ng + gc]);
-        if add {
-            dst[ti * stride] += v;
-        } else {
-            dst[ti * stride] = v;
-        }
-    }
+    gemm_group_tail(layer, j, x, xsum, deq, dst, stride, add);
 }
 
-/// 2-bit path (mirrors `gemv_b2`).
+/// 2-bit path (mirrors `term_b2`).
 #[inline(always)]
 fn gemm_group_b2(
     layer: &GqsLayer,
@@ -230,11 +208,7 @@ fn gemm_group_b2(
     stride: usize,
     add: bool,
 ) {
-    let g = layer.group;
-    let gb = g / 4;
-    let t = x.rows;
-    let ng = layer.cols / g;
-    let gc = layer.groups[j] as usize;
+    let gb = layer.group / 4;
     let qb = &layer.qvals[j * gb..(j + 1) * gb];
     for i in 0..gb {
         deq[4 * i] = (qb[i] & 0x3) as f32;
@@ -242,24 +216,7 @@ fn gemm_group_b2(
         deq[4 * i + 2] = ((qb[i] >> 4) & 0x3) as f32;
         deq[4 * i + 3] = (qb[i] >> 6) as f32;
     }
-    let s = layer.scales[j];
-    let z = layer.zeros[j] as f32;
-    for ti in 0..t {
-        let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-        let mut dot = 0.0f32;
-        for i in 0..gb {
-            dot += deq[4 * i] * xs[4 * i];
-            dot += deq[4 * i + 1] * xs[4 * i + 1];
-            dot += deq[4 * i + 2] * xs[4 * i + 2];
-            dot += deq[4 * i + 3] * xs[4 * i + 3];
-        }
-        let v = s * (dot - z * xsum[ti * ng + gc]);
-        if add {
-            dst[ti * stride] += v;
-        } else {
-            dst[ti * stride] = v;
-        }
-    }
+    gemm_group_tail(layer, j, x, xsum, deq, dst, stride, add);
 }
 
 #[inline(always)]
@@ -409,6 +366,54 @@ pub fn reduce_gemm(chunks: &[GqsChunk], t: usize, y: &mut Mat) -> u64 {
     fixups
 }
 
+/// Batched integer (W4A8) path: per token row, exactly the op sequence
+/// of `gqs_gemv_i8` (shared `term_i8` rescale, i32 group dots), so each
+/// output row is bitwise identical to the per-token integer kernel.
+pub fn gqs_gemm_i8(layer: &GqsLayer, acts: &ActI8Batch, y: &mut Mat) {
+    assert_eq!((y.rows, y.cols), (acts.rows, layer.rows));
+    y.data.fill(0.0);
+    gqs_gemm_i8_rows(layer, acts, &mut y.data, 0, layer.rows);
+}
+
+/// Row-range form of `gqs_gemm_i8` into a region-relative
+/// (T, r1-r0) buffer (the executor's row split).
+pub fn gqs_gemm_i8_rows(
+    layer: &GqsLayer,
+    acts: &ActI8Batch,
+    yd: &mut [f32],
+    r0: usize,
+    r1: usize,
+) {
+    let g = layer.group;
+    let gb = g * layer.bits as usize / 8;
+    let ng = layer.cols / g;
+    let width = r1 - r0;
+    debug_assert!(crate::gqs::gemv::supports_i8(layer.bits, g));
+    debug_assert_eq!(acts.cols, layer.cols);
+    for r in r0..r1 {
+        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
+        for ti in 0..acts.rows {
+            let aq = acts.row_q(ti);
+            let asum = &acts.asum[ti * ng..(ti + 1) * ng];
+            let a_scale = acts.scales[ti];
+            let mut acc = 0.0f32;
+            for j in a..b {
+                let gc = layer.groups[j] as usize;
+                let qb = &layer.qvals[j * gb..(j + 1) * gb];
+                let idot = simd::dot_i8(qb, layer.bits, &aq[gc * g..(gc + 1) * g]);
+                acc += term_i8(
+                    layer.scales[j],
+                    layer.zeros[j] as i32,
+                    idot,
+                    asum[gc],
+                    a_scale,
+                );
+            }
+            yd[ti * width + (r - r0)] = acc;
+        }
+    }
+}
+
 /// Code-indexed fallback for group sizes that straddle packed-byte
 /// boundaries; mirrors `gqs_gemv_ref` per row.
 fn gqs_gemm_ref(layer: &GqsLayer, x: &Mat, y: &mut Mat) {
@@ -531,6 +536,29 @@ mod tests {
                 let mut y = Mat::zeros(6, 40);
                 reduce_gemm(&chunks, 6, &mut y);
                 assert_eq!(y.data, y_seq.data, "bits {bits} g {g} chunks {n_chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_gemm_matches_per_row_i8_gemv_exactly() {
+        use crate::gqs::gemv::gqs_gemv_i8;
+        use crate::quant::act::ActI8;
+        for (bits, g) in [(4u32, 16usize), (4, 8), (8, 16), (2, 16)] {
+            let (l, mut rng) = layer(700 + bits as u64, 36, 8 * g, g, bits, 0.4);
+            let x = Mat::randn(5, 8 * g, &mut rng);
+            let mut acts = ActI8Batch::new();
+            acts.ensure(&x);
+            acts.ensure_asum(g);
+            let mut y = Mat::zeros(5, 36);
+            gqs_gemm_i8(&l, &acts, &mut y);
+            for ti in 0..5 {
+                let mut act = ActI8::new();
+                act.ensure(x.row(ti));
+                act.ensure_asum(g);
+                let mut yr = vec![0.0f32; 36];
+                gqs_gemv_i8(&l, &act, &mut yr);
+                assert_eq!(y.row(ti), &yr[..], "w{bits} g{g} row {ti}");
             }
         }
     }

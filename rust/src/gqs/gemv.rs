@@ -3,14 +3,21 @@
 //! surviving groups, gather the activation group by its *real* group
 //! index, dequantize, FMA.
 //!
-//! Two implementations:
+//! Three implementations:
 //!   * `gqs_gemv_ref`  — scalar, obviously-correct reference.
 //!   * `gqs_gemv`      — optimized: fused dequantization via the
 //!     algebraic split  Σ s(q-z)x = s·(Σ q·x) - s·z·(Σ x), with the
-//!     per-group activation sums Σx precomputed once per call, nibble
-//!     pairs unpacked inline, and 4-bit inner loops unrolled.
+//!     per-group activation sums Σx precomputed once per call and the
+//!     inner Σ q·x evaluated by the runtime-dispatched SIMD primitives
+//!     in `gqs::simd` (canonical accumulation order, so `GQSA_SIMD=0`
+//!     scalar output is bitwise identical to the vector path).
+//!   * `gqs_gemv_i8`   — W4A8-style integer path: i8 activations x
+//!     packed weight codes, i32 accumulate, one rescale per group
+//!     (`GQSA_ACT_I8`).
 
 use crate::gqs::layer::GqsLayer;
+use crate::gqs::simd;
+use crate::quant::act::ActI8;
 use crate::quant::unpack_codes;
 
 /// Scalar reference: dequantize each element then FMA.
@@ -113,30 +120,16 @@ pub fn chunkable(bits: u32, group: usize) -> bool {
 // makes the parallel path bit-exact with the sequential one.
 // ---------------------------------------------------------------------
 
-/// 4-bit, G=16: 8 packed bytes, fully unrolled via fixed-size array
-/// views (elides bounds checks; two accumulator chains break the FMA
-/// dependency — §Perf L3 iteration 2).
+/// 4-bit, G=16 (the headline shape — 8 packed bytes per group).
 #[inline(always)]
 fn term_b4_g16(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     const G: usize = 16;
     const GB: usize = 8; // packed bytes per group
     let gc = layer.groups[j] as usize;
-    let xs: &[f32; G] = x[gc * G..gc * G + G].try_into().unwrap();
-    let qb: &[u8; GB] = layer.qvals[j * GB..j * GB + GB].try_into().unwrap();
-    // Σ q_i * x_i with inline nibble unpack, 2 chains
-    let mut d0 = 0.0f32;
-    let mut d1 = 0.0f32;
-    let mut i = 0;
-    while i < GB {
-        let b0 = qb[i];
-        let b1 = qb[i + 1];
-        d0 += (b0 & 0xF) as f32 * xs[2 * i] + (b0 >> 4) as f32 * xs[2 * i + 1];
-        d1 += (b1 & 0xF) as f32 * xs[2 * i + 2] + (b1 >> 4) as f32 * xs[2 * i + 3];
-        i += 2;
-    }
-    let s = layer.scales[j];
-    let z = layer.zeros[j] as f32;
-    s * ((d0 + d1) - z * gsum[gc])
+    let xs = &x[gc * G..gc * G + G];
+    let qb = &layer.qvals[j * GB..j * GB + GB];
+    let dot = simd::dot_q4(qb, xs);
+    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
 }
 
 /// 4-bit, any (even) group size.
@@ -147,13 +140,7 @@ fn term_b4(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     let gc = layer.groups[j] as usize;
     let xs = &x[gc * g..(gc + 1) * g];
     let qb = &layer.qvals[j * gb..(j + 1) * gb];
-    let mut dot = 0.0f32;
-    for i in 0..gb {
-        let byte = qb[i];
-        dot += (byte & 0xF) as f32 * xs[2 * i];
-        dot += (byte >> 4) as f32 * xs[2 * i + 1];
-    }
-    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
+    layer.scales[j] * (simd::dot_q4(qb, xs) - layer.zeros[j] as f32 * gsum[gc])
 }
 
 /// 8-bit.
@@ -163,11 +150,7 @@ fn term_b8(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     let gc = layer.groups[j] as usize;
     let xs = &x[gc * g..(gc + 1) * g];
     let qb = &layer.qvals[j * g..(j + 1) * g];
-    let mut dot = 0.0f32;
-    for i in 0..g {
-        dot += qb[i] as f32 * xs[i];
-    }
-    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
+    layer.scales[j] * (simd::dot_q8(qb, xs) - layer.zeros[j] as f32 * gsum[gc])
 }
 
 /// 2-bit (four codes per byte).
@@ -178,15 +161,7 @@ fn term_b2(layer: &GqsLayer, j: usize, x: &[f32], gsum: &[f32]) -> f32 {
     let gc = layer.groups[j] as usize;
     let xs = &x[gc * g..(gc + 1) * g];
     let qb = &layer.qvals[j * gb..(j + 1) * gb];
-    let mut dot = 0.0f32;
-    for i in 0..gb {
-        let byte = qb[i];
-        dot += (byte & 0x3) as f32 * xs[4 * i];
-        dot += ((byte >> 2) & 0x3) as f32 * xs[4 * i + 1];
-        dot += ((byte >> 4) & 0x3) as f32 * xs[4 * i + 2];
-        dot += (byte >> 6) as f32 * xs[4 * i + 3];
-    }
-    layer.scales[j] * (dot - layer.zeros[j] as f32 * gsum[gc])
+    layer.scales[j] * (simd::dot_q2(qb, xs) - layer.zeros[j] as f32 * gsum[gc])
 }
 
 #[inline(always)]
@@ -338,6 +313,65 @@ pub fn reduce_gemv(chunks: &[GqsChunk], y: &mut [f32]) -> u64 {
     fixups
 }
 
+// ---------------------------------------------------------------------
+// Integer activation path (W4A8-style, GQSA_ACT_I8): the inner loop is
+// i8 x code multiply-accumulate in i32, with one f32 rescale per group:
+//   Σ s_w(q-z) · s_a·a  =  (s_w·s_a) · (Σ q·a − z·Σa)
+// where Σ q·a and the per-group Σa are exact integer sums. i32
+// accumulation is associative, so this path is bit-exact across SIMD
+// levels and row splits by construction.
+// ---------------------------------------------------------------------
+
+/// Whether (bits, group) has an integer fast path. Same byte-alignment
+/// condition as the f32 fast paths; `Ref` shapes fall back to f32.
+pub fn supports_i8(bits: u32, group: usize) -> bool {
+    chunkable(bits, group)
+}
+
+/// The single rescale shared by the integer GEMV and GEMM paths — both
+/// must use the identical f32 op sequence for the batched path to stay
+/// bit-exact per row with the per-token path.
+#[inline(always)]
+pub(crate) fn term_i8(s: f32, z: i32, idot: i32, asum: i32, a_scale: f32) -> f32 {
+    (s * a_scale) * ((idot - z * asum) as f32)
+}
+
+/// Integer GQS GEMV over pre-quantized activations. The caller runs
+/// `act.ensure(x)` + `act.ensure_asum(layer.group)` once per token and
+/// reuses `act` across every linear that reads the same input.
+pub fn gqs_gemv_i8(layer: &GqsLayer, act: &ActI8, y: &mut [f32]) {
+    assert_eq!(y.len(), layer.rows);
+    gqs_gemv_i8_rows(layer, act, y, 0, layer.rows);
+}
+
+/// Row-range form of `gqs_gemv_i8`, writing rows r0..r1 into
+/// `y[..r1-r0]` (region-relative, for the executor's row split).
+pub fn gqs_gemv_i8_rows(layer: &GqsLayer, act: &ActI8, y: &mut [f32], r0: usize, r1: usize) {
+    let g = layer.group;
+    let gb = g * layer.bits as usize / 8;
+    debug_assert!(supports_i8(layer.bits, g));
+    debug_assert_eq!(act.q.len(), layer.cols);
+    debug_assert_eq!(act.asum.len(), layer.cols / g);
+    for r in r0..r1 {
+        let (a, b) = (layer.row_index[r] as usize, layer.row_index[r + 1] as usize);
+        let mut acc = 0.0f32;
+        for j in a..b {
+            let gc = layer.groups[j] as usize;
+            let qb = &layer.qvals[j * gb..(j + 1) * gb];
+            let aq = &act.q[gc * g..(gc + 1) * g];
+            let idot = simd::dot_i8(qb, layer.bits, aq);
+            acc += term_i8(
+                layer.scales[j],
+                layer.zeros[j] as i32,
+                idot,
+                act.asum[gc],
+                act.scale,
+            );
+        }
+        y[r - r0] = acc;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +441,45 @@ mod tests {
         roundtrip(7, 16, 20, 5, 4, 0.4);
         roundtrip(8, 16, 24, 6, 2, 0.4);
         roundtrip(9, 16, 30, 5, 2, 0.5);
+    }
+
+    #[test]
+    fn i8_path_bounded_error_and_split_exact() {
+        for (bits, g, s) in [(4u32, 16usize, 0.5f64), (4, 8, 0.3), (8, 16, 0.5), (2, 16, 0.4)] {
+            let mut rng = XorShift::new(500 + bits as u64);
+            let w = Mat::randn(40, 16 * g, &mut rng);
+            let mask = group_prune(&w, None, SaliencyMetric::Magnitude, g, s);
+            let layer = GqsLayer::encode(&w, &mask, bits);
+            let x = rng.normal_vec(16 * g);
+            let mut y_f32 = vec![0.0f32; 40];
+            let mut scratch = Vec::new();
+            gqs_gemv(&layer, &x, &mut y_f32, &mut scratch);
+
+            let mut act = ActI8::new();
+            act.ensure(&x);
+            act.ensure_asum(g);
+            let mut y_i8 = vec![0.0f32; 40];
+            gqs_gemv_i8(&layer, &act, &mut y_i8);
+            // the i8 path evaluates the same dot on activations rounded
+            // to the A8 grid: error bounded by the quantization step
+            // times the dequantized weight mass of the row
+            for r in 0..40 {
+                let wmass: f32 = layer.decode().row(r).iter().map(|v| v.abs()).sum();
+                let bound = act.scale * 0.5 * wmass + 1e-3;
+                assert!(
+                    (y_i8[r] - y_f32[r]).abs() <= bound,
+                    "w{bits} g{g} row {r}: {} vs {}",
+                    y_i8[r],
+                    y_f32[r]
+                );
+            }
+            // region-relative row split reassembles bitwise
+            let mut y_split = vec![0.0f32; 40];
+            let (lo, hi) = y_split.split_at_mut(17);
+            gqs_gemv_i8_rows(&layer, &act, lo, 0, 17);
+            gqs_gemv_i8_rows(&layer, &act, hi, 17, 40);
+            assert_eq!(y_split, y_i8, "w{bits} g{g}");
+        }
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //! Tables 4/10/11/16): dense FP32, dense group-quantized W2/W4/W8, and
 //! the 2:4 semi-structured kernel with positional metadata.
 
+use crate::gqs::gemv::term_i8;
+use crate::gqs::simd;
+use crate::quant::act::{ActI8, ActI8Batch};
 use crate::quant::{pack_codes, QuantParams};
 use crate::util::Mat;
 
@@ -14,23 +17,19 @@ pub fn dense_gemv(w: &Mat, x: &[f32], y: &mut [f32]) {
 
 /// Row-range form of `dense_gemv`: computes rows r0..r1 into
 /// `y[..r1-r0]` (region-relative, so executor tasks fill disjoint
-/// private buffers with no shared-output aliasing). Output rows are
-/// independent single chains, so any partition of rows reproduces
-/// `dense_gemv` bit for bit; the full range makes indices absolute.
+/// private buffers with no shared-output aliasing). Each output row is
+/// one canonical-order dot ([`simd::dot`]), so any partition of rows —
+/// and any SIMD level — reproduces `dense_gemv` bit for bit; the full
+/// range makes indices absolute.
 pub fn dense_gemv_rows(w: &Mat, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
     for r in r0..r1 {
-        let row = w.row(r);
-        let mut acc = 0.0f32;
-        for i in 0..row.len() {
-            acc += row[i] * x[i];
-        }
-        y[r - r0] = acc;
+        y[r - r0] = simd::dot(w.row(r), x);
     }
 }
 
 /// Batched dense GEMM: Y (T, N) = X (T, K) @ Wᵀ. One pass over the
 /// weight rows serves every activation row; each output row matches
-/// `dense_gemv` bit for bit (same single accumulation chain).
+/// `dense_gemv` bit for bit (same canonical-order dot).
 pub fn dense_gemm(w: &Mat, x: &Mat, y: &mut Mat) {
     assert_eq!(x.cols, w.cols);
     assert_eq!((y.rows, y.cols), (x.rows, w.rows));
@@ -45,12 +44,7 @@ pub fn dense_gemm_rows(w: &Mat, x: &Mat, yd: &mut [f32], r0: usize, r1: usize) {
     for r in r0..r1 {
         let row = w.row(r);
         for ti in 0..x.rows {
-            let xr = x.row(ti);
-            let mut acc = 0.0f32;
-            for i in 0..row.len() {
-                acc += row[i] * xr[i];
-            }
-            yd[ti * width + (r - r0)] = acc;
+            yd[ti * width + (r - r0)] = simd::dot(row, x.row(ti));
         }
     }
 }
@@ -110,67 +104,28 @@ impl QuantDense {
 
     /// Row-range form of `gemv` with caller-supplied group sums,
     /// writing rows r0..r1 into `y[..r1-r0]` (region-relative — see
-    /// `dense_gemv_rows`; rows are independent chains).
+    /// `dense_gemv_rows`). Per-group code dots go through the fused
+    /// canonical-order SIMD primitives (`simd::dot_q{2,4,8}`), so every
+    /// SIMD level and any row partition agree bit for bit.
     pub fn gemv_rows(&self, x: &[f32], y: &mut [f32], gsum: &[f32], r0: usize, r1: usize) {
-        let ng = self.cols / self.group;
-        match self.bits {
-            4 => {
-                let gb = self.group / 2;
-                for r in r0..r1 {
-                    let mut acc = 0.0f32;
-                    for gc in 0..ng {
-                        let j = r * ng + gc;
-                        let xs = &x[gc * self.group..(gc + 1) * self.group];
-                        let qb = &self.qvals[j * gb..(j + 1) * gb];
-                        let mut dot = 0.0f32;
-                        for i in 0..gb {
-                            let byte = qb[i];
-                            dot += (byte & 0xF) as f32 * xs[2 * i];
-                            dot += (byte >> 4) as f32 * xs[2 * i + 1];
-                        }
-                        acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
-                    }
-                    y[r - r0] = acc;
-                }
+        let g = self.group;
+        let ng = self.cols / g;
+        let gb = g * self.bits as usize / 8;
+        for r in r0..r1 {
+            let mut acc = 0.0f32;
+            for gc in 0..ng {
+                let j = r * ng + gc;
+                let xs = &x[gc * g..(gc + 1) * g];
+                let qb = &self.qvals[j * gb..(j + 1) * gb];
+                let dot = match self.bits {
+                    4 => simd::dot_q4(qb, xs),
+                    8 => simd::dot_q8(qb, xs),
+                    2 => simd::dot_q2(qb, xs),
+                    _ => panic!("bits {}", self.bits),
+                };
+                acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
             }
-            8 => {
-                for r in r0..r1 {
-                    let mut acc = 0.0f32;
-                    for gc in 0..ng {
-                        let j = r * ng + gc;
-                        let xs = &x[gc * self.group..(gc + 1) * self.group];
-                        let qb = &self.qvals[j * self.group..(j + 1) * self.group];
-                        let mut dot = 0.0f32;
-                        for i in 0..self.group {
-                            dot += qb[i] as f32 * xs[i];
-                        }
-                        acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
-                    }
-                    y[r - r0] = acc;
-                }
-            }
-            2 => {
-                let gb = self.group / 4;
-                for r in r0..r1 {
-                    let mut acc = 0.0f32;
-                    for gc in 0..ng {
-                        let j = r * ng + gc;
-                        let xs = &x[gc * self.group..(gc + 1) * self.group];
-                        let qb = &self.qvals[j * gb..(j + 1) * gb];
-                        let mut dot = 0.0f32;
-                        for i in 0..gb {
-                            let byte = qb[i];
-                            dot += (byte & 0x3) as f32 * xs[4 * i];
-                            dot += ((byte >> 2) & 0x3) as f32 * xs[4 * i + 1];
-                            dot += ((byte >> 4) & 0x3) as f32 * xs[4 * i + 2];
-                            dot += (byte >> 6) as f32 * xs[4 * i + 3];
-                        }
-                        acc += self.scales[j] * (dot - self.zeros[j] as f32 * gsum[gc]);
-                    }
-                    y[r - r0] = acc;
-                }
-            }
-            _ => panic!("bits {}", self.bits),
+            y[r - r0] = acc;
         }
     }
 
@@ -193,7 +148,10 @@ impl QuantDense {
     /// Row-range form of `gemm` over the raw (T, N) output buffer with
     /// caller-supplied batched group sums (the executor partition
     /// point). Does not zero the output; callers zero once before
-    /// partitioning.
+    /// partitioning. Stages each group's codes as exact f32 (`deq[i] =
+    /// code as f32`) then takes a canonical-order `simd::dot` per
+    /// activation row — bitwise identical to the fused `gemv_rows` dot,
+    /// since both run the same op sequence over the same element values.
     pub fn gemm_rows(
         &self,
         x: &Mat,
@@ -207,82 +165,106 @@ impl QuantDense {
         let t = x.rows;
         let ng = self.cols / g;
         let width = r1 - r0;
+        let gb = g * self.bits as usize / 8;
         deq.resize(g, 0.0);
-        match self.bits {
-            4 => {
-                let gb = g / 2;
-                for r in r0..r1 {
-                    for gc in 0..ng {
-                        let j = r * ng + gc;
-                        let qb = &self.qvals[j * gb..(j + 1) * gb];
+        for r in r0..r1 {
+            for gc in 0..ng {
+                let j = r * ng + gc;
+                let qb = &self.qvals[j * gb..(j + 1) * gb];
+                match self.bits {
+                    4 => {
                         for i in 0..gb {
                             deq[2 * i] = (qb[i] & 0xF) as f32;
                             deq[2 * i + 1] = (qb[i] >> 4) as f32;
                         }
-                        let s = self.scales[j];
-                        let z = self.zeros[j] as f32;
-                        for ti in 0..t {
-                            let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-                            let mut dot = 0.0f32;
-                            for i in 0..gb {
-                                dot += deq[2 * i] * xs[2 * i];
-                                dot += deq[2 * i + 1] * xs[2 * i + 1];
-                            }
-                            yd[ti * width + (r - r0)] += s * (dot - z * xsum[ti * ng + gc]);
-                        }
                     }
-                }
-            }
-            8 => {
-                for r in r0..r1 {
-                    for gc in 0..ng {
-                        let j = r * ng + gc;
-                        let qb = &self.qvals[j * g..(j + 1) * g];
+                    8 => {
                         for i in 0..g {
                             deq[i] = qb[i] as f32;
                         }
-                        let s = self.scales[j];
-                        let z = self.zeros[j] as f32;
-                        for ti in 0..t {
-                            let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-                            let mut dot = 0.0f32;
-                            for i in 0..g {
-                                dot += deq[i] * xs[i];
-                            }
-                            yd[ti * width + (r - r0)] += s * (dot - z * xsum[ti * ng + gc]);
-                        }
                     }
-                }
-            }
-            2 => {
-                let gb = g / 4;
-                for r in r0..r1 {
-                    for gc in 0..ng {
-                        let j = r * ng + gc;
-                        let qb = &self.qvals[j * gb..(j + 1) * gb];
+                    2 => {
                         for i in 0..gb {
                             deq[4 * i] = (qb[i] & 0x3) as f32;
                             deq[4 * i + 1] = ((qb[i] >> 2) & 0x3) as f32;
                             deq[4 * i + 2] = ((qb[i] >> 4) & 0x3) as f32;
                             deq[4 * i + 3] = (qb[i] >> 6) as f32;
                         }
-                        let s = self.scales[j];
-                        let z = self.zeros[j] as f32;
-                        for ti in 0..t {
-                            let xs = &x.row(ti)[gc * g..(gc + 1) * g];
-                            let mut dot = 0.0f32;
-                            for i in 0..gb {
-                                dot += deq[4 * i] * xs[4 * i];
-                                dot += deq[4 * i + 1] * xs[4 * i + 1];
-                                dot += deq[4 * i + 2] * xs[4 * i + 2];
-                                dot += deq[4 * i + 3] * xs[4 * i + 3];
-                            }
-                            yd[ti * width + (r - r0)] += s * (dot - z * xsum[ti * ng + gc]);
-                        }
                     }
+                    _ => panic!("bits {}", self.bits),
+                }
+                let s = self.scales[j];
+                let z = self.zeros[j] as f32;
+                for ti in 0..t {
+                    let xs = &x.row(ti)[gc * g..(gc + 1) * g];
+                    yd[ti * width + (r - r0)] += s * (simd::dot(deq, xs) - z * xsum[ti * ng + gc]);
                 }
             }
-            _ => panic!("bits {}", self.bits),
+        }
+    }
+
+    /// W{2,4,8}A8 integer GEMV over pre-quantized activations: per
+    /// group Σ s_w(q−z)·s_a·a = (s_w·s_a)·(Σq·a − z·Σa) with the code
+    /// dot in i32 (`simd::dot_i8`). i32 accumulation is exactly
+    /// associative, so every SIMD level and row split agree bit for
+    /// bit by construction. Caller runs `act.ensure` + `ensure_asum`.
+    pub fn gemv_i8(&self, act: &ActI8, y: &mut [f32]) {
+        assert_eq!(y.len(), self.rows);
+        self.gemv_i8_rows(act, y, 0, self.rows);
+    }
+
+    /// Row-range form of `gemv_i8` (region-relative, see
+    /// `dense_gemv_rows`).
+    pub fn gemv_i8_rows(&self, act: &ActI8, y: &mut [f32], r0: usize, r1: usize) {
+        let g = self.group;
+        let ng = self.cols / g;
+        let gb = g * self.bits as usize / 8;
+        debug_assert_eq!(act.q.len(), self.cols);
+        debug_assert_eq!(act.asum.len(), ng);
+        for r in r0..r1 {
+            let mut acc = 0.0f32;
+            for gc in 0..ng {
+                let j = r * ng + gc;
+                let qb = &self.qvals[j * gb..(j + 1) * gb];
+                let aq = &act.q[gc * g..(gc + 1) * g];
+                let idot = simd::dot_i8(qb, self.bits, aq);
+                acc += term_i8(self.scales[j], self.zeros[j] as i32, idot, act.asum[gc], act.scale);
+            }
+            y[r - r0] = acc;
+        }
+    }
+
+    /// Batched integer GEMM counterpart of `gemv_i8`; per output row
+    /// identical to `gemv_i8` on that activation row (shared `term_i8`
+    /// rescale, exact i32 dot).
+    pub fn gemm_i8(&self, acts: &ActI8Batch, y: &mut Mat) {
+        assert_eq!((y.rows, y.cols), (acts.rows, self.rows));
+        y.data.fill(0.0);
+        self.gemm_i8_rows(acts, &mut y.data, 0, self.rows);
+    }
+
+    /// Row-range form of `gemm_i8` into a region-relative (T, r1-r0)
+    /// buffer (see `dense_gemm_rows`).
+    pub fn gemm_i8_rows(&self, acts: &ActI8Batch, yd: &mut [f32], r0: usize, r1: usize) {
+        let g = self.group;
+        let ng = self.cols / g;
+        let gb = g * self.bits as usize / 8;
+        let width = r1 - r0;
+        debug_assert_eq!(acts.cols, self.cols);
+        for r in r0..r1 {
+            for ti in 0..acts.rows {
+                let aq = acts.row_q(ti);
+                let asum = &acts.asum[ti * ng..(ti + 1) * ng];
+                let a_scale = acts.scales[ti];
+                let mut acc = 0.0f32;
+                for gc in 0..ng {
+                    let j = r * ng + gc;
+                    let qb = &self.qvals[j * gb..(j + 1) * gb];
+                    let idot = simd::dot_i8(qb, self.bits, &aq[gc * g..(gc + 1) * g]);
+                    acc += term_i8(self.scales[j], self.zeros[j] as i32, idot, asum[gc], a_scale);
+                }
+                yd[ti * width + (r - r0)] = acc;
+            }
         }
     }
 
@@ -655,6 +637,61 @@ mod tests {
                 let mut yr = vec![0.0f32; 24];
                 kern.gemv(x.row(ti), &mut yr);
                 assert_eq!(y.row(ti), &yr[..], "semi24 w{bits} row {ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dense_i8_bounded_error_and_split_exact() {
+        let mut rng = XorShift::new(21);
+        let w = Mat::randn(32, 64, &mut rng);
+        let x = rng.normal_vec(64);
+        for bits in [2u32, 4, 8] {
+            let qd = QuantDense::encode(&w, bits, 16);
+            let mut act = ActI8::new();
+            act.ensure(&x);
+            act.ensure_asum(16);
+            let mut y8 = vec![0.0f32; 32];
+            qd.gemv_i8(&act, &mut y8);
+            let mut yf = vec![0.0f32; 32];
+            let mut sc = Vec::new();
+            qd.gemv(&x, &mut yf, &mut sc);
+            let dec = qd.decode();
+            for r in 0..32 {
+                // activation rounding error ≤ a_scale/2 per element,
+                // weighted by the dequantized row mass
+                let wmass: f32 = dec.row(r).iter().map(|v| v.abs()).sum();
+                let bound = act.scale * 0.5 * wmass + 1e-3;
+                assert!((y8[r] - yf[r]).abs() <= bound, "w{bits} row {r}");
+            }
+            // row splits are exact (i32 accumulation)
+            let mut ysplit = vec![0.0f32; 32];
+            let (lo, hi) = ysplit.split_at_mut(13);
+            qd.gemv_i8_rows(&act, lo, 0, 13);
+            qd.gemv_i8_rows(&act, hi, 13, 32);
+            assert_eq!(ysplit, y8, "w{bits} split");
+        }
+    }
+
+    #[test]
+    fn quant_dense_i8_gemm_matches_per_row_gemv_exactly() {
+        let mut rng = XorShift::new(22);
+        let w = Mat::randn(24, 64, &mut rng);
+        let x = Mat::randn(4, 64, &mut rng);
+        for bits in [2u32, 4, 8] {
+            let qd = QuantDense::encode(&w, bits, 16);
+            let mut acts = ActI8Batch::new();
+            acts.ensure(&x);
+            acts.ensure_asum(16);
+            let mut y = Mat::zeros(4, 24);
+            qd.gemm_i8(&acts, &mut y);
+            for ti in 0..4 {
+                let mut act = ActI8::new();
+                act.ensure(x.row(ti));
+                act.ensure_asum(16);
+                let mut yr = vec![0.0f32; 24];
+                qd.gemv_i8(&act, &mut yr);
+                assert_eq!(y.row(ti), &yr[..], "w{bits} row {ti}");
             }
         }
     }

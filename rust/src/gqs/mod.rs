@@ -7,6 +7,7 @@ pub mod gemm;
 pub mod gemv;
 pub mod gemv_dense;
 pub mod layer;
+pub mod simd;
 
 pub use gemm::{gqs_gemm, MatmulScratch};
 pub use gemv::{gqs_gemv, gqs_gemv_ref};

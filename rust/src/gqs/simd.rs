@@ -1,0 +1,724 @@
+//! Runtime-dispatched SIMD microkernel primitives.
+//!
+//! Every hot dot product in the crate (GQS, dense, W{2,4,8}, BSR) goes
+//! through the primitives in this module. The contract that makes the
+//! repo's bit-exactness tests survive vectorization is a *canonical
+//! accumulation order*, fixed once here and implemented identically by
+//! the scalar path and every SIMD path:
+//!
+//! - 8 independent f32 lane accumulators over chunks of 8 elements
+//!   (`lane[k] += a[8c+k] * b[8c+k]`, chunks in order),
+//! - a fixed reduce tree matching the AVX2 horizontal reduction:
+//!   `s04 = l0+l4; s15 = l1+l5; s26 = l2+l6; s37 = l3+l7;
+//!    result = (s04 + s26) + (s15 + s37)`,
+//! - a sequential scalar tail for `len % 8` elements.
+//!
+//! Both implementations use plain mul-then-add (never fused
+//! multiply-add: FMA's single rounding differs from scalar `acc + a*b`),
+//! so the scalar path is a true oracle: `GQSA_SIMD=0` must be bitwise
+//! identical to the vector path on every input.
+//!
+//! The integer (W4A8-style) dots accumulate in i32, which is exactly
+//! associative — those are bit-exact across paths by construction.
+//!
+//! Dispatch: the level is detected once (AVX2 on x86_64, NEON on
+//! aarch64, honoring `GQSA_SIMD=0`) and cached in an atomic; benches
+//! and tests can override it in-process via [`force`]/[`reset`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Vector instruction level the primitives dispatch on.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Simd {
+    /// Canonical-order scalar loops — the bit-exactness oracle.
+    Scalar,
+    /// AVX2 (x86_64), runtime-detected.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Simd {
+    pub fn name(self) -> &'static str {
+        match self {
+            Simd::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Simd::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Simd::Neon => "neon",
+        }
+    }
+}
+
+const UNINIT: u8 = 0;
+const SCALAR: u8 = 1;
+#[cfg(target_arch = "x86_64")]
+const AVX2: u8 = 2;
+#[cfg(target_arch = "aarch64")]
+const NEON: u8 = 3;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn encode(l: Simd) -> u8 {
+    match l {
+        Simd::Scalar => SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 => AVX2,
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => NEON,
+    }
+}
+
+fn decode(v: u8) -> Simd {
+    match v {
+        #[cfg(target_arch = "x86_64")]
+        AVX2 => Simd::Avx2,
+        #[cfg(target_arch = "aarch64")]
+        NEON => Simd::Neon,
+        _ => Simd::Scalar,
+    }
+}
+
+/// What the hardware (and `GQSA_SIMD`) allow, ignoring any [`force`].
+pub fn detect() -> Simd {
+    if std::env::var("GQSA_SIMD").is_ok_and(|v| v == "0") {
+        return Simd::Scalar;
+    }
+    best()
+}
+
+/// Best level the hardware supports, ignoring the environment.
+pub fn best() -> Simd {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Simd::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Simd::Neon;
+    }
+    #[allow(unreachable_code)]
+    Simd::Scalar
+}
+
+/// The active dispatch level (detected once, cached).
+#[inline]
+pub fn level() -> Simd {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNINIT {
+        return decode(v);
+    }
+    let l = detect();
+    LEVEL.store(encode(l), Ordering::Relaxed);
+    l
+}
+
+/// Override the dispatch level in-process (benches / property tests
+/// comparing paths). Callers that force must serialize among
+/// themselves and [`reset`] when done.
+pub fn force(l: Simd) {
+    LEVEL.store(encode(l), Ordering::Relaxed);
+}
+
+/// Drop a [`force`] override and go back to auto-detection.
+pub fn reset() {
+    LEVEL.store(UNINIT, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Canonical scalar implementations (the oracle).
+// ---------------------------------------------------------------------
+
+#[inline]
+fn reduce8(l: [f32; 8]) -> f32 {
+    let s04 = l[0] + l[4];
+    let s15 = l[1] + l[5];
+    let s26 = l[2] + l[6];
+    let s37 = l[3] + l[7];
+    (s04 + s26) + (s15 + s37)
+}
+
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let c8 = n - n % 8;
+    let mut l = [0.0f32; 8];
+    let mut i = 0;
+    while i < c8 {
+        for (k, lk) in l.iter_mut().enumerate() {
+            *lk += a[i + k] * b[i + k];
+        }
+        i += 8;
+    }
+    let mut acc = reduce8(l);
+    while i < n {
+        acc += a[i] * b[i];
+        i += 1;
+    }
+    acc
+}
+
+/// Code value at element index `i` of a packed stream.
+#[inline]
+fn code_at(q: &[u8], bits: u32, i: usize) -> f32 {
+    match bits {
+        8 => q[i] as f32,
+        4 => {
+            let b = q[i >> 1];
+            (if i & 1 == 0 { b & 0xF } else { b >> 4 }) as f32
+        }
+        2 => ((q[i >> 2] >> (2 * (i & 3))) & 0x3) as f32,
+        _ => unreachable!(),
+    }
+}
+
+#[inline]
+fn dot_codes_scalar(q: &[u8], bits: u32, x: &[f32]) -> f32 {
+    let n = x.len();
+    let c8 = n - n % 8;
+    let mut l = [0.0f32; 8];
+    let mut i = 0;
+    while i < c8 {
+        for (k, lk) in l.iter_mut().enumerate() {
+            *lk += code_at(q, bits, i + k) * x[i + k];
+        }
+        i += 8;
+    }
+    let mut acc = reduce8(l);
+    while i < n {
+        acc += code_at(q, bits, i) * x[i];
+        i += 1;
+    }
+    acc
+}
+
+fn dot_i8_codes_scalar(q: &[u8], bits: u32, a: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    match bits {
+        8 => {
+            for (k, &b) in q.iter().take(a.len()).enumerate() {
+                acc += b as i32 * a[k] as i32;
+            }
+        }
+        4 => {
+            for (k, &b) in q.iter().take(a.len() / 2).enumerate() {
+                acc += (b & 0xF) as i32 * a[2 * k] as i32;
+                acc += (b >> 4) as i32 * a[2 * k + 1] as i32;
+            }
+        }
+        2 => {
+            for (k, &b) in q.iter().take(a.len() / 4).enumerate() {
+                for j in 0..4 {
+                    acc += ((b >> (2 * j)) & 0x3) as i32 * a[4 * k + j] as i32;
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// AVX2
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal reduce replicating the scalar tree exactly:
+    /// (s04 + s26) + (s15 + s37).
+    #[inline]
+    unsafe fn hreduce(acc: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps::<1>(acc); // [l4,l5,l6,l7]
+        let lo = _mm256_castps256_ps128(acc); // [l0,l1,l2,l3]
+        let s = _mm_add_ps(lo, hi); // [s04,s15,s26,s37]
+        let sh = _mm_movehl_ps(s, s); // [s26,s37,..]
+        let t = _mm_add_ps(s, sh); // [s04+s26, s15+s37,..]
+        let u = _mm_add_ss(t, _mm_shuffle_ps::<1>(t, t));
+        _mm_cvtss_f32(u)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let c8 = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c8 {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += 8;
+        }
+        let mut s = hreduce(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_q8(q: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let c8 = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c8 {
+            let v = _mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i);
+            let f = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(v));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(f, vx));
+            i += 8;
+        }
+        let mut s = hreduce(acc);
+        while i < n {
+            s += q[i] as f32 * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_q4(q: &[u8], x: &[f32]) -> f32 {
+        // 8 codes (4 bytes) per iteration, low nibble first.
+        let n = x.len();
+        let c8 = n - n % 8;
+        let mask = _mm_set1_epi8(0x0F);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c8 {
+            let raw = (q.as_ptr().add(i >> 1) as *const u32).read_unaligned();
+            let v = _mm_cvtsi32_si128(raw as i32);
+            let lo = _mm_and_si128(v, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+            let codes = _mm_unpacklo_epi8(lo, hi); // c0..c7 in order
+            let f = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(codes));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(f, vx));
+            i += 8;
+        }
+        let mut s = hreduce(acc);
+        while i < n {
+            let b = q[i >> 1];
+            let c = if i & 1 == 0 { b & 0xF } else { b >> 4 };
+            s += c as f32 * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_q2(q: &[u8], x: &[f32]) -> f32 {
+        // 8 codes (2 bytes) per iteration, lowest bits first.
+        let n = x.len();
+        let c8 = n - n % 8;
+        let shifts = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+        let three = _mm256_set1_epi32(3);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < c8 {
+            let raw = (q.as_ptr().add(i >> 2) as *const u16).read_unaligned() as i32;
+            let v = _mm256_set1_epi32(raw);
+            let c = _mm256_and_si256(_mm256_srlv_epi32(v, shifts), three);
+            let f = _mm256_cvtepi32_ps(c);
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(f, vx));
+            i += 8;
+        }
+        let mut s = hreduce(acc);
+        while i < n {
+            let c = (q[i >> 2] >> (2 * (i & 3))) & 0x3;
+            s += c as f32 * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[inline]
+    unsafe fn hsum_i32(acc: __m256i) -> i32 {
+        let hi = _mm256_extracti128_si256::<1>(acc);
+        let lo = _mm256_castsi256_si128(acc);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_11_10>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// i8 activations x packed 4-bit codes, i32 accumulate. 16 codes
+    /// (8 bytes) per iteration via maddubs — exact: |2*15*127| < 2^15.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_q4(q: &[u8], a: &[i8]) -> i32 {
+        let n = a.len();
+        let c16 = n - n % 16;
+        let mask = _mm_set1_epi8(0x0F);
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < c16 {
+            let v = _mm_loadl_epi64(q.as_ptr().add(i >> 1) as *const __m128i);
+            let lo = _mm_and_si128(v, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+            let codes = _mm_unpacklo_epi8(lo, hi); // 16 codes u8
+            let acts = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let prod = _mm_maddubs_epi16(codes, acts); // 8 x i16, exact
+            acc = _mm256_add_epi32(acc, _mm256_cvtepi16_epi32(prod));
+            i += 16;
+        }
+        let mut s = hsum_i32(acc);
+        while i < n {
+            let b = q[i >> 1];
+            let c = if i & 1 == 0 { b & 0xF } else { b >> 4 };
+            s += c as i32 * a[i] as i32;
+            i += 1;
+        }
+        s
+    }
+
+    /// i8 activations x 8-bit codes. maddubs would saturate at
+    /// 2*255*127, so widen to i16 and use madd_epi16 (exact).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_q8(q: &[u8], a: &[i8]) -> i32 {
+        let n = a.len();
+        let c8 = n - n % 8;
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0;
+        while i < c8 {
+            let c16 =
+                _mm_cvtepu8_epi16(_mm_loadl_epi64(q.as_ptr().add(i) as *const __m128i));
+            let a16 =
+                _mm_cvtepi8_epi16(_mm_loadl_epi64(a.as_ptr().add(i) as *const __m128i));
+            acc = _mm_add_epi32(acc, _mm_madd_epi16(c16, a16));
+            i += 8;
+        }
+        let s = _mm_add_epi32(acc, _mm_shuffle_epi32::<0b00_00_11_10>(acc));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b00_00_00_01>(s));
+        let mut s = _mm_cvtsi128_si32(s);
+        while i < n {
+            s += q[i] as i32 * a[i] as i32;
+            i += 1;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64 baseline). q2 and the integer dots fall back to the
+// scalar loops — they are either exact by construction (i32) or cold.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Reduce two 4-lane accumulators (lanes 0..3, 4..7) with the
+    /// canonical tree: vaddq gives [s04,s15,s26,s37] directly.
+    #[inline]
+    unsafe fn reduce(acc0: float32x4_t, acc1: float32x4_t) -> f32 {
+        let s = vaddq_f32(acc0, acc1);
+        (vgetq_lane_f32::<0>(s) + vgetq_lane_f32::<2>(s))
+            + (vgetq_lane_f32::<1>(s) + vgetq_lane_f32::<3>(s))
+    }
+
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let c8 = n - n % 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < c8 {
+            let a0 = vld1q_f32(a.as_ptr().add(i));
+            let b0 = vld1q_f32(b.as_ptr().add(i));
+            acc0 = vaddq_f32(acc0, vmulq_f32(a0, b0));
+            let a1 = vld1q_f32(a.as_ptr().add(i + 4));
+            let b1 = vld1q_f32(b.as_ptr().add(i + 4));
+            acc1 = vaddq_f32(acc1, vmulq_f32(a1, b1));
+            i += 8;
+        }
+        let mut s = reduce(acc0, acc1);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[inline]
+    unsafe fn mul_acc_u16(
+        acc0: float32x4_t,
+        acc1: float32x4_t,
+        codes: uint16x8_t,
+        x: *const f32,
+    ) -> (float32x4_t, float32x4_t) {
+        let f0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(codes)));
+        let f1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(codes)));
+        let a0 = vaddq_f32(acc0, vmulq_f32(f0, vld1q_f32(x)));
+        let a1 = vaddq_f32(acc1, vmulq_f32(f1, vld1q_f32(x.add(4))));
+        (a0, a1)
+    }
+
+    pub unsafe fn dot_q8(q: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let c8 = n - n % 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < c8 {
+            let v = vld1_u8(q.as_ptr().add(i));
+            let (a0, a1) = mul_acc_u16(acc0, acc1, vmovl_u8(v), x.as_ptr().add(i));
+            acc0 = a0;
+            acc1 = a1;
+            i += 8;
+        }
+        let mut s = reduce(acc0, acc1);
+        while i < n {
+            s += q[i] as f32 * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    pub unsafe fn dot_q4(q: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let c8 = n - n % 8;
+        let mask = vdup_n_u8(0x0F);
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < c8 {
+            // 4 bytes -> 8 codes, low nibble first
+            let raw = (q.as_ptr().add(i >> 1) as *const u32).read_unaligned();
+            let v = vcreate_u8(raw as u64);
+            let lo = vand_u8(v, mask);
+            let hi = vand_u8(vshr_n_u8::<4>(v), mask);
+            let codes = vzip1_u8(lo, hi); // c0..c7
+            let (a0, a1) = mul_acc_u16(acc0, acc1, vmovl_u8(codes), x.as_ptr().add(i));
+            acc0 = a0;
+            acc1 = a1;
+            i += 8;
+        }
+        let mut s = reduce(acc0, acc1);
+        while i < n {
+            let b = q[i >> 1];
+            let c = if i & 1 == 0 { b & 0xF } else { b >> 4 };
+            s += c as f32 * x[i];
+            i += 1;
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public dispatching primitives.
+// ---------------------------------------------------------------------
+
+/// Canonical-order f32 dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match level() {
+        Simd::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::dot(a, b) },
+    }
+}
+
+/// Dot of unpacked-on-the-fly 8-bit codes with `x` (canonical order).
+#[inline]
+pub fn dot_q8(q: &[u8], x: &[f32]) -> f32 {
+    debug_assert!(q.len() >= x.len());
+    match level() {
+        Simd::Scalar => dot_codes_scalar(q, 8, x),
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 => unsafe { avx2::dot_q8(q, x) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::dot_q8(q, x) },
+    }
+}
+
+/// Dot of packed 4-bit codes (two per byte, low nibble first) with
+/// `x`; `x.len()` must be even.
+#[inline]
+pub fn dot_q4(q: &[u8], x: &[f32]) -> f32 {
+    debug_assert!(x.len() % 2 == 0 && q.len() >= x.len() / 2);
+    match level() {
+        Simd::Scalar => dot_codes_scalar(q, 4, x),
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 => unsafe { avx2::dot_q4(q, x) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::dot_q4(q, x) },
+    }
+}
+
+/// Dot of packed 2-bit codes (four per byte, lowest bits first) with
+/// `x`; `x.len()` must be a multiple of 4.
+#[inline]
+pub fn dot_q2(q: &[u8], x: &[f32]) -> f32 {
+    debug_assert!(x.len() % 4 == 0 && q.len() >= x.len() / 4);
+    match level() {
+        Simd::Scalar => dot_codes_scalar(q, 2, x),
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 => unsafe { avx2::dot_q2(q, x) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => dot_codes_scalar(q, 2, x),
+    }
+}
+
+/// Integer dot: packed codes x i8 activations, i32 accumulate.
+/// Exactly associative, so bit-exact across dispatch levels by
+/// construction (no canonical-order requirement).
+#[inline]
+pub fn dot_i8(q: &[u8], bits: u32, a: &[i8]) -> i32 {
+    match level() {
+        Simd::Scalar => dot_i8_codes_scalar(q, bits, a),
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 => match bits {
+            4 => unsafe { avx2::dot_i8_q4(q, a) },
+            8 => unsafe { avx2::dot_i8_q8(q, a) },
+            _ => dot_i8_codes_scalar(q, bits, a),
+        },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => dot_i8_codes_scalar(q, bits, a),
+    }
+}
+
+/// Sum of i8 activations in i32 (the zero-point correction term).
+#[inline]
+pub fn sum_i8(a: &[i8]) -> i32 {
+    a.iter().map(|&v| v as i32).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::packing::pack_codes;
+    use crate::util::XorShift;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = XorShift::new(seed);
+        (rng.normal_vec(n), rng.normal_vec(n))
+    }
+
+    #[test]
+    fn scalar_dot_matches_lane_reference() {
+        // the scalar path IS the canonical order: check it against an
+        // explicit 8-lane + tree + tail transcription
+        let (a, b) = vecs(45, 3);
+        let mut l = [0.0f32; 8];
+        let c8 = 40;
+        for i in (0..c8).step_by(8) {
+            for k in 0..8 {
+                l[k] += a[i + k] * b[i + k];
+            }
+        }
+        let mut want = reduce8(l);
+        for i in c8..45 {
+            want += a[i] * b[i];
+        }
+        assert_eq!(dot_scalar(&a, &b), want);
+    }
+
+    #[test]
+    fn simd_dot_bitwise_matches_scalar() {
+        // covers n < 8, n % 8 != 0, and exact multiples
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 24, 31, 40, 64, 127, 256] {
+            let (a, b) = vecs(n, 100 + n as u64);
+            let want = dot_scalar(&a, &b);
+            match best() {
+                #[cfg(target_arch = "x86_64")]
+                Simd::Avx2 => {
+                    assert_eq!(unsafe { avx2::dot(&a, &b) }.to_bits(), want.to_bits(), "n={n}");
+                }
+                #[cfg(target_arch = "aarch64")]
+                Simd::Neon => {
+                    assert_eq!(unsafe { neon::dot(&a, &b) }.to_bits(), want.to_bits(), "n={n}");
+                }
+                Simd::Scalar => {}
+            }
+        }
+    }
+
+    #[test]
+    fn simd_code_dots_bitwise_match_scalar() {
+        let mut rng = XorShift::new(9);
+        for bits in [2u32, 4, 8] {
+            let step = match bits {
+                2 => 4,
+                4 => 2,
+                _ => 1,
+            };
+            for n in [8usize, 16, 24, 40, 48, 64, 132] {
+                if n % step != 0 {
+                    continue;
+                }
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+                let packed = pack_codes(&codes, bits);
+                let x = rng.normal_vec(n);
+                let want = dot_codes_scalar(&packed, bits, &x);
+                // sanity: fused equals unpack-then-dot in canonical order
+                let unpacked: Vec<f32> = codes.iter().map(|&c| c as f32).collect();
+                assert_eq!(want.to_bits(), dot_scalar(&unpacked, &x).to_bits());
+                #[cfg(target_arch = "x86_64")]
+                if best() == Simd::Avx2 {
+                    let got = match bits {
+                        4 => unsafe { avx2::dot_q4(&packed, &x) },
+                        8 => unsafe { avx2::dot_q8(&packed, &x) },
+                        _ => unsafe { avx2::dot_q2(&packed, &x) },
+                    };
+                    assert_eq!(got.to_bits(), want.to_bits(), "w{bits} n={n}");
+                }
+                #[cfg(target_arch = "aarch64")]
+                if bits != 2 {
+                    let got = match bits {
+                        4 => unsafe { neon::dot_q4(&packed, &x) },
+                        _ => unsafe { neon::dot_q8(&packed, &x) },
+                    };
+                    assert_eq!(got.to_bits(), want.to_bits(), "w{bits} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn integer_dots_exact_across_paths() {
+        let mut rng = XorShift::new(21);
+        for bits in [2u32, 4, 8] {
+            for n in [16usize, 32, 48, 72, 128] {
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+                let packed = pack_codes(&codes, bits);
+                let a: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+                let want: i32 = codes
+                    .iter()
+                    .zip(&a)
+                    .map(|(&c, &v)| c as i32 * v as i32)
+                    .sum();
+                assert_eq!(dot_i8_codes_scalar(&packed, bits, &a), want);
+                #[cfg(target_arch = "x86_64")]
+                if best() == Simd::Avx2 {
+                    let got = match bits {
+                        4 => unsafe { avx2::dot_i8_q4(&packed, &a) },
+                        8 => unsafe { avx2::dot_i8_q8(&packed, &a) },
+                        _ => dot_i8_codes_scalar(&packed, bits, &a),
+                    };
+                    assert_eq!(got, want, "w{bits} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn env_zero_forces_scalar() {
+        // detect() honors GQSA_SIMD=0; we can't set env safely in a
+        // threaded test run, so just check the force/reset override.
+        force(Simd::Scalar);
+        assert_eq!(level(), Simd::Scalar);
+        reset();
+        let _ = level(); // re-detects without panicking
+    }
+}

@@ -5,7 +5,7 @@
 //!   generate  [--model SPEC] [--family F] [--prompt S] [--max-new N] [--backend native|pjrt]
 //!   serve-demo [--requests N] [--batch B]    continuous-batching demo
 //!   eval      [--family F] [--model SPEC]    ppl + zero-shot for one variant
-//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep)
+//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|kernels|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep; kernels = scalar vs SIMD vs W4A8 microkernel GB/s)
 //!   engine-sim [--rows N] [--skew X]         Slice-K vs Stream-K simulator
 
 use std::collections::HashMap;
@@ -66,7 +66,7 @@ fn run() -> Result<()> {
         "serve-demo" => serve_demo(&art, &flags),
         "eval" => eval_cmd(&art, &flags),
         "bench-table" => {
-            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, kvpage, specdec, prefix, all)")?;
+            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, kvpage, specdec, prefix, kernels, all)")?;
             let mut wb = Workbench::new(art);
             experiments::run(id, &mut wb)
         }

@@ -1,9 +1,18 @@
 //! Dynamic per-token INT8 activation quantization (Appendix C, W4A8).
 //!
 //! Symmetric per-vector scaling: s = max|x| / 127, q = round(x/s).
-//! Applied on the fly in the serving path when the model is configured
-//! W4A8S50%; adds quantization noise but no storage (activations are
-//! transient).
+//! Two consumers:
+//! - `fake_quant_i8` simulates A8 in the f32 kernels (quantize-dequantize
+//!   in place) — the quality-evaluation path;
+//! - [`ActI8`] / [`ActI8Batch`] hold *real* i8 codes (+ per-group i32
+//!   sums for the zero-point correction) that the W4A8 integer kernels
+//!   in `gqs::gemv` / `gqs::gemv_dense` consume (`GQSA_ACT_I8`).
+//!
+//! The `_into` variants take caller-provided scratch (the `gsum_scratch`
+//! idiom from `gqs::gemv`) so the serving path never allocates per
+//! token.
+
+use crate::util::Mat;
 
 /// Quantize-dequantize one activation vector in place (simulated A8).
 pub fn fake_quant_i8(x: &mut [f32]) -> f32 {
@@ -18,16 +27,156 @@ pub fn fake_quant_i8(x: &mut [f32]) -> f32 {
     scale
 }
 
-/// Quantize to real i8 codes + scale (for kernels that consume int8).
-pub fn quant_i8(x: &[f32]) -> (Vec<i8>, f32) {
+/// Quantize into a caller-provided code buffer; returns the scale.
+/// Grid-compatible with `fake_quant_i8` (same scale, same rounding),
+/// and idempotent across it: `quant_i8_into(fake_quant(x))` yields the
+/// same codes as `quant_i8_into(x)`.
+pub fn quant_i8_into(x: &[f32], q: &mut Vec<i8>) -> f32 {
     let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
     let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
-    let q = x.iter().map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8).collect();
+    q.clear();
+    q.extend(x.iter().map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8));
+    scale
+}
+
+/// Dequantize into a caller-provided buffer.
+pub fn dequant_i8_into(q: &[i8], scale: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(q.iter().map(|&v| v as f32 * scale));
+}
+
+/// Allocating convenience wrapper over [`quant_i8_into`].
+pub fn quant_i8(x: &[f32]) -> (Vec<i8>, f32) {
+    let mut q = Vec::new();
+    let scale = quant_i8_into(x, &mut q);
     (q, scale)
 }
 
+/// Allocating convenience wrapper over [`dequant_i8_into`].
 pub fn dequant_i8(q: &[i8], scale: f32) -> Vec<f32> {
-    q.iter().map(|&v| v as f32 * scale).collect()
+    let mut out = Vec::new();
+    dequant_i8_into(q, scale, &mut out);
+    out
+}
+
+fn group_sums_i8(q: &[i8], group: usize, out: &mut Vec<i32>) {
+    debug_assert_eq!(q.len() % group, 0);
+    out.clear();
+    out.extend(q.chunks_exact(group).map(|g| g.iter().map(|&v| v as i32).sum::<i32>()));
+}
+
+/// One token's quantized activations, reused across every linear that
+/// reads the same input vector (wq/wk/wv share one quantization).
+/// Callers must `invalidate()` whenever the source buffer is rewritten.
+#[derive(Default)]
+pub struct ActI8 {
+    pub q: Vec<i8>,
+    pub scale: f32,
+    pub asum: Vec<i32>,
+    asum_group: usize,
+    valid: bool,
+}
+
+impl ActI8 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark the cached codes stale (the source activation changed).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+        self.asum_group = 0;
+    }
+
+    /// Quantize `x` unless the cache is already valid for it.
+    pub fn ensure(&mut self, x: &[f32]) {
+        if self.valid && self.q.len() == x.len() {
+            return;
+        }
+        self.scale = quant_i8_into(x, &mut self.q);
+        self.asum_group = 0;
+        self.valid = true;
+    }
+
+    /// Per-group i32 sums of the codes (the zero-point term), computed
+    /// lazily per group size.
+    pub fn ensure_asum(&mut self, group: usize) {
+        if self.asum_group == group {
+            return;
+        }
+        group_sums_i8(&self.q, group, &mut self.asum);
+        self.asum_group = group;
+    }
+}
+
+/// Batched (per-row) quantized activations for the block kernels: each
+/// token row gets its own scale, codes, and group sums.
+#[derive(Default)]
+pub struct ActI8Batch {
+    pub q: Vec<i8>,       // rows * cols, row-major
+    pub scales: Vec<f32>, // rows
+    pub asum: Vec<i32>,   // rows * (cols / group)
+    pub rows: usize,
+    pub cols: usize,
+    asum_group: usize,
+    valid: bool,
+}
+
+impl ActI8Batch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+        self.asum_group = 0;
+    }
+
+    pub fn ensure(&mut self, x: &Mat) {
+        if self.valid && self.rows == x.rows && self.cols == x.cols {
+            return;
+        }
+        self.rows = x.rows;
+        self.cols = x.cols;
+        self.q.clear();
+        self.scales.clear();
+        for ti in 0..x.rows {
+            let row = x.row(ti);
+            let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+            self.scales.push(scale);
+            self.q.extend(
+                row.iter().map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8),
+            );
+        }
+        self.asum_group = 0;
+        self.valid = true;
+    }
+
+    pub fn ensure_asum(&mut self, group: usize) {
+        if self.asum_group == group {
+            return;
+        }
+        debug_assert_eq!(self.cols % group, 0);
+        self.asum.clear();
+        for ti in 0..self.rows {
+            let row = &self.q[ti * self.cols..(ti + 1) * self.cols];
+            self.asum.extend(
+                row.chunks_exact(group).map(|g| g.iter().map(|&v| v as i32).sum::<i32>()),
+            );
+        }
+        self.asum_group = group;
+    }
+
+    pub fn row_q(&self, ti: usize) -> &[i8] {
+        &self.q[ti * self.cols..(ti + 1) * self.cols]
+    }
+
+    /// Group sums for row `ti` (`ensure_asum` must have run).
+    pub fn row_asum(&self, ti: usize) -> &[i32] {
+        let ng = self.cols / self.asum_group.max(1);
+        &self.asum[ti * ng..(ti + 1) * ng]
+    }
 }
 
 #[cfg(test)]
@@ -60,9 +209,69 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_reuse_buffers_and_match() {
+        let mut rng = XorShift::new(2);
+        let mut q = Vec::new();
+        let mut d = Vec::new();
+        for n in [32usize, 64, 48] {
+            let x = rng.normal_vec(n);
+            let s = quant_i8_into(&x, &mut q);
+            let (q2, s2) = quant_i8(&x);
+            assert_eq!(q, q2);
+            assert_eq!(s, s2);
+            dequant_i8_into(&q, s, &mut d);
+            assert_eq!(d, dequant_i8(&q, s));
+        }
+        // capacity persisted across calls, contents sized to last call
+        assert_eq!(q.len(), 48);
+    }
+
+    #[test]
+    fn act_cache_reuses_until_invalidated() {
+        let mut rng = XorShift::new(3);
+        let x = rng.normal_vec(64);
+        let mut act = ActI8::new();
+        act.ensure(&x);
+        let codes = act.q.clone();
+        act.ensure(&x); // no-op
+        assert_eq!(act.q, codes);
+        act.ensure_asum(16);
+        assert_eq!(act.asum.len(), 4);
+        for (gc, s) in act.asum.clone().iter().enumerate() {
+            let want: i32 = act.q[gc * 16..(gc + 1) * 16].iter().map(|&v| v as i32).sum();
+            assert_eq!(*s, want);
+        }
+        // same length, different content: caller must invalidate
+        let y = rng.normal_vec(64);
+        act.invalidate();
+        act.ensure(&y);
+        assert_ne!(act.q, codes);
+    }
+
+    #[test]
+    fn batch_rows_match_single() {
+        let mut rng = XorShift::new(4);
+        let x = Mat::randn(3, 32, &mut rng);
+        let mut batch = ActI8Batch::new();
+        batch.ensure(&x);
+        batch.ensure_asum(8);
+        for ti in 0..3 {
+            let mut single = ActI8::new();
+            single.ensure(x.row(ti));
+            single.ensure_asum(8);
+            assert_eq!(batch.row_q(ti), &single.q[..]);
+            assert_eq!(batch.scales[ti], single.scale);
+            assert_eq!(batch.row_asum(ti), &single.asum[..]);
+        }
+    }
+
+    #[test]
     fn zero_vector_safe() {
         let mut x = vec![0.0; 8];
         assert_eq!(fake_quant_i8(&mut x), 0.0);
         assert!(x.iter().all(|&v| v == 0.0));
+        let (q, s) = quant_i8(&x);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(s, 1.0);
     }
 }

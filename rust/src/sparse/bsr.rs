@@ -10,6 +10,7 @@
 //! row r; `groups[j]` is the group-column of the j-th stored group;
 //! `values` holds the group payloads back to back.
 
+use crate::gqs::simd;
 use crate::sparse::group_prune::GroupMask;
 use crate::util::Mat;
 
@@ -76,8 +77,10 @@ impl BsrMatrix {
 
     /// Row-range form of `matvec`, writing rows r0..r1 into
     /// `y[..r1-r0]` (region-relative, so executor tasks fill disjoint
-    /// private buffers). The elementwise per-row chain cannot be split
-    /// mid-row, so the executor balances whole rows by group load.
+    /// private buffers). Each stored group contributes one
+    /// canonical-order `simd::dot`, summed in stored-group order; the
+    /// per-row chain cannot be split mid-row, so the executor balances
+    /// whole rows by group load.
     pub fn matvec_rows(&self, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
         for r in r0..r1 {
             let (a, b) = (self.row_index[r] as usize, self.row_index[r + 1] as usize);
@@ -86,17 +89,16 @@ impl BsrMatrix {
                 let gc = self.groups[j] as usize;
                 let vals = &self.values[j * self.group..(j + 1) * self.group];
                 let xs = &x[gc * self.group..(gc + 1) * self.group];
-                for (v, xv) in vals.iter().zip(xs) {
-                    acc += v * xv;
-                }
+                acc += simd::dot(vals, xs);
             }
             y[r - r0] = acc;
         }
     }
 
     /// Batched Y (T, N) = X (T, K) @ BSRᵀ: walks the row/group metadata
-    /// once for the whole block. Elementwise accumulation keeps each
-    /// output row bitwise identical to `matvec`'s single chain.
+    /// once for the whole block. The same per-group canonical-order dot
+    /// in the same stored-group order keeps each output row bitwise
+    /// identical to `matvec`.
     pub fn matmul_into(&self, x: &Mat, y: &mut Mat) {
         assert_eq!(x.cols, self.cols);
         assert_eq!((y.rows, y.cols), (x.rows, self.rows));
@@ -116,10 +118,7 @@ impl BsrMatrix {
                 let vals = &self.values[j * self.group..(j + 1) * self.group];
                 for ti in 0..x.rows {
                     let xs = &x.row(ti)[gc * self.group..(gc + 1) * self.group];
-                    let yv = &mut yd[ti * width + (r - r0)];
-                    for (v, xv) in vals.iter().zip(xs) {
-                        *yv += v * xv;
-                    }
+                    yd[ti * width + (r - r0)] += simd::dot(vals, xs);
                 }
             }
         }

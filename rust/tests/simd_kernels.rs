@@ -1,0 +1,344 @@
+//! Property tests for the runtime-dispatched SIMD microkernels: the
+//! scalar path is the bit-exactness oracle (what `GQSA_SIMD=0` runs),
+//! and the SIMD path implements the same canonical lane-structured
+//! accumulation order — so every f32 kernel must match it BITWISE, for
+//! every LinearKind, group size (including odd tails), and executor
+//! chunk decomposition. The W4A8 integer path is a different numeric
+//! (i8 activations), so it gets a bounded-error property plus exact
+//! level-independence (i32 accumulation is associative).
+//!
+//! These tests mutate the process-global dispatch level through
+//! `simd::force`, which would race the other tests in this binary, so
+//! every test serializes through one poison-tolerant mutex. (The
+//! library's unit tests never call `force`, so only this binary needs
+//! the lock.)
+
+use std::sync::{Arc, Mutex};
+
+use gqsa::engine::executor::{Decomposition, ExecConfig, ExecScratch, Executor};
+use gqsa::gqs::gemv::{gqs_gemv, gqs_gemv_i8, supports_i8};
+use gqsa::gqs::gemv_dense::{dense_gemv, QuantDense};
+use gqsa::gqs::layer::GqsLayer;
+use gqsa::gqs::simd::{self, Simd};
+use gqsa::model::config::demo_config;
+use gqsa::model::sampler::argmax;
+use gqsa::model::transformer::{random_fp, ExecHandle, Transformer};
+use gqsa::model::{KvCache, Scratch};
+use gqsa::quant::act::ActI8;
+use gqsa::sparse::bsr::BsrMatrix;
+use gqsa::sparse::group_prune::group_prune;
+use gqsa::sparse::saliency::SaliencyMetric;
+use gqsa::util::{Mat, XorShift};
+
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the dispatch level pinned to `level`, serialized
+/// against every other forced region in this binary. Poison-tolerant:
+/// a panicking test must not wedge the remaining ones.
+fn with_level<R>(level: Simd, f: impl FnOnce() -> R) -> R {
+    let _g = SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    simd::force(level);
+    let r = f();
+    simd::reset();
+    r
+}
+
+fn forced(threads: usize, decomposition: Decomposition) -> Arc<Executor> {
+    Executor::new(ExecConfig {
+        threads,
+        decomposition,
+        chunks_per_lane: 1,
+        min_units: 0,
+        adaptive: false,
+    })
+}
+
+#[test]
+fn gqs_gemv_scalar_vs_simd_bitwise_across_bits_groups_and_tails() {
+    // group sizes straddling the 8-lane chunk: 5 and 7 are pure tail,
+    // 12 and 20 mix one/two chunks with a tail, 8/16/32 are chunk-even.
+    let mut case = 0u64;
+    for (bits, group) in
+        [(4u32, 16usize), (4, 8), (4, 32), (4, 12), (4, 20), (8, 16), (8, 7), (2, 16), (2, 8), (4, 5)]
+    {
+        for sparsity in [0.0f64, 0.4, 0.8] {
+            case += 1;
+            let cols = 12 * group;
+            let mut rng = XorShift::new(3_000 + case);
+            let w = Mat::randn(40, cols, &mut rng);
+            let mask = group_prune(&w, None, SaliencyMetric::Magnitude, group, sparsity);
+            let layer = GqsLayer::encode(&w, &mask, bits);
+            let x = rng.normal_vec(cols);
+
+            let run = |level: Simd| {
+                with_level(level, || {
+                    let mut y = vec![0.0f32; 40];
+                    let mut sc = Vec::new();
+                    gqs_gemv(&layer, &x, &mut y, &mut sc);
+                    y
+                })
+            };
+            let scalar = run(Simd::Scalar);
+            let vector = run(simd::best());
+            assert_eq!(
+                scalar, vector,
+                "SIMD diverged from scalar oracle: w{bits} g{group} s{sparsity}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_quant_and_bsr_kernels_scalar_vs_simd_bitwise() {
+    let mut rng = XorShift::new(909);
+    // odd col count: the dense dot runs 4 chunks + a 5-wide tail
+    let w = Mat::randn(33, 37, &mut rng);
+    let x = rng.normal_vec(37);
+    let dense = || {
+        let mut y = vec![0.0f32; 33];
+        dense_gemv(&w, &x, &mut y);
+        y
+    };
+    assert_eq!(
+        with_level(Simd::Scalar, &dense),
+        with_level(simd::best(), &dense),
+        "dense f32 gemv diverged"
+    );
+
+    for (bits, group) in [(4u32, 16usize), (4, 12), (8, 7), (2, 16), (2, 8)] {
+        let cols = 8 * group;
+        let wq = Mat::randn(29, cols, &mut rng);
+        let q = QuantDense::encode(&wq, bits, group);
+        let xq = rng.normal_vec(cols);
+        let run = |level: Simd| {
+            with_level(level, || {
+                let mut y = vec![0.0f32; 29];
+                let mut sc = Vec::new();
+                q.gemv(&xq, &mut y, &mut sc);
+                y
+            })
+        };
+        assert_eq!(run(Simd::Scalar), run(simd::best()), "quant-dense w{bits} g{group} diverged");
+    }
+
+    let wb = Mat::randn(31, 8 * 12, &mut rng);
+    let mask = group_prune(&wb, None, SaliencyMetric::Magnitude, 12, 0.5);
+    let bsr = BsrMatrix::encode(&wb, &mask);
+    let xb = rng.normal_vec(8 * 12);
+    let run = |level: Simd| {
+        with_level(level, || {
+            let mut y = vec![0.0f32; 31];
+            bsr.matvec_into(&xb, &mut y);
+            y
+        })
+    };
+    assert_eq!(run(Simd::Scalar), run(simd::best()), "bsr f32 matvec diverged");
+}
+
+#[test]
+fn executor_chunked_gemv_bitwise_scalar_vs_simd_threads_1_and_4() {
+    // the chunk kernels the executor dispatches must hold the same
+    // bitwise contract: (level, threads, decomposition) all free.
+    let mut rng = XorShift::new(414);
+    let group = 16usize;
+    let cols = 20 * group;
+    let w = Mat::randn(64, cols, &mut rng);
+    let mask = group_prune(&w, None, SaliencyMetric::Magnitude, group, 0.5);
+    let layer = GqsLayer::encode(&w, &mask, 4);
+    let x = rng.normal_vec(cols);
+
+    let mut outs = Vec::new();
+    for level in [Simd::Scalar, simd::best()] {
+        for threads in [1usize, 4] {
+            for decomp in [Decomposition::StreamK, Decomposition::SliceK] {
+                let y = with_level(level, || {
+                    let exec = forced(threads, decomp);
+                    let mut es = ExecScratch::default();
+                    let mut gsum = Vec::new();
+                    let mut y = vec![0.0f32; 64];
+                    exec.gemv_gqs(&layer, &x, &mut y, &mut gsum, &mut es);
+                    y
+                });
+                outs.push((level.name(), threads, decomp.name(), y));
+            }
+        }
+    }
+    let (ref_name, rt, rd, ref_y) = &outs[0];
+    for (name, threads, decomp, y) in &outs[1..] {
+        assert_eq!(
+            y, ref_y,
+            "{name}/t{threads}/{decomp} diverged from {ref_name}/t{rt}/{rd}"
+        );
+    }
+}
+
+#[test]
+fn i8_path_bounded_error_and_exact_across_levels() {
+    let mut case = 0u64;
+    for (bits, group) in [(4u32, 16usize), (8, 16), (4, 8), (2, 16)] {
+        assert!(supports_i8(bits, group), "w{bits} g{group} should support i8");
+        case += 1;
+        let cols = 10 * group;
+        let mut rng = XorShift::new(5_000 + case);
+        let w = Mat::randn(36, cols, &mut rng);
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, group, 0.5);
+        let layer = GqsLayer::encode(&w, &mask, bits);
+        let x = rng.normal_vec(cols);
+        let mut act = ActI8::new();
+        act.ensure(&x);
+        act.ensure_asum(group);
+
+        let run = |level: Simd| {
+            with_level(level, || {
+                let mut y = vec![0.0f32; 36];
+                gqs_gemv_i8(&layer, &act, &mut y);
+                y
+            })
+        };
+        // i32 accumulation is associative: SIMD and scalar integer
+        // kernels must agree EXACTLY, not just closely
+        let scalar = run(Simd::Scalar);
+        let vector = run(simd::best());
+        assert_eq!(scalar, vector, "i8 kernel level-dependent: w{bits} g{group}");
+
+        // bounded error vs the f32 kernel: each activation carries at
+        // most scale/2 rounding error, so |Δy_r| <= s_a/2 * Σ|ŵ_r|
+        let mut y_f32 = vec![0.0f32; 36];
+        let mut sc = Vec::new();
+        with_level(Simd::Scalar, || gqs_gemv(&layer, &x, &mut y_f32, &mut sc));
+        let deq = layer.decode();
+        for r in 0..36 {
+            let wmass: f32 = deq.row(r).iter().map(|v| v.abs()).sum();
+            let bound = act.scale * 0.5 * wmass + 1e-3;
+            assert!(
+                (scalar[r] - y_f32[r]).abs() <= bound,
+                "w{bits} g{group} row {r}: |{} - {}| > {bound}",
+                scalar[r],
+                y_f32[r]
+            );
+        }
+    }
+}
+
+fn tiny_models() -> (gqsa::model::ModelConfig, Vec<(&'static str, Transformer)>) {
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 64;
+    let fp = random_fp(&cfg, 23);
+    let mut bsr_model = Transformer::from_fp(&fp).unwrap();
+    let names: Vec<String> = bsr_model.linears.keys().cloned().collect();
+    for name in names {
+        let w = match bsr_model.linears.get(&name) {
+            Some(gqsa::model::LinearKind::Dense(w)) => w.clone(),
+            _ => continue,
+        };
+        let mask = group_prune(&w, None, SaliencyMetric::Magnitude, 16, 0.4);
+        let b = BsrMatrix::encode(&w, &mask);
+        bsr_model.linears.insert(name, gqsa::model::LinearKind::BsrF32(b));
+    }
+    let models = vec![
+        ("dense", Transformer::from_fp(&fp).unwrap()),
+        ("gqs", Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap()),
+        ("quant-dense", Transformer::from_fp_quantized(&fp, 4, 16).unwrap()),
+        ("semi24", Transformer::from_fp_24(&fp, None, 4, 16).unwrap()),
+        ("bsr-f32", bsr_model),
+    ];
+    (cfg, models)
+}
+
+#[test]
+fn all_five_kinds_logits_bitwise_identical_scalar_vs_simd() {
+    let (cfg, models) = tiny_models();
+    let tokens = [3u32, 1, 4, 1, 5, 9];
+    for (name, model) in &models {
+        let run = |level: Simd| {
+            with_level(level, || {
+                let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 32);
+                let mut s = Scratch::new(&cfg);
+                let mut logits = Vec::new();
+                for &tok in &tokens {
+                    model.decode_step(tok, &mut kv, &mut s).unwrap();
+                    logits.push(s.logits.clone());
+                }
+                logits
+            })
+        };
+        assert_eq!(
+            run(Simd::Scalar),
+            run(simd::best()),
+            "{name}: SIMD forward diverged from the scalar oracle"
+        );
+    }
+}
+
+#[test]
+fn greedy_decode_token_identical_across_levels_and_threads() {
+    // the tentpole acceptance: greedy decode is token-identical with
+    // GQSA_SIMD on/off (force(Scalar) is exactly the GQSA_SIMD=0
+    // path), at 1 and 4 executor threads
+    let (cfg, models) = tiny_models();
+    for (name, model) in &models {
+        let mut seqs: Vec<(String, Vec<u32>)> = Vec::new();
+        for level in [Simd::Scalar, simd::best()] {
+            for threads in [1usize, 4] {
+                let toks = with_level(level, || {
+                    let exec = forced(threads, Decomposition::StreamK);
+                    let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 64);
+                    let mut s = Scratch::with_executor(&cfg, ExecHandle::with(exec));
+                    for &tok in &[5u32, 6, 7] {
+                        model.decode_step(tok, &mut kv, &mut s).unwrap();
+                    }
+                    let mut toks = Vec::new();
+                    let mut last = argmax(&s.logits) as u32;
+                    toks.push(last);
+                    for _ in 0..12 {
+                        model.decode_step(last, &mut kv, &mut s).unwrap();
+                        last = argmax(&s.logits) as u32;
+                        toks.push(last);
+                    }
+                    toks
+                });
+                seqs.push((format!("{}/t{threads}", level.name()), toks));
+            }
+        }
+        let (ref_tag, ref_toks) = &seqs[0];
+        for (tag, toks) in &seqs[1..] {
+            assert_eq!(toks, ref_toks, "{name}: {tag} diverged from {ref_tag}");
+        }
+    }
+}
+
+#[test]
+fn act_i8_forward_deterministic_across_levels() {
+    // W4A8 model forward: not bitwise vs f32 (by design), but the
+    // integer path itself must be level-independent — same logits under
+    // the scalar and SIMD integer kernels.
+    let (cfg, mut models) = tiny_models();
+    for (_, model) in &mut models {
+        model.act_i8 = true;
+    }
+    let tokens = [2u32, 7, 1, 8, 2, 8];
+    for (name, m) in &models {
+        let run = |level: Simd| {
+            with_level(level, || {
+                let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 32);
+                let mut s = Scratch::new(&cfg);
+                let mut logits = Vec::new();
+                for &tok in &tokens {
+                    m.decode_step(tok, &mut kv, &mut s).unwrap();
+                    logits.push(s.logits.clone());
+                }
+                logits
+            })
+        };
+        assert_eq!(
+            run(Simd::Scalar),
+            run(simd::best()),
+            "{name}: i8 forward level-dependent"
+        );
+    }
+}
