@@ -934,7 +934,7 @@ fn kernels(wb: &mut Workbench) -> Result<()> {
     ));
 
     let json = format!(
-        "{{\n  \"bench\": \"kernels\",\n  \"generated\": true,\n  \"shape\": [{ROWS}, {COLS}],\n  \"group\": {G},\n  \"arch\": \"{}\",\n  \"simd\": \"{}\",\n  \"gqs_simd_speedup\": {gqs_sp:.3},\n  \"dense_simd_speedup\": {dense_sp:.3},\n  \"results\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"kernels\",\n  \"placeholder\": false,\n  \"shape\": [{ROWS}, {COLS}],\n  \"group\": {G},\n  \"arch\": \"{}\",\n  \"simd\": \"{}\",\n  \"gqs_simd_speedup\": {gqs_sp:.3},\n  \"dense_simd_speedup\": {dense_sp:.3},\n  \"results\": [\n{}\n  ]\n}}\n",
         std::env::consts::ARCH,
         best.name(),
         json_rows.join(",\n")
@@ -1257,9 +1257,98 @@ fn specdec(wb: &mut Workbench) -> Result<()> {
          distribution, not the rng stream)"
     ));
 
+    // fleet sweep — batched verify on/off at concurrency {1, 8, 32}.
+    // The tentpole property: with GQSA_SPEC_BATCH the whole fleet's
+    // verify blocks fuse into ONE target weight walk per tick, so
+    // speculation gets relatively cheaper as concurrency grows.
+    let run_fleet = |concurrency: usize, batched: bool| -> Result<(Vec<Vec<u32>>, f64, u64, f64)> {
+        let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5)?;
+        let mut engine = EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: concurrency,
+                prefill_chunk: 16,
+                kv_capacity: PROMPT + NEW + 2,
+                spec_k: 4,
+                spec_batch: batched,
+                ..Default::default()
+            },
+        )?;
+        for i in 0..concurrency as u64 {
+            let prompt: Vec<u32> =
+                (0..PROMPT).map(|j| ((i as usize * 13 + j * 5) % 120) as u32).collect();
+            engine.submit(Request::new(i, prompt, NEW));
+        }
+        let t0 = std::time::Instant::now();
+        let mut out = engine.run_to_completion()?;
+        let secs = t0.elapsed().as_secs_f64();
+        out.sort_by_key(|r| r.id);
+        let tokens: usize = out.iter().map(|r| r.tokens.len()).sum();
+        Ok((
+            out.into_iter().map(|r| r.tokens).collect(),
+            tokens as f64 / secs,
+            engine.metrics.spec_verify_walks,
+            engine.metrics.spec_batch_occupancy(),
+        ))
+    };
+    let mut tf = Table::new(
+        "specdec fleet: batched verify (one fused target walk per tick) vs per-sequence",
+        &["concurrency", "batched", "tok/s", "speedup", "verify walks", "occupancy", "tokens=="],
+    );
+    let mut fleet_rows: Vec<String> = Vec::new();
+    let mut speedup_at_32 = 0.0f64;
+    for concurrency in [1usize, 8, 32] {
+        let (per_tokens, per_tps, per_walks, _) = run_fleet(concurrency, false)?;
+        let (bat_tokens, bat_tps, bat_walks, occ) = run_fleet(concurrency, true)?;
+        let matches = bat_tokens == per_tokens;
+        anyhow::ensure!(
+            matches,
+            "batched fleet greedy tokens diverged at concurrency {concurrency}"
+        );
+        let sp = bat_tps / per_tps;
+        if concurrency == 32 {
+            speedup_at_32 = sp;
+        }
+        tf.row(vec![
+            concurrency.to_string(),
+            "no".into(),
+            fmt1(per_tps),
+            "1.00".into(),
+            per_walks.to_string(),
+            "-".into(),
+            "yes".into(),
+        ]);
+        tf.row(vec![
+            concurrency.to_string(),
+            "yes".into(),
+            fmt1(bat_tps),
+            fmt2(sp),
+            bat_walks.to_string(),
+            fmt2(occ),
+            "yes".into(),
+        ]);
+        fleet_rows.push(format!(
+            "    {{\"concurrency\": {concurrency}, \"batched\": false, \"tok_s\": {per_tps:.1}, \
+             \"speedup_vs_per_seq\": 1.0, \"verify_walks\": {per_walks}, \
+             \"batch_occupancy\": null, \"tokens_match_per_seq\": true}}"
+        ));
+        fleet_rows.push(format!(
+            "    {{\"concurrency\": {concurrency}, \"batched\": true, \"tok_s\": {bat_tps:.1}, \
+             \"speedup_vs_per_seq\": {sp:.3}, \"verify_walks\": {bat_walks}, \
+             \"batch_occupancy\": {occ:.2}, \"tokens_match_per_seq\": {matches}}}"
+        ));
+    }
+    tf.note(format!(
+        "batched speedup at concurrency 32: {speedup_at_32:.2}x (acceptance floor 1.5x); \
+         every cell verified zero greedy divergence vs the per-sequence schedule"
+    ));
+    tf.emit(wb.results_dir(), "specdec-fleet")?;
+
     let json = format!(
-        "{{\n  \"bench\": \"spec_decode\",\n  \"target\": \"w4s50g16\",\n  \"requests\": {N_REQ},\n  \"new_tokens_per_request\": {NEW},\n  \"best_greedy_speedup_vs_plain\": {best_speedup:.3},\n  \"results\": [\n{}\n  ]\n}}\n",
-        json_rows.join(",\n")
+        "{{\n  \"bench\": \"spec_decode\",\n  \"placeholder\": false,\n  \"target\": \"w4s50g16\",\n  \"requests\": {N_REQ},\n  \"new_tokens_per_request\": {NEW},\n  \"best_greedy_speedup_vs_plain\": {best_speedup:.3},\n  \"fleet_batched_speedup_at_32\": {speedup_at_32:.3},\n  \"results\": [\n{}\n  ],\n  \"fleet\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n"),
+        fleet_rows.join(",\n")
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")

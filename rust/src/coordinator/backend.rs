@@ -314,6 +314,54 @@ impl Backend {
         }
     }
 
+    /// Fused speculative verify: `groups[i]` consecutive rows of
+    /// `tokens` form sequence i's k+1-position verify block, processed
+    /// causally against its own KV in ONE target weight walk (Native).
+    /// Global row r's logits land in `scratch.logits.row(r)` —
+    /// bit-identical per row to `step_block` per sequence. Pjrt loops
+    /// its per-row artifact (no fusion to amortize there).
+    pub fn verify_batch(
+        &self,
+        tokens: &[u32],
+        groups: &[usize],
+        seqs: &mut [&mut SeqState],
+        scratch: &mut BlockScratch,
+    ) -> Result<()> {
+        if groups.len() != seqs.len() {
+            anyhow::bail!("verify_batch: {} groups vs {} sequences", groups.len(), seqs.len());
+        }
+        match self {
+            Backend::Native(t) => {
+                let mut kvs: Vec<&mut KvCache> = Vec::with_capacity(seqs.len());
+                for st in seqs.iter_mut() {
+                    match &mut **st {
+                        SeqState::Native { kv } => kvs.push(kv),
+                        #[cfg(feature = "pjrt")]
+                        _ => anyhow::bail!("sequence state does not match backend"),
+                    }
+                }
+                t.verify_batch(tokens, groups, &mut kvs, scratch)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                scratch.prepare(tokens.len());
+                let mut r = 0usize;
+                for (si, st) in seqs.iter_mut().enumerate() {
+                    match &mut **st {
+                        SeqState::Pjrt { kv, pos } => {
+                            for _ in 0..groups[si] {
+                                p.step_row(tokens[r], kv, pos, scratch.logits.row_mut(r))?;
+                                r += 1;
+                            }
+                        }
+                        _ => anyhow::bail!("sequence state does not match backend"),
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Current sequence length.
     pub fn seq_len(&self, seq: &SeqState) -> usize {
         match seq {

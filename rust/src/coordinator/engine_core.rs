@@ -31,6 +31,7 @@ use anyhow::Result;
 use crate::coordinator::backend::{Backend, KvMode, SeqState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{FinishReason, Request, RequestTiming, Response};
+use crate::engine::cost_model::SpecVerifyModel;
 use crate::engine::executor::{Decomposition, ExecConfig, Executor};
 use crate::model::kv_cache::{
     blocks_for, blocks_spanning, CacheFull, KvBlockPool, KvDtype, KV_BLOCK,
@@ -38,7 +39,7 @@ use crate::model::kv_cache::{
 use crate::model::sampler::sample;
 use crate::model::{BlockScratch, KvCache};
 use crate::prefix::PrefixCache;
-use crate::spec::{build_draft, DraftConfig, SpecController, SpecRound};
+use crate::spec::{build_draft, DraftConfig, FleetSeq, SpecController, SpecRound};
 use crate::util::XorShift;
 
 #[derive(Clone, Copy, Debug)]
@@ -78,6 +79,21 @@ pub struct EngineConfig {
     /// default honors `GQSA_SPEC_ADAPTIVE`. Greedy tokens are identical
     /// at any k, so adapting never changes content — only latency.
     pub spec_adaptive: bool,
+    /// fuse every speculating sequence's k+1-position verify block into
+    /// ONE `verify_batch` target weight walk per tick (when the
+    /// [`SpecVerifyModel`] gate says fusion pays). The default honors
+    /// `GQSA_SPEC_BATCH`. Every per-row kernel is bit-identical to the
+    /// per-sequence path, so greedy tokens never change — the target
+    /// walk count per tick just drops from N to 1.
+    pub spec_batch: bool,
+    /// hop each sequence along the draft-tier ladder (W2S75 → W2S50 →
+    /// W4S75) from its measured acceptance rate: up a rung when under
+    /// half the drafts survive, down after sustained clean sweeps. The
+    /// default honors `GQSA_SPEC_TIER_ADAPTIVE`. Requires `spec_draft`
+    /// to sit on the canonical ladder (anything else speculates on its
+    /// single fixed tier). Greedy tokens are identical on any tier, so
+    /// hopping never changes content — only draft cost and acceptance.
+    pub spec_tier_adaptive: bool,
     /// quantize activations to int8 once per token and drive the W4A8
     /// integer MAC kernels on supporting linears (GQS / QuantDense);
     /// other kinds fake-quantize so everything sees the same A8 grid.
@@ -125,6 +141,8 @@ impl Default for EngineConfig {
                 .unwrap_or(0),
             spec_draft: DraftConfig::from_env(),
             spec_adaptive: env_flag("GQSA_SPEC_ADAPTIVE"),
+            spec_batch: env_flag("GQSA_SPEC_BATCH"),
+            spec_tier_adaptive: env_flag("GQSA_SPEC_TIER_ADAPTIVE"),
             act_i8: env_flag("GQSA_ACT_I8"),
             prefix_cache: env_flag("GQSA_PREFIX_CACHE"),
         }
@@ -151,6 +169,58 @@ struct ActiveSeq {
     /// the AIMD-adapted draft length actually used per round, bounded
     /// `[1, spec_k]` (== spec_k when `spec_adaptive` is off)
     k_now: usize,
+    /// ladder index of this sequence's current draft tier (pinned to
+    /// the controller default unless `spec_tier_adaptive`)
+    tier_now: usize,
+    /// consecutive clean-sweep rounds on the current tier; reaching
+    /// `TIER_DOWN_STREAK` hops one rung cheaper
+    tier_streak: u32,
+}
+
+/// Clean sweeps in a row before a sequence hops one draft-tier rung
+/// DOWN (cheaper). Hopping UP (more accurate) is immediate on an
+/// acceptance collapse, mirroring the AIMD asymmetry of `k_now`.
+const TIER_DOWN_STREAK: u32 = 3;
+
+/// Drive one sequence's draft tier from this round's acceptance. Tiers
+/// have different draft K/V projections, so any hop invalidates the
+/// sequence's draft KV — it is reset here and the next round's
+/// catch-up refills it (cheap: one draft block walk over fed history).
+fn hop_tier(
+    seq: &mut ActiveSeq,
+    n_tiers: usize,
+    tier_adaptive: bool,
+    drafted: usize,
+    accepted: usize,
+    metrics: &mut Metrics,
+) {
+    if !tier_adaptive || n_tiers < 2 || drafted == 0 {
+        return;
+    }
+    if accepted * 2 < drafted {
+        // acceptance collapse: climb to a more accurate tier now
+        if seq.tier_now + 1 < n_tiers {
+            seq.tier_now += 1;
+            seq.tier_streak = 0;
+            if let Some(d) = seq.draft_kv.as_mut() {
+                d.reset();
+            }
+            metrics.spec_tier_hops += 1;
+        }
+    } else if accepted == drafted {
+        seq.tier_streak += 1;
+        if seq.tier_streak >= TIER_DOWN_STREAK && seq.tier_now > 0 {
+            // sustained clean sweeps: a cheaper tier may accept as well
+            seq.tier_now -= 1;
+            seq.tier_streak = 0;
+            if let Some(d) = seq.draft_kv.as_mut() {
+                d.reset();
+            }
+            metrics.spec_tier_hops += 1;
+        }
+    } else {
+        seq.tier_streak = 0;
+    }
 }
 
 /// Single-threaded engine with continuous batching. Drive it with
@@ -165,9 +235,16 @@ pub struct EngineCore {
     /// KV storage mode; `Paged` owns the shared block pool that
     /// admission and eviction budget against.
     kv_mode: KvMode,
-    /// self-speculative decoding: the draft tier + round driver
+    /// self-speculative decoding: the draft tier(s) + round driver
     /// (built when `cfg.spec_k > 0` on a Native backend).
     spec: Option<SpecController>,
+    /// fleet-verify gate: when does fusing the speculating sequences'
+    /// verify blocks into one walk beat one walk per sequence? Kept at
+    /// its seeds in-engine (observing wall-clock here would make the
+    /// walk schedule timing-dependent and CI nondeterministic); the
+    /// learning path is exercised by cost-model unit tests and the
+    /// spec-decode bench.
+    pub spec_cost: SpecVerifyModel,
     /// shared-prefix KV cache: radix trees (target + draft tier) over
     /// the block pool (built when `cfg.prefix_cache` and paged).
     prefix: Option<PrefixCache>,
@@ -238,24 +315,55 @@ impl EngineCore {
             exec_cfg.adaptive = false;
         }
         let exec = Executor::new(exec_cfg);
-        // one block scratch serves three roles: prefill chunks (rows =
-        // chunk), batched decode (rows = batch), and speculative verify
-        // blocks (rows = spec_k + 1)
-        let t_max = cfg.prefill_chunk.max(cfg.max_batch).max(cfg.spec_k + 1).max(1);
+        // one block scratch serves four roles: prefill chunks (rows =
+        // chunk), batched decode (rows = batch), speculative verify
+        // blocks (rows = spec_k + 1), and fused fleet verify (rows =
+        // every speculating sequence's k+1 block at once)
+        let fleet_rows = if cfg.spec_batch { cfg.max_batch * (cfg.spec_k + 1) } else { 0 };
+        let t_max = cfg
+            .prefill_chunk
+            .max(cfg.max_batch)
+            .max(cfg.spec_k + 1)
+            .max(fleet_rows)
+            .max(1);
         let block = backend.new_block_scratch(model_cfg, t_max, Arc::clone(&exec));
         // self-speculative decoding: re-encode the loaded linears into
         // the draft operating point (embeddings/norms Arc-shared, so
-        // the tier costs only its own compressed matrices)
+        // each tier costs only its own compressed matrices). Tier
+        // hopping builds the whole canonical ladder when the configured
+        // draft sits on it; otherwise the single configured tier.
         let spec = if cfg.spec_k > 0 {
             match backend.native() {
                 Some(t) => {
-                    let draft = build_draft(t, &cfg.spec_draft)?;
-                    Some(SpecController::new(
-                        draft,
-                        cfg.spec_k,
-                        cfg.spec_draft,
-                        Some(Arc::clone(&exec)),
-                    ))
+                    let ladder_pos = if cfg.spec_tier_adaptive {
+                        cfg.spec_draft.ladder_index()
+                    } else {
+                        None
+                    };
+                    let ctrl = match ladder_pos {
+                        Some(pos) => {
+                            let mut rungs = DraftConfig::ladder().into_iter();
+                            let first = rungs.next().expect("ladder is non-empty");
+                            let mut ctrl = SpecController::new(
+                                build_draft(t, &first)?,
+                                cfg.spec_k,
+                                first,
+                                Some(Arc::clone(&exec)),
+                            );
+                            for rung in rungs {
+                                ctrl.add_tier(build_draft(t, &rung)?, rung);
+                            }
+                            ctrl.set_default_tier(pos);
+                            ctrl
+                        }
+                        None => SpecController::new(
+                            build_draft(t, &cfg.spec_draft)?,
+                            cfg.spec_k,
+                            cfg.spec_draft,
+                            Some(Arc::clone(&exec)),
+                        ),
+                    };
+                    Some(ctrl)
                 }
                 None => None, // PJRT decodes plainly
             }
@@ -276,6 +384,7 @@ impl EngineCore {
             exec,
             kv_mode,
             spec,
+            spec_cost: SpecVerifyModel::default(),
             prefix,
             n_layers: model_cfg.n_layers,
             n_heads: model_cfg.n_heads,
@@ -444,6 +553,7 @@ impl EngineCore {
             };
             let mut timing = RequestTiming::default();
             timing.queued_us = submitted.elapsed().as_micros() as u64;
+            let tier_now = self.spec.as_ref().map_or(0, |c| c.default_tier);
             self.active.push(ActiveSeq {
                 req,
                 state,
@@ -455,6 +565,8 @@ impl EngineCore {
                 draft_kv,
                 spec_k,
                 k_now: spec_k,
+                tier_now,
+                tier_streak: 0,
             });
         }
 
@@ -467,6 +579,7 @@ impl EngineCore {
         // prefill this implies is cheap when the draft prefix tree
         // still holds the prompt's blocks.
         if self.spec.is_some() {
+            let default_tier = self.spec.as_ref().map_or(0, |c| c.default_tier);
             if let KvMode::Paged(pool) = &self.kv_mode {
                 for seq in &mut self.active {
                     if seq.spec_k == 0
@@ -489,7 +602,10 @@ impl EngineCore {
                         continue;
                     }
                     let mut draft = KvCache::paged(self.n_layers, pool, self.cfg.kv_capacity);
-                    if seq.req.prefix_cache.unwrap_or(true) {
+                    // the draft prefix tree holds DEFAULT-tier K/V: a
+                    // hopped sequence's draft would be numerically wrong
+                    // if it adopted them, so it refills from scratch
+                    if seq.req.prefix_cache.unwrap_or(true) && seq.tier_now == default_tier {
                         if let Some(cache) = self.prefix.as_mut() {
                             let fit =
                                 seq.req.prompt.len().min(self.cfg.kv_capacity.saturating_sub(1));
@@ -572,99 +688,255 @@ impl EngineCore {
 
         // 3a. speculative decode: sequences with a draft tier run one
         // draft+verify round — k cheap draft steps, then ONE target
-        // forward_block over all k+1 positions, keeping the longest
+        // weight walk over all k+1 positions, keeping the longest
         // valid prefix and rolling rejected positions out of both KV
         // caches. Greedy rounds emit exactly the plain greedy stream.
-        // A round that cannot get KV resources falls back to the plain
-        // batched path below for this tick.
+        // With `spec_batch` on (and the cost gate agreeing), the WHOLE
+        // fleet's verify blocks fuse into one `verify_batch` walk; the
+        // per-sequence schedule pays one walk each. A round that cannot
+        // get KV resources falls back to the plain batched path below.
         if self.spec.is_some() {
-            let Self { spec, backend, active, block, rng, metrics, prefix, cfg, .. } =
+            let Self { spec, backend, active, block, rng, metrics, prefix, cfg, spec_cost, .. } =
                 &mut *self;
             let ctrl = spec.as_mut().unwrap();
             let target = backend.native().expect("spec controller implies native backend");
+            let n_tiers = ctrl.n_tiers();
             let mut plain: Vec<usize> = Vec::with_capacity(decode_idx.len());
+            // pass 1: who can speculate this tick? (also sizes the
+            // fused verify block for the cost gate)
+            let mut cand: Vec<usize> = Vec::with_capacity(decode_idx.len());
+            let mut rows_est = 0usize;
             for &i in &decode_idx {
-                let seq = &mut active[i];
+                let seq = &active[i];
                 if seq.spec_k == 0 || seq.draft_kv.is_none() {
                     plain.push(i);
                     continue;
                 }
-                let kv = match &mut seq.state {
-                    SeqState::Native { kv } => kv,
+                match &seq.state {
+                    SeqState::Native { .. } => {}
                     #[cfg(feature = "pjrt")]
                     _ => {
                         plain.push(i);
                         continue;
                     }
-                };
-                let remaining = seq.req.max_new_tokens.saturating_sub(seq.generated.len());
-                if remaining == 0 {
+                }
+                if seq.generated.len() >= seq.req.max_new_tokens {
                     continue; // retirement below handles it
                 }
-                let draft_kv = seq.draft_kv.as_mut().unwrap();
                 let k_round = if cfg.spec_adaptive { seq.k_now } else { seq.spec_k };
-                // reclaim cached blocks first, so a round doesn't fall
-                // back (shedding its draft) while the prefix cache is
-                // holding memory nobody references
+                rows_est += k_round + 1;
+                cand.push(i);
+            }
+            if cfg.spec_batch && spec_cost.fleet_wins(cand.len(), rows_est) {
+                // fleet round: reclaim cached blocks ONCE for the whole
+                // fleet's need (catch-up + draft + verify appends), so a
+                // sequence doesn't shed its draft while the prefix cache
+                // is holding memory nobody references
                 if let Some(cache) = prefix.as_mut() {
-                    if let Some(pool) = kv.pool().cloned() {
-                        let gap = kv.len().saturating_sub(draft_kv.len());
-                        let need = kv.blocks_needed(k_round + 1)
-                            + draft_kv.blocks_needed(gap + k_round);
+                    let mut need = 0usize;
+                    let mut pool = None;
+                    for &i in &cand {
+                        let seq = &active[i];
+                        let kv = match &seq.state {
+                            SeqState::Native { kv } => kv,
+                            #[cfg(feature = "pjrt")]
+                            _ => unreachable!("fleet candidates are native"),
+                        };
+                        let draft = seq.draft_kv.as_ref().unwrap();
+                        let k_round = if cfg.spec_adaptive { seq.k_now } else { seq.spec_k };
+                        let gap = kv.len().saturating_sub(draft.len());
+                        need +=
+                            kv.blocks_needed(k_round + 1) + draft.blocks_needed(gap + k_round);
+                        if pool.is_none() {
+                            pool = kv.pool().cloned();
+                        }
+                    }
+                    if let Some(pool) = pool {
                         cache.ensure_free(&pool, need);
                     }
                 }
-                let mode = seq.req.sampling.to_sampling();
-                match ctrl.round(
-                    target,
-                    kv,
-                    draft_kv,
-                    &seq.req.prompt,
-                    &seq.generated,
-                    k_round,
-                    remaining,
-                    mode,
-                    rng,
-                    block,
-                )? {
-                    SpecRound::Emitted { tokens, drafted, accepted } => {
-                        metrics.note_spec_round(drafted, accepted, k_round);
-                        // AIMD: grow k by one on a clean sweep, halve it
-                        // when under half the drafts survived
-                        if cfg.spec_adaptive && drafted > 0 {
-                            if accepted == drafted {
-                                seq.k_now = (seq.k_now + 1).min(seq.spec_k);
-                            } else if accepted * 2 < drafted {
-                                seq.k_now = (seq.k_now / 2).max(1);
+                // gather disjoint &mut slices of engine state, one per
+                // candidate (ascending walk keeps fleet order == cand
+                // order, which the scatter below relies on)
+                let outcome = {
+                    let mut want: Vec<bool> = vec![false; active.len()];
+                    for &i in &cand {
+                        want[i] = true;
+                    }
+                    let mut fleet: Vec<FleetSeq> = Vec::with_capacity(cand.len());
+                    for (i, seq) in active.iter_mut().enumerate() {
+                        if !want[i] {
+                            continue;
+                        }
+                        let k_round = if cfg.spec_adaptive { seq.k_now } else { seq.spec_k };
+                        let remaining =
+                            seq.req.max_new_tokens.saturating_sub(seq.generated.len());
+                        let mode = seq.req.sampling.to_sampling();
+                        let tier = seq.tier_now;
+                        let ActiveSeq { req, state, generated, draft_kv, .. } = seq;
+                        let kv = match state {
+                            SeqState::Native { kv } => kv,
+                            #[cfg(feature = "pjrt")]
+                            _ => unreachable!("fleet candidates are native"),
+                        };
+                        fleet.push(FleetSeq {
+                            target_kv: kv,
+                            draft_kv: draft_kv
+                                .as_mut()
+                                .expect("fleet candidates hold a draft tier"),
+                            prompt: &req.prompt,
+                            generated: generated.as_slice(),
+                            k: k_round,
+                            max_emit: remaining,
+                            tier,
+                            mode,
+                        });
+                    }
+                    ctrl.round_fleet(target, &mut fleet, rng, block)?
+                };
+                metrics.spec_verify_walks += outcome.verify_walks as u64;
+                if outcome.verify_walks > 0 {
+                    metrics.spec_batch_rounds += 1;
+                    metrics.spec_batch_seqs += outcome.verified_seqs as u64;
+                }
+                for (ci, round) in outcome.rounds.into_iter().enumerate() {
+                    let i = cand[ci];
+                    let seq = &mut active[i];
+                    let k_round = if cfg.spec_adaptive { seq.k_now } else { seq.spec_k };
+                    match round {
+                        SpecRound::Emitted { tokens, drafted, accepted } => {
+                            metrics.note_spec_round(drafted, accepted, k_round);
+                            // AIMD: grow k by one on a clean sweep, halve
+                            // it when under half the drafts survived
+                            if cfg.spec_adaptive && drafted > 0 {
+                                if accepted == drafted {
+                                    seq.k_now = (seq.k_now + 1).min(seq.spec_k);
+                                } else if accepted * 2 < drafted {
+                                    seq.k_now = (seq.k_now / 2).max(1);
+                                }
+                            }
+                            hop_tier(
+                                seq,
+                                n_tiers,
+                                cfg.spec_tier_adaptive,
+                                drafted,
+                                accepted,
+                                metrics,
+                            );
+                            for tok in tokens {
+                                if seq.generated.len() >= seq.req.max_new_tokens {
+                                    break;
+                                }
+                                seq.generated.push(tok);
+                                processed += 1;
+                                if seq.req.stop_token == Some(tok) {
+                                    break;
+                                }
                             }
                         }
-                        for tok in tokens {
-                            if seq.generated.len() >= seq.req.max_new_tokens {
-                                break;
-                            }
-                            seq.generated.push(tok);
-                            processed += 1;
-                            if seq.req.stop_token == Some(tok) {
-                                break;
-                            }
+                        SpecRound::Skip => {
+                            // one token left to emit — decode it plainly,
+                            // keep the draft (this is not pool pressure)
+                            plain.push(i);
+                        }
+                        SpecRound::Fallback => {
+                            // shed the draft tier: its blocks return to
+                            // the pool immediately, so speculation never
+                            // starves its own (or batch-mates') plain path
+                            metrics.spec_fallbacks += 1;
+                            seq.draft_kv = None;
+                            plain.push(i);
                         }
                     }
-                    SpecRound::Skip => {
-                        // one token left to emit — decode it plainly,
-                        // keep the draft (this is not pool pressure)
-                        plain.push(i);
+                }
+            } else {
+                // per-sequence schedule: one target walk per candidate
+                for &i in &cand {
+                    let seq = &mut active[i];
+                    let kv = match &mut seq.state {
+                        SeqState::Native { kv } => kv,
+                        #[cfg(feature = "pjrt")]
+                        _ => unreachable!("candidates are native"),
+                    };
+                    let remaining =
+                        seq.req.max_new_tokens.saturating_sub(seq.generated.len());
+                    let draft_kv = seq.draft_kv.as_mut().unwrap();
+                    let k_round = if cfg.spec_adaptive { seq.k_now } else { seq.spec_k };
+                    // reclaim cached blocks first, so a round doesn't
+                    // fall back (shedding its draft) while the prefix
+                    // cache is holding memory nobody references
+                    if let Some(cache) = prefix.as_mut() {
+                        if let Some(pool) = kv.pool().cloned() {
+                            let gap = kv.len().saturating_sub(draft_kv.len());
+                            let need = kv.blocks_needed(k_round + 1)
+                                + draft_kv.blocks_needed(gap + k_round);
+                            cache.ensure_free(&pool, need);
+                        }
                     }
-                    SpecRound::Fallback => {
-                        // shed the draft tier for this sequence: its
-                        // blocks return to the pool immediately, so a
-                        // speculative sequence can never starve its own
-                        // (or batch-mates') plain decode path
-                        metrics.spec_fallbacks += 1;
-                        seq.draft_kv = None;
-                        plain.push(i);
+                    let mode = seq.req.sampling.to_sampling();
+                    match ctrl.round_tier(
+                        seq.tier_now,
+                        target,
+                        kv,
+                        draft_kv,
+                        &seq.req.prompt,
+                        &seq.generated,
+                        k_round,
+                        remaining,
+                        mode,
+                        rng,
+                        block,
+                    )? {
+                        SpecRound::Emitted { tokens, drafted, accepted } => {
+                            metrics.note_spec_round(drafted, accepted, k_round);
+                            metrics.spec_verify_walks += 1;
+                            // AIMD: grow k by one on a clean sweep, halve
+                            // it when under half the drafts survived
+                            if cfg.spec_adaptive && drafted > 0 {
+                                if accepted == drafted {
+                                    seq.k_now = (seq.k_now + 1).min(seq.spec_k);
+                                } else if accepted * 2 < drafted {
+                                    seq.k_now = (seq.k_now / 2).max(1);
+                                }
+                            }
+                            hop_tier(
+                                seq,
+                                n_tiers,
+                                cfg.spec_tier_adaptive,
+                                drafted,
+                                accepted,
+                                metrics,
+                            );
+                            for tok in tokens {
+                                if seq.generated.len() >= seq.req.max_new_tokens {
+                                    break;
+                                }
+                                seq.generated.push(tok);
+                                processed += 1;
+                                if seq.req.stop_token == Some(tok) {
+                                    break;
+                                }
+                            }
+                        }
+                        SpecRound::Skip => {
+                            // one token left to emit — decode it plainly,
+                            // keep the draft (this is not pool pressure)
+                            plain.push(i);
+                        }
+                        SpecRound::Fallback => {
+                            // shed the draft tier: its blocks return to
+                            // the pool immediately, so speculation never
+                            // starves its own (or batch-mates') plain path
+                            metrics.spec_fallbacks += 1;
+                            seq.draft_kv = None;
+                            plain.push(i);
+                        }
                     }
                 }
             }
+            // fleet Skip/Fallback scatters append out of order relative
+            // to pass 1's plain pushes; 3b's gather walks ascending
+            plain.sort_unstable();
             decode_idx = plain;
         }
 
@@ -748,6 +1020,7 @@ impl EngineCore {
 
         // 4. retire finished sequences, recycling their KV blocks into
         // the pool immediately (not lazily at next admission)
+        let default_tier = self.spec.as_ref().map_or(0, |c| c.default_tier);
         let mut still_active = Vec::with_capacity(self.active.len());
         for mut seq in std::mem::take(&mut self.active) {
             if !self.seq_finished(&seq) {
@@ -773,10 +1046,17 @@ impl EngineCore {
                             cache.target.insert(&seq.req.prompt, &kv.share_prefix_blocks(n));
                         }
                     }
-                    if let Some(draft) = &seq.draft_kv {
-                        let n = (prompt_len / KV_BLOCK).min(draft.sealed_blocks_min());
-                        if n > 0 {
-                            cache.draft.insert(&seq.req.prompt, &draft.share_prefix_blocks(n));
+                    // only default-tier draft K/V may enter the shared
+                    // draft tree: a hopped sequence's blocks hold a
+                    // different tier's projections
+                    if seq.tier_now == default_tier {
+                        if let Some(draft) = &seq.draft_kv {
+                            let n = (prompt_len / KV_BLOCK).min(draft.sealed_blocks_min());
+                            if n > 0 {
+                                cache
+                                    .draft
+                                    .insert(&seq.req.prompt, &draft.share_prefix_blocks(n));
+                            }
                         }
                     }
                 }
@@ -1495,6 +1775,169 @@ mod tests {
         let spec = run(&mut es);
         assert_eq!(a, spec, "speculative i8 greedy diverged from plain i8");
         assert!(es.metrics.spec_rounds > 0, "speculation never ran");
+    }
+
+    fn engine_spec_batch(spec_batch: bool) -> EngineCore {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 131);
+        let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: 3,
+                prefill_chunk: 4,
+                kv_capacity: 96,
+                spec_k: 4,
+                spec_batch,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fleet_verify_greedy_identical_and_walks_amortized() {
+        // the tentpole contract: fusing the fleet's verify blocks into
+        // one target walk changes NO greedy token, and the walk count
+        // per tick becomes O(1) in the number of speculating sequences
+        let run = |e: &mut EngineCore| {
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 20));
+            e.submit(Request::new(2, vec![10, 11, 12, 13], 20));
+            e.submit(Request::new(3, vec![12; 5], 20));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        let mut per = engine_spec_batch(false);
+        let a = run(&mut per);
+        let mut fleet = engine_spec_batch(true);
+        let b = run(&mut fleet);
+        assert_eq!(a, b, "fleet verify changed greedy tokens");
+        // per-sequence schedule: every emitted round pays its own walk
+        assert_eq!(per.metrics.spec_verify_walks, per.metrics.spec_rounds);
+        assert_eq!(per.metrics.spec_batch_rounds, 0);
+        // fleet schedule: fused walks cover >1 sequence on average, so
+        // strictly fewer walks than rounds
+        assert!(fleet.metrics.spec_batch_rounds > 0, "fleet path never engaged");
+        assert!(
+            fleet.metrics.spec_verify_walks < fleet.metrics.spec_rounds,
+            "walks={} rounds={}",
+            fleet.metrics.spec_verify_walks,
+            fleet.metrics.spec_rounds
+        );
+        assert!(fleet.metrics.spec_batch_occupancy() > 1.0);
+        let r = fleet.metrics.report();
+        assert!(r.contains("walks="), "{r}");
+        assert!(r.contains("batch_occ="), "{r}");
+        if let Some(pool) = fleet.kv_pool() {
+            assert_eq!(
+                pool.stats().blocks_in_use,
+                fleet.prefix_cached_blocks(),
+                "fleet engine leaked blocks"
+            );
+        }
+    }
+
+    #[test]
+    fn hop_tier_climbs_on_collapse_and_descends_after_streak() {
+        let mut m = Metrics::default();
+        let mut seq = ActiveSeq {
+            req: Request::new(1, vec![1], 4),
+            state: SeqState::Native { kv: KvCache::new(1, 1, 4, 8) },
+            fed: 1,
+            generated: Vec::new(),
+            submitted: Instant::now(),
+            timing: RequestTiming::default(),
+            evicted: false,
+            draft_kv: None,
+            spec_k: 4,
+            k_now: 4,
+            tier_now: 0,
+            tier_streak: 0,
+        };
+        // acceptance collapse: climb one rung immediately
+        hop_tier(&mut seq, 3, true, 4, 1, &mut m);
+        assert_eq!(seq.tier_now, 1);
+        // sustained clean sweeps: descend after the streak threshold
+        for _ in 0..TIER_DOWN_STREAK {
+            hop_tier(&mut seq, 3, true, 4, 4, &mut m);
+        }
+        assert_eq!(seq.tier_now, 0);
+        assert_eq!(m.spec_tier_hops, 2);
+        // partial acceptance resets the streak without hopping
+        seq.tier_streak = 2;
+        hop_tier(&mut seq, 3, true, 4, 3, &mut m);
+        assert_eq!((seq.tier_now, seq.tier_streak), (0, 0));
+        // disabled / single-tier: nothing moves even on a collapse
+        hop_tier(&mut seq, 3, false, 4, 0, &mut m);
+        hop_tier(&mut seq, 1, true, 4, 0, &mut m);
+        assert_eq!(seq.tier_now, 0);
+        // top rung holds under collapse (no higher tier to climb to)
+        seq.tier_now = 2;
+        hop_tier(&mut seq, 3, true, 4, 0, &mut m);
+        assert_eq!(seq.tier_now, 2);
+        assert_eq!(m.spec_tier_hops, 2);
+    }
+
+    #[test]
+    fn tier_adaptive_engine_greedy_identical_and_ladder_built() {
+        let mut cfg = demo_config();
+        cfg.d_model = 64;
+        cfg.n_layers = 2;
+        cfg.n_heads = 2;
+        cfg.d_ff = 96;
+        cfg.vocab = 64;
+        cfg.max_seq = 96;
+        let fp = random_fp(&cfg, 131);
+        let mk = |tier_adaptive: bool| {
+            let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+            EngineCore::new(
+                Backend::Native(t),
+                &cfg,
+                EngineConfig {
+                    max_batch: 2,
+                    prefill_chunk: 4,
+                    kv_capacity: 96,
+                    spec_k: 4,
+                    // pin the ladder base so an env GQSA_SPEC_DRAFT
+                    // override can't knock this test off the ladder
+                    spec_draft: DraftConfig::default(),
+                    spec_tier_adaptive: tier_adaptive,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let run = |e: &mut EngineCore| {
+            e.submit(Request::new(1, vec![5, 6, 7, 8, 9], 24));
+            e.submit(Request::new(2, vec![12; 10], 18));
+            let mut out = e.run_to_completion().unwrap();
+            out.sort_by_key(|r| r.id);
+            out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+        };
+        // greedy acceptance always emits target argmax tokens, so the
+        // draft tier (and hops between tiers) can never change content
+        let fixed = run(&mut mk(false));
+        let mut e = mk(true);
+        let hopped = run(&mut e);
+        assert_eq!(fixed, hopped, "tier hopping changed greedy tokens");
+        assert_eq!(e.spec.as_ref().unwrap().n_tiers(), 3, "ladder not fully built");
+        assert!(e.metrics.spec_rounds > 0);
+        assert!(e.metrics.report().contains("tier_hops="), "{}", e.metrics.report());
+        if let Some(pool) = e.kv_pool() {
+            assert_eq!(
+                pool.stats().blocks_in_use,
+                e.prefix_cached_blocks(),
+                "tier-adaptive engine leaked blocks"
+            );
+        }
     }
 
     #[test]

@@ -43,6 +43,17 @@ pub struct Metrics {
     /// sum of the per-round chosen draft length k (AIMD-adapted when
     /// `GQSA_SPEC_ADAPTIVE=1`); mean = spec_k_sum / spec_rounds.
     pub spec_k_sum: u64,
+    /// target verify weight walks performed. Per-sequence speculation
+    /// pays one walk per round; with `GQSA_SPEC_BATCH=1` a fused fleet
+    /// round verifies every speculating sequence in ONE walk, so this
+    /// stays O(1) per tick regardless of concurrency.
+    pub spec_verify_walks: u64,
+    /// fused fleet verify walks (each covered >= 1 sequences).
+    pub spec_batch_rounds: u64,
+    /// sequences verified by fused walks (occupancy numerator).
+    pub spec_batch_seqs: u64,
+    /// per-sequence draft-tier ladder hops (`GQSA_SPEC_TIER_ADAPTIVE`).
+    pub spec_tier_hops: u64,
     /// shared-prefix cache counters (hits/misses/evictions/held
     /// blocks), snapshotted each tick; None until a caching engine
     /// reports.
@@ -142,6 +153,16 @@ impl Metrics {
         }
     }
 
+    /// Mean sequences verified per fused fleet walk (1.0 means fusion
+    /// never packed more than one sequence; 0 when no fleet walk ran).
+    pub fn spec_batch_occupancy(&self) -> f64 {
+        if self.spec_batch_rounds == 0 {
+            0.0
+        } else {
+            self.spec_batch_seqs as f64 / self.spec_batch_rounds as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         let lat = self.latency_ms();
         let ttft = self.ttft_ms();
@@ -165,7 +186,8 @@ impl Metrics {
         let spec = if self.spec_rounds > 0 || self.spec_fallbacks > 0 {
             format!(
                 ", spec: rounds={} drafted={} accepted={} rate={:.2} mean_acc={:.2} \
-                 k_mean={:.2} fallbacks={} readmits={}",
+                 k_mean={:.2} fallbacks={} readmits={} walks={} batch_occ={:.2} \
+                 tier_hops={}",
                 self.spec_rounds,
                 self.spec_drafted,
                 self.spec_accepted,
@@ -174,6 +196,9 @@ impl Metrics {
                 self.spec_k_mean(),
                 self.spec_fallbacks,
                 self.spec_draft_readmitted,
+                self.spec_verify_walks,
+                self.spec_batch_occupancy(),
+                self.spec_tier_hops,
             )
         } else {
             String::new()

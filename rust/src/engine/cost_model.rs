@@ -136,6 +136,76 @@ impl DispatchModel {
     }
 }
 
+/// When does fusing the fleet's verify blocks into one weight walk pay?
+///
+/// Per-sequence speculation charges one full target weight walk per
+/// speculating sequence; the fused `verify_batch` path charges ONE walk
+/// plus a per-sequence gather/scatter cost, with the per-row attention
+/// work identical either way. This model prices both schedules from
+/// three learned constants and gates the engine's fleet round. Both
+/// schedules are greedily token-identical, so a wrong call costs only
+/// time, never content.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecVerifyModel {
+    /// EWMA ns for one target weight walk (weights streamed once,
+    /// independent of how many rows ride on it).
+    pub walk_ns: f64,
+    /// ns per verify row (activations, attention, logits) — the same
+    /// under either schedule, so it is a fixed seed, not learned.
+    pub row_ns: f64,
+    /// EWMA ns per sequence of fleet gather/scatter overhead (KV ref
+    /// routing, acceptance bookkeeping).
+    pub gather_ns: f64,
+    /// EWMA smoothing factor.
+    pub alpha: f64,
+}
+
+impl Default for SpecVerifyModel {
+    fn default() -> Self {
+        // seeds: a weight walk is the dominant cost (~40us, same order
+        // as a pool dispatch), rows are cheap (~2us), and gathering a
+        // sequence into the fleet is cheaper still (~1us). With these
+        // seeds fusion wins from 2 sequences up, which matches the
+        // memory-bound regime the paper targets; measurements correct
+        // the constants within a few observed rounds.
+        Self { walk_ns: 40_000.0, row_ns: 2_000.0, gather_ns: 1_000.0, alpha: 0.2 }
+    }
+}
+
+impl SpecVerifyModel {
+    /// Predicted ns to verify `n` sequences (`rows` total k+1 blocks)
+    /// with one weight walk per sequence.
+    pub fn predict_per_seq_ns(&self, n: usize, rows: usize) -> f64 {
+        n as f64 * self.walk_ns + rows as f64 * self.row_ns
+    }
+
+    /// Predicted ns for one fused walk over the same fleet.
+    pub fn predict_fleet_ns(&self, n: usize, rows: usize) -> f64 {
+        self.walk_ns + n as f64 * self.gather_ns + rows as f64 * self.row_ns
+    }
+
+    /// Should the engine fuse this fleet into one verify walk?
+    pub fn fleet_wins(&self, n: usize, rows: usize) -> bool {
+        n >= 2 && self.predict_fleet_ns(n, rows) < self.predict_per_seq_ns(n, rows)
+    }
+
+    /// Feed back a measured single-sequence verify walk.
+    pub fn observe_single(&mut self, rows: usize, ns: f64) {
+        let walk = (ns - rows as f64 * self.row_ns).max(0.0);
+        self.walk_ns += self.alpha * (walk - self.walk_ns);
+    }
+
+    /// Feed back a measured fused fleet walk: attribute everything
+    /// beyond the walk + row costs to per-sequence gather overhead.
+    pub fn observe_fleet(&mut self, n: usize, rows: usize, ns: f64) {
+        if n == 0 {
+            return;
+        }
+        let over = (ns - self.walk_ns - rows as f64 * self.row_ns).max(0.0) / n as f64;
+        self.gather_ns += self.alpha * (over - self.gather_ns);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,5 +270,38 @@ mod tests {
         assert!(m.parallel_wins(10_000, 4));
         // and a 300-unit layer does not (6us seq vs 5us overhead alone)
         assert!(!m.parallel_wins(300, 4));
+    }
+
+    #[test]
+    fn fleet_gate_needs_two_sequences() {
+        let m = SpecVerifyModel::default();
+        // a lone sequence never fuses — there is nothing to amortize
+        assert!(!m.fleet_wins(1, 5));
+        // with the default seeds (walk 40us >> gather 1us) fusion wins
+        // from two sequences up, and the margin grows with the fleet
+        assert!(m.fleet_wins(2, 10));
+        assert!(m.fleet_wins(8, 40));
+        assert!(
+            m.predict_per_seq_ns(8, 40) - m.predict_fleet_ns(8, 40)
+                > m.predict_per_seq_ns(2, 10) - m.predict_fleet_ns(2, 10)
+        );
+    }
+
+    #[test]
+    fn fleet_model_learns_from_measurements() {
+        let mut m = SpecVerifyModel::default();
+        // single-sequence walks measured at 10us shift walk_ns down
+        for _ in 0..50 {
+            m.observe_single(5, 10_000.0 + 5.0 * m.row_ns);
+        }
+        assert!((m.walk_ns - 10_000.0).abs() < 500.0, "{}", m.walk_ns);
+        // fleet rounds with a pathological 20us/seq gather cost flip
+        // the gate off for small fleets
+        for _ in 0..50 {
+            let base = m.walk_ns + 10.0 * m.row_ns;
+            m.observe_fleet(2, 10, base + 2.0 * 20_000.0);
+        }
+        assert!((m.gather_ns - 20_000.0).abs() < 2_000.0, "{}", m.gather_ns);
+        assert!(!m.fleet_wins(2, 10), "fusion should lose when gather > walk");
     }
 }

@@ -407,8 +407,9 @@ mod avx2 {
 }
 
 // ---------------------------------------------------------------------
-// NEON (aarch64 baseline). q2 and the integer dots fall back to the
-// scalar loops — they are either exact by construction (i32) or cold.
+// NEON (aarch64 baseline). The integer dots fall back to the scalar
+// loops — they are exact by construction (i32), so there is no
+// canonical-order motive to vectorize them here.
 // ---------------------------------------------------------------------
 
 #[cfg(target_arch = "aarch64")]
@@ -510,6 +511,38 @@ mod neon {
         }
         s
     }
+
+    pub unsafe fn dot_q2(q: &[u8], x: &[f32]) -> f32 {
+        let n = x.len();
+        let c8 = n - n % 8;
+        let mask = vdup_n_u8(0x3);
+        // per-lane right shifts [0,2,4,6,0,2,4,6]: vshl with negative
+        // signed counts shifts right (bytes packed little-endian)
+        let shifts = vcreate_s8(0xFAFC_FE00_FAFC_FE00);
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < c8 {
+            // 2 bytes -> 8 codes, lowest bits first: byte0 broadcast to
+            // lanes 0..3, byte1 to lanes 4..7, then shift-and-mask
+            let raw = (q.as_ptr().add(i >> 2) as *const u16).read_unaligned();
+            let b0 = (raw & 0xFF) as u64;
+            let b1 = (raw >> 8) as u64;
+            let v = vcreate_u8(b0 * 0x0101_0101 | (b1 * 0x0101_0101) << 32);
+            let codes = vand_u8(vshl_u8(v, shifts), mask);
+            let (a0, a1) = mul_acc_u16(acc0, acc1, vmovl_u8(codes), x.as_ptr().add(i));
+            acc0 = a0;
+            acc1 = a1;
+            i += 8;
+        }
+        let mut s = reduce(acc0, acc1);
+        while i < n {
+            let c = (q[i >> 2] >> (2 * (i & 3))) & 0x3;
+            s += c as f32 * x[i];
+            i += 1;
+        }
+        s
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -566,7 +599,7 @@ pub fn dot_q2(q: &[u8], x: &[f32]) -> f32 {
         #[cfg(target_arch = "x86_64")]
         Simd::Avx2 => unsafe { avx2::dot_q2(q, x) },
         #[cfg(target_arch = "aarch64")]
-        Simd::Neon => dot_codes_scalar(q, 2, x),
+        Simd::Neon => unsafe { neon::dot_q2(q, x) },
     }
 }
 
@@ -674,10 +707,11 @@ mod tests {
                     assert_eq!(got.to_bits(), want.to_bits(), "w{bits} n={n}");
                 }
                 #[cfg(target_arch = "aarch64")]
-                if bits != 2 {
+                {
                     let got = match bits {
                         4 => unsafe { neon::dot_q4(&packed, &x) },
-                        _ => unsafe { neon::dot_q8(&packed, &x) },
+                        8 => unsafe { neon::dot_q8(&packed, &x) },
+                        _ => unsafe { neon::dot_q2(&packed, &x) },
                     };
                     assert_eq!(got.to_bits(), want.to_bits(), "w{bits} n={n}");
                 }

@@ -834,6 +834,9 @@ impl LayerKv {
     /// fall entirely below the watermark are dropped. Plain sequences
     /// never call this (the default watermark is `usize::MAX`,
     /// i.e. everything committed, zero shadow overhead).
+    /// The watermark is per-layer state, never stored in the shared
+    /// block payloads — so in a batched verify each sequence keeps its
+    /// own floor even when sequences share sealed prefix blocks.
     pub fn set_commit(&mut self, upto: usize) {
         self.commit_len = upto;
         if let Store::Paged { shadow, .. } = &mut self.store {
@@ -842,6 +845,11 @@ impl LayerKv {
             // `truncate(upto)` when upto is block-aligned
             shadow.retain(|s| (s.idx + 1) * KV_BLOCK >= upto);
         }
+    }
+
+    /// Current commit watermark (`usize::MAX` when never speculated).
+    pub fn commit_len(&self) -> usize {
+        self.commit_len
     }
 
     /// Rewind the sequence to `to` positions (no-op when `to >= len`).
@@ -854,6 +862,17 @@ impl LayerKv {
     /// declared falls back to dequantization (bounded error), which the
     /// speculative controller never hits because it declares the floor
     /// before drafting.
+    ///
+    /// Batched-verify audit: rollback here is strictly LOCAL. Shared
+    /// blocks (prefix-cache adoptees, or blocks another sequence in
+    /// the same verify batch also holds) are only ever *dropped* —
+    /// payloads are copied into the sequence-private tail on re-open
+    /// and the pool release/poison happens at last-reference drop, so
+    /// sequence A rolling back can neither mutate nor free a block
+    /// sequence B is still attending against. Additionally the
+    /// speculative rollback floor (`set_commit(t_len + 1)`, past the
+    /// prompt) sits above every adopted prefix block, so those are
+    /// structurally out of rollback's reach in the first place.
     pub fn truncate(&mut self, to: usize) {
         if to >= self.len {
             return;
@@ -1040,6 +1059,12 @@ impl KvCache {
     /// f32 shadow copies held across all layers (rollback bookkeeping).
     pub fn shadow_blocks(&self) -> usize {
         self.layers.iter().map(|l| l.shadow_blocks()).sum()
+    }
+
+    /// Commit watermark (uniform across layers; `usize::MAX` when
+    /// never speculated).
+    pub fn commit_len(&self) -> usize {
+        self.layers.first().map_or(usize::MAX, |l| l.commit_len())
     }
 
     pub fn reset(&mut self) {

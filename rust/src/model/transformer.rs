@@ -1276,6 +1276,236 @@ impl Transformer {
         Ok(())
     }
 
+    /// Speculative fleet verify: the k+1-position verify blocks of
+    /// several sequences fused into ONE target weight walk.
+    /// `groups[si]` consecutive rows of `tokens` belong to sequence
+    /// `si`, processed causally at positions `kvs[si].len() + j`
+    /// against (and appending to) that sequence's own `LayerKv`
+    /// segments — each row routes to its own cache, commit watermark
+    /// included. Every linear/norm/attention op is row-independent, so
+    /// per-row results are bit-identical to calling `forward_block`
+    /// once per sequence; logits for global row r land in
+    /// `scratch.logits.row(r)`.
+    pub fn verify_batch(
+        &self,
+        tokens: &[u32],
+        groups: &[usize],
+        kvs: &mut [&mut KvCache],
+        s: &mut BlockScratch,
+    ) -> Result<()> {
+        let t = tokens.len();
+        if t == 0 {
+            return Ok(());
+        }
+        if groups.len() != kvs.len() {
+            bail!("verify_batch: {} groups vs {} sequences", groups.len(), kvs.len());
+        }
+        if groups.iter().sum::<usize>() != t {
+            bail!("verify_batch: groups sum {} vs {} tokens", groups.iter().sum::<usize>(), t);
+        }
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        s.prepare(t);
+        s.pos.clear();
+        // aggregate pre-flight: per-sequence capacity plus the SHARED
+        // pool's headroom summed across the whole batch, so a mid-batch
+        // allocation failure can never poison batch-mates' caches
+        let mut pool_needed = 0usize;
+        let mut pool_free: Option<usize> = None;
+        for (si, kv) in kvs.iter().enumerate() {
+            let g = groups[si];
+            if kv.len() + g > kv.capacity() {
+                return Err(CacheFull::Capacity { len: kv.len(), capacity: kv.capacity() }.into());
+            }
+            pool_needed += kv.blocks_needed(g);
+            if pool_free.is_none() {
+                pool_free = kv.pool().map(|p| p.free_blocks());
+            }
+            for j in 0..g {
+                s.pos.push(kv.len() + j);
+            }
+        }
+        if let Some(free) = pool_free {
+            if pool_needed > free {
+                return Err(CacheFull::PoolExhausted { needed: pool_needed, free }.into());
+            }
+        }
+        for (ti, &tok) in tokens.iter().enumerate() {
+            let pos = s.pos[ti];
+            let row = s.x.row_mut(ti);
+            row.copy_from_slice(self.tok_emb.row(tok as usize));
+            if let Some(pe) = &self.pos_emb {
+                for i in 0..d {
+                    row[i] += pe.at(pos, i);
+                }
+            }
+        }
+
+        for l in 0..cfg.n_layers {
+            let pre = format!("blk{l}.");
+            let n1 = format!("{pre}norm1");
+            for ti in 0..t {
+                self.norm(&n1, s.x.row(ti), s.xn.row_mut(ti))?;
+            }
+            s.act_i8.invalidate();
+            self.lin_block(
+                &format!("{pre}attn.wq"),
+                &mut s.xn,
+                &mut s.q,
+                &mut s.mm,
+                &mut s.act_i8,
+                &mut s.exec,
+            )?;
+            self.lin_block(
+                &format!("{pre}attn.wk"),
+                &mut s.xn,
+                &mut s.k,
+                &mut s.mm,
+                &mut s.act_i8,
+                &mut s.exec,
+            )?;
+            self.lin_block(
+                &format!("{pre}attn.wv"),
+                &mut s.xn,
+                &mut s.v,
+                &mut s.mm,
+                &mut s.act_i8,
+                &mut s.exec,
+            )?;
+            if cfg.qkv_bias {
+                let bq = self.small(&format!("{pre}attn.bq"))?;
+                let bk = self.small(&format!("{pre}attn.bk"))?;
+                let bv = self.small(&format!("{pre}attn.bv"))?;
+                for ti in 0..t {
+                    let qr = s.q.row_mut(ti);
+                    for i in 0..d {
+                        qr[i] += bq[i];
+                    }
+                    let kr = s.k.row_mut(ti);
+                    for i in 0..d {
+                        kr[i] += bk[i];
+                    }
+                    let vr = s.v.row_mut(ti);
+                    for i in 0..d {
+                        vr[i] += bv[i];
+                    }
+                }
+            }
+            if cfg.pos == "rope" {
+                for ti in 0..t {
+                    self.rope(s.q.row_mut(ti), s.pos[ti]);
+                    self.rope(s.k.row_mut(ti), s.pos[ti]);
+                }
+            }
+            // causal within each sequence: rows of one group are
+            // contiguous and in position order, so appending row r to
+            // ITS sequence before attending makes query r see exactly
+            // that sequence's positions 0..=pos[r] — batch-mates'
+            // caches are never consulted
+            let mut r = 0usize;
+            for (si, &g) in groups.iter().enumerate() {
+                let layer = &mut kvs[si].layers[l];
+                for _ in 0..g {
+                    layer.append(s.k.row(r), s.v.row(r))?;
+                    self.attend(
+                        layer,
+                        s.q.row(r),
+                        &mut s.att,
+                        &mut s.kv_deq,
+                        s.attn_out.row_mut(r),
+                    );
+                    r += 1;
+                }
+            }
+            s.act_i8.invalidate();
+            self.lin_block(
+                &format!("{pre}attn.wo"),
+                &mut s.attn_out,
+                &mut s.proj,
+                &mut s.mm,
+                &mut s.act_i8,
+                &mut s.exec,
+            )?;
+            for ti in 0..t {
+                let pr = s.proj.row(ti);
+                let xr = s.x.row_mut(ti);
+                for i in 0..d {
+                    xr[i] += pr[i];
+                }
+            }
+            let n2 = format!("{pre}norm2");
+            for ti in 0..t {
+                self.norm(&n2, s.x.row(ti), s.xn.row_mut(ti))?;
+            }
+            s.act_i8.invalidate();
+            if cfg.act == "swiglu" {
+                self.lin_block(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.mm,
+                    &mut s.act_i8,
+                    &mut s.exec,
+                )?;
+                self.lin_block(
+                    &format!("{pre}mlp.w2"),
+                    &mut s.xn,
+                    &mut s.ff_b,
+                    &mut s.mm,
+                    &mut s.act_i8,
+                    &mut s.exec,
+                )?;
+                for ti in 0..t {
+                    let ar = s.ff_a.row(ti);
+                    let br = s.ff_b.row(ti);
+                    let nr = s.ff_n.row_mut(ti);
+                    for i in 0..cfg.d_ff {
+                        let a = ar[i];
+                        nr[i] = a / (1.0 + (-a).exp()) * br[i]; // silu(a)*b
+                    }
+                }
+            } else {
+                self.lin_block(
+                    &format!("{pre}mlp.w1"),
+                    &mut s.xn,
+                    &mut s.ff_a,
+                    &mut s.mm,
+                    &mut s.act_i8,
+                    &mut s.exec,
+                )?;
+                for ti in 0..t {
+                    let ar = s.ff_a.row(ti);
+                    let nr = s.ff_n.row_mut(ti);
+                    for i in 0..cfg.d_ff {
+                        nr[i] = gelu_tanh(ar[i]);
+                    }
+                }
+            }
+            s.act_i8.invalidate();
+            self.lin_block(
+                &format!("{pre}mlp.w3"),
+                &mut s.ff_n,
+                &mut s.proj,
+                &mut s.mm,
+                &mut s.act_i8,
+                &mut s.exec,
+            )?;
+            for ti in 0..t {
+                let pr = s.proj.row(ti);
+                let xr = s.x.row_mut(ti);
+                for i in 0..d {
+                    xr[i] += pr[i];
+                }
+            }
+        }
+
+        for ti in 0..t {
+            self.norm("final_norm", s.x.row(ti), s.xn.row_mut(ti))?;
+        }
+        dense_gemm(&self.tok_emb, &s.xn, &mut s.logits);
+        Ok(())
+    }
+
     /// Prefill a prompt: sequential decode steps (the per-token GEMV
     /// baseline; the serving engine uses `prefill_block`).
     pub fn prefill(&self, tokens: &[u32], kv: &mut KvCache, scratch: &mut Scratch) -> Result<()> {

@@ -26,6 +26,24 @@
 //! [`SpecRound::Fallback`] — the engine then decodes that sequence
 //! plainly this tick, which is always safe because fallback emits the
 //! same greedy token the verify path would have.
+//!
+//! **Fleet rounds** ([`SpecController::round_fleet`]): at concurrency
+//! N the per-sequence path pays N separate target weight walks per
+//! tick. The fleet round runs steps 1–2 per sequence, then fuses every
+//! sequence's k+1-position verify block into ONE
+//! `Transformer::verify_batch` target walk (per-row KV routing keeps
+//! each row attending against its own cache), and finishes acceptance
+//! + rollback per sequence. Every per-row op is bit-identical to the
+//! per-sequence path, so greedy output is token-identical — the walk
+//! count just drops from N to 1.
+//!
+//! **Draft tiers**: the controller can hold several draft encodings of
+//! the same checkpoint (ladder-ordered cheapest → most accurate, e.g.
+//! W2S75 → W2S50 → W4S75). Each sequence speculates on its own ladder
+//! index; the engine hops a sequence's tier from its measured
+//! acceptance rate the same way AIMD adapts k. Tiers have different
+//! K/V projections, so a hop invalidates that sequence's draft KV (the
+//! engine resets it; catch-up refills lazily).
 
 use std::sync::Arc;
 
@@ -54,11 +72,56 @@ pub enum SpecRound {
     Fallback,
 }
 
-/// Owns the draft tier and its scratch. One controller serves every
-/// sequence of an engine (rounds are sequential on the router thread).
+/// One speculating sequence's slice of engine state, handed to
+/// [`SpecController::round_fleet`]. Borrows are disjoint per sequence,
+/// so the engine builds these straight off its active list.
+pub struct FleetSeq<'a> {
+    pub target_kv: &'a mut KvCache,
+    pub draft_kv: &'a mut KvCache,
+    pub prompt: &'a [u32],
+    pub generated: &'a [u32],
+    /// requested draft length (clamped exactly like `round`'s `k`)
+    pub k: usize,
+    /// remaining new-token budget for this sequence
+    pub max_emit: usize,
+    /// ladder index of this sequence's current draft tier
+    pub tier: usize,
+    pub mode: Sampling,
+}
+
+/// Result of one fleet round: a per-sequence [`SpecRound`] (same
+/// semantics as the per-sequence path), plus walk accounting so the
+/// engine's metrics can assert the O(1)-walks property.
+pub struct FleetOutcome {
+    pub rounds: Vec<SpecRound>,
+    /// fused target verify weight walks performed (0 or 1)
+    pub verify_walks: u32,
+    /// sequences that rode the fused walk
+    pub verified_seqs: u32,
+}
+
+/// drafting state carried between the per-sequence draft phase and the
+/// post-verify acceptance phase of a fleet round
+struct FleetPending {
+    idx: usize,
+    t_len: usize,
+    k_eff: usize,
+    drafts: Vec<u32>,
+    /// first slot of this sequence in `draft_dists` (rejection sampling)
+    dist_base: usize,
+    /// first row of this sequence in the fused verify logits
+    row_base: usize,
+}
+
+/// Owns the draft tier(s) and their scratch. One controller serves
+/// every sequence of an engine (rounds are sequential on the router
+/// thread). `drafts[0]` is the configured tier; `add_tier` appends
+/// ladder tiers for per-sequence tier hopping.
 pub struct SpecController {
-    pub draft: Transformer,
-    pub draft_cfg: DraftConfig,
+    drafts: Vec<Transformer>,
+    tier_cfgs: Vec<DraftConfig>,
+    /// ladder index new sequences start speculating at
+    pub default_tier: usize,
     /// engine-default draft length (a per-request k is clamped to it)
     pub k: usize,
     scratch: Scratch,
@@ -88,8 +151,9 @@ impl SpecController {
             None => (Scratch::new(&cfg), BlockScratch::new(&cfg, t_max)),
         };
         Self {
-            draft,
-            draft_cfg,
+            drafts: vec![draft],
+            tier_cfgs: vec![draft_cfg],
+            default_tier: 0,
             k: k.max(1),
             scratch,
             block,
@@ -99,20 +163,66 @@ impl SpecController {
         }
     }
 
-    /// Extra weight bytes the draft tier costs (its compressed linears;
+    /// Append another draft tier to the ladder (cheapest → most
+    /// accurate order is the caller's contract; the engine builds the
+    /// canonical W2S75 → W2S50 → W4S75 ladder).
+    pub fn add_tier(&mut self, draft: Transformer, cfg: DraftConfig) {
+        self.drafts.push(draft);
+        self.tier_cfgs.push(cfg);
+    }
+
+    /// Declare which ladder index fresh sequences start at (the
+    /// configured tier's position after `add_tier` calls).
+    pub fn set_default_tier(&mut self, tier: usize) {
+        assert!(tier < self.drafts.len());
+        self.default_tier = tier;
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.drafts.len()
+    }
+
+    pub fn tier_cfg(&self, tier: usize) -> &DraftConfig {
+        &self.tier_cfgs[tier]
+    }
+
+    /// Extra weight bytes the draft tier(s) cost (compressed linears;
     /// embeddings/norms are shared with the target).
     pub fn draft_bytes(&self) -> usize {
-        self.draft.linear_bytes()
+        self.drafts.iter().map(|d| d.linear_bytes()).sum()
     }
 
     /// Run one speculative round for a sequence whose target KV is
     /// `target_kv` and pending token is `generated.last()`.
     /// `max_emit` is the remaining new-token budget (tokens the caller
     /// can still accept); `k` is the requested draft length (clamped to
-    /// the controller's configured maximum).
+    /// the controller's configured maximum). Drafts on the default
+    /// tier; tier-hopping callers use [`Self::round_tier`].
     #[allow(clippy::too_many_arguments)]
     pub fn round(
         &mut self,
+        target: &Transformer,
+        target_kv: &mut KvCache,
+        draft_kv: &mut KvCache,
+        prompt: &[u32],
+        generated: &[u32],
+        k: usize,
+        max_emit: usize,
+        mode: Sampling,
+        rng: &mut XorShift,
+        verify: &mut BlockScratch,
+    ) -> Result<SpecRound> {
+        let tier = self.default_tier;
+        self.round_tier(
+            tier, target, target_kv, draft_kv, prompt, generated, k, max_emit, mode, rng, verify,
+        )
+    }
+
+    /// [`Self::round`] with an explicit draft-tier ladder index.
+    #[allow(clippy::too_many_arguments)]
+    pub fn round_tier(
+        &mut self,
+        tier: usize,
         target: &Transformer,
         target_kv: &mut KvCache,
         draft_kv: &mut KvCache,
@@ -168,7 +278,7 @@ impl SpecController {
                 })
                 .collect();
             let chunk = self.catch_chunk;
-            match self.draft.prefill_block(&feed, draft_kv, &mut self.block, chunk) {
+            match self.drafts[tier].prefill_block(&feed, draft_kv, &mut self.block, chunk) {
                 Ok(()) => {}
                 Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
                     // a partial catch-up stays (it is committed history,
@@ -194,7 +304,7 @@ impl SpecController {
         let mut drafts: Vec<u32> = Vec::with_capacity(k_eff);
         let mut cur = last;
         for i in 0..k_eff {
-            match self.draft.decode_step(cur, draft_kv, &mut self.scratch) {
+            match self.drafts[tier].decode_step(cur, draft_kv, &mut self.scratch) {
                 Ok(()) => {}
                 Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
                     draft_kv.truncate(t_len);
@@ -228,52 +338,7 @@ impl SpecController {
         }
 
         // 4. accept the longest valid prefix + one extra token
-        let mut emitted: Vec<u32> = Vec::with_capacity(k_eff + 1);
-        let mut m = 0usize;
-        if greedy {
-            // exact-match acceptance: every emitted token IS the greedy
-            // target token, so output is identical to plain decode
-            while m < k_eff {
-                let t_tok = argmax(verify.logits.row(m)) as u32;
-                emitted.push(t_tok);
-                if drafts[m] != t_tok {
-                    break;
-                }
-                m += 1;
-            }
-            if m == k_eff {
-                emitted.push(argmax(verify.logits.row(k_eff)) as u32);
-            }
-        } else {
-            // rejection sampling: accept d ~ q with prob min(1, p/q);
-            // on reject, sample the correction from max(p - q, 0)
-            for i in 0..k_eff {
-                dist_probs(verify.logits.row(i), mode, &mut self.dist_t);
-                let d = drafts[i] as usize;
-                let p_t = self.dist_t[d] as f64;
-                let p_d = (self.draft_dists[i][d] as f64).max(1e-12);
-                if (rng.next_f32() as f64) < (p_t / p_d).min(1.0) {
-                    emitted.push(drafts[i]);
-                    m += 1;
-                    continue;
-                }
-                let mut residual_mass = 0.0f64;
-                for (t, q) in self.dist_t.iter_mut().zip(&self.draft_dists[i]) {
-                    *t = (*t - *q).max(0.0);
-                    residual_mass += *t as f64;
-                }
-                if residual_mass <= 0.0 {
-                    // distributions coincide numerically: resample p
-                    dist_probs(verify.logits.row(i), mode, &mut self.dist_t);
-                }
-                emitted.push(sample_from_probs(&self.dist_t, rng));
-                break;
-            }
-            if m == k_eff {
-                dist_probs(verify.logits.row(k_eff), mode, &mut self.dist_t);
-                emitted.push(sample_from_probs(&self.dist_t, rng));
-            }
-        }
+        let (emitted, m) = self.accept(verify, 0, &drafts, 0, mode, rng);
 
         // 5. rewind rejected positions out of both caches and commit
         // the surviving prefix (drops rollback shadows)
@@ -284,6 +349,286 @@ impl SpecController {
         draft_kv.set_commit(new_len.min(draft_kv.len()));
 
         Ok(SpecRound::Emitted { tokens: emitted, drafted: k_eff, accepted: m })
+    }
+
+    /// Longest-valid-prefix acceptance over verify logits rows
+    /// `row_base .. row_base + drafts.len() + 1` (draft distributions
+    /// for rejection sampling start at `dist_base`). Returns the
+    /// emitted tokens and the number of accepted drafts — identical
+    /// math whether the rows came from a per-sequence `forward_block`
+    /// or a fused `verify_batch` walk.
+    fn accept(
+        &mut self,
+        verify: &BlockScratch,
+        row_base: usize,
+        drafts: &[u32],
+        dist_base: usize,
+        mode: Sampling,
+        rng: &mut XorShift,
+    ) -> (Vec<u32>, usize) {
+        let k_eff = drafts.len();
+        let greedy = matches!(mode, Sampling::Greedy);
+        let mut emitted: Vec<u32> = Vec::with_capacity(k_eff + 1);
+        let mut m = 0usize;
+        if greedy {
+            // exact-match acceptance: every emitted token IS the greedy
+            // target token, so output is identical to plain decode
+            while m < k_eff {
+                let t_tok = argmax(verify.logits.row(row_base + m)) as u32;
+                emitted.push(t_tok);
+                if drafts[m] != t_tok {
+                    break;
+                }
+                m += 1;
+            }
+            if m == k_eff {
+                emitted.push(argmax(verify.logits.row(row_base + k_eff)) as u32);
+            }
+        } else {
+            // rejection sampling: accept d ~ q with prob min(1, p/q);
+            // on reject, sample the correction from max(p - q, 0)
+            for i in 0..k_eff {
+                dist_probs(verify.logits.row(row_base + i), mode, &mut self.dist_t);
+                let d = drafts[i] as usize;
+                let p_t = self.dist_t[d] as f64;
+                let p_d = (self.draft_dists[dist_base + i][d] as f64).max(1e-12);
+                if (rng.next_f32() as f64) < (p_t / p_d).min(1.0) {
+                    emitted.push(drafts[i]);
+                    m += 1;
+                    continue;
+                }
+                let mut residual_mass = 0.0f64;
+                for (t, q) in self.dist_t.iter_mut().zip(&self.draft_dists[dist_base + i]) {
+                    *t = (*t - *q).max(0.0);
+                    residual_mass += *t as f64;
+                }
+                if residual_mass <= 0.0 {
+                    // distributions coincide numerically: resample p
+                    dist_probs(verify.logits.row(row_base + i), mode, &mut self.dist_t);
+                }
+                emitted.push(sample_from_probs(&self.dist_t, rng));
+                break;
+            }
+            if m == k_eff {
+                dist_probs(verify.logits.row(row_base + k_eff), mode, &mut self.dist_t);
+                emitted.push(sample_from_probs(&self.dist_t, rng));
+            }
+        }
+        (emitted, m)
+    }
+
+    /// One speculative round for a whole fleet: catch-up and drafting
+    /// run per sequence (each on its own tier and KV), then every
+    /// participant's k+1-position verify block is fused into ONE
+    /// target weight walk via [`Transformer::verify_batch`], and
+    /// acceptance + rollback finish independently per sequence.
+    ///
+    /// Per-sequence outcomes mirror [`Self::round`] exactly: a
+    /// sequence that cannot speculate this round reports `Skip` or
+    /// `Fallback` without holding up the rest of the fleet, and greedy
+    /// emission is token-identical to running `round` per sequence
+    /// (rejection sampling draws from the shared RNG in fleet order,
+    /// so temperature streams are well-formed but not stream-identical
+    /// to the per-sequence schedule).
+    pub fn round_fleet(
+        &mut self,
+        target: &Transformer,
+        seqs: &mut [FleetSeq],
+        rng: &mut XorShift,
+        verify: &mut BlockScratch,
+    ) -> Result<FleetOutcome> {
+        let n = seqs.len();
+        let mut rounds: Vec<Option<SpecRound>> = (0..n).map(|_| None).collect();
+        let mut pending: Vec<FleetPending> = Vec::with_capacity(n);
+
+        // shared-pool budget for the WHOLE fleet, reserved before any
+        // sequence mutates anything: every participant's catch-up +
+        // draft + verify appends are counted against the pool's
+        // current headroom, so the fused walk can never fail a
+        // batch-mate mid-flight. A sequence that does not fit falls
+        // back alone; the rest keep speculating.
+        let mut reserved = 0usize;
+        let mut dist_next = 0usize;
+        for (i, fs) in seqs.iter_mut().enumerate() {
+            let t_len = fs.target_kv.len();
+            debug_assert_eq!(
+                t_len + 1,
+                fs.prompt.len() + fs.generated.len(),
+                "pending-token invariant"
+            );
+            let k_eff = fs
+                .k
+                .min(self.k)
+                .min(fs.target_kv.capacity().saturating_sub(t_len + 1))
+                .min(fs.draft_kv.capacity().saturating_sub(t_len))
+                .min(fs.max_emit.saturating_sub(1));
+            if k_eff == 0 {
+                rounds[i] = Some(SpecRound::Skip);
+                continue;
+            }
+            if fs.draft_kv.len() > t_len {
+                // a caller rewound the target externally: resync
+                fs.draft_kv.truncate(t_len);
+            }
+            let gap = t_len - fs.draft_kv.len();
+            if let Some(pool) = fs.target_kv.pool() {
+                let needed = fs.target_kv.blocks_needed(k_eff + 1)
+                    + fs.draft_kv.blocks_needed(gap + k_eff);
+                if reserved + needed > pool.free_blocks() {
+                    rounds[i] = Some(SpecRound::Fallback);
+                    continue;
+                }
+                reserved += needed;
+            }
+            pending.push(FleetPending {
+                idx: i,
+                t_len,
+                k_eff,
+                drafts: Vec::with_capacity(k_eff),
+                dist_base: dist_next,
+                row_base: 0,
+            });
+            dist_next += k_eff;
+        }
+        while self.draft_dists.len() < dist_next {
+            self.draft_dists.push(Vec::new());
+        }
+
+        // catch-up + draft, per sequence on its own tier
+        let mut p = 0;
+        while p < pending.len() {
+            let (idx, t_len, k_eff, dist_base) = {
+                let pend = &pending[p];
+                (pend.idx, pend.t_len, pend.k_eff, pend.dist_base)
+            };
+            let fs = &mut seqs[idx];
+            let tier = fs.tier;
+            let d_len = fs.draft_kv.len();
+            if d_len < t_len {
+                let feed: Vec<u32> = (d_len..t_len)
+                    .map(|pos| {
+                        if pos < fs.prompt.len() {
+                            fs.prompt[pos]
+                        } else {
+                            fs.generated[pos - fs.prompt.len()]
+                        }
+                    })
+                    .collect();
+                let chunk = self.catch_chunk;
+                match self.drafts[tier].prefill_block(&feed, fs.draft_kv, &mut self.block, chunk)
+                {
+                    Ok(()) => {}
+                    Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                        // partial catch-up stays (committed history)
+                        rounds[idx] = Some(SpecRound::Fallback);
+                        pending.remove(p);
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            fs.draft_kv.set_commit(t_len + 1);
+            fs.target_kv.set_commit(t_len + 1);
+
+            let greedy = matches!(fs.mode, Sampling::Greedy);
+            let last = *fs.generated.last().expect("decode-phase sequence has a pending token");
+            let mut cur = last;
+            let mut failed = false;
+            for di in 0..k_eff {
+                match self.drafts[tier].decode_step(cur, fs.draft_kv, &mut self.scratch) {
+                    Ok(()) => {}
+                    Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                        fs.draft_kv.truncate(t_len);
+                        rounds[idx] = Some(SpecRound::Fallback);
+                        failed = true;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+                let tok = if greedy {
+                    argmax(&self.scratch.logits) as u32
+                } else {
+                    let dist = &mut self.draft_dists[dist_base + di];
+                    dist_probs(&self.scratch.logits, fs.mode, dist);
+                    sample_from_probs(&self.draft_dists[dist_base + di], rng)
+                };
+                pending[p].drafts.push(tok);
+                cur = tok;
+            }
+            if failed {
+                pending.remove(p);
+            } else {
+                p += 1;
+            }
+        }
+
+        if pending.is_empty() {
+            let rounds = rounds
+                .into_iter()
+                .map(|r| r.expect("every non-participant was resolved"))
+                .collect();
+            return Ok(FleetOutcome { rounds, verify_walks: 0, verified_seqs: 0 });
+        }
+
+        // ONE fused target walk verifies every participant
+        let mut vtok: Vec<u32> = Vec::new();
+        let mut groups: Vec<usize> = Vec::with_capacity(pending.len());
+        for pend in pending.iter_mut() {
+            pend.row_base = vtok.len();
+            let fs = &seqs[pend.idx];
+            vtok.push(*fs.generated.last().expect("pending token"));
+            vtok.extend_from_slice(&pend.drafts);
+            groups.push(pend.k_eff + 1);
+        }
+        {
+            let mut kv_refs: Vec<&mut KvCache> = Vec::with_capacity(pending.len());
+            let mut want: Vec<bool> = vec![false; n];
+            for pend in &pending {
+                want[pend.idx] = true;
+            }
+            for (i, fs) in seqs.iter_mut().enumerate() {
+                if want[i] {
+                    kv_refs.push(&mut *fs.target_kv);
+                }
+            }
+            match target.verify_batch(&vtok, &groups, &mut kv_refs, verify) {
+                Ok(()) => {}
+                Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                    // verify_batch pre-flights before mutating: targets
+                    // are untouched, only drafts need rewinding
+                    for pend in &pending {
+                        seqs[pend.idx].draft_kv.truncate(pend.t_len);
+                        rounds[pend.idx] = Some(SpecRound::Fallback);
+                    }
+                    let rounds = rounds
+                        .into_iter()
+                        .map(|r| r.expect("every sequence resolved"))
+                        .collect();
+                    return Ok(FleetOutcome { rounds, verify_walks: 0, verified_seqs: 0 });
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        // per-sequence acceptance + rollback (independent scatters)
+        let verified = pending.len() as u32;
+        for pend in &pending {
+            let mode = seqs[pend.idx].mode;
+            let (emitted, m) =
+                self.accept(verify, pend.row_base, &pend.drafts, pend.dist_base, mode, rng);
+            let fs = &mut seqs[pend.idx];
+            let new_len = pend.t_len + 1 + m;
+            fs.target_kv.truncate(new_len);
+            fs.draft_kv.truncate(new_len.min(fs.draft_kv.len()));
+            fs.target_kv.set_commit(new_len);
+            fs.draft_kv.set_commit(new_len.min(fs.draft_kv.len()));
+            rounds[pend.idx] =
+                Some(SpecRound::Emitted { tokens: emitted, drafted: pend.k_eff, accepted: m });
+        }
+
+        let rounds =
+            rounds.into_iter().map(|r| r.expect("every sequence resolved")).collect();
+        Ok(FleetOutcome { rounds, verify_walks: 1, verified_seqs: verified })
     }
 }
 

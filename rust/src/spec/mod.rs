@@ -23,9 +23,17 @@
 //! greedy decode on the same backend — speculation changes *latency*,
 //! never *content* (enforced by `tests/spec_decode.rs` across KV
 //! dtypes and executor thread counts).
+//!
+//! Two serving-scale extensions ride on the same round machinery:
+//! **fleet rounds** (`SpecController::round_fleet`, engine knob
+//! `GQSA_SPEC_BATCH`) fuse every speculating sequence's verify block
+//! into one `Transformer::verify_batch` target weight walk, and
+//! **tier hopping** (`GQSA_SPEC_TIER_ADAPTIVE`) moves each sequence
+//! along the W2S75 → W2S50 → W4S75 draft ladder from its measured
+//! acceptance rate.
 
 pub mod controller;
 pub mod tier;
 
-pub use controller::{SpecController, SpecRound};
+pub use controller::{FleetOutcome, FleetSeq, SpecController, SpecRound};
 pub use tier::{build_draft, DraftConfig};

@@ -67,6 +67,25 @@ impl DraftConfig {
         format!("w{}s{:.0}g{}", self.bits, self.sparsity * 100.0, self.group)
     }
 
+    /// The canonical tier-hop ladder, cheapest → most accurate:
+    /// W2S75 (least weight traffic) → W2S50 → W4S75. The adaptive
+    /// controller hops a sequence up the ladder when its acceptance
+    /// rate collapses and back down after sustained clean sweeps.
+    pub fn ladder() -> Vec<Self> {
+        vec![
+            Self { bits: 2, sparsity: 0.75, group: 16 },
+            Self { bits: 2, sparsity: 0.5, group: 16 },
+            Self { bits: 4, sparsity: 0.75, group: 16 },
+        ]
+    }
+
+    /// Ladder position of this config, when it is a canonical rung.
+    /// A custom draft config (e.g. `w8s50`) is not on the ladder, so
+    /// tier hopping degrades to a single fixed tier for it.
+    pub fn ladder_index(&self) -> Option<usize> {
+        Self::ladder().iter().position(|c| c == self)
+    }
+
     /// Largest group size ≤ `self.group` that divides `cols` (the GQS
     /// encoder requires whole groups per row).
     fn group_for(&self, cols: usize) -> usize {

@@ -6,7 +6,11 @@
 //!   at the vector level is asserted in model/kv_cache.rs unit tests),
 //! * the block pool never leaks or double-frees across 1k simulated
 //!   request lifecycles, and recycled blocks are poisoned so stale
-//!   data cannot leak between requests.
+//!   data cannot leak between requests,
+//! * speculative rollback (commit floor -> overshoot -> truncate) on
+//!   one sequence never mutates sealed shared-prefix blocks another
+//!   sequence adopted — even when divergence truncates INTO the
+//!   shared region (the CoW path).
 
 use std::sync::Arc;
 
@@ -342,6 +346,102 @@ fn shared_prefix_lifecycle_1k_iterations_no_leak_no_stale_reuse() {
     assert_eq!(s.blocks_in_use, 0, "lifecycle leaked blocks: {s:?}");
     assert_eq!(s.allocs, s.frees, "alloc/free imbalance after teardown: {s:?}");
     assert!(s.allocs > 100, "lifecycles never exercised the pool (allocs {})", s.allocs);
+}
+
+#[test]
+fn speculative_rollback_on_one_sequence_never_touches_shared_prefix_blocks() {
+    // batched-verify audit (fleet speculation): sequences A and B adopt
+    // the SAME sealed shared-prefix blocks; A then runs a speculative
+    // round — commit floor, overshoot past a block boundary, truncate
+    // back — and finally diverges INTO the shared region (the CoW
+    // path). B's view of the shared payload must stay byte-identical
+    // throughout, and later adopters must still see the original bytes:
+    // truncate is strictly local, shared blocks are dropped, never
+    // mutated.
+    let n_layers = 1;
+    let d = 2 * 8; // n_heads * head_dim
+    for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+        let pool = KvBlockPool::new(2, 8, dtype, 32);
+        let mut tree = PrefixTree::new(n_layers);
+        // 2B+1 tokens: the lazy-seal rule needs the 33rd append to seal
+        // the second block, so exactly two blocks are publishable
+        let prompt: Vec<u32> = (0..2 * KV_BLOCK + 1).map(|i| (i % 3) as u32).collect();
+        // deterministic K/V as a function of (token, position)
+        let fill = |kv: &mut KvCache, tokens: &[u32], from: usize| {
+            for (t, &tok) in tokens.iter().enumerate() {
+                let p = from + t;
+                let k: Vec<f32> =
+                    (0..d).map(|i| tok as f32 + (p * d + i) as f32 * 0.01).collect();
+                let v: Vec<f32> = k.iter().map(|x| -x).collect();
+                for l in &mut kv.layers {
+                    l.append(&k, &v).unwrap();
+                }
+            }
+        };
+        let snap = |kv: &KvCache| -> Vec<Vec<f32>> {
+            let mut scratch = Vec::new();
+            (0..kv.layers[0].n_segments())
+                .map(|seg| kv.layers[0].key_segment(0, seg, &mut scratch).to_vec())
+                .collect()
+        };
+        // publish two sealed prompt blocks, then drop the publisher
+        {
+            let mut kv = KvCache::paged(n_layers, &pool, 8 * KV_BLOCK);
+            fill(&mut kv, &prompt, 0);
+            tree.insert(&prompt, &kv.share_prefix_blocks(2));
+        }
+        let hit = tree.lookup(&prompt, blocks_for(prompt.len()));
+        assert_eq!(hit.len(), 2, "{dtype:?}: publisher blocks not cached");
+        let mut a = KvCache::paged(n_layers, &pool, 8 * KV_BLOCK);
+        a.adopt_prefix(&hit);
+        let mut b = KvCache::paged(n_layers, &pool, 8 * KV_BLOCK);
+        b.adopt_prefix(&hit);
+        // both grow private tails past the adopted region (the hit
+        // covers 2 blocks = 2B positions, one short of the prompt)
+        let tail_from = a.len();
+        assert_eq!(tail_from, 2 * KV_BLOCK, "{dtype:?}: adoption depth");
+        fill(&mut a, &[40, 41, 42, 43, 44], tail_from);
+        fill(&mut b, &[50, 51, 52, 53, 54], tail_from);
+        let before = snap(&b);
+
+        // phase 1: engine-shaped speculative round on A — floor at the
+        // current length, overshoot seals a (private) block, roll back
+        let floor = a.len();
+        a.set_commit(floor);
+        let overshoot: Vec<u32> = (0..KV_BLOCK).map(|i| (i % 3) as u32).collect();
+        fill(&mut a, &overshoot, floor);
+        assert!(
+            dtype == KvDtype::F32 || a.shadow_blocks() > 0,
+            "{dtype:?}: no shadow kept across the overshoot seal"
+        );
+        a.truncate(floor);
+        a.set_commit(floor);
+        assert_eq!(snap(&b), before, "{dtype:?}: rollback mutated B's shared view");
+
+        // phase 2: A diverges INTO the shared region — CoW must copy,
+        // not write through the shared payload
+        a.truncate(KV_BLOCK + 3);
+        fill(&mut a, &[1, 2, 0, 1], KV_BLOCK + 3);
+        assert_eq!(snap(&b), before, "{dtype:?}: CoW divergence mutated B's shared view");
+
+        // a fresh adopter still sees the ORIGINAL published bytes
+        let hit2 = tree.lookup(&prompt, blocks_for(prompt.len()));
+        assert_eq!(hit2.len(), 2, "{dtype:?}: shared blocks vanished from the tree");
+        let mut c = KvCache::paged(n_layers, &pool, 8 * KV_BLOCK);
+        c.adopt_prefix(&hit2);
+        assert_eq!(snap(&c), before[..2].to_vec(), "{dtype:?}: cached payload changed");
+
+        // pool reconciliation and clean teardown
+        let s = pool.stats();
+        assert_eq!(s.allocs - s.frees, s.blocks_in_use as u64, "{dtype:?}: imbalance {s:?}");
+        drop(a);
+        drop(b);
+        drop(c);
+        while tree.evict_lru() > 0 {}
+        let s = pool.stats();
+        assert_eq!(s.blocks_in_use, 0, "{dtype:?}: leaked blocks {s:?}");
+        assert_eq!(s.allocs, s.frees, "{dtype:?}: alloc/free imbalance {s:?}");
+    }
 }
 
 #[test]

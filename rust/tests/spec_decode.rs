@@ -7,7 +7,12 @@
 //! * KV pressure during drafting falls back cleanly to plain decode
 //!   (same tokens, no errors, no leaked blocks);
 //! * rejection-sampled (temperature) speculation completes and stays
-//!   within the vocab.
+//!   within the vocab;
+//! * the fused fleet-verify schedule (`spec_batch`) is token-identical
+//!   to the per-sequence schedule at concurrency {2, 8} across the
+//!   same dtype/thread matrix, amortizing target walks, and a mixed
+//!   fleet (speculating + plain + mid-prefill in one tick) completes
+//!   with identical tokens.
 
 use gqsa::coordinator::request::{SamplingCfg, SamplingMode};
 use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
@@ -27,11 +32,13 @@ fn cfg() -> ModelConfig {
     cfg
 }
 
-fn engine(
+fn engine_n(
     spec_k: usize,
     kv_dtype: KvDtype,
     threads: usize,
     pool_blocks: usize,
+    max_batch: usize,
+    spec_batch: bool,
 ) -> EngineCore {
     let cfg = cfg();
     let fp = random_fp(&cfg, 2025);
@@ -40,7 +47,7 @@ fn engine(
         Backend::Native(t),
         &cfg,
         EngineConfig {
-            max_batch: 3,
+            max_batch,
             prefill_chunk: 6,
             kv_capacity: 96,
             kv_paged: true,
@@ -49,10 +56,20 @@ fn engine(
             threads,
             decomposition: Decomposition::StreamK,
             spec_k,
+            spec_batch,
             ..Default::default()
         },
     )
     .unwrap()
+}
+
+fn engine(
+    spec_k: usize,
+    kv_dtype: KvDtype,
+    threads: usize,
+    pool_blocks: usize,
+) -> EngineCore {
+    engine_n(spec_k, kv_dtype, threads, pool_blocks, 3, false)
 }
 
 fn run_tokens(e: &mut EngineCore) -> Vec<Vec<u32>> {
@@ -141,6 +158,87 @@ fn temperature_spec_decode_completes_with_rejection_sampling() {
         let s = e.kv_pool().unwrap().stats();
         assert_eq!(s.blocks_in_use, e.prefix_cached_blocks(), "{mode:?}: leaked KV blocks");
     }
+}
+
+fn run_fleet(e: &mut EngineCore, c: usize) -> Vec<Vec<u32>> {
+    // c concurrent requests with staggered prompt lengths and budgets,
+    // all crossing KV block boundaries at some point
+    for i in 0..c as u64 {
+        let plen = 4 + (i as usize * 3) % 15;
+        let prompt: Vec<u32> =
+            (0..plen).map(|j| ((j as u64 * 7 + i * 13) % 60) as u32).collect();
+        e.submit(Request::new(i, prompt, 14 + (i as usize % 5)));
+    }
+    let mut out = e.run_to_completion().unwrap();
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn batched_fleet_greedy_identical_to_per_seq_across_matrix() {
+    // THE tentpole property test: at concurrency {2, 8} × KV dtypes
+    // {f32, q8, q4} × executor threads {1, 4}, the fused fleet-verify
+    // schedule emits exactly the per-sequence schedule's greedy tokens
+    for c in [2usize, 8] {
+        for dtype in [KvDtype::F32, KvDtype::Q8, KvDtype::Q4] {
+            for threads in [1usize, 4] {
+                let per = run_fleet(&mut engine_n(4, dtype, threads, 0, c, false), c);
+                let mut e = engine_n(4, dtype, threads, 0, c, true);
+                let fleet = run_fleet(&mut e, c);
+                assert_eq!(
+                    per, fleet,
+                    "c={c} {dtype:?} threads={threads}: fleet verify diverged"
+                );
+                // the fused schedule really amortized target walks
+                assert!(
+                    e.metrics.spec_batch_rounds > 0,
+                    "c={c} {dtype:?} threads={threads}: fleet path never engaged"
+                );
+                assert!(
+                    e.metrics.spec_verify_walks < e.metrics.spec_rounds,
+                    "c={c} {dtype:?}: walks={} not amortized over rounds={}",
+                    e.metrics.spec_verify_walks,
+                    e.metrics.spec_rounds
+                );
+                let s = e.kv_pool().unwrap().stats();
+                assert_eq!(
+                    s.blocks_in_use,
+                    e.prefix_cached_blocks(),
+                    "c={c} {dtype:?}: leaked KV blocks {s:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_fleet_tick_speculating_plain_and_prefilling_together() {
+    // one engine holds, simultaneously: speculating sequences, a
+    // plain-decode sequence (spec opted out), and a sequence still
+    // mid-prefill (45-token prompt at chunk 6 spans ~8 ticks). Tokens
+    // must match the per-sequence schedule exactly, for everyone.
+    let submit = |e: &mut EngineCore| {
+        e.submit(Request::new(1, vec![5, 6, 7, 8], 18));
+        e.submit(Request::new(2, vec![9, 10, 11], 16).with_spec_k(0));
+        e.submit(Request::new(3, (0..45).map(|i| (i % 60) as u32).collect(), 12));
+        e.submit(Request::new(4, vec![13; 7], 18));
+        let mut out = e.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        out.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    let per = submit(&mut engine_n(4, KvDtype::F32, 1, 0, 4, false));
+    let mut e = engine_n(4, KvDtype::F32, 1, 0, 4, true);
+    let fleet = submit(&mut e);
+    assert_eq!(per, fleet, "mixed fleet diverged from per-sequence schedule");
+    assert_eq!(fleet.len(), 4);
+    assert_eq!(fleet[0].len(), 18);
+    assert_eq!(fleet[1].len(), 16);
+    assert_eq!(fleet[2].len(), 12);
+    assert_eq!(fleet[3].len(), 18);
+    assert!(e.metrics.spec_batch_rounds > 0, "fleet path never engaged");
+    assert!(e.metrics.spec_rounds > 0);
+    let s = e.kv_pool().unwrap().stats();
+    assert_eq!(s.blocks_in_use, e.prefix_cached_blocks(), "mixed fleet leaked blocks {s:?}");
 }
 
 #[test]
