@@ -37,6 +37,8 @@ fn main() -> anyhow::Result<()> {
     // Shared-prefix cache: GQSA_PREFIX_CACHE=1 reuses sealed prompt-
     // prefix KV blocks across requests (the repeated prompts below then
     // skip most of their prefill; hit/evict counters land in /report).
+    // Sharding: GQSA_SHARDS=N runs N engine shards behind the prefix-
+    // affinity router; /report then shows the aggregate + per-shard.
     let kv_cfg = EngineConfig::default();
     println!(
         "== native GQS engine (W4S50%, BQPO+E2E-OQP) — kv {} {}, spec {}, prefix cache {} ==",
@@ -51,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     );
     let art2 = art.clone();
     let srv = Server::start(move || {
-        let mut wb = Workbench::new(art2);
+        let mut wb = Workbench::new(art2.clone());
         let model = wb.variant("tiny-llama", "gqsa:w4s50g16")?;
         let cfg = model.cfg.clone();
         EngineCore::new(
@@ -60,6 +62,7 @@ fn main() -> anyhow::Result<()> {
             EngineConfig { max_batch: 4, prefill_chunk: 16, kv_capacity: 160, ..Default::default() },
         )
     });
+    println!("  serving on {} shard(s) (GQSA_SHARDS)", srv.router().n_shards());
     let prompts = ["the ", "ba duke ", "we saw a ", "once there was "];
     let t0 = Instant::now();
     let mut handles = Vec::new();

@@ -257,6 +257,12 @@ pub struct EngineCore {
     block: BlockScratch,
     rng: XorShift,
     finished: Vec<Response>,
+    /// fault injection for the serving layer's error-path tests: when
+    /// set, `tick` completes all of iteration N's work (including
+    /// retirement into `finished`) and THEN returns an error — the
+    /// shape a mid-flight backend failure leaves the engine in. Never
+    /// set in production paths.
+    pub chaos_fail_tick: Option<u64>,
 }
 
 impl EngineCore {
@@ -395,6 +401,7 @@ impl EngineCore {
             block,
             rng: XorShift::new(0xC0FFEE),
             finished: Vec::new(),
+            chaos_fail_tick: None,
         })
     }
 
@@ -446,6 +453,37 @@ impl EngineCore {
     /// Drain finished responses.
     pub fn take_finished(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Remove and return every request still queued for admission.
+    /// Drain support: these requests never touched engine state, so
+    /// replaying them on another shard is trivially exact.
+    pub fn take_waiting(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.waiting).into_iter().map(|(req, _)| req).collect()
+    }
+
+    /// Remove and return admitted-but-unstarted requests: active
+    /// sequences that have not emitted a single token. Whatever prefill
+    /// (or prefix adoption) they ran is discarded and their KV returns
+    /// to the pool — re-running prefill elsewhere is exact because no
+    /// sampled token depends on it yet. Sequences that HAVE emitted
+    /// tokens stay active and finish here with a normal
+    /// [`FinishReason`].
+    pub fn take_unstarted(&mut self) -> Result<Vec<Request>> {
+        let mut out = Vec::new();
+        let mut keep = Vec::with_capacity(self.active.len());
+        for mut seq in std::mem::take(&mut self.active) {
+            if seq.generated.is_empty() && !seq.evicted {
+                // draft_kv (if any) drops with the seq: blocks recycle
+                self.backend.reset_seq(&mut seq.state)?;
+                self.pool.push(seq.state);
+                out.push(seq.req);
+            } else {
+                keep.push(seq);
+            }
+        }
+        self.active = keep;
+        Ok(out)
     }
 
     /// One engine iteration. Returns number of tokens processed.
@@ -1094,6 +1132,11 @@ impl EngineCore {
         }
         self.metrics.add_busy(t0.elapsed());
         self.metrics.set_exec_stats(self.exec.stats());
+        if let Some(n) = self.chaos_fail_tick {
+            if self.metrics.engine_iterations >= n {
+                anyhow::bail!("injected engine failure at tick {n} (chaos_fail_tick)");
+            }
+        }
         Ok(processed)
     }
 

@@ -134,6 +134,67 @@ impl Metrics {
         self.prefix = Some(s);
     }
 
+    /// Fold another engine's counters into this one — the multi-shard
+    /// router's `/report` roll-up. Counters and latency samples sum /
+    /// concatenate; `peak_active_seqs` sums too (shards run
+    /// concurrently, so the fleet-wide peak is bounded by the sum);
+    /// gauge-like KV/prefix/exec snapshots add field-wise so the
+    /// aggregate reads as one big pool. `kv_dtype` keeps the first
+    /// reported value (shards share one config).
+    pub fn merge(&mut self, o: &Metrics) {
+        self.requests_completed += o.requests_completed;
+        self.tokens_prefilled += o.tokens_prefilled;
+        self.tokens_generated += o.tokens_generated;
+        self.engine_iterations += o.engine_iterations;
+        self.busy_us += o.busy_us;
+        self.kv_evictions += o.kv_evictions;
+        self.kv_admission_blocked += o.kv_admission_blocked;
+        self.kv_decode_deferred += o.kv_decode_deferred;
+        self.spec_rounds += o.spec_rounds;
+        self.spec_drafted += o.spec_drafted;
+        self.spec_accepted += o.spec_accepted;
+        self.spec_fallbacks += o.spec_fallbacks;
+        self.spec_draft_readmitted += o.spec_draft_readmitted;
+        self.spec_k_sum += o.spec_k_sum;
+        self.spec_verify_walks += o.spec_verify_walks;
+        self.spec_batch_rounds += o.spec_batch_rounds;
+        self.spec_batch_seqs += o.spec_batch_seqs;
+        self.spec_tier_hops += o.spec_tier_hops;
+        self.peak_active_seqs += o.peak_active_seqs;
+        self.exec.chunks_executed += o.exec.chunks_executed;
+        self.exec.fixup_reductions += o.exec.fixup_reductions;
+        self.exec.worker_busy_us += o.exec.worker_busy_us;
+        self.exec.parallel_calls += o.exec.parallel_calls;
+        self.exec.sequential_calls += o.exec.sequential_calls;
+        if let Some(okv) = &o.kv {
+            let kv = self.kv.get_or_insert_with(Default::default);
+            kv.total_blocks += okv.total_blocks;
+            kv.blocks_in_use += okv.blocks_in_use;
+            kv.peak_in_use += okv.peak_in_use;
+            kv.allocs += okv.allocs;
+            kv.frees += okv.frees;
+            if kv.bytes_per_block == 0 {
+                kv.bytes_per_block = okv.bytes_per_block;
+            }
+            if self.kv_dtype.is_none() {
+                self.kv_dtype = o.kv_dtype;
+            }
+        }
+        if let Some(op) = &o.prefix {
+            let p = self.prefix.get_or_insert_with(Default::default);
+            p.hits += op.hits;
+            p.misses += op.misses;
+            p.hit_blocks += op.hit_blocks;
+            p.hit_positions += op.hit_positions;
+            p.published_blocks += op.published_blocks;
+            p.evicted_blocks += op.evicted_blocks;
+            p.shared_blocks += op.shared_blocks;
+            p.nodes += op.nodes;
+        }
+        self.ttft_samples.extend_from_slice(&o.ttft_samples);
+        self.total_samples.extend_from_slice(&o.total_samples);
+    }
+
     /// Fraction of drafted tokens the target accepted (0 when no
     /// drafting happened yet).
     pub fn spec_acceptance_rate(&self) -> f64 {
@@ -257,5 +318,25 @@ mod tests {
         assert_eq!(m.tokens_generated, 16);
         assert!(m.decode_throughput() > 0.0);
         assert!(m.report().contains("requests=1"));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_latency_samples() {
+        let mut a = Metrics::default();
+        a.record(&RequestMetrics { ttft_us: 1000, total_us: 4000, ..Default::default() }, 4, 8);
+        a.kv_evictions = 2;
+        let mut b = Metrics::default();
+        b.record(&RequestMetrics { ttft_us: 3000, total_us: 6000, ..Default::default() }, 2, 5);
+        b.peak_active_seqs = 3;
+        b.prefix = Some(PrefixStats { hits: 7, misses: 1, ..Default::default() });
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 2);
+        assert_eq!(a.tokens_generated, 13);
+        assert_eq!(a.kv_evictions, 2);
+        assert_eq!(a.peak_active_seqs, 3);
+        assert_eq!(a.prefix.unwrap().hits, 7);
+        // both latency samples survive into the merged summary
+        assert_eq!(a.latency_ms().n, 2);
+        assert!(a.report().contains("requests=2"));
     }
 }

@@ -1,12 +1,13 @@
 //! The serving coordinator — L3 of the stack.
 //!
 //! A vLLM-style (much smaller) continuous-batching engine: a router
-//! admits requests into a bounded queue, the engine core interleaves
-//! chunked prefill and decode across active sequences from a pooled KV
-//! allocator, and a thread-based front-end exposes a blocking
-//! submit/await API. The compute backend is either the rust-native GQS
-//! engine (the paper's kernels) or the PJRT decode artifact (the AOT
-//! jax path) — selected per model at startup.
+//! spreads requests across `GQSA_SHARDS` engine shards by prompt-prefix
+//! affinity (falling back to free-block balance), each engine core
+//! interleaves chunked prefill and decode across active sequences from
+//! its own pooled KV allocator, and a thread-based front-end exposes a
+//! blocking submit/await API. The compute backend is either the
+//! rust-native GQS engine (the paper's kernels) or the PJRT decode
+//! artifact (the AOT jax path) — selected per model at startup.
 //!
 //! NOTE: the offline image vendors no async runtime (see Cargo.toml);
 //! the coordinator uses std threads + mpsc channels, which on this
@@ -16,10 +17,12 @@ pub mod backend;
 pub mod engine_core;
 pub mod metrics;
 pub mod request;
+pub mod router;
 pub mod server;
 
 pub use backend::{Backend, KvMode};
 pub use engine_core::{EngineConfig, EngineCore};
 pub use metrics::{Metrics, RequestMetrics};
 pub use request::{FinishReason, Request, Response, SamplingCfg};
+pub use router::{Router, RouterClient, RouterConfig};
 pub use server::Server;

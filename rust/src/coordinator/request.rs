@@ -104,6 +104,13 @@ pub enum FinishReason {
     CapacityFull,
     /// retired early because the shared KV block pool ran dry
     Evicted,
+    /// the engine shard serving this request hit a fatal error before
+    /// the request produced tokens; no output was generated
+    EngineError,
+    /// rejected at admission: another request with the same id was
+    /// already in flight (the id is the delivery key, so a duplicate
+    /// would orphan the first client's reply)
+    DuplicateId,
 }
 
 #[derive(Clone, Debug)]
@@ -113,6 +120,15 @@ pub struct Response {
     pub timing: RequestTiming,
     pub n_prompt: usize,
     pub finish: FinishReason,
+}
+
+impl Response {
+    /// A typed failure response: no tokens were produced, the finish
+    /// reason says why (`EngineError`, `DuplicateId`). Clients always
+    /// get *a* response on their channel rather than a hangup.
+    pub fn error(id: u64, finish: FinishReason) -> Self {
+        Self { id, tokens: Vec::new(), timing: RequestTiming::default(), n_prompt: 0, finish }
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +144,14 @@ mod tests {
         assert!(r.prefix_cache.is_none());
         assert_eq!(r.clone().with_spec_k(2).spec_k, Some(2));
         assert_eq!(r.with_prefix_cache(false).prefix_cache, Some(false));
+    }
+
+    #[test]
+    fn error_responses_are_typed_and_empty() {
+        let r = Response::error(9, FinishReason::DuplicateId);
+        assert_eq!(r.id, 9);
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.finish, FinishReason::DuplicateId);
+        assert_eq!(Response::error(9, FinishReason::EngineError).finish, FinishReason::EngineError);
     }
 }

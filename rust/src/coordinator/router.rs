@@ -1,0 +1,571 @@
+//! Multi-shard serving: N engine shards behind a prefix-affinity
+//! front-end router.
+//!
+//! Every layer so far scales ONE engine on one executor pool and one KV
+//! block pool. This module stands up `GQSA_SHARDS` independent
+//! [`EngineCore`]s — each with its own executor lanes, block pool, and
+//! prefix trees — and routes requests across them:
+//!
+//! 1. **Prefix affinity.** A request's prompt is fingerprinted at block
+//!    granularity ([`prefix_fingerprint`] — the first radix-tree edge
+//!    key), and the router pins each fingerprint to the shard that
+//!    first served it. Requests sharing a prompt prefix therefore land
+//!    on the shard already holding those sealed blocks, turning the
+//!    per-engine radix tree into a shard-affine distributed prefix
+//!    cache (no cross-shard block traffic needed — affinity makes the
+//!    local tree sufficient).
+//! 2. **Free-block balancing.** Prompts too short to fingerprint, and
+//!    first-seen fingerprints, go to the shard with the most free KV
+//!    blocks (ties: fewest queued requests, then lowest index).
+//! 3. **Drain / restart with admission replay.** [`Router::drain`]
+//!    stops routing to a shard and pulls back every request that has
+//!    not emitted a token yet (queued or admitted-but-unstarted);
+//!    those are resubmitted to the surviving shards with their reply
+//!    channels intact, so clients notice nothing. In-flight sequences
+//!    finish on the draining shard with a normal visible
+//!    [`FinishReason`]. [`Router::restart`] re-enables the shard,
+//!    respawning its engine thread if it died.
+//!
+//! The shard loop is the (bug-fixed) engine loop that used to live in
+//! `server.rs`: it drains its whole control-message backlog (bounded)
+//! before every tick instead of admitting one request per tick, it
+//! delivers finished work and fails the rest with a typed
+//! `EngineError` response when a tick errors instead of silently
+//! dropping both, and it rejects duplicate request ids with a typed
+//! `DuplicateId` response instead of orphaning the first client's
+//! reply channel.
+//!
+//! With one shard (the default) the router is exactly the old
+//! single-engine server: one engine thread, same admission order, same
+//! tokens. (std threads + mpsc — no async runtime is vendored in this
+//! image; see coordinator/mod.rs.)
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::engine_core::EngineCore;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{FinishReason, Request, Response};
+use crate::prefix::prefix_fingerprint;
+
+/// Shard-count config. `GQSA_SHARDS` (default 1 — the single-engine
+/// path, bit-identical to the pre-shard server).
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    pub shards: usize,
+}
+
+impl RouterConfig {
+    pub fn from_env() -> Self {
+        let shards = std::env::var("GQSA_SHARDS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
+        Self { shards }
+    }
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+/// Builder the router calls ON each shard's thread (PJRT handles are
+/// not `Send`, so engines are constructed where they live). The shard
+/// index parameterizes per-shard config if a caller wants it.
+type BuildFn = dyn Fn(usize) -> Result<EngineCore> + Send + Sync;
+
+/// Request ids currently awaiting a response anywhere in the fleet.
+type InflightSet = Arc<Mutex<HashSet<u64>>>;
+
+/// Reply channel for one request. Delivery unregisters the request id
+/// from the router's in-flight set (when attached), so ids become
+/// reusable the moment their response is sent — never before.
+pub(crate) struct ReplySender {
+    tx: mpsc::Sender<Response>,
+    inflight: Option<(InflightSet, u64)>,
+}
+
+impl ReplySender {
+    fn send(&self, resp: Response) {
+        if let Some((set, id)) = &self.inflight {
+            lock(set).remove(id);
+        }
+        let _ = self.tx.send(resp);
+    }
+}
+
+enum ShardMsg {
+    Submit(Request, ReplySender),
+    Report(mpsc::Sender<String>),
+    Metrics(mpsc::Sender<Metrics>),
+    /// pull back every request that has not emitted a token (queued +
+    /// admitted-but-unstarted), with its reply channel, for replay
+    Drain(mpsc::Sender<Vec<(Request, ReplySender)>>),
+    Shutdown,
+}
+
+/// Live gauges a shard's engine thread publishes for the routing
+/// decision (reading them must not block on the engine loop).
+struct ShardGauges {
+    alive: AtomicBool,
+    /// free KV blocks after the last tick (usize::MAX in slab mode,
+    /// which makes slab shards tie and fall through to queue depth)
+    free_blocks: AtomicUsize,
+    /// waiting + active requests after the last tick
+    queued: AtomicUsize,
+}
+
+struct Shard {
+    tx: mpsc::Sender<ShardMsg>,
+    handle: Option<JoinHandle<()>>,
+    gauges: Arc<ShardGauges>,
+    draining: bool,
+}
+
+/// A poisoned lock here only means another thread panicked mid-update
+/// of routing bookkeeping; routing state stays usable, so recover the
+/// guard instead of cascading the panic into every client.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Control messages drained per engine tick. Bounded so a submit flood
+/// keeps the engine ticking (admission stays O(cap) per iteration)
+/// while a burst still admits in ONE tick instead of one-per-tick.
+const DRAIN_CAP: usize = 256;
+
+fn spawn_shard(idx: usize, build: Arc<BuildFn>) -> Shard {
+    let (tx, rx) = mpsc::channel::<ShardMsg>();
+    let gauges = Arc::new(ShardGauges {
+        alive: AtomicBool::new(true),
+        free_blocks: AtomicUsize::new(usize::MAX),
+        queued: AtomicUsize::new(0),
+    });
+    let g = Arc::clone(&gauges);
+    let handle = std::thread::spawn(move || {
+        match build(idx) {
+            Ok(mut engine) => shard_loop(idx, &mut engine, &rx, &g),
+            Err(e) => eprintln!("shard[{idx}] build failed: {e:#}"),
+        }
+        g.alive.store(false, Ordering::Release);
+        // unrouted messages still in the channel get typed failures
+        // rather than silent sender drops
+        while let Ok(msg) = rx.try_recv() {
+            if let ShardMsg::Submit(req, reply) = msg {
+                reply.send(Response::error(req.id, FinishReason::EngineError));
+            }
+        }
+    });
+    Shard { tx, handle: Some(handle), gauges, draining: false }
+}
+
+/// The per-shard engine loop (previously `Server`'s loop, with its
+/// three delivery bugs fixed — see the module docs).
+fn shard_loop(
+    idx: usize,
+    engine: &mut EngineCore,
+    rx: &mpsc::Receiver<ShardMsg>,
+    gauges: &ShardGauges,
+) {
+    let mut pending: HashMap<u64, ReplySender> = HashMap::new();
+    loop {
+        // Gather control messages: block for one only when idle, then
+        // drain the backlog (bounded) BEFORE ticking, so a burst of N
+        // submits is admitted together instead of one per tick.
+        let mut msgs: Vec<ShardMsg> = Vec::new();
+        if !engine.has_work() {
+            match rx.recv() {
+                Ok(m) => msgs.push(m),
+                Err(_) => break, // router gone
+            }
+        }
+        let mut disconnected = false;
+        while msgs.len() < DRAIN_CAP {
+            match rx.try_recv() {
+                Ok(m) => msgs.push(m),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        let mut shutdown = false;
+        for msg in msgs {
+            match msg {
+                ShardMsg::Submit(req, reply) => {
+                    if pending.contains_key(&req.id) {
+                        // duplicate id: the first client keeps its
+                        // reply slot; the duplicate gets a typed
+                        // rejection instead of silently stealing it
+                        reply.send(Response::error(req.id, FinishReason::DuplicateId));
+                    } else {
+                        pending.insert(req.id, reply);
+                        engine.submit(req);
+                    }
+                }
+                ShardMsg::Report(reply) => {
+                    let _ = reply.send(engine.metrics.report());
+                }
+                ShardMsg::Metrics(reply) => {
+                    let _ = reply.send(engine.metrics.clone());
+                }
+                ShardMsg::Drain(reply) => {
+                    let mut reqs = engine.take_waiting();
+                    match engine.take_unstarted() {
+                        Ok(more) => reqs.extend(more),
+                        // a failed KV reset strands those sequences
+                        // here; they still finish via the normal loop
+                        Err(e) => eprintln!("shard[{idx}] drain reset failed: {e:#}"),
+                    }
+                    let out: Vec<(Request, ReplySender)> = reqs
+                        .into_iter()
+                        .filter_map(|req| pending.remove(&req.id).map(|r| (req, r)))
+                        .collect();
+                    let _ = reply.send(out);
+                }
+                ShardMsg::Shutdown => shutdown = true,
+            }
+        }
+        if shutdown || disconnected {
+            // deliver anything already finished before the pending
+            // senders drop (clients would otherwise see a spurious
+            // error for completed work)
+            for resp in engine.take_finished() {
+                if let Some(reply) = pending.remove(&resp.id) {
+                    reply.send(resp);
+                }
+            }
+            break;
+        }
+        if engine.has_work() {
+            match engine.tick() {
+                Ok(_) => {
+                    for resp in engine.take_finished() {
+                        if let Some(reply) = pending.remove(&resp.id) {
+                            reply.send(resp);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("shard[{idx}] engine error: {e:#}");
+                    // sequences that completed in (or before) the
+                    // erroring tick still get their real responses;
+                    // everything else fails loudly with a typed
+                    // EngineError instead of a dropped sender
+                    for resp in engine.take_finished() {
+                        if let Some(reply) = pending.remove(&resp.id) {
+                            reply.send(resp);
+                        }
+                    }
+                    for (id, reply) in pending.drain() {
+                        reply.send(Response::error(id, FinishReason::EngineError));
+                    }
+                    break;
+                }
+            }
+        }
+        gauges.free_blocks.store(
+            engine.kv_pool().map_or(usize::MAX, |p| p.free_blocks()),
+            Ordering::Relaxed,
+        );
+        gauges.queued.store(engine.n_active() + engine.n_waiting(), Ordering::Relaxed);
+    }
+}
+
+struct Inner {
+    shards: Mutex<Vec<Shard>>,
+    /// prompt-prefix fingerprint -> shard that first served it
+    affinity: Mutex<HashMap<u64, usize>>,
+    inflight: InflightSet,
+    build: Arc<BuildFn>,
+}
+
+impl Inner {
+    /// Pick the target shard: affinity first, free-block balance
+    /// otherwise. Only live (non-draining, thread-alive) shards are
+    /// candidates; a stale affinity entry pointing at a dead/draining
+    /// shard is re-pinned to the balanced pick.
+    fn route(&self, req: &Request) -> Result<usize> {
+        let shards = lock(&self.shards);
+        let live: Vec<usize> = shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.draining && s.gauges.alive.load(Ordering::Acquire))
+            .map(|(i, _)| i)
+            .collect();
+        anyhow::ensure!(!live.is_empty(), "no live shard to route to (all draining or dead)");
+        let balanced = |candidates: &[usize]| -> usize {
+            *candidates
+                .iter()
+                .max_by_key(|&&i| {
+                    let g = &shards[i].gauges;
+                    (
+                        g.free_blocks.load(Ordering::Relaxed),
+                        std::cmp::Reverse(g.queued.load(Ordering::Relaxed)),
+                        std::cmp::Reverse(i),
+                    )
+                })
+                .expect("candidates non-empty")
+        };
+        match prefix_fingerprint(&req.prompt) {
+            Some(fp) => {
+                let mut aff = lock(&self.affinity);
+                if let Some(&s) = aff.get(&fp) {
+                    if live.contains(&s) {
+                        return Ok(s);
+                    }
+                }
+                let s = balanced(&live);
+                aff.insert(fp, s);
+                Ok(s)
+            }
+            None => Ok(balanced(&live)),
+        }
+    }
+
+    /// Route and deliver `req` to a shard. A shard whose thread died
+    /// mid-send is marked dead and the request re-routes; when no live
+    /// shard remains the client gets a typed `EngineError` response.
+    fn dispatch(&self, req: Request, reply: ReplySender) {
+        let mut req = req;
+        let mut reply = reply;
+        loop {
+            let target = match self.route(&req) {
+                Ok(t) => t,
+                Err(_) => {
+                    reply.send(Response::error(req.id, FinishReason::EngineError));
+                    return;
+                }
+            };
+            let tx = lock(&self.shards)[target].tx.clone();
+            match tx.send(ShardMsg::Submit(req, reply)) {
+                Ok(()) => return,
+                Err(mpsc::SendError(ShardMsg::Submit(r, rep))) => {
+                    // each failure permanently removes one candidate,
+                    // so this terminates
+                    lock(&self.shards)[target].gauges.alive.store(false, Ordering::Release);
+                    req = r;
+                    reply = rep;
+                }
+                Err(_) => unreachable!("send error returns the submitted message"),
+            }
+        }
+    }
+
+    /// Fire-and-forget submit; duplicate in-flight ids are rejected
+    /// with a typed response on the returned channel.
+    fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut inflight = lock(&self.inflight);
+            if !inflight.insert(req.id) {
+                let _ = tx.send(Response::error(req.id, FinishReason::DuplicateId));
+                return rx;
+            }
+        }
+        let reply =
+            ReplySender { tx, inflight: Some((Arc::clone(&self.inflight), req.id)) };
+        self.dispatch(req, reply);
+        rx
+    }
+
+    /// One structured metrics snapshot per shard (Default for a shard
+    /// whose thread is gone).
+    fn shard_metrics(&self) -> Vec<Metrics> {
+        let txs: Vec<mpsc::Sender<ShardMsg>> =
+            lock(&self.shards).iter().map(|s| s.tx.clone()).collect();
+        txs.into_iter()
+            .map(|tx| {
+                let (mtx, mrx) = mpsc::channel();
+                if tx.send(ShardMsg::Metrics(mtx)).is_ok() {
+                    mrx.recv().unwrap_or_default()
+                } else {
+                    Metrics::default()
+                }
+            })
+            .collect()
+    }
+
+    /// The `/report` string: with one shard, exactly the engine's own
+    /// report (the pre-shard format); with N, an aggregate roll-up
+    /// line followed by per-shard reports.
+    fn metrics_report(&self) -> String {
+        let per = self.shard_metrics();
+        if per.len() == 1 {
+            return per.into_iter().next().expect("one shard").report();
+        }
+        let mut agg = Metrics::default();
+        for m in &per {
+            agg.merge(m);
+        }
+        let mut out = format!("shards={} | {}", per.len(), agg.report());
+        let shards = lock(&self.shards);
+        for (i, m) in per.iter().enumerate() {
+            let state = if !shards[i].gauges.alive.load(Ordering::Acquire) {
+                "dead"
+            } else if shards[i].draining {
+                "draining"
+            } else {
+                "live"
+            };
+            out.push_str(&format!("\n  shard[{i}] ({state}): {}", m.report()));
+        }
+        out
+    }
+
+    fn shutdown_all(&self) {
+        let mut shards = lock(&self.shards);
+        for s in shards.iter() {
+            let _ = s.tx.send(ShardMsg::Shutdown);
+        }
+        for s in shards.iter_mut() {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The multi-shard server. Owns the shard threads; dropping (or
+/// [`Router::shutdown`]) stops them after delivering finished work.
+pub struct Router {
+    inner: Arc<Inner>,
+}
+
+/// Cloneable submit handle (the `Client` of the sharded world).
+#[derive(Clone)]
+pub struct RouterClient {
+    inner: Arc<Inner>,
+}
+
+impl Router {
+    pub fn start<F>(cfg: RouterConfig, build: F) -> Self
+    where
+        F: Fn(usize) -> Result<EngineCore> + Send + Sync + 'static,
+    {
+        let build: Arc<BuildFn> = Arc::new(build);
+        let n = cfg.shards.max(1);
+        let shards = (0..n).map(|i| spawn_shard(i, Arc::clone(&build))).collect();
+        Self {
+            inner: Arc::new(Inner {
+                shards: Mutex::new(shards),
+                affinity: Mutex::new(HashMap::new()),
+                inflight: Arc::new(Mutex::new(HashSet::new())),
+                build,
+            }),
+        }
+    }
+
+    pub fn client(&self) -> RouterClient {
+        RouterClient { inner: Arc::clone(&self.inner) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        lock(&self.inner.shards).len()
+    }
+
+    /// Fire-and-forget submit; receive on the returned channel.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
+        Ok(self.inner.submit(req))
+    }
+
+    /// Blocking generate: submit and wait for the response.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        Ok(self.inner.submit(req).recv()?)
+    }
+
+    /// Per-shard structured metrics snapshots.
+    pub fn shard_metrics(&self) -> Vec<Metrics> {
+        self.inner.shard_metrics()
+    }
+
+    /// Aggregate + per-shard `/report`.
+    pub fn metrics_report(&self) -> String {
+        self.inner.metrics_report()
+    }
+
+    /// Drain `shard`: stop routing to it and replay every request that
+    /// has not emitted a token yet (queued or admitted-but-unstarted)
+    /// onto the surviving shards, reply channels intact. In-flight
+    /// sequences keep running there and finish with a normal visible
+    /// `FinishReason`. Returns the number of requests replayed. Errors
+    /// if no OTHER live shard could absorb the replay.
+    pub fn drain(&self, shard: usize) -> Result<usize> {
+        let tx = {
+            let mut shards = lock(&self.inner.shards);
+            anyhow::ensure!(shard < shards.len(), "no shard {shard}");
+            let others_live = shards.iter().enumerate().any(|(i, s)| {
+                i != shard && !s.draining && s.gauges.alive.load(Ordering::Acquire)
+            });
+            anyhow::ensure!(
+                others_live,
+                "cannot drain shard {shard}: no other live shard to replay onto"
+            );
+            shards[shard].draining = true;
+            shards[shard].tx.clone()
+        };
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(ShardMsg::Drain(rtx)).is_err() {
+            return Ok(0); // thread already dead: nothing queued there
+        }
+        let replay =
+            rrx.recv().map_err(|_| anyhow::anyhow!("shard {shard} died mid-drain"))?;
+        let n = replay.len();
+        for (req, reply) in replay {
+            // ids are already registered in-flight; dispatch routes
+            // around the now-draining shard
+            self.inner.dispatch(req, reply);
+        }
+        Ok(n)
+    }
+
+    /// Re-enable a drained shard for routing, respawning its engine
+    /// thread (via the build closure) if it died. Requests replayed at
+    /// drain time stay where they went; only new routing returns here.
+    pub fn restart(&self, shard: usize) -> Result<()> {
+        let mut shards = lock(&self.inner.shards);
+        anyhow::ensure!(shard < shards.len(), "no shard {shard}");
+        if !shards[shard].gauges.alive.load(Ordering::Acquire) {
+            if let Some(h) = shards[shard].handle.take() {
+                let _ = h.join();
+            }
+            shards[shard] = spawn_shard(shard, Arc::clone(&self.inner.build));
+        }
+        shards[shard].draining = false;
+        Ok(())
+    }
+
+    pub fn shutdown(self) {
+        self.inner.shutdown_all();
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.inner.shutdown_all();
+    }
+}
+
+impl RouterClient {
+    /// Blocking generate: submit and wait for the response.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        Ok(self.inner.submit(req).recv()?)
+    }
+
+    /// Fire-and-forget submit; receive on the returned channel.
+    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
+        Ok(self.inner.submit(req))
+    }
+
+    pub fn metrics_report(&self) -> Result<String> {
+        Ok(self.inner.metrics_report())
+    }
+}

@@ -1,149 +1,69 @@
-//! Threaded front-end: a router thread owns the engine core; clients
-//! submit requests over an mpsc channel and block on a per-request
-//! response channel. (std threads — no async runtime is vendored in
-//! this image; see coordinator/mod.rs.)
-
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::thread::JoinHandle;
+//! Threaded front-end: the public `Server`/`Client` API, now a thin
+//! wrapper over the multi-shard [`Router`]. Shard count comes from
+//! `GQSA_SHARDS` (default 1 — one engine thread, exactly the pre-shard
+//! behavior). The engine loop itself lives in `router.rs`.
+//! (std threads — no async runtime is vendored in this image; see
+//! coordinator/mod.rs.)
 
 use anyhow::Result;
 
 use crate::coordinator::engine_core::EngineCore;
 use crate::coordinator::request::{Request, Response};
+use crate::coordinator::router::{Router, RouterClient, RouterConfig};
 
-enum Msg {
-    Submit(Request, mpsc::Sender<Response>),
-    Report(mpsc::Sender<String>),
-    Shutdown,
-}
-
-/// Handle for submitting requests to a running engine.
+/// Handle for submitting requests to a running engine fleet.
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::Sender<Msg>,
+    inner: RouterClient,
 }
 
 impl Client {
     /// Blocking generate: submit and wait for the response.
     pub fn generate(&self, req: Request) -> Result<Response> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Submit(req, tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        self.inner.generate(req)
     }
 
     /// Fire-and-forget submit; receive on the returned channel.
-    pub fn submit(&self, req: Request) -> Result<mpsc::Receiver<Response>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Submit(req, tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx)
+    pub fn submit(&self, req: Request) -> Result<std::sync::mpsc::Receiver<Response>> {
+        self.inner.submit(req)
     }
 
     pub fn metrics_report(&self) -> Result<String> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Report(tx)).map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        Ok(rx.recv()?)
+        self.inner.metrics_report()
     }
 }
 
-/// The server: engine loop on its own thread.
+/// The server: `GQSA_SHARDS` engine loops, each on its own thread.
 ///
-/// PJRT handles are not `Send` (raw pointers + `Rc` internally), so the
-/// engine is *constructed on* the engine thread from a `Send` builder
-/// closure rather than moved into it.
+/// PJRT handles are not `Send` (raw pointers + `Rc` internally), so
+/// each engine is *constructed on* its shard thread from a `Send+Sync`
+/// builder closure rather than moved into it. The closure is `Fn` (not
+/// `FnOnce`) because every shard — and any shard restart — builds its
+/// own engine from it.
 pub struct Server {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<JoinHandle<()>>,
+    router: Router,
 }
 
 impl Server {
     pub fn start<F>(build: F) -> Self
     where
-        F: FnOnce() -> Result<EngineCore> + Send + 'static,
+        F: Fn() -> Result<EngineCore> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || {
-            let mut engine = match build() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("engine build failed: {e:#}");
-                    return;
-                }
-            };
-            let mut pending: HashMap<u64, mpsc::Sender<Response>> = HashMap::new();
-            loop {
-                // Drain control messages; block only when idle.
-                let msg = if engine.has_work() {
-                    match rx.try_recv() {
-                        Ok(m) => Some(m),
-                        Err(mpsc::TryRecvError::Empty) => None,
-                        Err(mpsc::TryRecvError::Disconnected) => break,
-                    }
-                } else {
-                    match rx.recv() {
-                        Ok(m) => Some(m),
-                        Err(_) => break,
-                    }
-                };
-                match msg {
-                    Some(Msg::Submit(req, reply)) => {
-                        pending.insert(req.id, reply);
-                        engine.submit(req);
-                    }
-                    Some(Msg::Report(reply)) => {
-                        let _ = reply.send(engine.metrics.report());
-                    }
-                    Some(Msg::Shutdown) => {
-                        // deliver anything already finished before the
-                        // pending senders drop (clients would otherwise
-                        // see a spurious error for completed work)
-                        for resp in engine.take_finished() {
-                            if let Some(reply) = pending.remove(&resp.id) {
-                                let _ = reply.send(resp);
-                            }
-                        }
-                        break;
-                    }
-                    None => {}
-                }
-                if engine.has_work() {
-                    if let Err(e) = engine.tick() {
-                        eprintln!("engine error: {e:#}");
-                        break;
-                    }
-                    for resp in engine.take_finished() {
-                        if let Some(reply) = pending.remove(&resp.id) {
-                            let _ = reply.send(resp);
-                        }
-                    }
-                }
-            }
-        });
-        Self { tx, handle: Some(handle) }
+        Self { router: Router::start(RouterConfig::from_env(), move |_shard| build()) }
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone() }
+        Client { inner: self.router.client() }
     }
 
-    pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    /// The underlying router, for shard-level control (drain/restart,
+    /// per-shard metrics).
+    pub fn router(&self) -> &Router {
+        &self.router
     }
-}
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) {
+        self.router.shutdown();
     }
 }
 

@@ -3,9 +3,9 @@
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   info                          artifact + model inventory
 //!   generate  [--model SPEC] [--family F] [--prompt S] [--max-new N] [--backend native|pjrt]
-//!   serve-demo [--requests N] [--batch B]    continuous-batching demo
+//!   serve-demo [--requests N] [--batch B]    continuous-batching demo (GQSA_SHARDS=N shards it)
 //!   eval      [--family F] [--model SPEC]    ppl + zero-shot for one variant
-//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|kernels|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep; kernels = scalar vs SIMD vs W4A8 microkernel GB/s)
+//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|kernels|shards|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep; kernels = scalar vs SIMD vs W4A8 microkernel GB/s; shards = multi-shard prefix-affinity router sweep)
 //!   engine-sim [--rows N] [--skew X]         Slice-K vs Stream-K simulator
 
 use std::collections::HashMap;
@@ -66,7 +66,7 @@ fn run() -> Result<()> {
         "serve-demo" => serve_demo(&art, &flags),
         "eval" => eval_cmd(&art, &flags),
         "bench-table" => {
-            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, kvpage, specdec, prefix, kernels, all)")?;
+            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, kvpage, specdec, prefix, kernels, shards, all)")?;
             let mut wb = Workbench::new(art);
             experiments::run(id, &mut wb)
         }
@@ -184,8 +184,10 @@ fn serve_demo(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(4);
 
     let art_owned = art.to_path_buf();
+    // Fn (not FnOnce): every shard — and any shard restart — builds its
+    // own engine from this closure, so nothing captured is consumed.
     let srv = gqsa::coordinator::Server::start(move || {
-        let mut wb = Workbench::new(art_owned);
+        let mut wb = Workbench::new(art_owned.clone());
         let model = wb.variant(&family, &spec)?;
         let cfg = model.cfg.clone();
         EngineCore::new(
@@ -194,6 +196,7 @@ fn serve_demo(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<
             EngineConfig { max_batch: batch, prefill_chunk: 15, kv_capacity: 160, ..Default::default() },
         )
     });
+    println!("serving on {} shard(s) (set GQSA_SHARDS to change)", srv.router().n_shards());
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for i in 0..n_requests as u64 {

@@ -44,6 +44,29 @@ use std::sync::Arc;
 
 use crate::model::kv_cache::{KvBlockPool, SharedKvBlock, KV_BLOCK};
 
+/// Block-granular prompt-prefix fingerprint: an FNV-1a hash of the
+/// prompt's FIRST full [`KV_BLOCK`] of token ids — exactly the first
+/// radix-tree edge key, so two prompts fingerprint equal iff a prefix
+/// tree could share at least their first sealed block. The multi-shard
+/// router keys its affinity map on this: requests that can share
+/// cached prefix blocks land on the shard already holding them.
+/// `None` for prompts shorter than one block (nothing shareable — the
+/// tree only caches full blocks; the router falls back to free-block
+/// balancing).
+pub fn prefix_fingerprint(tokens: &[u32]) -> Option<u64> {
+    if tokens.len() < KV_BLOCK {
+        return None;
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in &tokens[..KV_BLOCK] {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    Some(h)
+}
+
 /// Counter snapshot for metrics / the `/report` string. When produced
 /// by [`PrefixCache::stats`], the request-facing counters (`hits`,
 /// `misses`, `hit_positions`) are TARGET-tier only — a speculative
@@ -625,6 +648,23 @@ mod tests {
         assert_eq!(s.hits, 1);
         assert_eq!(s.evicted_blocks, 1);
         assert_eq!(s.shared_blocks, 1);
+    }
+
+    #[test]
+    fn fingerprint_is_first_block_granular() {
+        let a: Vec<u32> = (0..KV_BLOCK as u32 + 8).collect();
+        // same first block, different tail -> same fingerprint (these
+        // requests CAN share the first sealed block)
+        let mut b = a.clone();
+        b[KV_BLOCK] = 999;
+        assert_eq!(prefix_fingerprint(&a), prefix_fingerprint(&b));
+        // any difference inside the first block -> different fingerprint
+        let mut c = a.clone();
+        c[3] = 999;
+        assert_ne!(prefix_fingerprint(&a), prefix_fingerprint(&c));
+        // sub-block prompts have nothing shareable
+        assert_eq!(prefix_fingerprint(&a[..KV_BLOCK - 1]), None);
+        assert!(prefix_fingerprint(&a[..KV_BLOCK]).is_some());
     }
 
     // a LayerKv import keeps the cross-module visibility honest: the

@@ -1,0 +1,209 @@
+//! Multi-shard router tests: the three serving-loop delivery fixes
+//! (burst admission, finished-work delivery on an engine error,
+//! duplicate-id rejection) plus shard routing, prefix affinity and
+//! drain/replay. Every test pins `RouterConfig { shards }` explicitly
+//! so results do not depend on the `GQSA_SHARDS` env (CI runs the
+//! whole suite under GQSA_SHARDS=2 as well).
+
+use std::time::Duration;
+
+use gqsa::coordinator::{
+    Backend, EngineConfig, EngineCore, FinishReason, Metrics, Request, Router, RouterConfig,
+};
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::{random_fp, Transformer};
+
+/// Tiny deterministic engine. `delay_ms` stalls the build on the shard
+/// thread so requests submitted meanwhile queue up in the channel —
+/// the deterministic way to present the serving loop with a burst.
+fn build_engine(
+    max_batch: usize,
+    delay_ms: u64,
+    chaos_fail_tick: Option<u64>,
+    prefix_cache: bool,
+) -> anyhow::Result<EngineCore> {
+    if delay_ms > 0 {
+        std::thread::sleep(Duration::from_millis(delay_ms));
+    }
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 1;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 96;
+    let t = Transformer::from_fp(&random_fp(&cfg, 33))?;
+    let mut e = EngineCore::new(
+        Backend::Native(t),
+        &cfg,
+        EngineConfig {
+            max_batch,
+            prefill_chunk: 8,
+            kv_capacity: 96,
+            spec_k: 0,
+            prefix_cache,
+            ..Default::default()
+        },
+    )?;
+    e.chaos_fail_tick = chaos_fail_tick;
+    Ok(e)
+}
+
+/// Bugfix 1: a burst of submits is admitted together (the loop drains
+/// its whole message backlog before ticking), not one per engine tick.
+/// All 8 requests land in the first tick, so the engine sees all 8
+/// concurrently active.
+#[test]
+fn burst_submits_admit_in_one_tick() {
+    let router = Router::start(RouterConfig { shards: 1 }, |_s| build_engine(8, 300, None, false));
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        rxs.push(router.submit(Request::new(i, vec![(i % 60) as u32 + 1; 8], 4)).unwrap());
+    }
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.tokens.len(), 4);
+        assert_eq!(r.finish, FinishReason::Length);
+    }
+    let report = router.metrics_report();
+    assert!(report.contains("peak_active=8"), "burst not co-admitted: {report}");
+    router.shutdown();
+}
+
+/// Bugfix 2: when a tick errors, work that already finished is still
+/// delivered, and every still-pending request gets a typed
+/// `EngineError` response instead of a dropped channel.
+#[test]
+fn tick_error_delivers_finished_and_fails_pending() {
+    let router =
+        Router::start(RouterConfig { shards: 1 }, |_s| build_engine(4, 200, Some(3), false));
+    let rx1 = router.submit(Request::new(1, vec![1, 2, 3], 1)).unwrap();
+    let rx2 = router.submit(Request::new(2, vec![4, 5, 6], 50)).unwrap();
+    // finishes within the first ticks, before the injected failure
+    let r1 = rx1.recv().unwrap();
+    assert_eq!(r1.tokens.len(), 1);
+    assert_eq!(r1.finish, FinishReason::Length);
+    // still mid-decode at the failure: typed error, not a hangup
+    let r2 = rx2.recv().unwrap();
+    assert_eq!(r2.finish, FinishReason::EngineError);
+    assert!(r2.tokens.is_empty());
+    router.shutdown();
+}
+
+/// Bugfix 3: a second in-flight request with the same id is rejected
+/// with a typed response; the first keeps its reply slot and the id
+/// becomes reusable once its response is delivered.
+#[test]
+fn duplicate_id_rejected_then_reusable() {
+    let router = Router::start(RouterConfig { shards: 1 }, |_s| build_engine(2, 200, None, false));
+    let rx_first = router.submit(Request::new(7, vec![1; 8], 24)).unwrap();
+    let rx_dup = router.submit(Request::new(7, vec![2; 8], 4)).unwrap();
+    let dup = rx_dup.recv().unwrap();
+    assert_eq!(dup.finish, FinishReason::DuplicateId);
+    assert!(dup.tokens.is_empty());
+    let first = rx_first.recv().unwrap();
+    assert_eq!(first.finish, FinishReason::Length);
+    assert_eq!(first.tokens.len(), 24);
+    // delivery unregisters the id
+    let again = router.generate(Request::new(7, vec![3; 8], 2)).unwrap();
+    assert_eq!(again.finish, FinishReason::Length);
+    assert_eq!(again.tokens.len(), 2);
+    router.shutdown();
+}
+
+/// Routing must never change outputs: the same disjoint request set
+/// produces token-identical greedy results on 1 and 2 shards (shards
+/// rebuild identical weights from the seed).
+#[test]
+fn two_shards_token_identical_to_one() {
+    fn run_fleet(shards: usize) -> Vec<Vec<u32>> {
+        let router = Router::start(RouterConfig { shards }, |_s| build_engine(4, 0, None, false));
+        let mut rxs = Vec::new();
+        for i in 0..10u64 {
+            // >= one full KV block and distinct per request, so every
+            // request fingerprints differently (pure balance routing)
+            let prompt: Vec<u32> =
+                (0..20).map(|j| ((i as usize * 17 + j * 3 + 1) % 60) as u32).collect();
+            rxs.push(router.submit(Request::new(i, prompt, 6)).unwrap());
+        }
+        let mut out: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        out.sort_by_key(|r| r.id);
+        let report = router.metrics_report();
+        router.shutdown();
+        if shards > 1 {
+            assert!(report.starts_with("shards=2 | requests=10"), "{report}");
+            assert!(report.contains("shard[0]") && report.contains("shard[1]"), "{report}");
+        }
+        out.into_iter()
+            .inspect(|r| assert_eq!(r.finish, FinishReason::Length))
+            .map(|r| r.tokens)
+            .collect()
+    }
+    assert_eq!(run_fleet(1), run_fleet(2));
+}
+
+/// Prefix affinity keeps prompt families on the shard that already
+/// holds their sealed blocks: scaling 1 -> 2 shards loses no prefix
+/// hits (and changes no tokens).
+#[test]
+fn prefix_affinity_preserves_hit_rate_across_shards() {
+    fn run_families(shards: usize) -> (u64, u64, Vec<Vec<u32>>) {
+        let router = Router::start(RouterConfig { shards }, |_s| build_engine(4, 0, None, true));
+        let mut toks = Vec::new();
+        for i in 0..12u64 {
+            // two families, each sharing a 32-token (2 KV blocks)
+            // system prefix + unique 8-token tail
+            let fam = (i % 2) as usize;
+            let mut p: Vec<u32> =
+                (0..32).map(|j| ((fam * 13 + j * 5 + 1) % 60) as u32).collect();
+            p.extend((32..40).map(|j| ((i as usize * 17 + j * 3 + 2) % 60) as u32));
+            // sequential so each request sees its predecessors' blocks
+            let r = router.generate(Request::new(i, p, 6)).unwrap();
+            assert_eq!(r.finish, FinishReason::Length);
+            toks.push(r.tokens);
+        }
+        let mut agg = Metrics::default();
+        for m in router.shard_metrics() {
+            agg.merge(&m);
+        }
+        router.shutdown();
+        let p = agg.prefix.unwrap_or_default();
+        (p.hits, p.misses, toks)
+    }
+    let (h1, m1, t1) = run_families(1);
+    let (h2, m2, t2) = run_families(2);
+    assert_eq!(t1, t2, "sharding changed tokens");
+    assert_eq!(h1 + m1, h2 + m2, "lookup totals diverged");
+    assert!(h1 > 0, "baseline saw no prefix hits");
+    assert!(h2 >= h1, "affinity lost hits: {h2} < {h1}");
+}
+
+/// Drain replays every request that has not produced a token onto the
+/// surviving shards with reply channels intact — no request is lost —
+/// and restart re-enables the shard for routing.
+#[test]
+fn drain_replays_queued_requests_without_loss() {
+    let router = Router::start(RouterConfig { shards: 2 }, |_s| build_engine(1, 400, None, false));
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        // identical first block -> one fingerprint -> all 8 pin to the
+        // same shard (index 0 by the deterministic tie-break)
+        let mut p: Vec<u32> = (0..16).map(|j| ((j * 5 + 1) % 60) as u32).collect();
+        p.extend([(i % 60) as u32 + 1, (i % 60) as u32 + 2]);
+        rxs.push(router.submit(Request::new(i, p, 2)).unwrap());
+    }
+    // shard 0 is still building (delayed), so everything is queued and
+    // the drain pulls back all 8 for replay on shard 1
+    let replayed = router.drain(0).unwrap();
+    assert_eq!(replayed, 8, "queued requests not replayed");
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 2);
+    }
+    // with shard 0 draining there is no second live shard to absorb 1
+    assert!(router.drain(1).is_err());
+    router.restart(0).unwrap();
+    assert!(router.drain(1).is_ok());
+    router.shutdown();
+}
