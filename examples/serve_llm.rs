@@ -8,23 +8,29 @@
 //!
 //!   cargo run --release --example serve_llm
 
+use std::io::{Read, Write};
 use std::time::Instant;
 
 use gqsa::bench::Workbench;
+use gqsa::ckpt::{load_transformer, write_fp, CkptOptions};
 #[cfg(feature = "pjrt")]
 use gqsa::coordinator::backend::PjrtBackend;
-use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request, Server};
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, HttpServer, Request, Server};
+use gqsa::model::config::demo_config;
 use gqsa::model::tokenizer::ByteTokenizer;
+use gqsa::model::transformer::random_fp;
 #[cfg(feature = "pjrt")]
 use gqsa::runtime::Runtime;
+use gqsa::util::Json;
 
 fn main() -> anyhow::Result<()> {
     let art = Workbench::default_dir();
-    if !art.join("models/tiny-llama.w4s50g16.gqsa").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        return Ok(());
-    }
     let tok = ByteTokenizer;
+    if !art.join("models/tiny-llama.w4s50g16.gqsa").exists() {
+        eprintln!("artifacts missing — run `make artifacts` for the full demo;");
+        eprintln!("falling back to a synthetic checkpoint for the HTTP/SSE section\n");
+        return serve_http_demo(&tok);
+    }
 
     // --- native backend through the threaded server ---
     // KV is paged by default (16-position blocks from a shared pool);
@@ -95,6 +101,88 @@ fn main() -> anyhow::Result<()> {
 
     // --- PJRT backend (the AOT jax path), single stream ---
     serve_pjrt(&art, &tok)?;
+
+    // --- checkpoint import + HTTP/SSE surface ---
+    serve_http_demo(&tok)?;
+    Ok(())
+}
+
+/// Author a safetensors checkpoint on disk, import it (dense-and-sparse
+/// outliers per `GQSA_OUTLIERS`), serve it over HTTP, and stream one
+/// completion over SSE with a raw TCP client — the same path the
+/// `serve-http` subcommand and the `http_api` e2e test exercise.
+fn serve_http_demo(tok: &ByteTokenizer) -> anyhow::Result<()> {
+    println!("== checkpoint import + HTTP/SSE front end ==");
+    let mut cfg = demo_config();
+    cfg.vocab = 128; // keep the demo's tokens printable-ish
+    let ckpt = std::env::temp_dir()
+        .join(format!("gqsa_serve_demo_{}.safetensors", std::process::id()));
+    write_fp(&random_fp(&cfg, 17), &ckpt)?;
+    println!("  authored synthetic checkpoint at {}", ckpt.display());
+
+    let path = ckpt.clone();
+    let srv = Server::start(move || {
+        let (t, report) = load_transformer(&path, &CkptOptions::default())?;
+        eprintln!(
+            "  import: {} tensor bytes, mapped={}, {} outlier-wrapped linears ({} nnz)",
+            report.tensor_bytes, report.mapped, report.wrapped_layers, report.outlier_nnz
+        );
+        let cfg = t.cfg.clone();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig { max_batch: 4, prefill_chunk: 16, kv_capacity: 160, ..Default::default() },
+        )
+    });
+    let http = HttpServer::bind("127.0.0.1:0", srv.client())?;
+    let addr = http.local_addr();
+    println!("  HTTP serving on http://{addr} ({} shard(s))", srv.router().n_shards());
+
+    // stream a completion with a plain TcpStream — any HTTP client works
+    let body = Json::obj(vec![
+        ("prompt", Json::str("the ")),
+        ("max_tokens", Json::num(24.0)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string();
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    write!(
+        conn,
+        "POST /v1/completions HTTP/1.1\r\nHost: demo\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw)?;
+    let mut tokens = Vec::new();
+    for chunk in raw.split("\n\n") {
+        let Some(data) = chunk.trim().strip_prefix("data: ") else { continue };
+        if data == "[DONE]" {
+            break;
+        }
+        if let Ok(frame) = Json::parse(data) {
+            if let Some(t) = frame
+                .get("choices")
+                .and_then(|c| c.idx(0))
+                .and_then(|c| c.get("token"))
+                .and_then(Json::as_u64)
+            {
+                tokens.push(t as u32);
+            }
+        }
+    }
+    println!("  streamed {} tokens over SSE -> {:?}", tokens.len(), tok.decode(&tokens));
+
+    let mut conn = std::net::TcpStream::connect(addr)?;
+    write!(conn, "GET /report HTTP/1.1\r\nHost: demo\r\nConnection: close\r\n\r\n")?;
+    let mut report = String::new();
+    conn.read_to_string(&mut report)?;
+    if let Some((_, text)) = report.split_once("\r\n\r\n") {
+        println!("  {}", text.lines().next().unwrap_or(""));
+    }
+
+    http.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&ckpt).ok();
     Ok(())
 }
 

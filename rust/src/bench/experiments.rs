@@ -24,7 +24,7 @@ use crate::util::{Mat, XorShift};
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
     "t15", "t16", "f1", "f5", "f5x", "f6", "f7", "f8", "kvpage", "specdec", "prefix",
-    "kernels", "shards",
+    "kernels", "shards", "ckpt",
 ];
 
 pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
@@ -56,6 +56,7 @@ pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
         "prefix" => prefix_cache(wb),
         "kernels" => kernels(wb),
         "shards" => shards_bench(wb),
+        "ckpt" => ckpt_bench(wb),
         "all" => {
             for id in ALL_IDS {
                 println!("\n##### {id} #####");
@@ -1700,6 +1701,129 @@ fn shards_bench(wb: &mut Workbench) -> Result<()> {
         Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
     t.emit(wb.results_dir(), "shards")
+}
+
+// ---------------------------------------------------------------------
+// ckpt — safetensors import wall-clock + dense-and-sparse outlier sweep
+// ---------------------------------------------------------------------
+
+fn ckpt_bench(wb: &mut Workbench) -> Result<()> {
+    use crate::ckpt::{self, CkptEncode, CkptOptions};
+    use crate::model::config::demo_config;
+    use crate::model::sampler::argmax;
+    use crate::model::transformer::{random_fp, Transformer};
+    use crate::model::{KvCache, Scratch};
+    use std::time::Instant;
+
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 96;
+    let fp = random_fp(&cfg, 4242);
+
+    // author the checkpoint on disk, then time the mmap+decode import
+    let path =
+        std::env::temp_dir().join(format!("gqsa_bench_ckpt_{}.safetensors", std::process::id()));
+    ckpt::write_fp(&fp, &path)?;
+    let file_bytes = std::fs::metadata(&path)?.len() as usize;
+    let t0 = Instant::now();
+    let st = ckpt::SafeTensors::open(&path)?;
+    let fp_disk = ckpt::fp_from_safetensors(&st)?;
+    let import_s = t0.elapsed().as_secs_f64();
+    let mapped = st.is_mapped();
+    let import_gbs = file_bytes as f64 / 1e9 / import_s.max(1e-9);
+
+    // f32 oracle logits after a fixed prompt (the error reference)
+    let prompt: Vec<u32> = (0..24).map(|i| ((i * 7 + 3) % 60) as u32).collect();
+    let logits_after = |t: &Transformer| -> Result<Vec<f32>> {
+        let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 96);
+        let mut s = Scratch::new(&cfg);
+        for &tok in &prompt {
+            t.decode_step(tok, &mut kv, &mut s)?;
+        }
+        Ok(s.logits.clone())
+    };
+    let oracle = logits_after(&Transformer::from_fp(&fp_disk)?)?;
+
+    const DECODE_TOKENS: usize = 48;
+    let mut t = Table::new(
+        format!(
+            "ckpt: safetensors import ({} MB, mmap={mapped}, {import_gbs:.2} GB/s \
+             decode-to-fp) — GQS encode x outlier percent",
+            mb(file_bytes),
+        ),
+        &["W bits", "outlier%", "encode ms", "weights", "csr nnz", "max|logit err|", "tok/s"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for bits in [2u32, 4] {
+        for pct in [0.0f64, 0.5, 1.0] {
+            let opts = CkptOptions {
+                encode: CkptEncode::Gqs { bits, group: 16, sparsity: 0.5 },
+                outlier_pct: pct,
+            };
+            let t0 = Instant::now();
+            let model = ckpt::encode_transformer(&fp_disk, &opts)?;
+            let encode_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let (_, nnz, _) = ckpt::outlier_stats(&model);
+            let weight_bytes: usize = model.linears.values().map(|l| l.storage_bytes()).sum();
+            let l = logits_after(&model)?;
+            let err = l
+                .iter()
+                .zip(&oracle)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // greedy decode throughput on the encoded model
+            let mut kv = KvCache::new(cfg.n_layers, cfg.n_heads, cfg.head_dim(), 96);
+            let mut s = Scratch::new(&cfg);
+            for &tok in &prompt {
+                model.decode_step(tok, &mut kv, &mut s)?;
+            }
+            let t1 = Instant::now();
+            let mut last = argmax(&s.logits) as u32;
+            for _ in 0..DECODE_TOKENS {
+                model.decode_step(last, &mut kv, &mut s)?;
+                last = argmax(&s.logits) as u32;
+            }
+            let toks = DECODE_TOKENS as f64 / t1.elapsed().as_secs_f64().max(1e-9);
+            t.row(vec![
+                bits.to_string(),
+                format!("{pct:.1}"),
+                fmt2(encode_ms),
+                format!("{} MB", mb(weight_bytes)),
+                nnz.to_string(),
+                format!("{err:.4}"),
+                fmt1(toks),
+            ]);
+            json_rows.push(format!(
+                "    {{\"bits\": {bits}, \"outlier_pct\": {pct}, \"encode_ms\": {encode_ms:.3}, \
+                 \"weight_bytes\": {weight_bytes}, \"outlier_nnz\": {nnz}, \
+                 \"logits_max_abs_err\": {err:.6}, \"decode_tok_per_s\": {toks:.1}}}"
+            ));
+        }
+    }
+    t.note(
+        "outliers keep the largest-|w| weights exact in a per-layer f32 CSR fused after \
+         the quantized-sparse product: at W2 the 0.5-1% points cut the logit error \
+         substantially for a small tok/s cost; at 0% the encode is bit-identical to the \
+         in-memory constructors. Import wall-clock covers open+mmap+header parse+f32 \
+         materialization of every tensor.",
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"ckpt\",\n  \"placeholder\": false,\n  \"file_bytes\": {file_bytes},\n  \"mapped\": {mapped},\n  \"import_s\": {import_s:.6},\n  \"import_gb_per_s\": {import_gbs:.3},\n  \"prompt_len\": {},\n  \"decode_tokens\": {DECODE_TOKENS},\n  \"results\": [\n{}\n  ]\n}}\n",
+        prompt.len(),
+        json_rows.join(",\n")
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_ckpt.json");
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    std::fs::remove_file(&path).ok();
+    t.emit(wb.results_dir(), "ckpt")
 }
 
 // ---------------------------------------------------------------------

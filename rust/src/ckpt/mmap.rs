@@ -1,0 +1,189 @@
+//! Read-only file mapping with zero crate dependencies.
+//!
+//! The offline image vendors no libc/memmap crate, so on Linux
+//! (x86_64/aarch64) the mapping goes through raw `mmap`/`munmap`
+//! syscalls via inline asm; everywhere else — or if the syscall fails —
+//! the file is read into an owned buffer instead. Callers only ever see
+//! `&[u8]`, and tensor payloads are decoded per-element with
+//! `from_le_bytes`, so alignment of the mapping is never a safety
+//! concern.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+    /// `Some` when the fallback read path owns the bytes; `None` when
+    /// the pointer is a live kernel mapping that `Drop` must unmap.
+    owned: Option<Vec<u8>>,
+}
+
+// The mapping is read-only (PROT_READ, MAP_PRIVATE) and never mutated.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Empty files yield an empty (owned) buffer.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        let mut file = File::open(path.as_ref())?;
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "file too large to map"));
+        }
+        let len = len as usize;
+        if len > 0 {
+            if let Some(ptr) = sys::map_readonly(&file, len) {
+                return Ok(Self { ptr, len, owned: None });
+            }
+        }
+        let mut buf = Vec::with_capacity(len);
+        file.read_to_end(&mut buf)?;
+        let ptr = buf.as_ptr();
+        let len = buf.len();
+        Ok(Self { ptr, len, owned: Some(buf) })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // Safety: either a live PROT_READ mapping of `len` bytes (unmapped
+        // only in Drop) or a pointer into the owned Vec (heap storage is
+        // stable across moves of `self`).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when the bytes come from a kernel mapping (zero-copy path),
+    /// false on the owned-buffer fallback.
+    pub fn is_mapped(&self) -> bool {
+        self.owned.is_none()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.owned.is_none() && self.len > 0 {
+            // Safety: ptr/len are exactly what mmap returned.
+            unsafe { sys::unmap(self.ptr, self.len) };
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_MMAP: usize = 9;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_MUNMAP: usize = 11;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_MMAP: usize = 222;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_MUNMAP: usize = 215;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(nr: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(nr: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0); None on failure
+    /// (the caller falls back to reading the file).
+    pub fn map_readonly(file: &File, len: usize) -> Option<*const u8> {
+        let fd = file.as_raw_fd();
+        let ret = unsafe { syscall6(SYS_MMAP, 0, len, PROT_READ, MAP_PRIVATE, fd as usize, 0) };
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as *const u8)
+        }
+    }
+
+    pub unsafe fn unmap(ptr: *const u8, len: usize) {
+        let _ = syscall6(SYS_MUNMAP, ptr as usize, len, 0, 0, 0, 0);
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod sys {
+    use std::fs::File;
+
+    pub fn map_readonly(_file: &File, _len: usize) -> Option<*const u8> {
+        None
+    }
+
+    pub unsafe fn unmap(_ptr: *const u8, _len: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_file_contents() {
+        let p = std::env::temp_dir().join(format!("gqsa_mmap_{}.bin", std::process::id()));
+        std::fs::write(&p, b"hello mapping").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.bytes(), b"hello mapping");
+        assert_eq!(m.len(), 13);
+        drop(m);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_is_empty_slice() {
+        let p = std::env::temp_dir().join(format!("gqsa_mmap_empty_{}.bin", std::process::id()));
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), b"");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(Mmap::open("/nonexistent/gqsa/nope.bin").is_err());
+    }
+}

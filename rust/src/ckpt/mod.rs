@@ -1,0 +1,295 @@
+//! Real-checkpoint import: zero-copy safetensors → GQSA serving model.
+//!
+//! [`SafeTensors`] mmaps a checkpoint and validates the header;
+//! [`load_transformer`] runs the existing encoders (GPTQ / RTN /
+//! group-prune+GQS) over the mapped weights at load time. During
+//! encode, the `GQSA_OUTLIERS` percent largest-magnitude weights of
+//! every linear are pulled into an exact f32 CSR side-matrix
+//! (SqueezeLLM's dense-and-sparse decomposition) and fused back in via
+//! [`LinearKind::Outlier`] — quality insurance for aggressive W2/W4
+//! points on real weight distributions. With `outlier_pct == 0` the
+//! encode is bit-identical to the in-memory constructors.
+
+pub mod mmap;
+pub mod safetensors;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{Context, Result};
+
+use crate::gqs::format::FpModel;
+use crate::model::transformer::{LinearKind, OutlierLinear, Transformer};
+use crate::quant::gptq::gptq_quantize;
+use crate::sparse::csr::split_outliers;
+use crate::util::{Json, Mat};
+
+pub use mmap::Mmap;
+pub use safetensors::{CkptError, SafeTensors, SafeTensorsWriter, StDtype};
+
+/// `__metadata__` key carrying the serialized `ModelConfig`.
+pub const CONFIG_META_KEY: &str = "gqsa_config";
+
+/// Which encoder runs over the mapped weights at load time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CkptEncode {
+    /// dense f32 (no compression — the oracle)
+    Fp,
+    /// per-group RTN weight quantization (`quant/rtn.rs` grid)
+    Rtn { bits: u32, group: usize },
+    /// GPTQ with an identity Hessian (`quant/gptq.rs`)
+    Gptq { bits: u32, group: usize },
+    /// group-prune + per-group quantize into the GQS BSR kernel
+    Gqs { bits: u32, group: usize, sparsity: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct CkptOptions {
+    pub encode: CkptEncode,
+    /// percent of each linear's weights kept exactly in the f32 CSR
+    /// side-matrix (0 disables the decomposition entirely)
+    pub outlier_pct: f64,
+}
+
+impl Default for CkptOptions {
+    fn default() -> Self {
+        Self {
+            encode: CkptEncode::Gqs { bits: 4, group: 16, sparsity: 0.5 },
+            outlier_pct: outlier_pct_from_env(),
+        }
+    }
+}
+
+/// `GQSA_OUTLIERS` as a percent in [0, 100]; default 0.5 (the
+/// SqueezeLLM "<1% of weights" operating point). Unparsable values
+/// fall back to the default.
+pub fn outlier_pct_from_env() -> f64 {
+    std::env::var("GQSA_OUTLIERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .map(|p| p.clamp(0.0, 100.0))
+        .unwrap_or(0.5)
+}
+
+/// What the import did — surfaced by `serve-http`, examples and the
+/// ckpt bench.
+#[derive(Clone, Debug, Default)]
+pub struct CkptReport {
+    /// true when the file was served by a kernel mapping (zero-copy)
+    pub mapped: bool,
+    /// bytes of tensor payload in the checkpoint
+    pub tensor_bytes: usize,
+    /// linears wrapped with an outlier CSR
+    pub wrapped_layers: usize,
+    pub outlier_nnz: usize,
+    pub outlier_bytes: usize,
+}
+
+/// Write an FP checkpoint as safetensors: every weight at f32 rank-2,
+/// the `ModelConfig` serialized under [`CONFIG_META_KEY`].
+pub fn write_fp(fp: &FpModel, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    let mut w = SafeTensorsWriter::new();
+    w.metadata(CONFIG_META_KEY, fp.config.to_json().to_string());
+    for (name, m) in &fp.weights {
+        w.add_f32(name.clone(), &[m.rows, m.cols], &m.data);
+    }
+    w.write(path)
+}
+
+/// Decode an opened safetensors checkpoint into an in-memory FP model.
+pub fn fp_from_safetensors(st: &SafeTensors) -> Result<FpModel, CkptError> {
+    let cfg_str = st
+        .metadata()
+        .get(CONFIG_META_KEY)
+        .ok_or_else(|| CkptError::BadHeader(format!("missing __metadata__['{CONFIG_META_KEY}']")))?;
+    let cfg_json = Json::parse(cfg_str)
+        .map_err(|e| CkptError::BadHeader(format!("{CONFIG_META_KEY}: {e}")))?;
+    let config = crate::model::ModelConfig::from_json(&cfg_json)
+        .map_err(|e| CkptError::BadHeader(format!("{CONFIG_META_KEY}: {e}")))?;
+    let mut weights = BTreeMap::new();
+    for name in st.names().map(str::to_string).collect::<Vec<_>>() {
+        let m = st.mat(&name)?;
+        weights.insert(name, m);
+    }
+    Ok(FpModel { config, weights })
+}
+
+/// Mmap + decode a safetensors FP checkpoint.
+pub fn load_fp(path: impl AsRef<std::path::Path>) -> Result<FpModel, CkptError> {
+    let st = SafeTensors::open(path)?;
+    fp_from_safetensors(&st)
+}
+
+fn build_base(fp: &FpModel, enc: &CkptEncode) -> Result<Transformer> {
+    match enc {
+        CkptEncode::Fp => Transformer::from_fp(fp),
+        CkptEncode::Rtn { bits, group } => Transformer::from_fp_quantized(fp, *bits, *group),
+        CkptEncode::Gptq { bits, group } => Transformer::from_fp_with(fp, |_, w| {
+            gptq_quantize(w, &Mat::eye(w.cols), *bits, *group)
+        }),
+        CkptEncode::Gqs { bits, group, sparsity } => {
+            Transformer::from_fp_gqs_oneshot(fp, None, *bits, *group, *sparsity)
+        }
+    }
+}
+
+/// Encode an FP model for serving. With `outlier_pct > 0`, each
+/// linear's largest-|w| weights move into an exact f32 CSR *before*
+/// the base encoder runs (so the quantizer's grids fit the clipped
+/// residual), and the CSR is fused back in as [`LinearKind::Outlier`].
+/// With `outlier_pct == 0` this is exactly `build_base` — bit-identical
+/// to the in-memory constructors.
+pub fn encode_transformer(fp: &FpModel, opts: &CkptOptions) -> Result<Transformer> {
+    if opts.outlier_pct <= 0.0 {
+        return build_base(fp, &opts.encode);
+    }
+    let lnames: BTreeSet<String> = fp.config.linear_names().into_iter().collect();
+    let mut residual_weights = BTreeMap::new();
+    let mut csrs = BTreeMap::new();
+    for (name, w) in &fp.weights {
+        if lnames.contains(name) {
+            let (residual, csr) = split_outliers(w, opts.outlier_pct);
+            residual_weights.insert(name.clone(), residual);
+            if csr.nnz() > 0 {
+                csrs.insert(name.clone(), csr);
+            }
+        } else {
+            residual_weights.insert(name.clone(), w.clone());
+        }
+    }
+    let fp_residual = FpModel { config: fp.config.clone(), weights: residual_weights };
+    let mut t = build_base(&fp_residual, &opts.encode)?;
+    for (name, csr) in csrs {
+        let base = t
+            .linears
+            .remove(&name)
+            .with_context(|| format!("encoder produced no linear '{name}'"))?;
+        t.linears.insert(name, LinearKind::Outlier(OutlierLinear { base: Box::new(base), csr }));
+    }
+    Ok(t)
+}
+
+/// Outlier accounting over an encoded model (for reports/benches).
+pub fn outlier_stats(t: &Transformer) -> (usize, usize, usize) {
+    let mut wrapped = 0;
+    let mut nnz = 0;
+    let mut bytes = 0;
+    for l in t.linears.values() {
+        if let LinearKind::Outlier(o) = l {
+            wrapped += 1;
+            nnz += o.csr.nnz();
+            bytes += o.csr.storage_bytes();
+        }
+    }
+    (wrapped, nnz, bytes)
+}
+
+/// The full import path: mmap the checkpoint, decode the FP weights,
+/// run the chosen encoder + outlier decomposition.
+pub fn load_transformer(
+    path: impl AsRef<std::path::Path>,
+    opts: &CkptOptions,
+) -> Result<(Transformer, CkptReport)> {
+    let st = SafeTensors::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let fp = fp_from_safetensors(&st)?;
+    let t = encode_transformer(&fp, opts)?;
+    let (wrapped_layers, outlier_nnz, outlier_bytes) = outlier_stats(&t);
+    Ok((
+        t,
+        CkptReport {
+            mapped: st.is_mapped(),
+            tensor_bytes: st.tensor_bytes(),
+            wrapped_layers,
+            outlier_nnz,
+            outlier_bytes,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::demo_config;
+    use crate::model::transformer::random_fp;
+
+    #[test]
+    fn zero_outliers_matches_in_memory_encode_bitwise() {
+        let mut cfg = demo_config();
+        cfg.d_model = 32;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 48;
+        cfg.vocab = 32;
+        let fp = random_fp(&cfg, 41);
+        let opts = CkptOptions {
+            encode: CkptEncode::Gqs { bits: 4, group: 16, sparsity: 0.5 },
+            outlier_pct: 0.0,
+        };
+        let a = encode_transformer(&fp, &opts).unwrap();
+        let b = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+        assert_eq!(a.linears.len(), b.linears.len());
+        for (name, la) in &a.linears {
+            assert!(!matches!(la, LinearKind::Outlier(_)), "{name} wrapped at pct=0");
+            let lb = &b.linears[name];
+            assert_eq!(la.storage_bytes(), lb.storage_bytes(), "{name}");
+            assert_eq!(la.decode_dense().data, lb.decode_dense().data, "{name} decode differs");
+        }
+    }
+
+    #[test]
+    fn outliers_wrap_linears_and_reduce_decode_error() {
+        let mut cfg = demo_config();
+        cfg.d_model = 32;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 48;
+        cfg.vocab = 32;
+        let fp = random_fp(&cfg, 42);
+        let enc = CkptEncode::Rtn { bits: 2, group: 16 };
+        let plain = encode_transformer(&fp, &CkptOptions { encode: enc.clone(), outlier_pct: 0.0 })
+            .unwrap();
+        let with = encode_transformer(&fp, &CkptOptions { encode: enc, outlier_pct: 1.0 }).unwrap();
+        let (wrapped, nnz, bytes) = outlier_stats(&with);
+        assert_eq!(wrapped, fp.config.linear_names().len());
+        assert!(nnz > 0 && bytes > 0);
+        let mut err_plain = 0.0f32;
+        let mut err_with = 0.0f32;
+        for name in fp.config.linear_names() {
+            let w = fp.get(&name).unwrap();
+            err_plain += plain.linears[&name].decode_dense().dist(w);
+            err_with += with.linears[&name].decode_dense().dist(w);
+        }
+        assert!(
+            err_with < err_plain,
+            "outlier CSR should cut W2 reconstruction error ({err_with} vs {err_plain})"
+        );
+    }
+
+    #[test]
+    fn env_default_is_half_percent() {
+        // do not set the env var here (tests run in one process);
+        // the parse itself is covered by clamping logic
+        assert_eq!("0.7".trim().parse::<f64>().ok().map(|p| p.clamp(0.0, 100.0)), Some(0.7));
+    }
+
+    #[test]
+    fn write_then_load_fp_roundtrips() {
+        let mut cfg = demo_config();
+        cfg.d_model = 16;
+        cfg.n_layers = 1;
+        cfg.n_heads = 2;
+        cfg.d_ff = 32;
+        cfg.vocab = 16;
+        let fp = random_fp(&cfg, 43);
+        let p = std::env::temp_dir()
+            .join(format!("gqsa_ckpt_rt_{}.safetensors", std::process::id()));
+        write_fp(&fp, &p).unwrap();
+        let back = load_fp(&p).unwrap();
+        assert_eq!(back.config.d_model, cfg.d_model);
+        assert_eq!(back.weights.len(), fp.weights.len());
+        for (name, m) in &fp.weights {
+            assert_eq!(&back.weights[name].data, &m.data, "{name}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+}

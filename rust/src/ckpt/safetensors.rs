@@ -1,0 +1,563 @@
+//! Zero-copy safetensors container: reader over an [`Mmap`] plus a
+//! writer so tests and examples can author checkpoints on disk without
+//! any network access.
+//!
+//! Layout (the huggingface safetensors format):
+//!
+//! ```text
+//! [ u64 LE: header_len ][ header_len bytes of JSON ][ tensor data ]
+//! ```
+//!
+//! The JSON header maps tensor names to `{dtype, shape, data_offsets}`
+//! (offsets relative to the first byte after the header) and may carry
+//! a `__metadata__` string map. Everything is validated up front —
+//! truncation, header length past EOF, malformed JSON, unknown dtypes,
+//! shape/span mismatches, out-of-bounds and overlapping offsets all
+//! return a typed [`CkptError`]; no accessor can read outside the
+//! mapping. Payloads are decoded per-element with `from_le_bytes`, so
+//! the (page-aligned) mapping is never reinterpreted at a wider type.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::ckpt::mmap::Mmap;
+use crate::util::{Json, Mat};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StDtype {
+    F32,
+    F16,
+    BF16,
+}
+
+impl StDtype {
+    pub fn size(self) -> usize {
+        match self {
+            StDtype::F32 => 4,
+            StDtype::F16 | StDtype::BF16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StDtype::F32 => "F32",
+            StDtype::F16 => "F16",
+            StDtype::BF16 => "BF16",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "F32" => Some(StDtype::F32),
+            "F16" => Some(StDtype::F16),
+            "BF16" => Some(StDtype::BF16),
+            _ => None,
+        }
+    }
+}
+
+/// Typed checkpoint errors — every malformed input maps to one of
+/// these; the reader never panics and never reads out of bounds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CkptError {
+    Io(String),
+    /// file smaller than the fixed 8-byte length prefix
+    Truncated { need: usize, have: usize },
+    /// declared header length runs past the end of the file
+    HeaderPastEof { header_len: u64, file_len: usize },
+    /// header is not UTF-8 / not JSON / not the expected shape
+    BadHeader(String),
+    UnknownDtype { name: String, dtype: String },
+    /// shape product (numel x dtype size) disagrees with the offset span
+    ShapeMismatch { name: String, need_bytes: usize, span: usize },
+    /// data_offsets run past the end of the data region
+    OutOfBounds { name: String, begin: usize, end: usize, data_len: usize },
+    /// two tensors claim overlapping byte ranges
+    Overlap { name: String, prev: String },
+    MissingTensor(String),
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CkptError::Truncated { need, have } => {
+                write!(f, "truncated checkpoint: need {need} bytes, have {have}")
+            }
+            CkptError::HeaderPastEof { header_len, file_len } => write!(
+                f,
+                "header length {header_len} runs past end of file ({file_len} bytes)"
+            ),
+            CkptError::BadHeader(e) => write!(f, "bad checkpoint header: {e}"),
+            CkptError::UnknownDtype { name, dtype } => {
+                write!(f, "tensor '{name}': unknown dtype '{dtype}'")
+            }
+            CkptError::ShapeMismatch { name, need_bytes, span } => write!(
+                f,
+                "tensor '{name}': shape needs {need_bytes} bytes but data_offsets span {span}"
+            ),
+            CkptError::OutOfBounds { name, begin, end, data_len } => write!(
+                f,
+                "tensor '{name}': data_offsets [{begin}, {end}) outside data region ({data_len} bytes)"
+            ),
+            CkptError::Overlap { name, prev } => {
+                write!(f, "tensor '{name}' overlaps tensor '{prev}'")
+            }
+            CkptError::MissingTensor(name) => write!(f, "tensor '{name}' missing from checkpoint"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+#[derive(Clone, Debug)]
+pub struct TensorView {
+    pub dtype: StDtype,
+    pub shape: Vec<usize>,
+    /// byte range inside the data region (after validation: in bounds,
+    /// non-overlapping, span == numel * dtype size)
+    pub begin: usize,
+    pub end: usize,
+}
+
+impl TensorView {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A validated, memory-mapped safetensors file.
+pub struct SafeTensors {
+    mmap: Mmap,
+    data_start: usize,
+    tensors: BTreeMap<String, TensorView>,
+    metadata: BTreeMap<String, String>,
+}
+
+impl SafeTensors {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, CkptError> {
+        let mmap = Mmap::open(path.as_ref()).map_err(|e| CkptError::Io(e.to_string()))?;
+        let bytes = mmap.bytes();
+        if bytes.len() < 8 {
+            return Err(CkptError::Truncated { need: 8, have: bytes.len() });
+        }
+        let header_len = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        if header_len > (bytes.len() - 8) as u64 {
+            return Err(CkptError::HeaderPastEof { header_len, file_len: bytes.len() });
+        }
+        let hl = header_len as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hl])
+            .map_err(|e| CkptError::BadHeader(format!("not utf-8: {e}")))?;
+        let json = Json::parse(header).map_err(|e| CkptError::BadHeader(e.to_string()))?;
+        let entries = match json {
+            Json::Obj(m) => m,
+            _ => return Err(CkptError::BadHeader("header is not a JSON object".into())),
+        };
+
+        let data_start = 8 + hl;
+        let data_len = bytes.len() - data_start;
+        let mut metadata = BTreeMap::new();
+        let mut tensors = BTreeMap::new();
+        for (name, entry) in entries {
+            if name == "__metadata__" {
+                let m = match entry {
+                    Json::Obj(m) => m,
+                    _ => return Err(CkptError::BadHeader("__metadata__ is not an object".into())),
+                };
+                for (k, v) in m {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| {
+                            CkptError::BadHeader(format!("__metadata__['{k}'] is not a string"))
+                        })?
+                        .to_string();
+                    metadata.insert(k, s);
+                }
+                continue;
+            }
+            let dtype_s = entry
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| CkptError::BadHeader(format!("tensor '{name}': missing dtype")))?;
+            let dtype = StDtype::parse(dtype_s).ok_or_else(|| CkptError::UnknownDtype {
+                name: name.clone(),
+                dtype: dtype_s.to_string(),
+            })?;
+            let shape_arr = entry
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| CkptError::BadHeader(format!("tensor '{name}': missing shape")))?;
+            let mut shape = Vec::with_capacity(shape_arr.len());
+            for d in shape_arr {
+                let v = d.as_u64().ok_or_else(|| {
+                    CkptError::BadHeader(format!("tensor '{name}': non-integer shape"))
+                })?;
+                shape.push(v as usize);
+            }
+            let offs = entry
+                .get("data_offsets")
+                .and_then(|o| o.as_arr())
+                .filter(|o| o.len() == 2)
+                .ok_or_else(|| {
+                    CkptError::BadHeader(format!("tensor '{name}': missing data_offsets"))
+                })?;
+            let begin = offs[0].as_u64().ok_or_else(|| {
+                CkptError::BadHeader(format!("tensor '{name}': bad data_offsets"))
+            })? as usize;
+            let end = offs[1].as_u64().ok_or_else(|| {
+                CkptError::BadHeader(format!("tensor '{name}': bad data_offsets"))
+            })? as usize;
+            if begin > end || end > data_len {
+                return Err(CkptError::OutOfBounds { name, begin, end, data_len });
+            }
+            let numel: usize = shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d)).ok_or(
+                CkptError::ShapeMismatch {
+                    name: name.clone(),
+                    need_bytes: usize::MAX,
+                    span: end - begin,
+                },
+            )?;
+            let need_bytes = numel.checked_mul(dtype.size()).ok_or(CkptError::ShapeMismatch {
+                name: name.clone(),
+                need_bytes: usize::MAX,
+                span: end - begin,
+            })?;
+            if need_bytes != end - begin {
+                return Err(CkptError::ShapeMismatch { name, need_bytes, span: end - begin });
+            }
+            tensors.insert(name, TensorView { dtype, shape, begin, end });
+        }
+
+        // overlap check across the validated spans (empty spans can't
+        // overlap anything)
+        let mut spans: Vec<(usize, usize, &String)> = tensors
+            .iter()
+            .filter(|(_, t)| t.begin < t.end)
+            .map(|(n, t)| (t.begin, t.end, n))
+            .collect();
+        spans.sort();
+        for w in spans.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(CkptError::Overlap {
+                    name: w[1].2.clone(),
+                    prev: w[0].2.clone(),
+                });
+            }
+        }
+
+        Ok(Self { mmap, data_start, tensors, metadata })
+    }
+
+    pub fn metadata(&self) -> &BTreeMap<String, String> {
+        &self.metadata
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn view(&self, name: &str) -> Result<&TensorView, CkptError> {
+        self.tensors.get(name).ok_or_else(|| CkptError::MissingTensor(name.to_string()))
+    }
+
+    /// Total bytes of tensor payload (the data region actually claimed).
+    pub fn tensor_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.end - t.begin).sum()
+    }
+
+    /// True when the file is served by a kernel mapping (zero-copy).
+    pub fn is_mapped(&self) -> bool {
+        self.mmap.is_mapped()
+    }
+
+    /// Raw little-endian payload bytes of one tensor — a direct slice of
+    /// the mapping, no copy.
+    pub fn raw(&self, name: &str) -> Result<&[u8], CkptError> {
+        let t = self.view(name)?;
+        let s = self.data_start + t.begin;
+        let e = self.data_start + t.end;
+        Ok(&self.mmap.bytes()[s..e])
+    }
+
+    /// Decode one tensor to f32 (the only copy on the read path).
+    pub fn f32_vec(&self, name: &str) -> Result<Vec<f32>, CkptError> {
+        let t = self.view(name)?;
+        let raw = self.raw(name)?;
+        let mut out = Vec::with_capacity(t.numel());
+        match t.dtype {
+            StDtype::F32 => {
+                for c in raw.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            StDtype::F16 => {
+                for c in raw.chunks_exact(2) {
+                    out.push(f16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+                }
+            }
+            StDtype::BF16 => {
+                for c in raw.chunks_exact(2) {
+                    out.push(f32::from_bits((u16::from_le_bytes([c[0], c[1]]) as u32) << 16));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a rank-1/2 tensor as a `Mat` (rank 1 becomes one row).
+    pub fn mat(&self, name: &str) -> Result<Mat, CkptError> {
+        let t = self.view(name)?;
+        let (rows, cols) = match t.shape.len() {
+            1 => (1, t.shape[0]),
+            2 => (t.shape[0], t.shape[1]),
+            n => {
+                return Err(CkptError::BadHeader(format!(
+                    "tensor '{name}': rank {n} unsupported (want 1 or 2)"
+                )))
+            }
+        };
+        let data = self.f32_vec(name)?;
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+}
+
+/// Authors a safetensors file: used by tests, examples and benches to
+/// produce synthetic checkpoints on disk (CI never touches the network).
+#[derive(Default)]
+pub struct SafeTensorsWriter {
+    metadata: BTreeMap<String, String>,
+    tensors: Vec<(String, StDtype, Vec<usize>, Vec<u8>)>,
+}
+
+impl SafeTensorsWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn metadata(&mut self, key: impl Into<String>, val: impl Into<String>) -> &mut Self {
+        self.metadata.insert(key.into(), val.into());
+        self
+    }
+
+    pub fn add_f32(&mut self, name: impl Into<String>, shape: &[usize], data: &[f32]) -> &mut Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.tensors.push((name.into(), StDtype::F32, shape.to_vec(), bytes));
+        self
+    }
+
+    /// f32 source stored at a narrower dtype (tests exercise the f16 /
+    /// bf16 read paths through this).
+    pub fn add_f32_as(
+        &mut self,
+        name: impl Into<String>,
+        dtype: StDtype,
+        shape: &[usize],
+        data: &[f32],
+    ) -> &mut Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        let mut bytes = Vec::with_capacity(data.len() * dtype.size());
+        for v in data {
+            match dtype {
+                StDtype::F32 => bytes.extend_from_slice(&v.to_le_bytes()),
+                StDtype::F16 => bytes.extend_from_slice(&f32_to_f16(*v).to_le_bytes()),
+                StDtype::BF16 => bytes.extend_from_slice(&f32_to_bf16(*v).to_le_bytes()),
+            }
+        }
+        self.tensors.push((name.into(), dtype, shape.to_vec(), bytes));
+        self
+    }
+
+    /// Raw little-endian payload; `bytes.len()` must equal
+    /// `product(shape) * dtype.size()`.
+    pub fn add_raw(
+        &mut self,
+        name: impl Into<String>,
+        dtype: StDtype,
+        shape: &[usize],
+        bytes: Vec<u8>,
+    ) -> &mut Self {
+        assert_eq!(shape.iter().product::<usize>() * dtype.size(), bytes.len());
+        self.tensors.push((name.into(), dtype, shape.to_vec(), bytes));
+        self
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut offset = 0usize;
+        let mut entries: Vec<(&str, Json)> = Vec::with_capacity(self.tensors.len() + 1);
+        if !self.metadata.is_empty() {
+            let meta = self
+                .metadata
+                .iter()
+                .map(|(k, v)| (k.as_str(), Json::str(v.clone())))
+                .collect();
+            entries.push(("__metadata__", Json::obj(meta)));
+        }
+        for (name, dtype, shape, bytes) in &self.tensors {
+            let shape_json =
+                Json::Arr(shape.iter().map(|&d| Json::num(d as f64)).collect::<Vec<_>>());
+            let offs = Json::Arr(vec![
+                Json::num(offset as f64),
+                Json::num((offset + bytes.len()) as f64),
+            ]);
+            entries.push((
+                name.as_str(),
+                Json::obj(vec![
+                    ("dtype", Json::str(dtype.name())),
+                    ("shape", shape_json),
+                    ("data_offsets", offs),
+                ]),
+            ));
+            offset += bytes.len();
+        }
+        let mut header = Json::obj(entries).to_string();
+        // pad the header to 8-byte alignment (spaces are valid JSON
+        // whitespace) so the mapped data region starts aligned
+        while (8 + header.len()) % 8 != 0 {
+            header.push(' ');
+        }
+        let mut out = Vec::with_capacity(8 + header.len() + offset);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for (_, _, _, bytes) in &self.tensors {
+            out.extend_from_slice(bytes);
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// IEEE 754 half → single (handles subnormals, inf, NaN).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) as u32) << 31;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (frac << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// single → half, round-to-nearest-even.
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // subnormal half
+        let m = frac | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let rem = m & ((1 << shift) - 1);
+        let round = (rem > (1 << (shift - 1)))
+            || (rem == (1 << (shift - 1)) && (half & 1) == 1);
+        return sign | (half as u16 + round as u16);
+    }
+    let half = ((e as u32) << 10) | (frac >> 13);
+    let rem = frac & 0x1fff;
+    let round = (rem > 0x1000) || (rem == 0x1000 && (half & 1) == 1);
+    sign | (half + round as u32) as u16
+}
+
+/// single → bfloat16, round-to-nearest-even (NaN payload preserved).
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x40; // quiet, keep sign
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gqsa_st_{tag}_{}.safetensors", std::process::id()))
+    }
+
+    #[test]
+    fn write_read_roundtrip_with_metadata() {
+        let p = tmp("rt");
+        let mut w = SafeTensorsWriter::new();
+        w.metadata("purpose", "test");
+        w.add_f32("a", &[2, 3], &[1.0, -2.0, 3.5, 0.0, 5.25, -6.0]);
+        w.add_f32("b", &[4], &[9.0, 8.0, 7.0, 6.0]);
+        w.write(&p).unwrap();
+
+        let st = SafeTensors::open(&p).unwrap();
+        assert_eq!(st.metadata().get("purpose").map(|s| s.as_str()), Some("test"));
+        let a = st.mat("a").unwrap();
+        assert_eq!((a.rows, a.cols), (2, 3));
+        assert_eq!(a.data, vec![1.0, -2.0, 3.5, 0.0, 5.25, -6.0]);
+        let b = st.mat("b").unwrap();
+        assert_eq!((b.rows, b.cols), (1, 4));
+        assert!(matches!(st.f32_vec("zzz"), Err(CkptError::MissingTensor(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn f16_bf16_roundtrip_read() {
+        let p = tmp("half");
+        let vals = [0.0f32, 1.0, -1.5, 0.099976, 65504.0, -0.25];
+        let mut w = SafeTensorsWriter::new();
+        w.add_f32_as("h", StDtype::F16, &[6], &vals);
+        w.add_f32_as("b", StDtype::BF16, &[6], &vals);
+        w.write(&p).unwrap();
+        let st = SafeTensors::open(&p).unwrap();
+        let h = st.f32_vec("h").unwrap();
+        let b = st.f32_vec("b").unwrap();
+        for i in 0..vals.len() {
+            assert!((h[i] - vals[i]).abs() <= vals[i].abs() * 1e-3 + 1e-4, "f16 {i}");
+            assert!((b[i] - vals[i]).abs() <= vals[i].abs() * 1e-2 + 1e-2, "bf16 {i}");
+        }
+        // exact powers of two survive both conversions exactly
+        assert_eq!(h[1], 1.0);
+        assert_eq!(b[5], -0.25);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn f16_conversion_edge_cases() {
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // subnormal half round-trips through f32 exactly
+        let sub = f16_to_f32(0x0001);
+        assert!(sub > 0.0 && sub < 1e-7);
+        assert_eq!(f32_to_f16(sub), 0x0001);
+        // 1e9 overflows half precision
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY);
+    }
+}

@@ -30,7 +30,9 @@ use anyhow::Result;
 
 use crate::coordinator::backend::{Backend, KvMode, SeqState};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{FinishReason, Request, RequestTiming, Response};
+use crate::coordinator::request::{
+    stop_hit, FinishReason, Request, RequestTiming, Response, StreamDelta,
+};
 use crate::engine::cost_model::SpecVerifyModel;
 use crate::engine::executor::{Decomposition, ExecConfig, Executor};
 use crate::model::kv_cache::{
@@ -160,6 +162,10 @@ struct ActiveSeq {
     /// set when the KV pool ran dry under this sequence — it retires
     /// at the end of the tick with whatever it generated so far
     evicted: bool,
+    /// latched by `push_token` when the generated tokens end with one
+    /// of `req.stop`: the sequence retires this tick with
+    /// `FinishReason::Stop`
+    stopped: bool,
     /// draft-tier KV for speculative decode (None = plain decode).
     /// Shares the engine's block pool in paged mode, so draft blocks
     /// count against the same budget as target blocks.
@@ -175,6 +181,30 @@ struct ActiveSeq {
     /// consecutive clean-sweep rounds on the current tier; reaching
     /// `TIER_DOWN_STREAK` hops one rung cheaper
     tier_streak: u32,
+}
+
+impl ActiveSeq {
+    /// Commit one generated token: append it, emit the stream delta,
+    /// and run the rolling stop-sequence matcher. Returns true when a
+    /// stop sequence just completed — callers inside a speculative
+    /// accept window break immediately, truncating the accepted tail
+    /// at exactly the token that finished the match (KV positions past
+    /// it are masked off by the retirement publication's length cap).
+    fn push_token(&mut self, tok: u32) -> bool {
+        self.generated.push(tok);
+        if let Some(tx) = &self.req.stream {
+            // a hung-up receiver must never stall the engine
+            let _ = tx.send(StreamDelta {
+                id: self.req.id,
+                index: self.generated.len() - 1,
+                token: tok,
+            });
+        }
+        if stop_hit(&self.req.stop, &self.generated) {
+            self.stopped = true;
+        }
+        self.stopped
+    }
 }
 
 /// Clean sweeps in a row before a sequence hops one draft-tier rung
@@ -600,6 +630,7 @@ impl EngineCore {
                 submitted,
                 timing,
                 evicted: false,
+                stopped: false,
                 draft_kv,
                 spec_k,
                 k_now: spec_k,
@@ -718,7 +749,7 @@ impl EngineCore {
                 // first token comes from the chunk's last-row logits
                 let mode = seq.req.sampling.to_sampling();
                 let tok = sample(self.block.logits.row(take - 1), mode, &mut self.rng);
-                seq.generated.push(tok);
+                seq.push_token(tok);
                 seq.timing.ttft_us = seq.submitted.elapsed().as_micros() as u64;
                 processed += 1;
             }
@@ -865,9 +896,10 @@ impl EngineCore {
                                 if seq.generated.len() >= seq.req.max_new_tokens {
                                     break;
                                 }
-                                seq.generated.push(tok);
                                 processed += 1;
-                                if seq.req.stop_token == Some(tok) {
+                                // a stop sequence completing mid-window
+                                // truncates the accepted tail right here
+                                if seq.push_token(tok) {
                                     break;
                                 }
                             }
@@ -949,9 +981,10 @@ impl EngineCore {
                                 if seq.generated.len() >= seq.req.max_new_tokens {
                                     break;
                                 }
-                                seq.generated.push(tok);
                                 processed += 1;
-                                if seq.req.stop_token == Some(tok) {
+                                // a stop sequence completing mid-window
+                                // truncates the accepted tail right here
+                                if seq.push_token(tok) {
                                     break;
                                 }
                             }
@@ -1029,7 +1062,7 @@ impl EngineCore {
             for (bi, &i) in decode_idx.iter().enumerate() {
                 let mode = self.active[i].req.sampling.to_sampling();
                 let tok = sample(self.block.logits.row(bi), mode, &mut self.rng);
-                self.active[i].generated.push(tok);
+                self.active[i].push_token(tok);
                 processed += 1;
             }
         }
@@ -1070,18 +1103,26 @@ impl EngineCore {
             seq.timing.decode_us =
                 seq.timing.total_us - seq.timing.queued_us - seq.timing.prefill_us;
             self.metrics.record(&seq.timing, prompt_len, seq.generated.len());
-            // publish the retiring sequence's sealed prompt blocks into
-            // the shared-prefix trees before its KV resets. Evicted and
-            // mid-prefill retirees publish too: whatever prompt prefix
-            // they DID seal is valid for the next request. Only blocks
-            // fully covered by the prompt qualify (generated positions
-            // are sampling-dependent and never shared).
+            // publish the retiring sequence's sealed blocks into the
+            // shared-prefix trees before its KV resets. Evicted and
+            // mid-prefill retirees publish too: whatever prefix they
+            // DID seal is valid for the next request. Generation-
+            // covered blocks qualify alongside prompt-covered ones: KV
+            // at position i depends only on the token ids fed at
+            // 0..=i, and the tree matches by exact token id — so a
+            // follow-up request whose prompt extends prompt+completion
+            // adopts them regardless of sampling mode. The length cap
+            // (`covered`) masks off KV positions past the committed
+            // tokens (speculative overshoot, stop-sequence truncation).
             if seq.req.prefix_cache.unwrap_or(true) {
                 if let Some(cache) = self.prefix.as_mut() {
+                    let mut key = seq.req.prompt.clone();
+                    key.extend_from_slice(&seq.generated);
                     if let Some(kv) = seq.state.native_kv() {
-                        let n = (prompt_len / KV_BLOCK).min(kv.sealed_blocks_min());
+                        let covered = kv.len().min(key.len());
+                        let n = (covered / KV_BLOCK).min(kv.sealed_blocks_min());
                         if n > 0 {
-                            cache.target.insert(&seq.req.prompt, &kv.share_prefix_blocks(n));
+                            cache.target.insert(&key, &kv.share_prefix_blocks(n));
                         }
                     }
                     // only default-tier draft K/V may enter the shared
@@ -1089,11 +1130,10 @@ impl EngineCore {
                     // different tier's projections
                     if seq.tier_now == default_tier {
                         if let Some(draft) = &seq.draft_kv {
-                            let n = (prompt_len / KV_BLOCK).min(draft.sealed_blocks_min());
+                            let covered = draft.len().min(key.len());
+                            let n = (covered / KV_BLOCK).min(draft.sealed_blocks_min());
                             if n > 0 {
-                                cache
-                                    .draft
-                                    .insert(&seq.req.prompt, &draft.share_prefix_blocks(n));
+                                cache.draft.insert(&key, &draft.share_prefix_blocks(n));
                             }
                         }
                     }
@@ -1104,9 +1144,7 @@ impl EngineCore {
             } else if seq.fed < prompt_len {
                 // retired mid-prefill by the capacity guard
                 FinishReason::CapacityFull
-            } else if seq.req.stop_token.is_some()
-                && seq.generated.last() == seq.req.stop_token.as_ref()
-            {
+            } else if seq.stopped {
                 FinishReason::Stop
             } else if seq.generated.len() >= seq.req.max_new_tokens {
                 FinishReason::Length
@@ -1162,10 +1200,8 @@ impl EngineCore {
         if seq.generated.len() >= seq.req.max_new_tokens {
             return true;
         }
-        if let (Some(stop), Some(&last)) = (seq.req.stop_token, seq.generated.last()) {
-            if last == stop {
-                return true;
-            }
+        if seq.stopped {
+            return true;
         }
         // KV capacity guard
         self.backend.seq_len(&seq.state) + 1 >= self.cfg.kv_capacity
@@ -1360,16 +1396,56 @@ mod tests {
     #[test]
     fn stop_token_halts_generation() {
         let mut e = engine(1);
-        let mut req = Request::new(1, vec![1, 2], 50);
+        let req = Request::new(1, vec![1, 2], 50);
         // pick whatever greedy generates first as the stop token
         e.submit(req.clone());
         let first = e.run_to_completion().unwrap()[0].tokens[0];
-        req.stop_token = Some(first);
         let mut e2 = engine(1);
-        e2.submit(req);
+        e2.submit(req.with_stop_token(first));
         let out = e2.run_to_completion().unwrap();
         assert_eq!(out[0].tokens.len(), 1);
         assert_eq!(out[0].finish, crate::coordinator::request::FinishReason::Stop);
+    }
+
+    #[test]
+    fn multi_token_stop_sequence_halts_at_suffix() {
+        // reference run: what does greedy emit unconstrained?
+        let mut e = engine(1);
+        let req = Request::new(1, vec![1, 2], 10);
+        e.submit(req.clone());
+        let free = e.run_to_completion().unwrap()[0].tokens.clone();
+        assert!(free.len() >= 4, "reference run too short for the test");
+        // stop on the 2-token sequence ending at position 3 (repeating
+        // tokens can complete the match earlier — compute the earliest
+        // prefix of the free run that ends with it)
+        let stop_seq = free[2..4].to_vec();
+        let end = (1..=free.len()).find(|&e| free[..e].ends_with(&stop_seq)).unwrap();
+        let mut e2 = engine(1);
+        e2.submit(req.clone().with_stop(vec![stop_seq]));
+        let out = e2.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens, free[..end].to_vec());
+        assert_eq!(out[0].finish, crate::coordinator::request::FinishReason::Stop);
+        // a stop that never occurs leaves generation unchanged
+        let mut e3 = engine(1);
+        e3.submit(req.with_stop(vec![vec![9999, 9999]]));
+        let out = e3.run_to_completion().unwrap();
+        assert_eq!(out[0].tokens, free);
+        assert_eq!(out[0].finish, crate::coordinator::request::FinishReason::Length);
+    }
+
+    #[test]
+    fn streaming_deltas_match_final_tokens() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut e = engine(1);
+        e.submit(Request::new(1, vec![1, 2, 3], 6).with_stream(tx));
+        let out = e.run_to_completion().unwrap();
+        let deltas: Vec<_> = rx.try_iter().collect();
+        assert_eq!(deltas.len(), out[0].tokens.len());
+        for (i, d) in deltas.iter().enumerate() {
+            assert_eq!(d.id, 1);
+            assert_eq!(d.index, i);
+            assert_eq!(d.token, out[0].tokens[i]);
+        }
     }
 
     #[test]
@@ -1899,6 +1975,7 @@ mod tests {
             submitted: Instant::now(),
             timing: RequestTiming::default(),
             evicted: false,
+            stopped: false,
             draft_kv: None,
             spec_k: 4,
             k_now: 4,
@@ -1993,14 +2070,44 @@ mod tests {
         let stop = stream[stream.len() / 2]; // a token mid-stream
         let run = |spec_k: usize| {
             let mut e = engine_spec(spec_k);
-            let mut req = Request::new(1, vec![2, 3, 4], 30);
-            req.stop_token = Some(stop);
-            e.submit(req);
+            e.submit(Request::new(1, vec![2, 3, 4], 30).with_stop_token(stop));
             e.run_to_completion().unwrap()[0].clone()
         };
         let plain = run(0);
         let spec = run(4);
         assert_eq!(plain.tokens, spec.tokens);
         assert_eq!(plain.finish, spec.finish);
+    }
+
+    #[test]
+    fn stop_sequence_split_across_speculative_accept_window_matches_plain() {
+        // a MULTI-token stop whose tokens straddle speculative rounds
+        // (part accepted last round, part this round) must cut the
+        // stream at exactly the token that completes the match — the
+        // same position plain decode stops at
+        let mut probe = engine_spec(0);
+        probe.submit(Request::new(1, vec![2, 3, 4], 30));
+        let stream = probe.run_to_completion().unwrap()[0].tokens.clone();
+        assert!(stream.len() >= 8, "probe stream too short");
+        // 3-token stop sequence ending mid-stream: with spec_k=4 the
+        // accept windows are up to 5 tokens, so for several offsets the
+        // match necessarily spans a window boundary
+        for end in 4..(stream.len() - 1).min(9) {
+            let stop_seq = stream[end - 3..end].to_vec();
+            // repeating tokens can complete the match before `end`
+            let expect =
+                (1..=stream.len()).find(|&e| stream[..e].ends_with(&stop_seq)).unwrap();
+            let run = |spec_k: usize| {
+                let mut e = engine_spec(spec_k);
+                e.submit(Request::new(1, vec![2, 3, 4], 30).with_stop(vec![stop_seq.clone()]));
+                e.run_to_completion().unwrap()[0].clone()
+            };
+            let plain = run(0);
+            let spec = run(4);
+            assert_eq!(plain.tokens, stream[..expect].to_vec(), "plain stop position");
+            assert_eq!(plain.tokens, spec.tokens, "end={end}");
+            assert_eq!(plain.finish, spec.finish, "end={end}");
+            assert_eq!(spec.finish, crate::coordinator::request::FinishReason::Stop);
+        }
     }
 }

@@ -1,0 +1,473 @@
+//! HTTP/1.1 + SSE front end over the serving [`Client`] — a
+//! std-`TcpListener` loop with one thread per connection (no async
+//! runtime is vendored in this image; see coordinator/mod.rs). Because
+//! it sits on the router client, `GQSA_SHARDS` composes: the HTTP
+//! surface is shard-count agnostic.
+//!
+//! Routes:
+//!   POST /v1/completions   OpenAI-style text completion. Body fields:
+//!                          prompt (string, required), max_tokens,
+//!                          temperature (<= 0 selects greedy), top_p,
+//!                          n, stream (bool), stop (string or array
+//!                          of strings). With `stream: true` the reply
+//!                          is `text/event-stream`: one `data:` frame
+//!                          per committed token (text delta + raw
+//!                          token id), a final frame per choice with
+//!                          its finish_reason, then `data: [DONE]`.
+//!   GET  /report           the engine fleet's metrics report (text).
+//!
+//! Token ids ride in every frame alongside the detokenized text, so
+//! clients that care about bit-identity (the e2e tests) can compare
+//! streams without re-tokenizing.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::request::{FinishReason, Request, SamplingCfg, SamplingMode};
+use crate::coordinator::server::Client;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::Json;
+
+/// Fields pulled out of a /v1/completions body.
+struct CompletionParams {
+    prompt: Vec<u32>,
+    max_tokens: usize,
+    sampling: SamplingCfg,
+    n: usize,
+    stream: bool,
+    stop: Vec<Vec<u32>>,
+}
+
+struct Shared {
+    client: Client,
+    /// id space for HTTP-originated requests. Starts high so a process
+    /// that also submits through an in-process `Client` with small
+    /// hand-picked ids never trips the router's duplicate-id guard.
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// The HTTP server: an accept loop on its own thread, one handler
+/// thread per connection. `shutdown()` stops accepting and joins every
+/// in-flight handler (each of which blocks only on its own requests'
+/// channels), so by the time it returns no connection references the
+/// `Client` and the underlying `Server` can drain and shut down.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving. Use port 0 for an ephemeral port and
+    /// read it back from [`local_addr`](Self::local_addr).
+    pub fn bind(addr: &str, client: Client) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        // non-blocking accept so the loop can observe the shutdown flag
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            client,
+            next_id: AtomicU64::new(1 << 32),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || {
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            while !accept_shared.shutdown.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let conn_shared = Arc::clone(&accept_shared);
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, &conn_shared);
+                        }));
+                        // opportunistically reap finished handlers so a
+                        // long-lived server doesn't accumulate handles
+                        conns.retain(|h| !h.is_finished());
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                }
+            }
+            for h in conns {
+                let _ = h.join();
+            }
+        });
+        Ok(Self { addr: local, shared, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, then wait for in-flight connections to finish.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Incremental byte-stream detokenizer: buffers the (at most 3-byte)
+/// tail of an incomplete UTF-8 sequence so multi-byte code points
+/// split across token deltas come out whole, while invalid bytes
+/// degrade to U+FFFD instead of stalling the stream.
+struct Detok {
+    buf: Vec<u8>,
+}
+
+impl Detok {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn push(&mut self, tok: u32) -> String {
+        self.buf.push((tok & 0xFF) as u8);
+        match std::str::from_utf8(&self.buf) {
+            Ok(s) => {
+                let out = s.to_string();
+                self.buf.clear();
+                out
+            }
+            Err(e) => {
+                // emit the valid prefix plus any definitely-invalid
+                // bytes (as replacement chars); keep an incomplete tail
+                let mut take = e.valid_up_to();
+                if let Some(k) = e.error_len() {
+                    take += k;
+                }
+                if take == 0 {
+                    return String::new();
+                }
+                let out = String::from_utf8_lossy(&self.buf[..take]).into_owned();
+                self.buf.drain(..take);
+                out
+            }
+        }
+    }
+
+    /// Flush whatever is buffered (end of stream): an incomplete tail
+    /// becomes replacement characters.
+    fn flush(&mut self) -> String {
+        let out = String::from_utf8_lossy(&self.buf).into_owned();
+        self.buf.clear();
+        out
+    }
+}
+
+fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Stop => "stop",
+        FinishReason::Length => "length",
+        FinishReason::CapacityFull => "capacity_full",
+        FinishReason::Evicted => "evicted",
+        FinishReason::EngineError => "engine_error",
+        FinishReason::DuplicateId => "duplicate_id",
+    }
+}
+
+fn parse_params(body: &Json) -> Result<CompletionParams, String> {
+    let prompt_text = body
+        .get("prompt")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing required string field 'prompt'".to_string())?;
+    let tok = ByteTokenizer;
+    let prompt = tok.encode(prompt_text);
+    if prompt.is_empty() {
+        return Err("'prompt' must be non-empty".into());
+    }
+    let max_tokens = body.get("max_tokens").and_then(Json::as_u64).unwrap_or(16) as usize;
+    let temperature = body.get("temperature").and_then(Json::as_f64).unwrap_or(0.0);
+    let top_p = body.get("top_p").and_then(Json::as_f64).unwrap_or(0.95);
+    let n = body.get("n").and_then(Json::as_u64).unwrap_or(1) as usize;
+    if n == 0 || n > 16 {
+        return Err("'n' must be in 1..=16".into());
+    }
+    let stream = body.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let stop = match body.get("stop") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(Json::Str(s)) => vec![tok.encode(s)],
+        Some(Json::Arr(a)) => {
+            let mut out = Vec::with_capacity(a.len());
+            for v in a {
+                let s = v.as_str().ok_or_else(|| "'stop' array must hold strings".to_string())?;
+                out.push(tok.encode(s));
+            }
+            out
+        }
+        Some(_) => return Err("'stop' must be a string or an array of strings".into()),
+    };
+    let sampling = if temperature <= 0.0 {
+        SamplingCfg { mode: SamplingMode::Greedy, ..SamplingCfg::default() }
+    } else {
+        SamplingCfg {
+            mode: SamplingMode::TopP,
+            temperature: temperature as f32,
+            top_p: top_p as f32,
+            ..SamplingCfg::default()
+        }
+    };
+    Ok(CompletionParams { prompt, max_tokens, sampling, n, stream, stop })
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) -> io::Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    // headers: only Content-Length matters to this server
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let mut out = reader.into_inner();
+
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/report") => {
+            let report = shared
+                .client
+                .metrics_report()
+                .unwrap_or_else(|e| format!("metrics unavailable: {e}"));
+            write_response(&mut out, 200, "text/plain; charset=utf-8", report.as_bytes())
+        }
+        ("POST", "/v1/completions") => {
+            let parsed = String::from_utf8(body)
+                .map_err(|e| e.to_string())
+                .and_then(|s| Json::parse(&s).map_err(|e| e.to_string()))
+                .and_then(|j| parse_params(&j));
+            match parsed {
+                Err(msg) => write_error(&mut out, 400, &msg),
+                Ok(p) => serve_completion(&mut out, shared, p),
+            }
+        }
+        _ => write_error(&mut out, 404, &format!("no route for {method} {path}")),
+    }
+}
+
+fn serve_completion(out: &mut TcpStream, shared: &Shared, p: CompletionParams) -> io::Result<()> {
+    let base_id = shared.next_id.fetch_add(p.n as u64, Ordering::Relaxed);
+    let mk_req = |ci: usize| {
+        let mut req = Request::new(base_id + ci as u64, p.prompt.clone(), p.max_tokens)
+            .with_stop(p.stop.clone());
+        req.sampling = p.sampling;
+        req
+    };
+    if p.stream {
+        // submit every choice up front (they decode concurrently in the
+        // engine fleet), then emit each choice's frames in order
+        let mut choices = Vec::with_capacity(p.n);
+        for ci in 0..p.n {
+            match shared.client.submit_streaming(mk_req(ci)) {
+                Ok(pair) => choices.push(Some(pair)),
+                Err(_) => choices.push(None),
+            }
+        }
+        write!(
+            out,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        )?;
+        for (ci, pair) in choices.into_iter().enumerate() {
+            let Some((deltas, resp)) = pair else {
+                sse_frame(out, base_id, ci, "", None, Some("engine_error"))?;
+                continue;
+            };
+            let mut detok = Detok::new();
+            // the engine drops the delta sender at retirement, so this
+            // loop ends exactly when the choice finishes
+            for d in deltas.iter() {
+                let text = detok.push(d.token);
+                sse_frame(out, base_id, ci, &text, Some(d.token), None)?;
+            }
+            let finish = resp
+                .recv()
+                .map(|r| finish_str(r.finish))
+                .unwrap_or("engine_error");
+            sse_frame(out, base_id, ci, &detok.flush(), None, Some(finish))?;
+        }
+        out.write_all(b"data: [DONE]\n\n")?;
+        out.flush()
+    } else {
+        let tok = ByteTokenizer;
+        let mut choices = Vec::with_capacity(p.n);
+        let mut completion_tokens = 0usize;
+        // submit all, then await all: choices decode concurrently
+        let pending: Vec<_> = (0..p.n).map(|ci| shared.client.submit(mk_req(ci))).collect();
+        for (ci, rx) in pending.into_iter().enumerate() {
+            let resp = match rx.and_then(|rx| Ok(rx.recv()?)) {
+                Ok(r) => r,
+                Err(e) => return write_error(out, 500, &format!("engine: {e}")),
+            };
+            completion_tokens += resp.tokens.len();
+            choices.push(Json::obj(vec![
+                ("index", Json::num(ci as f64)),
+                ("text", Json::str(tok.decode(&resp.tokens))),
+                (
+                    "token_ids",
+                    Json::Arr(resp.tokens.iter().map(|&t| Json::num(f64::from(t))).collect()),
+                ),
+                ("finish_reason", Json::str(finish_str(resp.finish))),
+            ]));
+        }
+        let body = Json::obj(vec![
+            ("id", Json::str(format!("cmpl-{base_id}"))),
+            ("object", Json::str("text_completion")),
+            ("model", Json::str("gqsa")),
+            ("choices", Json::Arr(choices)),
+            (
+                "usage",
+                Json::obj(vec![
+                    ("prompt_tokens", Json::num(p.prompt.len() as f64)),
+                    ("completion_tokens", Json::num(completion_tokens as f64)),
+                    ("total_tokens", Json::num((p.prompt.len() + completion_tokens) as f64)),
+                ]),
+            ),
+        ]);
+        write_response(out, 200, "application/json", body.to_string().as_bytes())
+    }
+}
+
+/// One SSE frame: a delta (`finish_reason: null`, with the raw token
+/// id) or a terminal frame for the choice (`finish_reason` set).
+fn sse_frame(
+    out: &mut TcpStream,
+    base_id: u64,
+    ci: usize,
+    text: &str,
+    token: Option<u32>,
+    finish: Option<&str>,
+) -> io::Result<()> {
+    let mut choice = vec![
+        ("index", Json::num(ci as f64)),
+        ("text", Json::str(text)),
+        ("finish_reason", finish.map_or(Json::Null, Json::str)),
+    ];
+    if let Some(t) = token {
+        choice.insert(2, ("token", Json::num(f64::from(t))));
+    }
+    let frame = Json::obj(vec![
+        ("id", Json::str(format!("cmpl-{base_id}"))),
+        ("object", Json::str("text_completion.chunk")),
+        ("choices", Json::Arr(vec![Json::obj(choice)])),
+    ]);
+    write!(out, "data: {frame}\n\n")?;
+    out.flush()
+}
+
+fn write_response(
+    out: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        out,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    out.write_all(body)?;
+    out.flush()
+}
+
+fn write_error(out: &mut TcpStream, status: u16, msg: &str) -> io::Result<()> {
+    let body = Json::obj(vec![(
+        "error",
+        Json::obj(vec![("message", Json::str(msg)), ("type", Json::str("invalid_request_error"))]),
+    )]);
+    write_response(out, status, "application/json", body.to_string().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detok_reassembles_split_utf8() {
+        let mut d = Detok::new();
+        let s = "héllo 日本"; // mixed 1/2/3-byte code points
+        let mut out = String::new();
+        for b in s.bytes() {
+            out.push_str(&d.push(u32::from(b)));
+        }
+        out.push_str(&d.flush());
+        assert_eq!(out, s);
+    }
+
+    #[test]
+    fn detok_incomplete_tail_flushes_replacement() {
+        let mut d = Detok::new();
+        assert_eq!(d.push(0xE6), ""); // first byte of a 3-byte seq
+        let tail = d.flush();
+        assert_eq!(tail, "\u{FFFD}");
+    }
+
+    #[test]
+    fn detok_invalid_byte_degrades_not_stalls() {
+        let mut d = Detok::new();
+        let out = d.push(0xFF); // never valid in UTF-8
+        assert_eq!(out, "\u{FFFD}");
+        assert_eq!(d.push(u32::from(b'a')), "a");
+    }
+
+    #[test]
+    fn params_parse_defaults_and_stop_shapes() {
+        let j = Json::parse(r#"{"prompt":"hi"}"#).unwrap();
+        let p = parse_params(&j).unwrap();
+        assert_eq!(p.prompt, vec![104, 105]);
+        assert_eq!((p.max_tokens, p.n, p.stream), (16, 1, false));
+        assert_eq!(p.sampling.mode, SamplingMode::Greedy);
+        assert!(p.stop.is_empty());
+
+        let j = Json::parse(r#"{"prompt":"x","stop":". ","temperature":0.7,"top_p":0.9}"#).unwrap();
+        let p = parse_params(&j).unwrap();
+        assert_eq!(p.stop, vec![vec![46, 32]]);
+        assert_eq!(p.sampling.mode, SamplingMode::TopP);
+        assert!((p.sampling.temperature - 0.7).abs() < 1e-6);
+
+        let j = Json::parse(r#"{"prompt":"x","stop":["a","bc"]}"#).unwrap();
+        let p = parse_params(&j).unwrap();
+        assert_eq!(p.stop, vec![vec![97], vec![98, 99]]);
+
+        assert!(parse_params(&Json::parse(r#"{"max_tokens":4}"#).unwrap()).is_err());
+        assert!(parse_params(&Json::parse(r#"{"prompt":"x","stop":7}"#).unwrap()).is_err());
+        assert!(parse_params(&Json::parse(r#"{"prompt":"x","n":0}"#).unwrap()).is_err());
+    }
+}

@@ -15,6 +15,7 @@
 
 pub mod backend;
 pub mod engine_core;
+pub mod http;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -22,7 +23,8 @@ pub mod server;
 
 pub use backend::{Backend, KvMode};
 pub use engine_core::{EngineConfig, EngineCore};
+pub use http::HttpServer;
 pub use metrics::{Metrics, RequestMetrics};
-pub use request::{FinishReason, Request, Response, SamplingCfg};
+pub use request::{FinishReason, Request, Response, SamplingCfg, StreamDelta};
 pub use router::{Router, RouterClient, RouterConfig};
-pub use server::Server;
+pub use server::{Client, Server};

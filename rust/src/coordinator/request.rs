@@ -34,14 +34,28 @@ impl SamplingCfg {
     }
 }
 
-#[derive(Clone, Debug)]
+/// One streamed token, sent on `Request::stream` the moment the engine
+/// commits it to the sequence (before the final `Response`). `index` is
+/// the position within the generated tokens, so receivers can assert
+/// ordering and detect gaps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamDelta {
+    pub id: u64,
+    pub index: usize,
+    pub token: u32,
+}
+
+#[derive(Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     pub sampling: SamplingCfg,
-    /// stop generation at this byte (e.g. b'.'), if set
-    pub stop_token: Option<u32>,
+    /// stop sequences: generation halts (with `FinishReason::Stop`) as
+    /// soon as the generated tokens end with any of these token
+    /// sequences. A single-token stop is `vec![vec![tok]]`
+    /// (`with_stop_token`); empty sequences never match.
+    pub stop: Vec<Vec<u32>>,
     /// per-request speculative-decoding override: `None` follows the
     /// engine's `EngineConfig::spec_k`, `Some(0)` forces plain decode,
     /// `Some(k)` requests k draft tokens per round (clamped to the
@@ -53,6 +67,26 @@ pub struct Request {
     /// its own (e.g. prompts carrying per-user secrets that must not be
     /// shared), `Some(true)` is a no-op when the engine cache is off.
     pub prefix_cache: Option<bool>,
+    /// optional per-token streaming channel: every committed token is
+    /// sent as a `StreamDelta` (send failures are ignored — a hung-up
+    /// receiver never stalls the engine). Rides inside the request, so
+    /// streaming flows through the router/shard machinery untouched.
+    pub stream: Option<std::sync::mpsc::Sender<StreamDelta>>,
+}
+
+impl std::fmt::Debug for Request {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Request")
+            .field("id", &self.id)
+            .field("prompt", &self.prompt)
+            .field("max_new_tokens", &self.max_new_tokens)
+            .field("sampling", &self.sampling)
+            .field("stop", &self.stop)
+            .field("spec_k", &self.spec_k)
+            .field("prefix_cache", &self.prefix_cache)
+            .field("stream", &self.stream.is_some())
+            .finish()
+    }
 }
 
 impl Request {
@@ -62,10 +96,23 @@ impl Request {
             prompt,
             max_new_tokens,
             sampling: SamplingCfg::default(),
-            stop_token: None,
+            stop: Vec::new(),
             spec_k: None,
             prefix_cache: None,
+            stream: None,
         }
+    }
+
+    /// Builder-style single-token stop (the pre-multi-token API shape).
+    pub fn with_stop_token(mut self, tok: u32) -> Self {
+        self.stop = vec![vec![tok]];
+        self
+    }
+
+    /// Builder-style multi-token stop sequences (see `stop`).
+    pub fn with_stop(mut self, stop: Vec<Vec<u32>>) -> Self {
+        self.stop = stop;
+        self
     }
 
     /// Builder-style per-request speculative override (see `spec_k`).
@@ -79,6 +126,20 @@ impl Request {
         self.prefix_cache = Some(on);
         self
     }
+
+    /// Builder-style per-token streaming (see `stream`).
+    pub fn with_stream(mut self, tx: std::sync::mpsc::Sender<StreamDelta>) -> Self {
+        self.stream = Some(tx);
+        self
+    }
+}
+
+/// Rolling suffix matcher: true when `generated` ends with any
+/// non-empty stop sequence. Called once per committed token, so a stop
+/// split across a speculative accept window still fires at exactly the
+/// token that completes it.
+pub fn stop_hit(stop: &[Vec<u32>], generated: &[u32]) -> bool {
+    stop.iter().any(|s| !s.is_empty() && generated.ends_with(s))
 }
 
 /// Per-request latency breakdown (drives Tables 4/13/16).
@@ -139,11 +200,27 @@ mod tests {
     fn defaults() {
         let r = Request::new(1, vec![1, 2, 3], 8);
         assert_eq!(r.sampling.mode, SamplingMode::Greedy);
-        assert!(r.stop_token.is_none());
+        assert!(r.stop.is_empty());
         assert!(r.spec_k.is_none());
         assert!(r.prefix_cache.is_none());
+        assert!(r.stream.is_none());
         assert_eq!(r.clone().with_spec_k(2).spec_k, Some(2));
+        assert_eq!(r.clone().with_stop_token(7).stop, vec![vec![7]]);
         assert_eq!(r.with_prefix_cache(false).prefix_cache, Some(false));
+    }
+
+    #[test]
+    fn stop_hit_is_a_suffix_match() {
+        let stop = vec![vec![3, 4], vec![9]];
+        assert!(!stop_hit(&stop, &[3]));
+        assert!(!stop_hit(&stop, &[4, 3]));
+        assert!(stop_hit(&stop, &[1, 3, 4]));
+        assert!(stop_hit(&stop, &[9]));
+        assert!(stop_hit(&stop, &[5, 9]));
+        assert!(!stop_hit(&stop, &[]));
+        // empty sequences never match
+        assert!(!stop_hit(&[vec![]], &[1, 2]));
+        assert!(!stop_hit(&[], &[1, 2]));
     }
 
     #[test]

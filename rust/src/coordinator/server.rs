@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::coordinator::engine_core::EngineCore;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Request, Response, StreamDelta};
 use crate::coordinator::router::{Router, RouterClient, RouterConfig};
 
 /// Handle for submitting requests to a running engine fleet.
@@ -26,6 +26,25 @@ impl Client {
     /// Fire-and-forget submit; receive on the returned channel.
     pub fn submit(&self, req: Request) -> Result<std::sync::mpsc::Receiver<Response>> {
         self.inner.submit(req)
+    }
+
+    /// Streaming submit: attaches a per-token delta channel to the
+    /// request (any previously attached channel is replaced). Every
+    /// committed token arrives as a [`StreamDelta`] in generation
+    /// order; the final [`Response`] (with timing + finish reason)
+    /// lands on the second receiver after the last delta. The delta
+    /// sender is dropped with the request at retirement, so iterating
+    /// the delta receiver to disconnection then reading the response
+    /// never deadlocks.
+    #[allow(clippy::type_complexity)]
+    pub fn submit_streaming(
+        &self,
+        req: Request,
+    ) -> Result<(std::sync::mpsc::Receiver<StreamDelta>, std::sync::mpsc::Receiver<Response>)>
+    {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let resp = self.inner.submit(req.with_stream(tx))?;
+        Ok((rx, resp))
     }
 
     pub fn metrics_report(&self) -> Result<String> {
@@ -99,6 +118,22 @@ mod tests {
         let client = srv.client();
         let resp = client.generate(Request::new(1, vec![1, 2, 3], 4)).unwrap();
         assert_eq!(resp.tokens.len(), 4);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn streaming_submit_deltas_match_response() {
+        let srv = server();
+        let client = srv.client();
+        let (deltas, resp) = client.submit_streaming(Request::new(7, vec![1, 2, 3], 5)).unwrap();
+        // drain deltas to disconnection, then take the final response
+        let got: Vec<_> = deltas.iter().collect();
+        let resp = resp.recv().unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+        assert_eq!(got.len(), resp.tokens.len());
+        for (i, d) in got.iter().enumerate() {
+            assert_eq!((d.id, d.index, d.token), (7, i, resp.tokens[i]));
+        }
         srv.shutdown();
     }
 

@@ -19,6 +19,7 @@
 )]
 
 pub mod bench;
+pub mod ckpt;
 pub mod coordinator;
 pub mod engine;
 pub mod gqs;

@@ -4,8 +4,11 @@
 //!   info                          artifact + model inventory
 //!   generate  [--model SPEC] [--family F] [--prompt S] [--max-new N] [--backend native|pjrt]
 //!   serve-demo [--requests N] [--batch B]    continuous-batching demo (GQSA_SHARDS=N shards it)
+//!   serve-http [--addr H:P] [--ckpt PATH]    HTTP/SSE API server (POST /v1/completions, GET /report);
+//!                                            --ckpt imports a safetensors checkpoint (GQSA_OUTLIERS
+//!                                            sets the dense-and-sparse outlier percent)
 //!   eval      [--family F] [--model SPEC]    ppl + zero-shot for one variant
-//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|kernels|shards|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep; kernels = scalar vs SIMD vs W4A8 microkernel GB/s; shards = multi-shard prefix-affinity router sweep)
+//!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|kernels|shards|ckpt|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep; kernels = scalar vs SIMD vs W4A8 microkernel GB/s; shards = multi-shard prefix-affinity router sweep; ckpt = safetensors import wall-clock + outlier sweep)
 //!   engine-sim [--rows N] [--skew X]         Slice-K vs Stream-K simulator
 
 use std::collections::HashMap;
@@ -64,9 +67,10 @@ fn run() -> Result<()> {
         "info" => info(&art),
         "generate" => generate(&art, &flags),
         "serve-demo" => serve_demo(&art, &flags),
+        "serve-http" => serve_http(&art, &flags),
         "eval" => eval_cmd(&art, &flags),
         "bench-table" => {
-            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, kvpage, specdec, prefix, kernels, shards, all)")?;
+            let id = pos.get(1).context("bench-table needs an id (t1..t16, f1, f5, f5x, f6-f8, kvpage, specdec, prefix, kernels, shards, ckpt, all)")?;
             let mut wb = Workbench::new(art);
             experiments::run(id, &mut wb)
         }
@@ -75,7 +79,7 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "gqsa {} — GQSA reproduction CLI\n\n\
-                 usage: gqsa <info|generate|serve-demo|eval|bench-table|engine-sim> [flags]\n\
+                 usage: gqsa <info|generate|serve-demo|serve-http|eval|bench-table|engine-sim> [flags]\n\
                  see rust/src/main.rs header for flags",
                 gqsa::version()
             );
@@ -219,6 +223,58 @@ fn serve_demo(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<
     );
     srv.shutdown();
     Ok(())
+}
+
+/// HTTP/SSE API server over the engine fleet. With `--ckpt PATH` the
+/// model comes from a safetensors checkpoint via the zero-copy import
+/// path (encode + outlier split per `GQSA_OUTLIERS`); otherwise the
+/// workbench artifact named by `--family`/`--model` is served, exactly
+/// like `serve-demo`.
+fn serve_http(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:8080".into());
+    let ckpt = flags.get("ckpt").cloned();
+    let family = flags.get("family").cloned().unwrap_or_else(|| "tiny-llama".into());
+    let spec = flags.get("model").cloned().unwrap_or_else(|| "gqsa:w4s50g16".into());
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+    let art_owned = art.to_path_buf();
+    let srv = gqsa::coordinator::Server::start(move || {
+        let (model, cfg) = if let Some(path) = &ckpt {
+            let opts = gqsa::ckpt::CkptOptions::default();
+            let (t, report) = gqsa::ckpt::load_transformer(path, &opts)?;
+            eprintln!(
+                "imported {path}: {} tensor bytes (mmap={}), outliers {:.2}% -> {} layers / {} nnz / {} bytes",
+                report.tensor_bytes,
+                report.mapped,
+                opts.outlier_pct,
+                report.wrapped_layers,
+                report.outlier_nnz,
+                report.outlier_bytes,
+            );
+            let cfg = t.cfg.clone();
+            (t, cfg)
+        } else {
+            let mut wb = Workbench::new(art_owned.clone());
+            let model = wb.variant(&family, &spec)?;
+            let cfg = model.cfg.clone();
+            (model, cfg)
+        };
+        EngineCore::new(
+            Backend::Native(model),
+            &cfg,
+            EngineConfig { max_batch: batch, prefill_chunk: 16, kv_capacity: 288, ..Default::default() },
+        )
+    });
+    let http = gqsa::coordinator::HttpServer::bind(&addr, srv.client())
+        .with_context(|| format!("bind {addr}"))?;
+    println!(
+        "HTTP serving on http://{} — {} shard(s); POST /v1/completions, GET /report (ctrl-c stops)",
+        http.local_addr(),
+        srv.router().n_shards()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn eval_cmd(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<()> {

@@ -12,4 +12,4 @@ pub use config::ModelConfig;
 pub use kv_cache::{
     CacheFull, KvBlockPool, KvCache, KvDtype, KvPoolStats, SharedKvBlock, KV_BLOCK,
 };
-pub use transformer::{BlockScratch, ExecHandle, LinearKind, Scratch, Transformer};
+pub use transformer::{BlockScratch, ExecHandle, LinearKind, OutlierLinear, Scratch, Transformer};

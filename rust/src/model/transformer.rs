@@ -37,6 +37,17 @@ pub enum LinearKind {
     Semi24(Semi24Kernel),
     /// group-pruned, unquantized (the "S%" sparsity-only rows of Table 10)
     BsrF32(crate::sparse::bsr::BsrMatrix),
+    /// dense-and-sparse decomposition (SqueezeLLM): any base kind plus
+    /// an exact f32 CSR holding the outlier weights zeroed out of the
+    /// base encode; the CSR product is added after the base kernel.
+    Outlier(OutlierLinear),
+}
+
+/// A quantized/sparse base linear with an f32 CSR outlier side-matrix.
+/// The checkpoint import path builds these when `GQSA_OUTLIERS` > 0.
+pub struct OutlierLinear {
+    pub base: Box<LinearKind>,
+    pub csr: crate::sparse::csr::CsrF32,
 }
 
 impl LinearKind {
@@ -47,6 +58,7 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.rows,
             LinearKind::Semi24(s) => s.rows,
             LinearKind::BsrF32(b) => b.rows,
+            LinearKind::Outlier(o) => o.base.out_dim(),
         }
     }
 
@@ -57,6 +69,7 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.cols,
             LinearKind::Semi24(s) => s.cols,
             LinearKind::BsrF32(b) => b.cols,
+            LinearKind::Outlier(o) => o.base.in_dim(),
         }
     }
 
@@ -67,6 +80,7 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.storage_bytes(),
             LinearKind::Semi24(s) => s.storage_bytes(),
             LinearKind::BsrF32(b) => b.storage_bytes(),
+            LinearKind::Outlier(o) => o.base.storage_bytes() + o.csr.storage_bytes(),
         }
     }
 
@@ -78,6 +92,10 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.gemv(x, y, scratch),
             LinearKind::Semi24(s) => s.gemv(x, y),
             LinearKind::BsrF32(b) => b.matvec_into(x, y),
+            LinearKind::Outlier(o) => {
+                o.base.matvec(x, y, scratch);
+                o.csr.matvec_add(x, y);
+            }
         }
     }
 
@@ -93,6 +111,10 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.gemm(x, y, scratch),
             LinearKind::Semi24(s) => s.gemm(x, y),
             LinearKind::BsrF32(b) => b.matmul_into(x, y),
+            LinearKind::Outlier(o) => {
+                o.base.matmul(x, y, scratch);
+                o.csr.matmul_add(x, y);
+            }
         }
     }
 
@@ -106,6 +128,11 @@ impl LinearKind {
             LinearKind::QuantDense(q) => q.decode(),
             LinearKind::Semi24(s) => s.decode(),
             LinearKind::BsrF32(b) => b.decode(),
+            LinearKind::Outlier(o) => {
+                let mut m = o.base.decode_dense();
+                o.csr.add_into(&mut m);
+                m
+            }
         }
     }
 }
@@ -132,9 +159,9 @@ impl ExecHandle {
 
     /// Integer W4A8 `matvec` over pre-quantized activations. Returns
     /// `false` for kinds with no i8 kernel (dense f32 payloads, 2:4
-    /// metadata gather, ref-path GQS shapes) — the caller falls back
-    /// to fake-quant + the f32 kernel so the whole model stays on the
-    /// A8 activation grid.
+    /// metadata gather, ref-path GQS shapes, outlier-decomposed
+    /// linears) — the caller falls back to fake-quant + the f32 kernel
+    /// so the whole model stays on the A8 activation grid.
     pub fn matvec_i8(&mut self, l: &LinearKind, act: &mut ActI8, y: &mut [f32]) -> bool {
         match l {
             LinearKind::Gqs(g) if supports_i8(g.bits, g.group) => {
@@ -182,6 +209,15 @@ impl ExecHandle {
 
     /// Executor-aware `LinearKind::matvec`.
     pub fn matvec(&mut self, l: &LinearKind, x: &[f32], y: &mut [f32], gsum: &mut Vec<f32>) {
+        // Dense-and-sparse: run the base kind (executor-aware), then add
+        // the f32 CSR outliers sequentially — the CSR is <1% of the
+        // weight, far below any fork threshold, and the sequential add
+        // keeps its accumulation order identical at any thread count.
+        if let LinearKind::Outlier(o) = l {
+            self.matvec(&o.base, x, y, gsum);
+            o.csr.matvec_add(x, y);
+            return;
+        }
         match (&self.exec, l) {
             (Some(e), LinearKind::Gqs(g)) => e.gemv_gqs(g, x, y, gsum, &mut self.scratch),
             (Some(e), LinearKind::Dense(m)) => e.gemv_dense(m, x, y, &mut self.scratch),
@@ -194,6 +230,11 @@ impl ExecHandle {
 
     /// Executor-aware `LinearKind::matmul`.
     pub fn matmul(&mut self, l: &LinearKind, x: &Mat, y: &mut Mat, mm: &mut MatmulScratch) {
+        if let LinearKind::Outlier(o) = l {
+            self.matmul(&o.base, x, y, mm);
+            o.csr.matmul_add(x, y);
+            return;
+        }
         match (&self.exec, l) {
             (Some(e), LinearKind::Gqs(g)) => e.gemm_gqs(g, x, y, mm, &mut self.scratch),
             (Some(e), LinearKind::Dense(m)) => e.gemm_dense(m, x, y, &mut self.scratch),

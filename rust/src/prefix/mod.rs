@@ -205,11 +205,14 @@ impl PrefixTree {
         out
     }
 
-    /// Publish a retired sequence's sealed prompt blocks. `chain` is
-    /// shaped `[block][layer]` (from `KvCache::share_prefix_blocks`);
-    /// the caller guarantees every chained block covers prompt-only
-    /// positions. Existing nodes keep their blocks (the bytes are
-    /// identical by construction) and just refresh their LRU stamp.
+    /// Publish a retired sequence's sealed blocks. `chain` is shaped
+    /// `[block][layer]` (from `KvCache::share_prefix_blocks`); the
+    /// caller guarantees every chained block covers positions whose
+    /// fed token ids are exactly `tokens` (prompt, and since the
+    /// generation-reuse change, committed generated tokens too —
+    /// adoption is by exact token match, so either is shareable).
+    /// Existing nodes keep their blocks (the bytes are identical by
+    /// construction) and just refresh their LRU stamp.
     pub fn insert(&mut self, tokens: &[u32], chain: &[Vec<SharedKvBlock>]) {
         let clock = self.tick();
         let n_layers = self.n_layers;

@@ -1,0 +1,211 @@
+//! f32 CSR side-matrix for dense-and-sparse decomposition.
+//!
+//! SqueezeLLM-style outlier storage: the <1% largest-magnitude weights
+//! of a layer are kept exactly (f32) in CSR while the dense residual
+//! goes through the GQS / RTN / GPTQ encoders. The CSR product is
+//! *added* onto the quantized kernel's output, so the accumulation
+//! order must be identical between the per-token and batched paths:
+//! each row computes a local f32 accumulator over its nnz in column
+//! order, then performs exactly one `y[r] += acc` — replicated
+//! verbatim in `matvec_add` and `matmul_add`.
+
+use crate::util::Mat;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrF32 {
+    pub rows: usize,
+    pub cols: usize,
+    /// len rows+1; row r owns nnz indices row_ptr[r]..row_ptr[r+1].
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CsrF32 {
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row_ptr: vec![0; rows + 1], col_idx: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Build from (row, col, value) entries. Entries are sorted by
+    /// (row, col) internally, so callers may pass any order; duplicate
+    /// coordinates are rejected.
+    pub fn from_entries(rows: usize, cols: usize, mut entries: Vec<(u32, u32, f32)>) -> Self {
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        for w in entries.windows(2) {
+            assert!(
+                (w[0].0, w[0].1) != (w[1].0, w[1].1),
+                "duplicate CSR coordinate ({}, {})",
+                w[0].0,
+                w[0].1
+            );
+        }
+        let mut row_ptr = vec![0u32; rows + 1];
+        let mut col_idx = Vec::with_capacity(entries.len());
+        let mut vals = Vec::with_capacity(entries.len());
+        for &(r, c, v) in &entries {
+            assert!((r as usize) < rows && (c as usize) < cols, "entry out of bounds");
+            row_ptr[r as usize + 1] += 1;
+            col_idx.push(c);
+            vals.push(v);
+        }
+        for r in 0..rows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        Self { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * 4
+    }
+
+    /// y[r] += sum_j csr[r,j] * x[j] — one local accumulator per row,
+    /// nnz walked in column order, exactly one add into y per row.
+    pub fn matvec_add(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            if s == e {
+                continue;
+            }
+            let mut acc = 0.0f32;
+            for k in s..e {
+                acc += self.vals[k] * x[self.col_idx[k] as usize];
+            }
+            y[r] += acc;
+        }
+    }
+
+    /// Y(T,R) += X(T,C) @ selfᵀ — per (t, r) the identical local
+    /// accumulator chain as `matvec_add`, so batched output matches the
+    /// per-token path bit for bit, row for row.
+    pub fn matmul_add(&self, x: &Mat, y: &mut Mat) {
+        debug_assert_eq!(x.cols, self.cols);
+        debug_assert_eq!(y.cols, self.rows);
+        debug_assert_eq!(x.rows, y.rows);
+        for t in 0..x.rows {
+            let xr = x.row(t);
+            let yr = y.row_mut(t);
+            for r in 0..self.rows {
+                let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+                if s == e {
+                    continue;
+                }
+                let mut acc = 0.0f32;
+                for k in s..e {
+                    acc += self.vals[k] * xr[self.col_idx[k] as usize];
+                }
+                yr[r] += acc;
+            }
+        }
+    }
+
+    /// Scatter the entries back into a dense matrix (decode path).
+    pub fn add_into(&self, m: &mut Mat) {
+        assert_eq!((m.rows, m.cols), (self.rows, self.cols));
+        for r in 0..self.rows {
+            for k in self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize {
+                *m.at_mut(r, self.col_idx[k] as usize) += self.vals[k];
+            }
+        }
+    }
+}
+
+/// Split `w` into (residual, outliers): the `pct`% largest-|w| entries
+/// move into a CSR (exact f32), zeroed in the returned residual. The
+/// selection is deterministic: ties in magnitude break on flat index.
+/// `pct == 0` yields an empty CSR and an unchanged residual.
+pub fn split_outliers(w: &Mat, pct: f64) -> (Mat, CsrF32) {
+    let numel = w.rows * w.cols;
+    let k = ((numel as f64) * (pct / 100.0)).round() as usize;
+    let k = k.min(numel);
+    if k == 0 {
+        return (w.clone(), CsrF32::empty(w.rows, w.cols));
+    }
+    let mut order: Vec<u32> = (0..numel as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        w.data[b as usize]
+            .abs()
+            .total_cmp(&w.data[a as usize].abs())
+            .then(a.cmp(&b))
+    });
+    let mut residual = w.clone();
+    let mut entries = Vec::with_capacity(k);
+    for &i in order.iter().take(k) {
+        let (r, c) = (i as usize / w.cols, i as usize % w.cols);
+        entries.push((r as u32, c as u32, w.data[i as usize]));
+        residual.data[i as usize] = 0.0;
+    }
+    (residual, CsrF32::from_entries(w.rows, w.cols, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = XorShift::new(7);
+        let w = Mat::randn(6, 9, &mut rng);
+        let (residual, csr) = split_outliers(&w, 20.0);
+        let x = rng.normal_vec(9);
+        let mut y = residual.matvec(&x);
+        csr.matvec_add(&x, &mut y);
+        let want = w.matvec(&x);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matmul_rows_bit_equal_matvec() {
+        let mut rng = XorShift::new(8);
+        let w = Mat::randn(5, 8, &mut rng);
+        let (_, csr) = split_outliers(&w, 30.0);
+        let x = Mat::randn(4, 8, &mut rng);
+        let mut ym = Mat::zeros(4, 5);
+        csr.matmul_add(&x, &mut ym);
+        for t in 0..4 {
+            let mut yv = vec![0.0f32; 5];
+            csr.matvec_add(x.row(t), &mut yv);
+            assert_eq!(ym.row(t), &yv[..], "row {t} diverged");
+        }
+    }
+
+    #[test]
+    fn zero_pct_is_identity() {
+        let mut rng = XorShift::new(9);
+        let w = Mat::randn(4, 4, &mut rng);
+        let (residual, csr) = split_outliers(&w, 0.0);
+        assert_eq!(residual, w);
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn residual_plus_outliers_reconstructs() {
+        let mut rng = XorShift::new(10);
+        let w = Mat::randn(7, 6, &mut rng);
+        let (mut residual, csr) = split_outliers(&w, 10.0);
+        assert_eq!(csr.nnz(), (42f64 * 0.10).round() as usize);
+        csr.add_into(&mut residual);
+        assert_eq!(residual, w);
+    }
+
+    #[test]
+    fn selection_takes_largest_magnitudes() {
+        let w = Mat::from_vec(2, 3, vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.3]);
+        let (residual, csr) = split_outliers(&w, 34.0); // k = round(6*0.34) = 2
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(residual.at(0, 1), 0.0);
+        assert_eq!(residual.at(1, 0), 0.0);
+        let mut dense = Mat::zeros(2, 3);
+        csr.add_into(&mut dense);
+        assert_eq!(dense.at(0, 1), -5.0);
+        assert_eq!(dense.at(1, 0), 3.0);
+    }
+}

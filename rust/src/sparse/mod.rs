@@ -4,6 +4,7 @@
 //! and the Block-Sparse-Row container of §3.2.
 
 pub mod bsr;
+pub mod csr;
 pub mod group_prune;
 pub mod saliency;
 pub mod semi24;
@@ -11,5 +12,6 @@ pub mod structured;
 pub mod unstructured;
 
 pub use bsr::BsrMatrix;
+pub use csr::{split_outliers, CsrF32};
 pub use group_prune::{group_prune, GroupMask};
 pub use saliency::{SaliencyMetric, saliency_scores};

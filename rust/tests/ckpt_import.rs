@@ -1,0 +1,310 @@
+//! Integration: the safetensors import path. A malformed-header corpus
+//! must come back as typed [`CkptError`]s — never a panic, never a read
+//! outside the mapping — and a writer→reader→encode→greedy round trip
+//! must produce token-identical output to the in-memory build.
+//!
+//! The round-trip tests run with `CkptOptions::default()` on BOTH
+//! sides, so the `GQSA_OUTLIERS=1.0` CI leg pushes the dense-and-sparse
+//! outlier decomposition through the whole serving stack.
+
+use std::path::PathBuf;
+
+use gqsa::ckpt::{
+    encode_transformer, load_fp, load_transformer, write_fp, CkptEncode, CkptError, CkptOptions,
+    SafeTensors, SafeTensorsWriter, StDtype,
+};
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request};
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::{random_fp, LinearKind, Transformer};
+use gqsa::model::ModelConfig;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gqsa_ckpt_{}_{}.safetensors", tag, std::process::id()))
+}
+
+/// Author a raw file: 8-byte LE header length + header bytes + data.
+fn raw_file(tag: &str, header: &[u8], data: &[u8]) -> PathBuf {
+    let p = tmp(tag);
+    let mut out = Vec::with_capacity(8 + header.len() + data.len());
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(header);
+    out.extend_from_slice(data);
+    std::fs::write(&p, out).unwrap();
+    p
+}
+
+/// `SafeTensors` carries a raw mapping and has no `Debug` impl, so the
+/// corpus tests extract the error without `unwrap_err`.
+fn open_err(p: &std::path::Path) -> CkptError {
+    SafeTensors::open(p).err().expect("malformed checkpoint was accepted")
+}
+
+fn tiny_config() -> ModelConfig {
+    let mut cfg = demo_config();
+    cfg.d_model = 32;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 48;
+    cfg.vocab = 48;
+    cfg.max_seq = 96;
+    cfg
+}
+
+fn greedy_tokens(t: Transformer, prompt: &[u32], n: usize) -> Vec<u32> {
+    let cfg = t.cfg.clone();
+    let mut e = EngineCore::new(
+        Backend::Native(t),
+        &cfg,
+        EngineConfig { max_batch: 1, prefill_chunk: 8, kv_capacity: 96, ..Default::default() },
+    )
+    .unwrap();
+    e.submit(Request::new(0, prompt.to_vec(), n));
+    e.run_to_completion().unwrap()[0].tokens.clone()
+}
+
+// ---------------------------------------------------------------- corpus
+
+#[test]
+fn file_shorter_than_length_prefix_is_truncated() {
+    let p = tmp("trunc");
+    std::fs::write(&p, [0u8; 4]).unwrap();
+    assert_eq!(open_err(&p), CkptError::Truncated { need: 8, have: 4 });
+    std::fs::write(&p, b"").unwrap();
+    assert_eq!(open_err(&p), CkptError::Truncated { need: 8, have: 0 });
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn declared_header_longer_than_file_is_header_past_eof() {
+    let p = tmp("eof");
+    let mut out = u64::MAX.to_le_bytes().to_vec();
+    out.extend_from_slice(b"{}");
+    std::fs::write(&p, out).unwrap();
+    match open_err(&p) {
+        CkptError::HeaderPastEof { header_len, file_len } => {
+            assert_eq!(header_len, u64::MAX);
+            assert_eq!(file_len, 10);
+        }
+        e => panic!("want HeaderPastEof, got {e:?}"),
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn non_json_and_non_object_headers_are_bad_header() {
+    for (tag, header) in [
+        ("garbage", &b"!!not json!!"[..]),
+        ("utf8", &[0xffu8, 0xfe, 1, 2][..]),
+        ("arr", &b"[1,2]"[..]),
+    ] {
+        let p = raw_file(&format!("bad_{tag}"), header, &[]);
+        assert!(
+            matches!(SafeTensors::open(&p), Err(CkptError::BadHeader(_))),
+            "{tag}: want BadHeader"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+#[test]
+fn unsupported_dtype_is_unknown_dtype() {
+    let header = br#"{"t":{"dtype":"I64","shape":[2],"data_offsets":[0,16]}}"#;
+    let p = raw_file("dtype", header, &[0u8; 16]);
+    assert_eq!(
+        open_err(&p),
+        CkptError::UnknownDtype { name: "t".into(), dtype: "I64".into() }
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn offsets_outside_data_region_are_out_of_bounds() {
+    // 4 bytes of data, offsets claim 8
+    let header = br#"{"t":{"dtype":"F32","shape":[2],"data_offsets":[0,8]}}"#;
+    let p = raw_file("oob", header, &[0u8; 4]);
+    assert_eq!(
+        open_err(&p),
+        CkptError::OutOfBounds { name: "t".into(), begin: 0, end: 8, data_len: 4 }
+    );
+    std::fs::remove_file(&p).ok();
+
+    // begin > end is the same class of error
+    let header = br#"{"t":{"dtype":"F32","shape":[1],"data_offsets":[8,4]}}"#;
+    let p = raw_file("oob2", header, &[0u8; 16]);
+    assert!(matches!(SafeTensors::open(&p), Err(CkptError::OutOfBounds { .. })));
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn shape_disagreeing_with_span_is_shape_mismatch() {
+    // shape [3] x f32 needs 12 bytes but the span is 8
+    let header = br#"{"t":{"dtype":"F32","shape":[3],"data_offsets":[0,8]}}"#;
+    let p = raw_file("shape", header, &[0u8; 8]);
+    assert_eq!(
+        open_err(&p),
+        CkptError::ShapeMismatch { name: "t".into(), need_bytes: 12, span: 8 }
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn overlapping_tensor_spans_are_rejected() {
+    let header = concat!(
+        r#"{"a":{"dtype":"F32","shape":[2],"data_offsets":[0,8]},"#,
+        r#""b":{"dtype":"F32","shape":[2],"data_offsets":[4,12]}}"#
+    );
+    let p = raw_file("overlap", header.as_bytes(), &[0u8; 12]);
+    assert_eq!(
+        open_err(&p),
+        CkptError::Overlap { name: "b".into(), prev: "a".into() }
+    );
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn missing_tensor_is_a_typed_error_not_a_panic() {
+    let mut w = SafeTensorsWriter::new();
+    w.add_f32("present", &[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+    let p = tmp("missing");
+    w.write(&p).unwrap();
+    let st = SafeTensors::open(&p).unwrap();
+    assert_eq!(st.f32_vec("absent").unwrap_err(), CkptError::MissingTensor("absent".into()));
+    assert!(st.f32_vec("present").is_ok());
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn corpus_of_random_truncations_never_panics() {
+    // a valid checkpoint chopped at every prefix length must always
+    // come back as Err, never panic or read out of bounds
+    let mut w = SafeTensorsWriter::new();
+    w.metadata("k", "v");
+    w.add_f32("t", &[4], &[1.0, 2.0, 3.0, 4.0]);
+    let p = tmp("chop_src");
+    w.write(&p).unwrap();
+    let full = std::fs::read(&p).unwrap();
+    std::fs::remove_file(&p).ok();
+    let q = tmp("chop");
+    for cut in 0..full.len() {
+        std::fs::write(&q, &full[..cut]).unwrap();
+        assert!(SafeTensors::open(&q).is_err(), "prefix of {cut} bytes accepted");
+    }
+    // the untruncated file still parses
+    std::fs::write(&q, &full).unwrap();
+    assert!(SafeTensors::open(&q).is_ok());
+    std::fs::remove_file(&q).ok();
+}
+
+// ------------------------------------------------------------- read paths
+
+#[test]
+fn f16_and_bf16_payloads_decode_through_their_conversions() {
+    use gqsa::ckpt::safetensors::{f16_to_f32, f32_to_bf16, f32_to_f16};
+    let vals = [0.0f32, 1.0, -2.5, 0.000123, 65000.0, -0.333];
+    let mut w = SafeTensorsWriter::new();
+    w.add_f32("f32", &[vals.len()], &vals);
+    w.add_f32_as("f16", StDtype::F16, &[vals.len()], &vals);
+    w.add_f32_as("bf16", StDtype::BF16, &[vals.len()], &vals);
+    let p = tmp("dtypes");
+    w.write(&p).unwrap();
+    let st = SafeTensors::open(&p).unwrap();
+    assert_eq!(st.f32_vec("f32").unwrap(), vals);
+    let via_f16: Vec<f32> = vals.iter().map(|&v| f16_to_f32(f32_to_f16(v))).collect();
+    let via_bf16: Vec<f32> =
+        vals.iter().map(|&v| f32::from_bits((f32_to_bf16(v) as u32) << 16)).collect();
+    for (name, expect) in [("f16", via_f16), ("bf16", via_bf16)] {
+        let got = st.f32_vec(name).unwrap();
+        assert_eq!(got, expect, "{name} narrow round-trip");
+        // and the narrowing really happened: within ~1% of source
+        for (g, v) in got.iter().zip(&vals) {
+            let tol = v.abs() * 0.01 + 1e-4;
+            assert!((g - v).abs() <= tol, "{name}: {g} vs {v}");
+        }
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+// ------------------------------------------------------------ round trips
+
+#[test]
+fn zero_outliers_load_is_bit_identical_and_greedy_matches_in_memory() {
+    let cfg = tiny_config();
+    let fp = random_fp(&cfg, 907);
+    let p = tmp("bitident");
+    write_fp(&fp, &p).unwrap();
+
+    let opts = CkptOptions {
+        encode: CkptEncode::Gqs { bits: 4, group: 16, sparsity: 0.5 },
+        outlier_pct: 0.0,
+    };
+    let (from_disk, report) = load_transformer(&p, &opts).unwrap();
+    let in_memory = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5).unwrap();
+
+    assert_eq!(report.wrapped_layers, 0);
+    assert_eq!(report.outlier_nnz, 0);
+    for (name, la) in &from_disk.linears {
+        assert!(!matches!(la, LinearKind::Outlier(_)), "{name} wrapped at pct=0");
+        assert_eq!(
+            la.decode_dense().data,
+            in_memory.linears[name].decode_dense().data,
+            "{name}: on-disk encode diverged bitwise from the in-memory path"
+        );
+    }
+
+    let prompt: Vec<u32> = (0..12).map(|i| (i * 3) % cfg.vocab as u32).collect();
+    let a = greedy_tokens(from_disk, &prompt, 20);
+    let b = greedy_tokens(in_memory, &prompt, 20);
+    assert_eq!(a, b, "greedy decode diverged between disk and memory builds");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn writer_reader_encode_greedy_round_trip_matches_in_memory_engine() {
+    // env-default options on BOTH sides: under GQSA_OUTLIERS=1.0 this
+    // drives the outlier CSR through prefill + decode end to end
+    let cfg = tiny_config();
+    let fp = random_fp(&cfg, 911);
+    let p = tmp("roundtrip");
+    write_fp(&fp, &p).unwrap();
+
+    let opts = CkptOptions::default();
+    let back = load_fp(&p).unwrap();
+    assert_eq!(back.config.to_json().to_string(), cfg.to_json().to_string());
+    for (name, m) in &fp.weights {
+        assert_eq!(&back.weights[name].data, &m.data, "{name}: fp payload changed on disk");
+    }
+
+    let (from_disk, report) = load_transformer(&p, &opts).unwrap();
+    let in_memory = encode_transformer(&fp, &opts).unwrap();
+    if opts.outlier_pct > 0.0 {
+        assert!(report.wrapped_layers > 0, "outlier pct {} wrapped nothing", opts.outlier_pct);
+    }
+
+    let prompt: Vec<u32> = (0..10).map(|i| (i * 5 + 1) % cfg.vocab as u32).collect();
+    let a = greedy_tokens(from_disk, &prompt, 24);
+    let b = greedy_tokens(in_memory, &prompt, 24);
+    assert_eq!(a.len(), 24);
+    assert!(a.iter().all(|&t| t < cfg.vocab as u32));
+    assert_eq!(a, b, "on-disk and in-memory engines disagree on greedy tokens");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn fp_checkpoint_roundtrip_preserves_exact_logits_source() {
+    // Fp encode of the on-disk file == from_fp of the original: the
+    // whole file path (write, mmap, header parse, f32 decode) is exact
+    let cfg = tiny_config();
+    let fp = random_fp(&cfg, 919);
+    let p = tmp("fp_exact");
+    write_fp(&fp, &p).unwrap();
+    let opts = CkptOptions { encode: CkptEncode::Fp, outlier_pct: 0.0 };
+    let (from_disk, _) = load_transformer(&p, &opts).unwrap();
+    let in_memory = Transformer::from_fp(&fp).unwrap();
+    let prompt: Vec<u32> = (0..8).map(|i| (i * 7 + 2) % cfg.vocab as u32).collect();
+    assert_eq!(
+        greedy_tokens(from_disk, &prompt, 16),
+        greedy_tokens(in_memory, &prompt, 16),
+        "fp import is not exact"
+    );
+    std::fs::remove_file(&p).ok();
+}

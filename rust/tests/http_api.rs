@@ -1,0 +1,262 @@
+//! End-to-end: author a safetensors checkpoint on disk, serve it
+//! through the full stack (import → encode → engine fleet → HTTP), and
+//! drive it with a raw `TcpStream` client. The headline assertion is
+//! the ISSUE's e2e proof: token ids streamed over SSE are byte-identical
+//! to an in-process `Client` run against the same checkpoint.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+use gqsa::ckpt::{load_transformer, write_fp, CkptEncode, CkptOptions};
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, HttpServer, Request, Server};
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::random_fp;
+use gqsa::util::Json;
+
+/// Author a tiny checkpoint and bring up the whole stack on an
+/// ephemeral port. The returned path is the on-disk checkpoint (the
+/// caller removes it).
+fn start_stack(tag: &str, seed: u64) -> (PathBuf, Server, HttpServer, SocketAddr) {
+    let mut cfg = demo_config();
+    cfg.d_model = 32;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 48;
+    cfg.vocab = 48;
+    cfg.max_seq = 96;
+    let fp = random_fp(&cfg, seed);
+    let path =
+        std::env::temp_dir().join(format!("gqsa_http_{}_{}.safetensors", tag, std::process::id()));
+    write_fp(&fp, &path).unwrap();
+
+    let ckpt = path.clone();
+    let srv = Server::start(move || {
+        let opts = CkptOptions {
+            encode: CkptEncode::Gqs { bits: 4, group: 16, sparsity: 0.5 },
+            outlier_pct: gqsa::ckpt::outlier_pct_from_env(),
+        };
+        let (t, _report) = load_transformer(&ckpt, &opts)?;
+        let cfg = t.cfg.clone();
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig { max_batch: 4, prefill_chunk: 8, kv_capacity: 96, ..Default::default() },
+        )
+    });
+    let http = HttpServer::bind("127.0.0.1:0", srv.client()).unwrap();
+    let addr = http.local_addr();
+    (path, srv, http, addr)
+}
+
+/// Minimal HTTP/1.1 client: send one request, read to EOF (the server
+/// closes every connection), split status / body.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let body = body.unwrap_or("");
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in: {text}"));
+    let payload = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, payload)
+}
+
+/// Parse an SSE payload: every `data:` frame before `[DONE]`, each as
+/// parsed JSON. Panics if the stream is not `[DONE]`-terminated.
+fn sse_frames(payload: &str) -> Vec<Json> {
+    let mut frames = Vec::new();
+    let mut done = false;
+    for chunk in payload.split("\n\n") {
+        let Some(data) = chunk.trim().strip_prefix("data: ") else { continue };
+        if data == "[DONE]" {
+            done = true;
+            break;
+        }
+        frames.push(Json::parse(data).unwrap_or_else(|e| panic!("bad frame {data:?}: {e}")));
+    }
+    assert!(done, "stream not [DONE]-terminated: {payload:?}");
+    frames
+}
+
+fn frame_choice(f: &Json) -> &Json {
+    f.get("choices").and_then(|c| c.idx(0)).expect("frame has one choice")
+}
+
+#[test]
+fn streamed_token_ids_byte_identical_to_in_process_client() {
+    let (path, srv, http_srv, addr) = start_stack("sse", 31);
+
+    // in-process reference run against the very same checkpoint.
+    // vocab is 48, so prompts stick to bytes 32..48 (space/punctuation)
+    let prompt_text = "(* !) #% &+,-.";
+    let prompt: Vec<u32> = prompt_text.bytes().map(u32::from).collect();
+    let reference = srv.client().generate(Request::new(7, prompt, 24)).unwrap();
+    assert_eq!(reference.tokens.len(), 24);
+
+    let body = Json::obj(vec![
+        ("prompt", Json::str(prompt_text)),
+        ("max_tokens", Json::num(24.0)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string();
+    let (status, payload) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200, "{payload}");
+
+    let frames = sse_frames(&payload);
+    let mut streamed = Vec::new();
+    let mut finish = None;
+    for f in &frames {
+        let c = frame_choice(f);
+        match c.get("token").and_then(Json::as_u64) {
+            Some(t) => {
+                let fr = c.get("finish_reason");
+                assert!(fr.is_none() || fr == Some(&Json::Null), "delta frame carries a finish");
+                streamed.push(t as u32);
+            }
+            None => finish = c.get("finish_reason").and_then(Json::as_str).map(str::to_string),
+        }
+    }
+    assert_eq!(streamed, reference.tokens, "SSE token ids diverge from in-process run");
+    assert_eq!(finish.as_deref(), Some("length"));
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn stop_sequence_truncates_stream_and_reports_stop() {
+    let (path, srv, http_srv, addr) = start_stack("stop", 37);
+
+    // bytes 32..48 only: in-vocab for the 48-token model
+    let prompt_text = "&* (!) -.";
+    let prompt: Vec<u32> = prompt_text.bytes().map(u32::from).collect();
+    let free = srv.client().generate(Request::new(9, prompt, 16)).unwrap();
+    assert_eq!(free.tokens.len(), 16);
+    // vocab is 48 so every token is a single ASCII byte — decodable
+    // into a JSON stop string (Json::Display escapes control chars)
+    let stop: Vec<u32> = free.tokens[2..4].to_vec();
+    let stop_text: String = stop.iter().map(|&t| char::from(t as u8)).collect();
+    // earliest point the free run's prefix ends with the stop sequence
+    // (repeating tokens can complete it before index 3)
+    let expect_end =
+        (1..=free.tokens.len()).find(|&e| free.tokens[..e].ends_with(&stop)).unwrap();
+
+    let body = Json::obj(vec![
+        ("prompt", Json::str(prompt_text)),
+        ("max_tokens", Json::num(16.0)),
+        ("stream", Json::Bool(true)),
+        ("stop", Json::str(stop_text)),
+    ])
+    .to_string();
+    let (status, payload) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200, "{payload}");
+
+    let frames = sse_frames(&payload);
+    let streamed: Vec<u32> = frames
+        .iter()
+        .filter_map(|f| frame_choice(f).get("token").and_then(Json::as_u64))
+        .map(|t| t as u32)
+        .collect();
+    let finish = frames
+        .iter()
+        .filter_map(|f| frame_choice(f).get("finish_reason").and_then(Json::as_str))
+        .last()
+        .map(str::to_string);
+    assert_eq!(
+        streamed,
+        free.tokens[..expect_end],
+        "stop must halt exactly at the matching suffix"
+    );
+    assert_eq!(finish.as_deref(), Some("stop"));
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn non_streaming_json_matches_in_process_and_counts_usage() {
+    let (path, srv, http_srv, addr) = start_stack("json", 41);
+
+    let prompt_text = "!#%+";
+    let prompt: Vec<u32> = prompt_text.bytes().map(u32::from).collect();
+    let reference = srv.client().generate(Request::new(3, prompt.clone(), 12)).unwrap();
+
+    let body = Json::obj(vec![
+        ("prompt", Json::str(prompt_text)),
+        ("max_tokens", Json::num(12.0)),
+        ("n", Json::num(2.0)),
+    ])
+    .to_string();
+    let (status, payload) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200, "{payload}");
+    let j = Json::parse(&payload).unwrap();
+    let choices = j.get("choices").and_then(Json::as_arr).unwrap();
+    assert_eq!(choices.len(), 2);
+    for (ci, c) in choices.iter().enumerate() {
+        assert_eq!(c.get("index").and_then(Json::as_u64), Some(ci as u64));
+        let ids: Vec<u32> = c
+            .get("token_ids")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_u64)
+            .map(|t| t as u32)
+            .collect();
+        // greedy: both choices and the in-process run are identical
+        assert_eq!(ids, reference.tokens, "choice {ci}");
+        assert_eq!(c.get("finish_reason").and_then(Json::as_str), Some("length"));
+    }
+    let usage = j.get("usage").unwrap();
+    assert_eq!(usage.get("prompt_tokens").and_then(Json::as_u64), Some(prompt.len() as u64));
+    assert_eq!(usage.get("completion_tokens").and_then(Json::as_u64), Some(24));
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn report_route_and_error_paths() {
+    let (path, srv, http_srv, addr) = start_stack("misc", 43);
+
+    // a completed request shows up in the metrics text
+    let body = Json::obj(vec![("prompt", Json::str("!!")), ("max_tokens", Json::num(4.0))])
+        .to_string();
+    let (status, _) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200);
+    let (status, report) = http(addr, "GET", "/report", None);
+    assert_eq!(status, 200);
+    assert!(report.contains("requests="), "not a metrics report: {report}");
+
+    // malformed JSON body
+    let (status, payload) = http(addr, "POST", "/v1/completions", Some("{not json"));
+    assert_eq!(status, 400, "{payload}");
+    assert!(payload.contains("invalid_request_error"));
+    // missing prompt
+    let (status, _) = http(addr, "POST", "/v1/completions", Some("{\"max_tokens\":4}"));
+    assert_eq!(status, 400);
+    // bad stop type
+    let (status, _) =
+        http(addr, "POST", "/v1/completions", Some("{\"prompt\":\"x\",\"stop\":7}"));
+    assert_eq!(status, 400);
+    // unknown route
+    let (status, _) = http(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
