@@ -24,7 +24,7 @@ use crate::util::{Mat, XorShift};
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
     "t15", "t16", "f1", "f5", "f5x", "f6", "f7", "f8", "kvpage", "specdec", "prefix",
-    "kernels", "shards", "ckpt",
+    "kernels", "shards", "ckpt", "obs",
 ];
 
 pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
@@ -57,6 +57,7 @@ pub fn run(id: &str, wb: &mut Workbench) -> Result<()> {
         "kernels" => kernels(wb),
         "shards" => shards_bench(wb),
         "ckpt" => ckpt_bench(wb),
+        "obs" => obs_bench(wb),
         "all" => {
             for id in ALL_IDS {
                 println!("\n##### {id} #####");
@@ -1137,18 +1138,18 @@ fn specdec(wb: &mut Workbench) -> Result<()> {
     const PROMPT: usize = 16;
     const NEW: usize = 48;
 
-    fn submit(engine: &mut EngineCore, sampling: SamplingCfg) {
+    fn submit(engine: &mut EngineCore, sampling: &SamplingCfg) {
         for i in 0..N_REQ as u64 {
             let prompt: Vec<u32> =
                 (0..PROMPT).map(|j| ((i as usize * 13 + j * 5) % 120) as u32).collect();
             let mut req = Request::new(i, prompt, NEW);
-            req.sampling = sampling;
+            req.sampling = sampling.clone();
             engine.submit(req);
         }
     }
     let run = |spec_k: usize,
                draft: DraftConfig,
-               sampling: SamplingCfg|
+               sampling: &SamplingCfg|
      -> Result<(Vec<Vec<u32>>, f64, f64, f64)> {
         // target tier: the paper's fidelity point, W4S50 G16
         let t = Transformer::from_fp_gqs_oneshot(&fp, None, 4, 16, 0.5)?;
@@ -1203,7 +1204,7 @@ fn specdec(wb: &mut Workbench) -> Result<()> {
     for (wname, sampling, check_tokens) in
         [("greedy", greedy, true), ("topk-t0.8", temp, false)]
     {
-        let (base_tokens, base_tps, _, _) = run(0, DraftConfig::default(), sampling)?;
+        let (base_tokens, base_tps, _, _) = run(0, DraftConfig::default(), &sampling)?;
         t.row(vec![
             wname.into(),
             "-".into(),
@@ -1221,7 +1222,7 @@ fn specdec(wb: &mut Workbench) -> Result<()> {
         ));
         for draft in drafts {
             for k in [1usize, 2, 4, 8] {
-                let (toks, tps, rate, mean_acc) = run(k, draft, sampling)?;
+                let (toks, tps, rate, mean_acc) = run(k, draft, &sampling)?;
                 let matches = toks == base_tokens;
                 if check_tokens {
                     anyhow::ensure!(
@@ -1701,6 +1702,115 @@ fn shards_bench(wb: &mut Workbench) -> Result<()> {
         Err(e) => eprintln!("could not write {}: {e}", out.display()),
     }
     t.emit(wb.results_dir(), "shards")
+}
+
+// ---------------------------------------------------------------------
+// obs — tracing overhead: identical greedy fleets with the span
+// recorder forced on vs off, at concurrency 1/8/32. Token identity is
+// asserted per cell (tracing must never change outputs); the emitted
+// numbers quantify what GQSA_TRACE=1 costs. Emits BENCH_obs.json.
+// ---------------------------------------------------------------------
+
+fn obs_bench(wb: &mut Workbench) -> Result<()> {
+    use crate::coordinator::{Backend, EngineConfig, EngineCore, Request};
+    use crate::model::config::demo_config;
+    use crate::model::transformer::random_fp;
+    use crate::model::Transformer;
+    use crate::obs;
+
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 128;
+
+    const N_REQ: usize = 32;
+    const PROMPT: usize = 48;
+    const NEW: usize = 12;
+
+    let run = |concurrency: usize, trace: bool| -> Result<(Vec<Vec<u32>>, f64, u64, u64)> {
+        let t = Transformer::from_fp_gqs_oneshot(&random_fp(&cfg, 7171), None, 4, 16, 0.5)?;
+        let mut e = EngineCore::new(
+            Backend::Native(t),
+            &cfg,
+            EngineConfig {
+                max_batch: concurrency,
+                prefill_chunk: 16,
+                kv_capacity: PROMPT + NEW + 2,
+                spec_k: 2,
+                ..Default::default()
+            },
+        )?;
+        obs::clear();
+        obs::force(trace);
+        let spans_before = obs::spans_recorded();
+        let drops_before = obs::spans_dropped();
+        let t0 = std::time::Instant::now();
+        for i in 0..N_REQ as u64 {
+            let prompt: Vec<u32> =
+                (0..PROMPT).map(|j| ((i * 11 + j as u64 * 3 + 1) % 60) as u32).collect();
+            e.submit(Request::new(i, prompt, NEW));
+        }
+        let mut out = e.run_to_completion()?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let spans = obs::spans_recorded() - spans_before;
+        let drops = obs::spans_dropped() - drops_before;
+        obs::reset();
+        out.sort_by_key(|r| r.id);
+        Ok((out.into_iter().map(|r| r.tokens).collect(), wall_ms, spans, drops))
+    };
+
+    let mut t = Table::new(
+        format!(
+            "obs: span-recorder overhead — {N_REQ} reqs x {PROMPT} prompt + {NEW} new, \
+             greedy + spec, trace off vs on"
+        ),
+        &["batch", "off ms", "on ms", "overhead %", "spans", "dropped", "tokens identical"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for concurrency in [1usize, 8, 32] {
+        let (toks_off, off_ms, _, _) = run(concurrency, false)?;
+        let (toks_on, on_ms, spans, drops) = run(concurrency, true)?;
+        anyhow::ensure!(
+            toks_off == toks_on,
+            "tracing changed greedy tokens at concurrency {concurrency}"
+        );
+        let overhead = (on_ms - off_ms) / off_ms.max(1e-9) * 100.0;
+        t.row(vec![
+            concurrency.to_string(),
+            fmt2(off_ms),
+            fmt2(on_ms),
+            fmt1(overhead),
+            spans.to_string(),
+            drops.to_string(),
+            "yes".into(),
+        ]);
+        json_rows.push(format!(
+            "    {{\"concurrency\": {concurrency}, \"trace_off_ms\": {off_ms:.3}, \
+             \"trace_on_ms\": {on_ms:.3}, \"overhead_pct\": {overhead:.2}, \
+             \"spans_recorded\": {spans}, \"spans_dropped\": {drops}, \
+             \"tokens_identical\": true}}"
+        ));
+    }
+    t.note(
+        "token identity asserted per cell: the span recorder observes the engine without \
+         perturbing it. Single-run wall-clocks on a shared CPU testbed — treat small \
+         overheads (either sign) as noise; the contract is the identity column.",
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"placeholder\": false,\n  \"requests\": {N_REQ},\n  \"prompt_len\": {PROMPT},\n  \"new_tokens_per_request\": {NEW},\n  \"results\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n")
+    );
+    let out =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_obs.json");
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    t.emit(wb.results_dir(), "obs")
 }
 
 // ---------------------------------------------------------------------

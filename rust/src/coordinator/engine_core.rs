@@ -38,8 +38,9 @@ use crate::engine::executor::{Decomposition, ExecConfig, Executor};
 use crate::model::kv_cache::{
     blocks_for, blocks_spanning, CacheFull, KvBlockPool, KvDtype, KV_BLOCK,
 };
-use crate::model::sampler::sample;
+use crate::model::sampler::sample_biased;
 use crate::model::{BlockScratch, KvCache};
+use crate::obs::{self, Hist};
 use crate::prefix::PrefixCache;
 use crate::spec::{build_draft, DraftConfig, FleetSeq, SpecController, SpecRound};
 use crate::util::XorShift;
@@ -181,6 +182,12 @@ struct ActiveSeq {
     /// consecutive clean-sweep rounds on the current tier; reaching
     /// `TIER_DOWN_STREAK` hops one rung cheaper
     tier_streak: u32,
+    /// wall-clock instant the previous token was committed (None until
+    /// the first token) — the inter-token-latency clock
+    last_tok_at: Option<Instant>,
+    /// per-sequence inter-token gaps; folded into
+    /// `Metrics::hist_itl` at retirement
+    itl: Hist,
 }
 
 impl ActiveSeq {
@@ -191,6 +198,10 @@ impl ActiveSeq {
     /// at exactly the token that finished the match (KV positions past
     /// it are masked off by the retirement publication's length cap).
     fn push_token(&mut self, tok: u32) -> bool {
+        let now = Instant::now();
+        if let Some(prev) = self.last_tok_at.replace(now) {
+            self.itl.record_us(now.saturating_duration_since(prev).as_micros() as u64);
+        }
         self.generated.push(tok);
         if let Some(tx) = &self.req.stream {
             // a hung-up receiver must never stall the engine
@@ -519,6 +530,7 @@ impl EngineCore {
     /// One engine iteration. Returns number of tokens processed.
     pub fn tick(&mut self) -> Result<usize> {
         let t0 = Instant::now();
+        let _tick_guard = obs::span("engine_tick", obs::SpanKind::Engine, obs::NO_SEQ);
         self.metrics.engine_iterations += 1;
         // 1. admit — paged mode gates on the pool's free-block count
         // (a waiting request needs room for its clamped prompt plus
@@ -621,6 +633,8 @@ impl EngineCore {
             };
             let mut timing = RequestTiming::default();
             timing.queued_us = submitted.elapsed().as_micros() as u64;
+            // retroactive span: the queue wait just ended at admission
+            obs::record_since("queue_wait", obs::SpanKind::Queue, req.id, submitted);
             let tier_now = self.spec.as_ref().map_or(0, |c| c.default_tier);
             self.active.push(ActiveSeq {
                 req,
@@ -636,6 +650,8 @@ impl EngineCore {
                 k_now: spec_k,
                 tier_now,
                 tier_streak: 0,
+                last_tok_at: None,
+                itl: Hist::default(),
             });
         }
 
@@ -730,6 +746,7 @@ impl EngineCore {
                 continue;
             }
             let chunk = &seq.req.prompt[seq.fed..seq.fed + take];
+            let _g = obs::span("prefill_chunk", obs::SpanKind::Prefill, seq.req.id);
             match self.backend.step_block(chunk, &mut seq.state, &mut self.block) {
                 Ok(()) => {}
                 Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
@@ -748,7 +765,12 @@ impl EngineCore {
                     seq.submitted.elapsed().as_micros() as u64 - seq.timing.queued_us;
                 // first token comes from the chunk's last-row logits
                 let mode = seq.req.sampling.to_sampling();
-                let tok = sample(self.block.logits.row(take - 1), mode, &mut self.rng);
+                let tok = sample_biased(
+                    self.block.logits.row(take - 1),
+                    &seq.req.sampling.logit_bias,
+                    mode,
+                    &mut self.rng,
+                );
                 seq.push_token(tok);
                 seq.timing.ttft_us = seq.submitted.elapsed().as_micros() as u64;
                 processed += 1;
@@ -859,10 +881,15 @@ impl EngineCore {
                             max_emit: remaining,
                             tier,
                             mode,
+                            bias: &req.sampling.logit_bias,
                         });
                     }
                     ctrl.round_fleet(target, &mut fleet, rng, block)?
                 };
+                let walk_us = ctrl.take_walk_us();
+                if walk_us > 0 {
+                    metrics.hist_verify_walk.record_us(walk_us);
+                }
                 metrics.spec_verify_walks += outcome.verify_walks as u64;
                 if outcome.verify_walks > 0 {
                     metrics.spec_batch_rounds += 1;
@@ -944,7 +971,8 @@ impl EngineCore {
                         }
                     }
                     let mode = seq.req.sampling.to_sampling();
-                    match ctrl.round_tier(
+                    let _g = obs::span("spec_round", obs::SpanKind::Spec, seq.req.id);
+                    let round = ctrl.round_tier(
                         seq.tier_now,
                         target,
                         kv,
@@ -954,9 +982,15 @@ impl EngineCore {
                         k_round,
                         remaining,
                         mode,
+                        &seq.req.sampling.logit_bias,
                         rng,
                         block,
-                    )? {
+                    )?;
+                    let walk_us = ctrl.take_walk_us();
+                    if walk_us > 0 {
+                        metrics.hist_verify_walk.record_us(walk_us);
+                    }
+                    match round {
                         SpecRound::Emitted { tokens, drafted, accepted } => {
                             metrics.note_spec_round(drafted, accepted, k_round);
                             metrics.spec_verify_walks += 1;
@@ -1044,6 +1078,7 @@ impl EngineCore {
             decode_idx = keep;
         }
         if !decode_idx.is_empty() {
+            let _g = obs::span("decode_batch", obs::SpanKind::Decode, obs::NO_SEQ);
             let tokens: Vec<u32> = decode_idx
                 .iter()
                 .map(|&i| *self.active[i].generated.last().unwrap_or(&0))
@@ -1060,8 +1095,14 @@ impl EngineCore {
                 self.backend.step_batch(&tokens, &mut states, &mut self.block)?;
             }
             for (bi, &i) in decode_idx.iter().enumerate() {
-                let mode = self.active[i].req.sampling.to_sampling();
-                let tok = sample(self.block.logits.row(bi), mode, &mut self.rng);
+                let sampling = &self.active[i].req.sampling;
+                let mode = sampling.to_sampling();
+                let tok = sample_biased(
+                    self.block.logits.row(bi),
+                    &sampling.logit_bias,
+                    mode,
+                    &mut self.rng,
+                );
                 self.active[i].push_token(tok);
                 processed += 1;
             }
@@ -1103,6 +1144,7 @@ impl EngineCore {
             seq.timing.decode_us =
                 seq.timing.total_us - seq.timing.queued_us - seq.timing.prefill_us;
             self.metrics.record(&seq.timing, prompt_len, seq.generated.len());
+            self.metrics.hist_itl.merge(&seq.itl);
             // publish the retiring sequence's sealed blocks into the
             // shared-prefix trees before its KV resets. Evicted and
             // mid-prefill retirees publish too: whatever prefix they
@@ -1168,7 +1210,9 @@ impl EngineCore {
         if let Some(cache) = &self.prefix {
             self.metrics.set_prefix_stats(cache.stats());
         }
-        self.metrics.add_busy(t0.elapsed());
+        let tick_dur = t0.elapsed();
+        self.metrics.hist_tick.record(tick_dur);
+        self.metrics.add_busy(tick_dur);
         self.metrics.set_exec_stats(self.exec.stats());
         if let Some(n) = self.chaos_fail_tick {
             if self.metrics.engine_iterations >= n {
@@ -1981,6 +2025,8 @@ mod tests {
             k_now: 4,
             tier_now: 0,
             tier_streak: 0,
+            last_tok_at: None,
+            itl: Hist::default(),
         };
         // acceptance collapse: climb one rung immediately
         hop_tier(&mut seq, 3, true, 4, 1, &mut m);

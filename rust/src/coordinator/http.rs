@@ -9,16 +9,29 @@
 //!                          prompt (string, required), max_tokens,
 //!                          temperature (<= 0 selects greedy), top_p,
 //!                          n, stream (bool), stop (string or array
-//!                          of strings). With `stream: true` the reply
-//!                          is `text/event-stream`: one `data:` frame
+//!                          of strings), logit_bias (object mapping
+//!                          token ids to offsets in [-100, 100]). With
+//!                          `stream: true` the reply is
+//!                          `text/event-stream`: one `data:` frame
 //!                          per committed token (text delta + raw
 //!                          token id), a final frame per choice with
 //!                          its finish_reason, then `data: [DONE]`.
 //!   GET  /report           the engine fleet's metrics report (text).
+//!   GET  /metrics          Prometheus text exposition: every engine
+//!                          counter per shard plus the latency
+//!                          histograms and this front end's own
+//!                          connection counters.
+//!   GET  /trace            Chrome trace-event JSON of the span ring
+//!                          (load it in Perfetto / chrome://tracing;
+//!                          empty unless `GQSA_TRACE=1`).
 //!
-//! Token ids ride in every frame alongside the detokenized text, so
-//! clients that care about bit-identity (the e2e tests) can compare
-//! streams without re-tokenizing.
+//! Connections honor `Connection: keep-alive`: a client that asks for
+//! it gets its requests served in a loop on one socket (idle timeout
+//! [`KEEPALIVE_IDLE`]); SSE streams still close when done, as do
+//! clients that omit the header. Token ids ride in every frame
+//! alongside the detokenized text, so clients that care about
+//! bit-identity (the e2e tests) can compare streams without
+//! re-tokenizing.
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -30,7 +43,13 @@ use std::time::Duration;
 use crate::coordinator::request::{FinishReason, Request, SamplingCfg, SamplingMode};
 use crate::coordinator::server::Client;
 use crate::model::tokenizer::ByteTokenizer;
+use crate::obs;
+use crate::obs::prom::{self, HttpCounters};
 use crate::util::Json;
+
+/// How long a kept-alive connection may sit idle between requests
+/// before the server closes it.
+const KEEPALIVE_IDLE: Duration = Duration::from_secs(5);
 
 /// Fields pulled out of a /v1/completions body.
 struct CompletionParams {
@@ -42,6 +61,24 @@ struct CompletionParams {
     stop: Vec<Vec<u32>>,
 }
 
+/// Front-end connection counters (feed `gqsa_http_*` in `/metrics`).
+#[derive(Default)]
+struct HttpAtomics {
+    connections: AtomicU64,
+    requests: AtomicU64,
+    keepalive_reuses: AtomicU64,
+}
+
+impl HttpAtomics {
+    fn snapshot(&self) -> HttpCounters {
+        HttpCounters {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            keepalive_reuses: self.keepalive_reuses.load(Ordering::Relaxed),
+        }
+    }
+}
+
 struct Shared {
     client: Client,
     /// id space for HTTP-originated requests. Starts high so a process
@@ -49,6 +86,7 @@ struct Shared {
     /// hand-picked ids never trips the router's duplicate-id guard.
     next_id: AtomicU64,
     shutdown: AtomicBool,
+    http: HttpAtomics,
 }
 
 /// The HTTP server: an accept loop on its own thread, one handler
@@ -74,6 +112,7 @@ impl HttpServer {
             client,
             next_id: AtomicU64::new(1 << 32),
             shutdown: AtomicBool::new(false),
+            http: HttpAtomics::default(),
         });
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::spawn(move || {
@@ -213,13 +252,38 @@ fn parse_params(body: &Json) -> Result<CompletionParams, String> {
         }
         Some(_) => return Err("'stop' must be a string or an array of strings".into()),
     };
+    let logit_bias = match body.get("logit_bias") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(Json::Obj(map)) => {
+            let mut out = Vec::with_capacity(map.len());
+            for (k, v) in map {
+                let tok: u32 = k.trim().parse().map_err(|_| {
+                    format!("'logit_bias' key '{k}' is not a non-negative token id")
+                })?;
+                let b = v
+                    .as_f64()
+                    .ok_or_else(|| format!("'logit_bias' value for '{k}' must be a number"))?;
+                if !b.is_finite() || !(-100.0..=100.0).contains(&b) {
+                    return Err(format!(
+                        "'logit_bias' value for '{k}' must be in [-100, 100]"
+                    ));
+                }
+                out.push((tok, b as f32));
+            }
+            out
+        }
+        Some(_) => {
+            return Err("'logit_bias' must be an object mapping token ids to numbers".into())
+        }
+    };
     let sampling = if temperature <= 0.0 {
-        SamplingCfg { mode: SamplingMode::Greedy, ..SamplingCfg::default() }
+        SamplingCfg { mode: SamplingMode::Greedy, logit_bias, ..SamplingCfg::default() }
     } else {
         SamplingCfg {
             mode: SamplingMode::TopP,
             temperature: temperature as f32,
             top_p: top_p as f32,
+            logit_bias,
             ..SamplingCfg::default()
         }
     };
@@ -228,61 +292,130 @@ fn parse_params(body: &Json) -> Result<CompletionParams, String> {
 
 fn handle_conn(stream: TcpStream, shared: &Shared) -> io::Result<()> {
     stream.set_nonblocking(false)?;
+    shared.http.connections.fetch_add(1, Ordering::Relaxed);
+    let mut out = stream.try_clone()?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    // headers: only Content-Length matters to this server
-    let mut content_length = 0usize;
+    let mut served = 0u64;
     loop {
-        let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 {
-            break;
+        if served > 0 {
+            // between requests on a kept-alive connection: close if the
+            // client goes quiet (SO_RCVTIMEO is per-socket, so this
+            // covers the buffered reader's clone too)
+            stream.set_read_timeout(Some(KEEPALIVE_IDLE))?;
         }
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // peer closed
+            Ok(_) => {}
+            Err(e)
+                if served > 0
+                    && matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+            {
+                break // idle timeout
+            }
+            Err(e) => return Err(e),
         }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
+        if served > 0 {
+            stream.set_read_timeout(None)?; // mid-request reads block normally
+            shared.http.keepalive_reuses.fetch_add(1, Ordering::Relaxed);
+        }
+        shared.http.requests.fetch_add(1, Ordering::Relaxed);
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+        let mut content_length = 0usize;
+        let mut keep = false;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                break;
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let k = k.trim();
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().unwrap_or(0);
+                } else if k.eq_ignore_ascii_case("connection") {
+                    keep = v.trim().eq_ignore_ascii_case("keep-alive");
+                }
             }
         }
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    let mut out = reader.into_inner();
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
 
-    match (method.as_str(), path.as_str()) {
-        ("GET", "/report") => {
-            let report = shared
-                .client
-                .metrics_report()
-                .unwrap_or_else(|e| format!("metrics unavailable: {e}"));
-            write_response(&mut out, 200, "text/plain; charset=utf-8", report.as_bytes())
-        }
-        ("POST", "/v1/completions") => {
-            let parsed = String::from_utf8(body)
-                .map_err(|e| e.to_string())
-                .and_then(|s| Json::parse(&s).map_err(|e| e.to_string()))
-                .and_then(|j| parse_params(&j));
-            match parsed {
-                Err(msg) => write_error(&mut out, 400, &msg),
-                Ok(p) => serve_completion(&mut out, shared, p),
+        let keep = match (method.as_str(), path.as_str()) {
+            ("GET", "/report") => {
+                let report = shared
+                    .client
+                    .metrics_report()
+                    .unwrap_or_else(|e| format!("metrics unavailable: {e}"));
+                write_response(&mut out, 200, "text/plain; charset=utf-8", report.as_bytes(), keep)?;
+                keep
             }
+            ("GET", "/metrics") => {
+                let shards = shared.client.shard_metrics();
+                let text = prom::render(&shards, Some(&shared.http.snapshot()));
+                write_response(
+                    &mut out,
+                    200,
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    text.as_bytes(),
+                    keep,
+                )?;
+                keep
+            }
+            ("GET", "/trace") => {
+                let text = obs::trace::chrome_trace_json(&obs::snapshot());
+                write_response(&mut out, 200, "application/json", text.as_bytes(), keep)?;
+                keep
+            }
+            ("POST", "/v1/completions") => {
+                let parsed = String::from_utf8(body)
+                    .map_err(|e| e.to_string())
+                    .and_then(|s| Json::parse(&s).map_err(|e| e.to_string()))
+                    .and_then(|j| parse_params(&j));
+                match parsed {
+                    Err(msg) => {
+                        write_error(&mut out, 400, &msg, keep)?;
+                        keep
+                    }
+                    // SSE replies always close the connection when done
+                    Ok(p) => serve_completion(&mut out, shared, p, keep)?,
+                }
+            }
+            _ => {
+                write_error(&mut out, 404, &format!("no route for {method} {path}"), keep)?;
+                keep
+            }
+        };
+        served += 1;
+        if !keep {
+            break;
         }
-        _ => write_error(&mut out, 404, &format!("no route for {method} {path}")),
     }
+    Ok(())
 }
 
-fn serve_completion(out: &mut TcpStream, shared: &Shared, p: CompletionParams) -> io::Result<()> {
+/// Serve one completion. Returns whether the connection may be kept
+/// alive afterwards (SSE replies always close).
+fn serve_completion(
+    out: &mut TcpStream,
+    shared: &Shared,
+    p: CompletionParams,
+    keep: bool,
+) -> io::Result<bool> {
     let base_id = shared.next_id.fetch_add(p.n as u64, Ordering::Relaxed);
+    let _g = obs::span("http_completion", obs::SpanKind::Http, base_id);
     let mk_req = |ci: usize| {
         let mut req = Request::new(base_id + ci as u64, p.prompt.clone(), p.max_tokens)
             .with_stop(p.stop.clone());
-        req.sampling = p.sampling;
+        req.sampling = p.sampling.clone();
         req
     };
     if p.stream {
@@ -318,7 +451,8 @@ fn serve_completion(out: &mut TcpStream, shared: &Shared, p: CompletionParams) -
             sse_frame(out, base_id, ci, &detok.flush(), None, Some(finish))?;
         }
         out.write_all(b"data: [DONE]\n\n")?;
-        out.flush()
+        out.flush()?;
+        Ok(false)
     } else {
         let tok = ByteTokenizer;
         let mut choices = Vec::with_capacity(p.n);
@@ -328,7 +462,10 @@ fn serve_completion(out: &mut TcpStream, shared: &Shared, p: CompletionParams) -
         for (ci, rx) in pending.into_iter().enumerate() {
             let resp = match rx.and_then(|rx| Ok(rx.recv()?)) {
                 Ok(r) => r,
-                Err(e) => return write_error(out, 500, &format!("engine: {e}")),
+                Err(e) => {
+                    write_error(out, 500, &format!("engine: {e}"), keep)?;
+                    return Ok(keep);
+                }
             };
             completion_tokens += resp.tokens.len();
             choices.push(Json::obj(vec![
@@ -355,7 +492,8 @@ fn serve_completion(out: &mut TcpStream, shared: &Shared, p: CompletionParams) -
                 ]),
             ),
         ]);
-        write_response(out, 200, "application/json", body.to_string().as_bytes())
+        write_response(out, 200, "application/json", body.to_string().as_bytes(), keep)?;
+        Ok(keep)
     }
 }
 
@@ -391,6 +529,7 @@ fn write_response(
     status: u16,
     content_type: &str,
     body: &[u8],
+    keep: bool,
 ) -> io::Result<()> {
     let reason = match status {
         200 => "OK",
@@ -398,21 +537,22 @@ fn write_response(
         404 => "Not Found",
         _ => "Internal Server Error",
     };
+    let conn = if keep { "keep-alive" } else { "close" };
     write!(
         out,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     )?;
     out.write_all(body)?;
     out.flush()
 }
 
-fn write_error(out: &mut TcpStream, status: u16, msg: &str) -> io::Result<()> {
+fn write_error(out: &mut TcpStream, status: u16, msg: &str, keep: bool) -> io::Result<()> {
     let body = Json::obj(vec![(
         "error",
         Json::obj(vec![("message", Json::str(msg)), ("type", Json::str("invalid_request_error"))]),
     )]);
-    write_response(out, status, "application/json", body.to_string().as_bytes())
+    write_response(out, status, "application/json", body.to_string().as_bytes(), keep)
 }
 
 #[cfg(test)]
@@ -469,5 +609,32 @@ mod tests {
         assert!(parse_params(&Json::parse(r#"{"max_tokens":4}"#).unwrap()).is_err());
         assert!(parse_params(&Json::parse(r#"{"prompt":"x","stop":7}"#).unwrap()).is_err());
         assert!(parse_params(&Json::parse(r#"{"prompt":"x","n":0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn logit_bias_parses_and_rejects_malformed() {
+        let j = Json::parse(r#"{"prompt":"x","logit_bias":{"42":-5,"7":1.5}}"#).unwrap();
+        let mut bias = parse_params(&j).unwrap().sampling.logit_bias;
+        bias.sort_by_key(|&(t, _)| t);
+        assert_eq!(bias.len(), 2);
+        assert_eq!(bias[0].0, 7);
+        assert!((bias[0].1 - 1.5).abs() < 1e-6);
+        assert_eq!(bias[1].0, 42);
+        assert!((bias[1].1 + 5.0).abs() < 1e-6);
+
+        // default: empty (no row copy in the samplers)
+        let j = Json::parse(r#"{"prompt":"x"}"#).unwrap();
+        assert!(parse_params(&j).unwrap().sampling.logit_bias.is_empty());
+
+        // malformed maps are typed 400s, not silent drops
+        for bad in [
+            r#"{"prompt":"x","logit_bias":[1,2]}"#,  // not an object
+            r#"{"prompt":"x","logit_bias":{"a":1}}"#, // non-numeric key
+            r#"{"prompt":"x","logit_bias":{"1":"h"}}"#, // non-numeric value
+            r#"{"prompt":"x","logit_bias":{"1":101}}"#, // out of range
+            r#"{"prompt":"x","logit_bias":{"-4":1}}"#, // negative token id
+        ] {
+            assert!(parse_params(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 }

@@ -4,6 +4,7 @@ use std::time::Duration;
 
 use crate::engine::executor::ExecStats;
 use crate::model::kv_cache::{KvDtype, KvPoolStats};
+use crate::obs::Hist;
 use crate::prefix::PrefixStats;
 use crate::util::stats::Summary;
 
@@ -60,6 +61,17 @@ pub struct Metrics {
     pub prefix: Option<PrefixStats>,
     /// high-water mark of concurrently active sequences.
     pub peak_active_seqs: usize,
+    /// log-bucketed latency distributions (µs), rendered by the
+    /// Prometheus endpoint with per-shard labels: time to first token,
+    pub hist_ttft: Hist,
+    /// inter-token latency (gap between consecutive committed tokens),
+    pub hist_itl: Hist,
+    /// admission queue wait,
+    pub hist_queue: Hist,
+    /// engine tick duration,
+    pub hist_tick: Hist,
+    /// and speculative verify walk duration (target weight walk only).
+    pub hist_verify_walk: Hist,
     ttft_samples: Vec<f64>,
     total_samples: Vec<f64>,
 }
@@ -69,6 +81,8 @@ impl Metrics {
         self.requests_completed += 1;
         self.tokens_prefilled += n_prompt as u64;
         self.tokens_generated += n_generated as u64;
+        self.hist_ttft.record_us(timing.ttft_us);
+        self.hist_queue.record_us(timing.queued_us);
         self.ttft_samples.push(timing.ttft_us as f64 / 1000.0);
         self.total_samples.push(timing.total_us as f64 / 1000.0);
     }
@@ -142,45 +156,86 @@ impl Metrics {
     /// aggregate reads as one big pool. `kv_dtype` keeps the first
     /// reported value (shards share one config).
     pub fn merge(&mut self, o: &Metrics) {
-        self.requests_completed += o.requests_completed;
-        self.tokens_prefilled += o.tokens_prefilled;
-        self.tokens_generated += o.tokens_generated;
-        self.engine_iterations += o.engine_iterations;
-        self.busy_us += o.busy_us;
-        self.kv_evictions += o.kv_evictions;
-        self.kv_admission_blocked += o.kv_admission_blocked;
-        self.kv_decode_deferred += o.kv_decode_deferred;
-        self.spec_rounds += o.spec_rounds;
-        self.spec_drafted += o.spec_drafted;
-        self.spec_accepted += o.spec_accepted;
-        self.spec_fallbacks += o.spec_fallbacks;
-        self.spec_draft_readmitted += o.spec_draft_readmitted;
-        self.spec_k_sum += o.spec_k_sum;
-        self.spec_verify_walks += o.spec_verify_walks;
-        self.spec_batch_rounds += o.spec_batch_rounds;
-        self.spec_batch_seqs += o.spec_batch_seqs;
-        self.spec_tier_hops += o.spec_tier_hops;
-        self.peak_active_seqs += o.peak_active_seqs;
-        self.exec.chunks_executed += o.exec.chunks_executed;
-        self.exec.fixup_reductions += o.exec.fixup_reductions;
-        self.exec.worker_busy_us += o.exec.worker_busy_us;
-        self.exec.parallel_calls += o.exec.parallel_calls;
-        self.exec.sequential_calls += o.exec.sequential_calls;
-        if let Some(okv) = &o.kv {
-            let kv = self.kv.get_or_insert_with(Default::default);
-            kv.total_blocks += okv.total_blocks;
-            kv.blocks_in_use += okv.blocks_in_use;
-            kv.peak_in_use += okv.peak_in_use;
-            kv.allocs += okv.allocs;
-            kv.frees += okv.frees;
-            if kv.bytes_per_block == 0 {
-                kv.bytes_per_block = okv.bytes_per_block;
+        // Exhaustively destructure the source — NO `..` — so adding a
+        // Metrics field without deciding how it aggregates is a compile
+        // error here, not a counter that silently reads 0 in the
+        // fleet-wide `/report` and `/metrics` roll-ups.
+        let Metrics {
+            requests_completed,
+            tokens_prefilled,
+            tokens_generated,
+            engine_iterations,
+            busy_us,
+            exec,
+            kv,
+            kv_dtype: _, // folded in under `kv` below (first value wins)
+            kv_evictions,
+            kv_admission_blocked,
+            kv_decode_deferred,
+            spec_rounds,
+            spec_drafted,
+            spec_accepted,
+            spec_fallbacks,
+            spec_draft_readmitted,
+            spec_k_sum,
+            spec_verify_walks,
+            spec_batch_rounds,
+            spec_batch_seqs,
+            spec_tier_hops,
+            prefix,
+            peak_active_seqs,
+            hist_ttft,
+            hist_itl,
+            hist_queue,
+            hist_tick,
+            hist_verify_walk,
+            ttft_samples,
+            total_samples,
+        } = o;
+        self.requests_completed += requests_completed;
+        self.tokens_prefilled += tokens_prefilled;
+        self.tokens_generated += tokens_generated;
+        self.engine_iterations += engine_iterations;
+        self.busy_us += busy_us;
+        self.kv_evictions += kv_evictions;
+        self.kv_admission_blocked += kv_admission_blocked;
+        self.kv_decode_deferred += kv_decode_deferred;
+        self.spec_rounds += spec_rounds;
+        self.spec_drafted += spec_drafted;
+        self.spec_accepted += spec_accepted;
+        self.spec_fallbacks += spec_fallbacks;
+        self.spec_draft_readmitted += spec_draft_readmitted;
+        self.spec_k_sum += spec_k_sum;
+        self.spec_verify_walks += spec_verify_walks;
+        self.spec_batch_rounds += spec_batch_rounds;
+        self.spec_batch_seqs += spec_batch_seqs;
+        self.spec_tier_hops += spec_tier_hops;
+        self.peak_active_seqs += peak_active_seqs;
+        self.hist_ttft.merge(hist_ttft);
+        self.hist_itl.merge(hist_itl);
+        self.hist_queue.merge(hist_queue);
+        self.hist_tick.merge(hist_tick);
+        self.hist_verify_walk.merge(hist_verify_walk);
+        self.exec.chunks_executed += exec.chunks_executed;
+        self.exec.fixup_reductions += exec.fixup_reductions;
+        self.exec.worker_busy_us += exec.worker_busy_us;
+        self.exec.parallel_calls += exec.parallel_calls;
+        self.exec.sequential_calls += exec.sequential_calls;
+        if let Some(okv) = kv {
+            let skv = self.kv.get_or_insert_with(Default::default);
+            skv.total_blocks += okv.total_blocks;
+            skv.blocks_in_use += okv.blocks_in_use;
+            skv.peak_in_use += okv.peak_in_use;
+            skv.allocs += okv.allocs;
+            skv.frees += okv.frees;
+            if skv.bytes_per_block == 0 {
+                skv.bytes_per_block = okv.bytes_per_block;
             }
             if self.kv_dtype.is_none() {
                 self.kv_dtype = o.kv_dtype;
             }
         }
-        if let Some(op) = &o.prefix {
+        if let Some(op) = prefix {
             let p = self.prefix.get_or_insert_with(Default::default);
             p.hits += op.hits;
             p.misses += op.misses;
@@ -191,8 +246,8 @@ impl Metrics {
             p.shared_blocks += op.shared_blocks;
             p.nodes += op.nodes;
         }
-        self.ttft_samples.extend_from_slice(&o.ttft_samples);
-        self.total_samples.extend_from_slice(&o.total_samples);
+        self.ttft_samples.extend_from_slice(ttft_samples);
+        self.total_samples.extend_from_slice(total_samples);
     }
 
     /// Fraction of drafted tokens the target accepted (0 when no
@@ -338,5 +393,24 @@ mod tests {
         // both latency samples survive into the merged summary
         assert_eq!(a.latency_ms().n, 2);
         assert!(a.report().contains("requests=2"));
+    }
+
+    #[test]
+    fn merge_folds_histograms() {
+        let mut a = Metrics::default();
+        a.record(&RequestMetrics { ttft_us: 1000, queued_us: 50, ..Default::default() }, 4, 8);
+        a.hist_tick.record_us(200);
+        a.hist_itl.record_us(30);
+        let mut b = Metrics::default();
+        b.record(&RequestMetrics { ttft_us: 3000, queued_us: 70, ..Default::default() }, 2, 5);
+        b.hist_verify_walk.record_us(400);
+        a.merge(&b);
+        assert_eq!(a.hist_ttft.count(), 2);
+        assert_eq!(a.hist_queue.count(), 2);
+        assert_eq!(a.hist_queue.sum_us(), 120);
+        assert_eq!(a.hist_tick.count(), 1);
+        assert_eq!(a.hist_itl.count(), 1);
+        assert_eq!(a.hist_verify_walk.count(), 1);
+        assert_eq!(a.hist_verify_walk.sum_us(), 400);
     }
 }

@@ -2,13 +2,17 @@
 
 use crate::model::sampler::Sampling;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SamplingCfg {
     pub mode: SamplingMode,
     pub temperature: f32,
     pub top_k: usize,
     /// nucleus mass for `SamplingMode::TopP`
     pub top_p: f32,
+    /// per-token logit offsets `(token, delta)` added before
+    /// argmax/softmax (OpenAI-style `logit_bias`); empty = no bias, the
+    /// common case, and the samplers skip the row copy entirely then.
+    pub logit_bias: Vec<(u32, f32)>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,12 +24,18 @@ pub enum SamplingMode {
 
 impl Default for SamplingCfg {
     fn default() -> Self {
-        Self { mode: SamplingMode::Greedy, temperature: 1.0, top_k: 40, top_p: 0.95 }
+        Self {
+            mode: SamplingMode::Greedy,
+            temperature: 1.0,
+            top_k: 40,
+            top_p: 0.95,
+            logit_bias: Vec::new(),
+        }
     }
 }
 
 impl SamplingCfg {
-    pub fn to_sampling(self) -> Sampling {
+    pub fn to_sampling(&self) -> Sampling {
         match self.mode {
             SamplingMode::Greedy => Sampling::Greedy,
             SamplingMode::TopK => Sampling::TopK { temperature: self.temperature, k: self.top_k },

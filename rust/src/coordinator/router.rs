@@ -50,6 +50,7 @@ use anyhow::Result;
 use crate::coordinator::engine_core::EngineCore;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{FinishReason, Request, Response};
+use crate::obs;
 use crate::prefix::prefix_fingerprint;
 
 /// Shard-count config. `GQSA_SHARDS` (default 1 — the single-engine
@@ -174,6 +175,9 @@ fn shard_loop(
     rx: &mpsc::Receiver<ShardMsg>,
     gauges: &ShardGauges,
 ) {
+    // tag every span recorded from this engine thread (ticks, prefill,
+    // spec rounds, KV work) with the shard index for the trace view
+    obs::set_shard(idx);
     let mut pending: HashMap<u64, ReplySender> = HashMap::new();
     loop {
         // Gather control messages: block for one only when idle, then
@@ -335,6 +339,7 @@ impl Inner {
     /// mid-send is marked dead and the request re-routes; when no live
     /// shard remains the client gets a typed `EngineError` response.
     fn dispatch(&self, req: Request, reply: ReplySender) {
+        let _g = obs::span("route_dispatch", obs::SpanKind::Router, req.id);
         let mut req = req;
         let mut reply = reply;
         loop {
@@ -567,5 +572,10 @@ impl RouterClient {
 
     pub fn metrics_report(&self) -> Result<String> {
         Ok(self.inner.metrics_report())
+    }
+
+    /// Per-shard structured metrics snapshots (drives `/metrics`).
+    pub fn shard_metrics(&self) -> Vec<Metrics> {
+        self.inner.shard_metrics()
     }
 }

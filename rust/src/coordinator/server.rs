@@ -50,6 +50,11 @@ impl Client {
     pub fn metrics_report(&self) -> Result<String> {
         self.inner.metrics_report()
     }
+
+    /// Per-shard structured metrics snapshots (drives `/metrics`).
+    pub fn shard_metrics(&self) -> Vec<crate::coordinator::metrics::Metrics> {
+        self.inner.shard_metrics()
+    }
 }
 
 /// The server: `GQSA_SHARDS` engine loops, each on its own thread.

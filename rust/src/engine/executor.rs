@@ -36,6 +36,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::engine::cost_model::DispatchModel;
+use crate::obs;
 use crate::engine::{slice_k, stream_k};
 use crate::gqs::gemm::{gqs_gemm_chunk, gqs_gemm_i8_rows, group_sums_batch, reduce_gemm, MatmulScratch};
 use crate::gqs::gemv::{
@@ -319,6 +320,7 @@ impl Executor {
             }
             return;
         }
+        let _span = obs::span("exec_chunks", obs::SpanKind::Exec, obs::NO_SEQ);
         let _guard = self.dispatch_lock.lock().unwrap();
         // SAFETY: the borrow of `task` outlives this function call, and
         // this function does not return — normally OR by unwinding —
@@ -846,6 +848,7 @@ fn prepare_chunks(es: &mut ExecScratch) -> usize {
 /// Copy per-task GEMV row buffers back into the shared output (bitwise
 /// — the accumulation chains were completed inside the kernels).
 fn reduce_rows_gemv(chunks: &[GqsChunk], ranges: &[(usize, usize)], y: &mut [f32]) {
+    let _g = obs::span("exec_fixup", obs::SpanKind::Exec, obs::NO_SEQ);
     for (c, &(r0, r1)) in chunks.iter().zip(ranges) {
         y[r0..r1].copy_from_slice(&c.partials[..r1 - r0]);
     }
@@ -860,6 +863,7 @@ fn reduce_rows_gemm(
     n: usize,
     yd: &mut [f32],
 ) {
+    let _g = obs::span("exec_fixup", obs::SpanKind::Exec, obs::NO_SEQ);
     for (c, &(r0, r1)) in chunks.iter().zip(ranges) {
         let width = r1 - r0;
         for ti in 0..t {

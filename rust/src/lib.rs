@@ -23,6 +23,7 @@ pub mod ckpt;
 pub mod coordinator;
 pub mod engine;
 pub mod gqs;
+pub mod obs;
 pub mod prefix;
 pub mod quant;
 pub mod sparse;

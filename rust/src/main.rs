@@ -4,9 +4,12 @@
 //!   info                          artifact + model inventory
 //!   generate  [--model SPEC] [--family F] [--prompt S] [--max-new N] [--backend native|pjrt]
 //!   serve-demo [--requests N] [--batch B]    continuous-batching demo (GQSA_SHARDS=N shards it)
-//!   serve-http [--addr H:P] [--ckpt PATH]    HTTP/SSE API server (POST /v1/completions, GET /report);
+//!   serve-http [--addr H:P] [--ckpt PATH] [--trace-out FILE]
+//!                                            HTTP/SSE API server (POST /v1/completions, GET /report,
+//!                                            GET /metrics Prometheus, GET /trace Perfetto JSON);
 //!                                            --ckpt imports a safetensors checkpoint (GQSA_OUTLIERS
-//!                                            sets the dense-and-sparse outlier percent)
+//!                                            sets the dense-and-sparse outlier percent); --trace-out
+//!                                            flushes the GQSA_TRACE span ring to FILE every 5s
 //!   eval      [--family F] [--model SPEC]    ppl + zero-shot for one variant
 //!   bench-table <t1..t16|f1|f5|f5x|f6|f7|f8|kvpage|specdec|prefix|kernels|shards|ckpt|all> regenerate a paper table/figure (f5x = real Stream-K executor wall-clock; kvpage = slab vs paged/quantized KV; specdec = self-speculative decode sweep; prefix = shared-prefix KV cache sweep; kernels = scalar vs SIMD vs W4A8 microkernel GB/s; shards = multi-shard prefix-affinity router sweep; ckpt = safetensors import wall-clock + outlier sweep)
 //!   engine-sim [--rows N] [--skew X]         Slice-K vs Stream-K simulator
@@ -268,10 +271,28 @@ fn serve_http(art: &std::path::Path, flags: &HashMap<String, String>) -> Result<
     let http = gqsa::coordinator::HttpServer::bind(&addr, srv.client())
         .with_context(|| format!("bind {addr}"))?;
     println!(
-        "HTTP serving on http://{} — {} shard(s); POST /v1/completions, GET /report (ctrl-c stops)",
+        "HTTP serving on http://{} — {} shard(s); POST /v1/completions, GET /report, GET /metrics, GET /trace (ctrl-c stops)",
         http.local_addr(),
         srv.router().n_shards()
     );
+    // --trace-out FILE: periodically flush the span ring as Chrome
+    // trace JSON (same payload as GET /trace). The serve loop never
+    // returns, so a background flusher is the only way the file stays
+    // current; each write replaces the previous snapshot atomically
+    // (write temp + rename).
+    if let Some(path) = flags.get("trace-out").cloned() {
+        if !gqsa::obs::enabled() {
+            eprintln!("warning: --trace-out set but GQSA_TRACE is off; the trace will be empty");
+        }
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            let json = gqsa::obs::trace::chrome_trace_json(&gqsa::obs::snapshot());
+            let tmp = format!("{path}.tmp");
+            if std::fs::write(&tmp, &json).and_then(|()| std::fs::rename(&tmp, &path)).is_err() {
+                eprintln!("warning: could not write trace to {path}");
+            }
+        });
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

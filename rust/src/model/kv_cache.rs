@@ -695,6 +695,11 @@ impl LayerKv {
                 let mut tail_len = len - sealed.len() * KV_BLOCK;
                 if tail_len == KV_BLOCK {
                     // tail full: seal it into a fresh pool block
+                    let _g = crate::obs::span(
+                        "kv_seal",
+                        crate::obs::SpanKind::Kv,
+                        crate::obs::NO_SEQ,
+                    );
                     let mut block = pool.alloc().ok_or(CacheFull::PoolExhausted {
                         needed: 1,
                         free: 0,
@@ -877,6 +882,7 @@ impl LayerKv {
         if to >= self.len {
             return;
         }
+        let _g = crate::obs::span("kv_truncate", crate::obs::SpanKind::Kv, crate::obs::NO_SEQ);
         if let Store::Paged { pool, sealed, tail_k, tail_v, shadow } = &mut self.store {
             let keep = blocks_for(to);
             while sealed.len() > keep {

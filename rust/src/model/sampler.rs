@@ -122,6 +122,51 @@ fn softmax_over(logits: &[f32], kept: &[usize], temperature: f32, out: &mut [f32
     }
 }
 
+/// Add per-token logit offsets in place (`bias` is `(token, delta)`
+/// pairs; out-of-vocab tokens are ignored). The OpenAI-style
+/// `logit_bias` primitive — applied before argmax/softmax so it steers
+/// greedy, top-k and top-p alike.
+pub fn apply_bias(logits: &mut [f32], bias: &[(u32, f32)]) {
+    for &(tok, delta) in bias {
+        if let Some(l) = logits.get_mut(tok as usize) {
+            *l += delta;
+        }
+    }
+}
+
+/// [`sample`] over `logits + bias` without mutating the caller's row.
+/// With an empty bias this is exactly [`sample`] (no copy).
+pub fn sample_biased(logits: &[f32], bias: &[(u32, f32)], mode: Sampling, rng: &mut XorShift) -> u32 {
+    if bias.is_empty() {
+        return sample(logits, mode, rng);
+    }
+    let mut row = logits.to_vec();
+    apply_bias(&mut row, bias);
+    sample(&row, mode, rng)
+}
+
+/// [`argmax`] over `logits + bias` without mutating the caller's row.
+pub fn argmax_biased(logits: &[f32], bias: &[(u32, f32)]) -> usize {
+    if bias.is_empty() {
+        return argmax(logits);
+    }
+    let mut row = logits.to_vec();
+    apply_bias(&mut row, bias);
+    argmax(&row)
+}
+
+/// [`dist_probs`] over `logits + bias` without mutating the caller's
+/// row.
+pub fn dist_probs_biased(logits: &[f32], bias: &[(u32, f32)], mode: Sampling, out: &mut Vec<f32>) {
+    if bias.is_empty() {
+        dist_probs(logits, mode, out);
+        return;
+    }
+    let mut row = logits.to_vec();
+    apply_bias(&mut row, bias);
+    dist_probs(&row, mode, out);
+}
+
 pub fn argmax(v: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in v.iter().enumerate() {
@@ -202,6 +247,30 @@ mod tests {
         let mut probs = Vec::new();
         dist_probs(&[0.3, 0.1, 7.0], Sampling::Greedy, &mut probs);
         assert_eq!(probs, vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn bias_steers_greedy_and_distributions() {
+        let mut rng = XorShift::new(6);
+        let logits = vec![5.0, 4.0, 0.0];
+        // unbiased greedy picks 0; +bias on 1 flips it, -100 bans 0
+        assert_eq!(argmax_biased(&logits, &[]), 0);
+        assert_eq!(argmax_biased(&logits, &[(1, 2.0)]), 1);
+        assert_eq!(sample_biased(&logits, &[(0, -100.0), (1, -100.0)], Sampling::Greedy, &mut rng), 2);
+        // out-of-vocab entries are ignored, original row untouched
+        let mut row = logits.clone();
+        apply_bias(&mut row, &[(99, 7.0), (2, 1.5)]);
+        assert_eq!(row, vec![5.0, 4.0, 1.5]);
+        // biased distribution zeroes banned tokens under top-k
+        let mut probs = Vec::new();
+        dist_probs_biased(
+            &logits,
+            &[(0, -1000.0)],
+            Sampling::TopK { temperature: 1.0, k: 2 },
+            &mut probs,
+        );
+        assert!(probs[0] < 1e-6, "banned token kept mass: {}", probs[0]);
+        assert!(probs[1] > 0.5);
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Log-bucketed latency histogram (HDR-style): power-of-two µs buckets
+//! so one fixed 48-slot array spans 1 µs to ~8.9 years with bounded
+//! relative error, mergeable across shards exactly like the counter
+//! fields of `Metrics::merge`.
+
+/// Number of buckets; bucket `i` covers `[2^i, 2^(i+1))` µs (bucket 0
+/// also absorbs 0), the last bucket absorbs everything larger.
+pub const BUCKETS: usize = 48;
+
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_us: u64,
+}
+
+// [u64; 48] has no derived Default (std stops at 32), hence manual.
+impl Default for Hist {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], count: 0, sum_us: 0 }
+    }
+}
+
+impl Hist {
+    pub fn record_us(&mut self, us: u64) {
+        let idx = (63 - (us | 1).leading_zeros()) as usize;
+        self.counts[idx.min(BUCKETS - 1)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Fold another histogram in (bucket-wise sum) — the multi-shard
+    /// aggregate keeps exact counts and sums.
+    pub fn merge(&mut self, o: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&o.counts) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.sum_us += o.sum_us;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Raw bucket counts (index i covers `[2^i, 2^(i+1))` µs).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Exclusive upper edge of bucket `i`, in µs.
+    pub fn upper_edge_us(i: usize) -> u64 {
+        1u64 << (i + 1).min(63)
+    }
+
+    /// Approximate quantile in µs (linear interpolation inside the
+    /// containing bucket). `q` in [0, 1]; 0 with no samples.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= target {
+                let lo = if i == 0 { 0 } else { 1u64 << i };
+                let hi = Self::upper_edge_us(i);
+                let frac = (target - cum) as f64 / c as f64;
+                return lo as f64 + frac * (hi - lo) as f64;
+            }
+            cum += c;
+        }
+        Hist::upper_edge_us(BUCKETS - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_us() {
+        let mut h = Hist::default();
+        h.record_us(0); // bucket 0
+        h.record_us(1); // bucket 0
+        h.record_us(2); // bucket 1
+        h.record_us(3); // bucket 1
+        h.record_us(1024); // bucket 10
+        assert_eq!(h.buckets()[0], 2);
+        assert_eq!(h.buckets()[1], 2);
+        assert_eq!(h.buckets()[10], 1);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_us(), 1030);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = Hist::default();
+        h.record_us(u64::MAX);
+        assert_eq!(h.buckets()[BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn merge_is_bucketwise_sum() {
+        let mut a = Hist::default();
+        let mut b = Hist::default();
+        for v in [5u64, 100, 2000] {
+            a.record_us(v);
+        }
+        for v in [7u64, 90_000] {
+            b.record_us(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum_us(), 5 + 100 + 2000 + 7 + 90_000);
+        let total: u64 = a.buckets().iter().sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn quantiles_bracket_the_data() {
+        let mut h = Hist::default();
+        for _ in 0..90 {
+            h.record_us(100);
+        }
+        for _ in 0..10 {
+            h.record_us(10_000);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        // p50 lands in 100's bucket [64, 128), p99 in 10_000's [8192, 16384)
+        assert!((64.0..128.0).contains(&p50), "p50={p50}");
+        assert!((8192.0..16384.0).contains(&p99), "p99={p99}");
+        assert!(h.mean_us() > 100.0 && h.mean_us() < 10_000.0);
+        assert_eq!(Hist::default().quantile_us(0.5), 0.0);
+    }
+}

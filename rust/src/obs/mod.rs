@@ -1,0 +1,489 @@
+//! End-to-end observability: a lock-light span recorder feeding
+//! Chrome-trace/Perfetto export, plus log-bucketed latency histograms
+//! surfaced through `Metrics` and the Prometheus endpoint.
+//!
+//! The recorder is built for the engine's hot paths: when tracing is
+//! off (`GQSA_TRACE` unset or `0`) the cost of an instrumentation site
+//! is ONE relaxed atomic load — no allocation, no TLS access, no
+//! `Instant::now()`. When on, spans go into a fixed-capacity ring of
+//! per-slot spinlocked cells: a writer claims a slot with one
+//! `fetch_add`, try-locks it, and copies a POD [`Span`] in; contention
+//! (a snapshot walking the ring, or a wrapped writer on the same slot)
+//! drops the span and bumps a counter instead of ever blocking the
+//! engine. Nothing on the recording path can change token output —
+//! asserted on/off in `tests/obs_trace.rs`.
+//!
+//! Knobs:
+//! - `GQSA_TRACE=1` enables recording (detected once, like
+//!   `gqs::simd`; tests pin via [`force`]/[`reset`]).
+//! - `GQSA_TRACE_SAMPLE=N` keeps 1-in-N *requests* (deterministic hash
+//!   of the sequence id, so a kept request keeps ALL its spans across
+//!   layers; engine-scoped spans with no sequence are always kept).
+//! - `GQSA_TRACE_CAP=N` sizes the ring (default 65536 spans).
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use hist::Hist;
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Layer a span belongs to — the Chrome-trace category, and the coarse
+/// filter Perfetto queries group by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// HTTP front end (connection/request handling)
+    Http,
+    /// router admission / route decision
+    Router,
+    /// time spent waiting for admission (recorded retroactively)
+    Queue,
+    /// one engine iteration
+    Engine,
+    /// chunked block prefill
+    Prefill,
+    /// batched decode walk
+    Decode,
+    /// speculative round phases (catch-up/draft/verify/rollback)
+    Spec,
+    /// prefix-tree probe/adopt/publish/evict
+    Prefix,
+    /// KV block seal / eviction
+    Kv,
+    /// Stream-K executor chunk + fixup phases
+    Exec,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Http => "http",
+            SpanKind::Router => "router",
+            SpanKind::Queue => "queue",
+            SpanKind::Engine => "engine",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Decode => "decode",
+            SpanKind::Spec => "spec",
+            SpanKind::Prefix => "prefix",
+            SpanKind::Kv => "kv",
+            SpanKind::Exec => "exec",
+        }
+    }
+}
+
+/// `seq_id` for spans not tied to a request (engine ticks, executor
+/// phases). Always kept by the sampler.
+pub const NO_SEQ: u64 = u64::MAX;
+/// `parent`/`shard` sentinel: no enclosing span / no shard context.
+pub const NO_PARENT: u32 = u32::MAX;
+pub const NO_SHARD: u32 = u32::MAX;
+
+/// One recorded interval. POD (`Copy`) so ring slots are a plain
+/// overwrite; names are `&'static str` so recording never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub kind: SpanKind,
+    /// request (sequence) id, or [`NO_SEQ`]
+    pub seq_id: u64,
+    /// engine shard index (set per thread via [`set_shard`]), or
+    /// [`NO_SHARD`] for front-end threads
+    pub shard: u32,
+    /// start, µs since the process trace epoch
+    pub t_start_us: u64,
+    pub dur_us: u64,
+    /// recorder-unique span id (wraps at u32::MAX; ids only
+    /// disambiguate within one ring's worth of spans)
+    pub id: u32,
+    /// enclosing span's id on the same thread, or [`NO_PARENT`]
+    pub parent: u32,
+}
+
+const UNPROBED: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNPROBED);
+static SAMPLE_N: AtomicU64 = AtomicU64::new(1);
+static NEXT_ID: AtomicU32 = AtomicU32::new(0);
+
+/// The one branch every instrumentation site pays when tracing is off:
+/// a single relaxed load of a process-wide atomic.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => probe(),
+    }
+}
+
+#[cold]
+fn probe() -> bool {
+    let on = std::env::var("GQSA_TRACE")
+        .map(|s| {
+            let s = s.trim();
+            !s.is_empty() && s != "0"
+        })
+        .unwrap_or(false);
+    let n = std::env::var("GQSA_TRACE_SAMPLE")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
+    SAMPLE_N.store(n, Ordering::Relaxed);
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+    on
+}
+
+/// Test hook: pin tracing on/off regardless of the environment.
+/// (Env detection is once-per-process, so tests that need both states
+/// serialize on a mutex and call this — same pattern as `gqs::simd`.)
+pub fn force(on: bool) {
+    // make sure SAMPLE_N got its env value before pinning the state
+    if STATE.load(Ordering::Relaxed) == UNPROBED {
+        probe();
+    }
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Test hook: return to env detection on the next [`enabled`] call.
+pub fn reset() {
+    STATE.store(UNPROBED, Ordering::Relaxed);
+}
+
+/// Is this request's trace kept under `GQSA_TRACE_SAMPLE`? The
+/// decision hashes only the sequence id, so every layer keeps or drops
+/// the SAME requests and kept traces stay complete end to end.
+#[inline]
+pub fn sampled(seq_id: u64) -> bool {
+    let n = SAMPLE_N.load(Ordering::Relaxed);
+    n <= 1 || seq_id == NO_SEQ || (seq_id.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) % n == 0
+}
+
+thread_local! {
+    /// innermost live span on this thread (guards link children to it)
+    static CUR_PARENT: Cell<u32> = const { Cell::new(NO_PARENT) };
+    /// engine shard index for spans recorded on this thread
+    static CUR_SHARD: Cell<u32> = const { Cell::new(NO_SHARD) };
+}
+
+/// Tag the current thread with its engine shard index; every span the
+/// thread records carries it (the Chrome-trace `pid` lane).
+pub fn set_shard(idx: usize) {
+    CUR_SHARD.with(|c| c.set(idx as u32));
+}
+
+// ---------------------------------------------------------------------
+// Ring buffer
+// ---------------------------------------------------------------------
+
+const DEFAULT_CAP: usize = 1 << 16;
+
+struct Slot {
+    /// per-slot spinlock, only ever TRY-locked: a writer that loses the
+    /// race drops its span (counted) instead of spinning
+    lock: AtomicBool,
+    filled: AtomicBool,
+    span: UnsafeCell<Span>,
+}
+
+struct Ring {
+    slots: Box<[Slot]>,
+    /// monotone claim counter; slot = head % len. Doubles as the
+    /// recorded-span total (including overwritten ones).
+    head: AtomicUsize,
+    /// spans dropped on slot contention
+    dropped: AtomicU64,
+}
+
+// SAFETY: `span` is only written under a successful try-lock of `lock`
+// and only read under the same lock in `snapshot`, so no two threads
+// ever touch a cell's interior concurrently.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        let blank = Span {
+            name: "",
+            kind: SpanKind::Engine,
+            seq_id: NO_SEQ,
+            shard: NO_SHARD,
+            t_start_us: 0,
+            dur_us: 0,
+            id: 0,
+            parent: NO_PARENT,
+        };
+        let slots: Vec<Slot> = (0..cap.max(1))
+            .map(|_| Slot {
+                lock: AtomicBool::new(false),
+                filled: AtomicBool::new(false),
+                span: UnsafeCell::new(blank),
+            })
+            .collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+}
+
+static RING: OnceLock<Ring> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Process trace epoch: every span's `t_start_us` is relative to this.
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ring() -> &'static Ring {
+    RING.get_or_init(|| {
+        let cap = std::env::var("GQSA_TRACE_CAP")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(DEFAULT_CAP);
+        Ring::new(cap)
+    })
+}
+
+fn push(span: Span) {
+    let r = ring();
+    let i = r.head.fetch_add(1, Ordering::Relaxed) % r.slots.len();
+    let slot = &r.slots[i];
+    if slot
+        .lock
+        .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+        .is_err()
+    {
+        r.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    // SAFETY: lock held (see Ring's Sync rationale)
+    unsafe { *slot.span.get() = span };
+    slot.filled.store(true, Ordering::Relaxed);
+    slot.lock.store(false, Ordering::Release);
+}
+
+/// Copy out every recorded span, oldest-start first. Skips (never
+/// blocks on) slots a writer holds mid-copy.
+pub fn snapshot() -> Vec<Span> {
+    let Some(r) = RING.get() else { return Vec::new() };
+    let mut out = Vec::new();
+    for slot in r.slots.iter() {
+        if slot
+            .lock
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            continue;
+        }
+        if slot.filled.load(Ordering::Relaxed) {
+            // SAFETY: lock held
+            out.push(unsafe { *slot.span.get() });
+        }
+        slot.lock.store(false, Ordering::Release);
+    }
+    out.sort_by_key(|s| (s.t_start_us, s.id));
+    out
+}
+
+/// Spans recorded so far (including ones the ring has since
+/// overwritten). 0 until the first span.
+pub fn spans_recorded() -> u64 {
+    RING.get().map_or(0, |r| r.head.load(Ordering::Relaxed) as u64)
+}
+
+/// Spans dropped on slot contention.
+pub fn spans_dropped() -> u64 {
+    RING.get().map_or(0, |r| r.dropped.load(Ordering::Relaxed))
+}
+
+/// Test hook: empty the ring (counters too).
+pub fn clear() {
+    if let Some(r) = RING.get() {
+        for slot in r.slots.iter() {
+            if slot
+                .lock
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                slot.filled.store(false, Ordering::Relaxed);
+                slot.lock.store(false, Ordering::Release);
+            }
+        }
+        r.head.store(0, Ordering::Relaxed);
+        r.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recording API
+// ---------------------------------------------------------------------
+
+struct Live {
+    name: &'static str,
+    kind: SpanKind,
+    seq_id: u64,
+    id: u32,
+    parent: u32,
+    start: Instant,
+}
+
+/// RAII span: records `[construction, drop)` when tracing is on and
+/// the request is sampled; otherwise a no-op shell. Nest freely —
+/// guards restore the thread's parent pointer on drop, so siblings and
+/// children link correctly.
+pub struct SpanGuard {
+    live: Option<Live>,
+}
+
+/// Open a span. The disabled path is one atomic load + a `None`.
+#[inline]
+pub fn span(name: &'static str, kind: SpanKind, seq_id: u64) -> SpanGuard {
+    if !enabled() || !sampled(seq_id) {
+        return SpanGuard { live: None };
+    }
+    SpanGuard { live: Some(arm(name, kind, seq_id)) }
+}
+
+fn arm(name: &'static str, kind: SpanKind, seq_id: u64) -> Live {
+    epoch(); // pin the epoch before the first start timestamp
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = CUR_PARENT.with(|c| c.replace(id));
+    Live { name, kind, seq_id, id, parent, start: Instant::now() }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(l) = self.live.take() {
+            CUR_PARENT.with(|c| c.set(l.parent));
+            let dur_us = l.start.elapsed().as_micros() as u64;
+            let t_start_us = l.start.saturating_duration_since(epoch()).as_micros() as u64;
+            push(Span {
+                name: l.name,
+                kind: l.kind,
+                seq_id: l.seq_id,
+                shard: CUR_SHARD.with(|c| c.get()),
+                t_start_us,
+                dur_us,
+                id: l.id,
+                parent: l.parent,
+            });
+        }
+    }
+}
+
+/// Record a span retroactively from a captured start `Instant` to now
+/// — for intervals whose start predates the recording thread (queue
+/// wait: started at submit on the client thread, recorded at
+/// admission on the engine thread).
+pub fn record_since(name: &'static str, kind: SpanKind, seq_id: u64, start: Instant) {
+    if !enabled() || !sampled(seq_id) {
+        return;
+    }
+    let dur_us = start.elapsed().as_micros() as u64;
+    let t_start_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+    push(Span {
+        name,
+        kind,
+        seq_id,
+        shard: CUR_SHARD.with(|c| c.get()),
+        t_start_us,
+        dur_us,
+        id: NEXT_ID.fetch_add(1, Ordering::Relaxed),
+        parent: CUR_PARENT.with(|c| c.get()),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// env-state tests share the detect-once atomic; serialize them
+    /// (same pattern as gqs::simd's force tests)
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+    // NOTE: the enable flag and the ring are process-global and the
+    // whole unit suite runs concurrently, so these tests filter the
+    // snapshot by their own unique span names — other tests' spans may
+    // legitimately share the ring while tracing is forced on.
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        force(false);
+        {
+            let _s = span("obs_test_disabled", SpanKind::Engine, NO_SEQ);
+        }
+        assert!(snapshot().iter().all(|s| s.name != "obs_test_disabled"));
+        reset();
+    }
+
+    #[test]
+    fn spans_nest_and_link_parents() {
+        let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        force(true);
+        set_shard(3);
+        {
+            let _outer = span("obs_test_outer", SpanKind::Engine, NO_SEQ);
+            {
+                let _inner = span("obs_test_inner", SpanKind::Decode, 42);
+            }
+        }
+        let spans = snapshot();
+        let outer = spans.iter().find(|s| s.name == "obs_test_outer").unwrap();
+        let inner = spans.iter().find(|s| s.name == "obs_test_inner").unwrap();
+        assert_eq!(inner.parent, outer.id, "inner span must link to enclosing span");
+        assert_eq!(inner.seq_id, 42);
+        assert_eq!(inner.shard, 3);
+        assert!(outer.dur_us >= inner.dur_us);
+        force(false);
+        reset();
+    }
+
+    #[test]
+    fn record_since_captures_retroactive_interval() {
+        let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        force(true);
+        let t0 = Instant::now();
+        record_since("obs_test_queue", SpanKind::Queue, 7, t0);
+        let spans = snapshot();
+        let q = spans.iter().find(|s| s.name == "obs_test_queue").unwrap();
+        assert_eq!(q.seq_id, 7);
+        assert!(spans_recorded() >= 1);
+        force(false);
+        reset();
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seq() {
+        // engine-scoped spans are always kept; request keep/drop is a
+        // pure function of the id
+        assert!(sampled(NO_SEQ));
+        for id in 0..64u64 {
+            assert_eq!(sampled(id), sampled(id));
+        }
+    }
+
+    #[test]
+    fn ring_wraps_without_losing_capacity() {
+        let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        force(true);
+        let cap = ring().slots.len();
+        let n = 128usize;
+        for _ in 0..n {
+            let _s = span("obs_test_wrap", SpanKind::Exec, NO_SEQ);
+        }
+        let got = snapshot().iter().filter(|s| s.name == "obs_test_wrap").count();
+        assert!(got >= n.min(cap) / 2, "ring kept too few spans: {got}");
+        force(false);
+        reset();
+    }
+}

@@ -1,0 +1,500 @@
+//! Prometheus text exposition (version 0.0.4) over per-shard
+//! [`Metrics`] snapshots — every counter/gauge `/report` prints, plus
+//! the latency histograms and the trace-recorder's own counters.
+//!
+//! Layout: one `# HELP`/`# TYPE` header per metric family, then one
+//! sample per shard labelled `{shard="i"}`. Histogram buckets are
+//! cumulative with `le` in SECONDS (the Prometheus convention), edges
+//! at the histogram's power-of-two µs boundaries.
+
+use crate::coordinator::metrics::Metrics;
+use crate::obs::hist::{Hist, BUCKETS};
+
+/// HTTP front-end counters rendered alongside the engine metrics (the
+/// front end sits above the shard fleet, so these carry no shard
+/// label).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HttpCounters {
+    pub connections: u64,
+    pub requests: u64,
+    pub keepalive_reuses: u64,
+}
+
+struct Out(String);
+
+impl Out {
+    fn header(&mut self, name: &str, ty: &str, help: &str) {
+        self.0.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {ty}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &str, v: f64) {
+        // integral values print without a fractional part (Prometheus
+        // accepts either; this keeps the output diff-friendly)
+        if v.fract() == 0.0 && v.abs() < 9.0e15 {
+            self.0.push_str(&format!("{name}{labels} {}\n", v as i64));
+        } else {
+            self.0.push_str(&format!("{name}{labels} {v}\n"));
+        }
+    }
+
+    /// One family: header + a `{shard="i"}` sample per shard.
+    fn per_shard(&mut self, name: &str, ty: &str, help: &str, vals: &[f64]) {
+        self.header(name, ty, help);
+        for (i, v) in vals.iter().enumerate() {
+            self.sample(name, &format!("{{shard=\"{i}\"}}"), *v);
+        }
+    }
+
+    /// One histogram family across shards: cumulative `_bucket` series
+    /// (le in seconds), `_sum`, `_count`.
+    fn histogram(&mut self, name: &str, help: &str, per_shard: &[&Hist]) {
+        self.header(name, "histogram", help);
+        for (i, h) in per_shard.iter().enumerate() {
+            let mut cum = 0u64;
+            for (b, &c) in h.buckets().iter().enumerate() {
+                cum += c;
+                let le = Hist::upper_edge_us(b) as f64 / 1e6;
+                self.0.push_str(&format!(
+                    "{name}_bucket{{shard=\"{i}\",le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            self.0.push_str(&format!("{name}_bucket{{shard=\"{i}\",le=\"+Inf\"}} {}\n", h.count()));
+            self.sample(&format!("{name}_sum"), &format!("{{shard=\"{i}\"}}"), h.sum_us() as f64 / 1e6);
+            self.sample(&format!("{name}_count"), &format!("{{shard=\"{i}\"}}"), h.count() as f64);
+        }
+    }
+}
+
+/// Render the fleet's metrics in Prometheus text format.
+pub fn render(shards: &[Metrics], http: Option<&HttpCounters>) -> String {
+    let mut o = Out(String::with_capacity(16 * 1024));
+    let col = |f: &dyn Fn(&Metrics) -> f64| -> Vec<f64> { shards.iter().map(f).collect() };
+
+    // ---- request / token counters --------------------------------
+    o.per_shard(
+        "gqsa_requests_completed_total",
+        "counter",
+        "Requests retired with a response.",
+        &col(&|m| m.requests_completed as f64),
+    );
+    o.per_shard(
+        "gqsa_tokens_prefilled_total",
+        "counter",
+        "Prompt tokens prefilled.",
+        &col(&|m| m.tokens_prefilled as f64),
+    );
+    o.per_shard(
+        "gqsa_tokens_generated_total",
+        "counter",
+        "Tokens generated (committed).",
+        &col(&|m| m.tokens_generated as f64),
+    );
+    o.per_shard(
+        "gqsa_engine_iterations_total",
+        "counter",
+        "Engine ticks run.",
+        &col(&|m| m.engine_iterations as f64),
+    );
+    o.per_shard(
+        "gqsa_engine_busy_seconds_total",
+        "counter",
+        "Wall time spent inside engine ticks.",
+        &col(&|m| m.busy_us as f64 / 1e6),
+    );
+    o.per_shard(
+        "gqsa_peak_active_seqs",
+        "gauge",
+        "High-water mark of concurrently active sequences.",
+        &col(&|m| m.peak_active_seqs as f64),
+    );
+
+    // ---- Stream-K executor ---------------------------------------
+    o.per_shard(
+        "gqsa_exec_chunks_total",
+        "counter",
+        "Stream-K chunks executed by the worker pool.",
+        &col(&|m| m.exec.chunks_executed as f64),
+    );
+    o.per_shard(
+        "gqsa_exec_fixup_reductions_total",
+        "counter",
+        "Fixed-order fixup reductions after parallel chunks.",
+        &col(&|m| m.exec.fixup_reductions as f64),
+    );
+    o.per_shard(
+        "gqsa_exec_worker_busy_seconds_total",
+        "counter",
+        "Executor worker busy time, summed over lanes.",
+        &col(&|m| m.exec.worker_busy_us as f64 / 1e6),
+    );
+    o.per_shard(
+        "gqsa_exec_parallel_calls_total",
+        "counter",
+        "Kernel dispatches that ran on the worker pool.",
+        &col(&|m| m.exec.parallel_calls as f64),
+    );
+    o.per_shard(
+        "gqsa_exec_sequential_calls_total",
+        "counter",
+        "Kernel dispatches the cost gate kept sequential.",
+        &col(&|m| m.exec.sequential_calls as f64),
+    );
+
+    // ---- KV block pool -------------------------------------------
+    o.per_shard(
+        "gqsa_kv_blocks_total",
+        "gauge",
+        "KV block-pool budget (0 = slab mode).",
+        &col(&|m| m.kv.map_or(0.0, |k| k.total_blocks as f64)),
+    );
+    o.per_shard(
+        "gqsa_kv_blocks_in_use",
+        "gauge",
+        "KV blocks currently allocated.",
+        &col(&|m| m.kv.map_or(0.0, |k| k.blocks_in_use as f64)),
+    );
+    o.per_shard(
+        "gqsa_kv_blocks_peak_in_use",
+        "gauge",
+        "High-water mark of allocated KV blocks.",
+        &col(&|m| m.kv.map_or(0.0, |k| k.peak_in_use as f64)),
+    );
+    o.per_shard(
+        "gqsa_kv_block_allocs_total",
+        "counter",
+        "KV block allocations.",
+        &col(&|m| m.kv.map_or(0.0, |k| k.allocs as f64)),
+    );
+    o.per_shard(
+        "gqsa_kv_block_frees_total",
+        "counter",
+        "KV block frees.",
+        &col(&|m| m.kv.map_or(0.0, |k| k.frees as f64)),
+    );
+    o.per_shard(
+        "gqsa_kv_bytes_in_use",
+        "gauge",
+        "Bytes held by in-use KV blocks.",
+        &col(&|m| m.kv.map_or(0.0, |k| k.bytes_in_use() as f64)),
+    );
+    o.per_shard(
+        "gqsa_kv_evictions_total",
+        "counter",
+        "Sequences retired early because the KV pool ran dry.",
+        &col(&|m| m.kv_evictions as f64),
+    );
+    o.per_shard(
+        "gqsa_kv_admission_blocked_total",
+        "counter",
+        "Admissions deferred for lack of free KV blocks.",
+        &col(&|m| m.kv_admission_blocked as f64),
+    );
+    o.per_shard(
+        "gqsa_kv_decode_deferred_total",
+        "counter",
+        "Decode steps deferred a tick waiting for KV blocks.",
+        &col(&|m| m.kv_decode_deferred as f64),
+    );
+
+    // ---- speculative decoding ------------------------------------
+    o.per_shard(
+        "gqsa_spec_rounds_total",
+        "counter",
+        "Speculative rounds completed (draft + verify + rollback).",
+        &col(&|m| m.spec_rounds as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_drafted_total",
+        "counter",
+        "Draft tokens proposed.",
+        &col(&|m| m.spec_drafted as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_accepted_total",
+        "counter",
+        "Draft tokens accepted by target verification.",
+        &col(&|m| m.spec_accepted as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_fallbacks_total",
+        "counter",
+        "Speculative rounds abandoned for plain decode (KV pressure).",
+        &col(&|m| m.spec_fallbacks as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_draft_readmitted_total",
+        "counter",
+        "Draft tiers rebuilt after a pressure shed.",
+        &col(&|m| m.spec_draft_readmitted as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_k_sum_total",
+        "counter",
+        "Sum of per-round chosen draft length k.",
+        &col(&|m| m.spec_k_sum as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_verify_walks_total",
+        "counter",
+        "Target verify weight walks.",
+        &col(&|m| m.spec_verify_walks as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_batch_rounds_total",
+        "counter",
+        "Fused fleet verify walks.",
+        &col(&|m| m.spec_batch_rounds as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_batch_seqs_total",
+        "counter",
+        "Sequences verified by fused walks.",
+        &col(&|m| m.spec_batch_seqs as f64),
+    );
+    o.per_shard(
+        "gqsa_spec_tier_hops_total",
+        "counter",
+        "Per-sequence draft-tier ladder hops.",
+        &col(&|m| m.spec_tier_hops as f64),
+    );
+
+    // ---- shared-prefix cache -------------------------------------
+    o.per_shard(
+        "gqsa_prefix_hits_total",
+        "counter",
+        "Prefix-cache lookups matching at least one block.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.hits as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_misses_total",
+        "counter",
+        "Prefix-cache lookups matching nothing.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.misses as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_hit_blocks_total",
+        "counter",
+        "Blocks adopted across prefix hits (all layers).",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.hit_blocks as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_hit_positions_total",
+        "counter",
+        "Prompt positions whose prefill was skipped via adoption.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.hit_positions as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_published_blocks_total",
+        "counter",
+        "Blocks published into the prefix tree.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.published_blocks as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_evicted_blocks_total",
+        "counter",
+        "Prefix-tree blocks reclaimed by LRU eviction.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.evicted_blocks as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_shared_blocks",
+        "gauge",
+        "Blocks the prefix tree currently keeps alive.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.shared_blocks as f64)),
+    );
+    o.per_shard(
+        "gqsa_prefix_nodes",
+        "gauge",
+        "Radix-tree nodes resident.",
+        &col(&|m| m.prefix.map_or(0.0, |p| p.nodes as f64)),
+    );
+
+    // ---- latency histograms --------------------------------------
+    let hists = |f: &dyn Fn(&Metrics) -> &Hist| -> Vec<&Hist> { shards.iter().map(f).collect() };
+    o.histogram(
+        "gqsa_ttft_seconds",
+        "Time to first generated token, from submission.",
+        &hists(&|m| &m.hist_ttft),
+    );
+    o.histogram(
+        "gqsa_itl_seconds",
+        "Inter-token latency (gap between consecutive committed tokens).",
+        &hists(&|m| &m.hist_itl),
+    );
+    o.histogram(
+        "gqsa_queue_seconds",
+        "Admission queue wait.",
+        &hists(&|m| &m.hist_queue),
+    );
+    o.histogram(
+        "gqsa_tick_seconds",
+        "Engine tick duration.",
+        &hists(&|m| &m.hist_tick),
+    );
+    o.histogram(
+        "gqsa_spec_verify_walk_seconds",
+        "Speculative verify walk duration (target weight walk).",
+        &hists(&|m| &m.hist_verify_walk),
+    );
+
+    // ---- trace recorder + HTTP front end -------------------------
+    o.header(
+        "gqsa_trace_spans_recorded_total",
+        "counter",
+        "Spans recorded by the trace ring (including overwritten).",
+    );
+    o.sample("gqsa_trace_spans_recorded_total", "", crate::obs::spans_recorded() as f64);
+    o.header(
+        "gqsa_trace_spans_dropped_total",
+        "counter",
+        "Spans dropped on ring-slot contention.",
+    );
+    o.sample("gqsa_trace_spans_dropped_total", "", crate::obs::spans_dropped() as f64);
+    if let Some(h) = http {
+        o.header("gqsa_http_connections_total", "counter", "TCP connections accepted.");
+        o.sample("gqsa_http_connections_total", "", h.connections as f64);
+        o.header("gqsa_http_requests_total", "counter", "HTTP requests served.");
+        o.sample("gqsa_http_requests_total", "", h.requests as f64);
+        o.header(
+            "gqsa_http_keepalive_reuses_total",
+            "counter",
+            "Requests served on a reused (kept-alive) connection.",
+        );
+        o.sample("gqsa_http_keepalive_reuses_total", "", h.keepalive_reuses as f64);
+    }
+    o.0
+}
+
+/// Minimal structural check of the text format, shared by unit and e2e
+/// tests: every non-comment line is `name{labels} value` with a
+/// parseable value, and every series was declared by a preceding
+/// `# TYPE` (histogram series may use the `_bucket`/`_sum`/`_count`
+/// suffixes of a declared histogram family).
+pub fn validate(text: &str) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut typed: HashMap<String, String> = HashMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or_else(|| format!("bad TYPE line: {line}"))?;
+            let ty = it.next().ok_or_else(|| format!("bad TYPE line: {line}"))?;
+            typed.insert(name.to_string(), ty.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("sample line has no value: {line}"))?;
+        value
+            .parse::<f64>()
+            .map_err(|_| format!("unparseable value in: {line}"))?;
+        let name = series.split('{').next().unwrap_or(series);
+        let family = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|f| typed.get(*f).map(String::as_str) == Some("histogram"))
+            .unwrap_or(name);
+        if !typed.contains_key(family) {
+            return Err(format!("series {name} has no # TYPE declaration"));
+        }
+    }
+    if typed.is_empty() {
+        return Err("no metric families declared".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestTiming;
+
+    fn sample_metrics() -> Metrics {
+        let mut m = Metrics::default();
+        m.record(&RequestTiming { ttft_us: 1500, queued_us: 40, total_us: 9000, ..Default::default() }, 8, 16);
+        m.engine_iterations = 12;
+        m.hist_tick.record_us(350);
+        m.hist_itl.record_us(90);
+        m.hist_verify_walk.record_us(520);
+        m.spec_rounds = 3;
+        m
+    }
+
+    #[test]
+    fn render_is_valid_and_covers_every_family() {
+        let shards = vec![sample_metrics(), sample_metrics()];
+        let text = render(&shards, Some(&HttpCounters { connections: 2, requests: 5, keepalive_reuses: 3 }));
+        validate(&text).unwrap();
+        for family in [
+            "gqsa_requests_completed_total",
+            "gqsa_tokens_prefilled_total",
+            "gqsa_tokens_generated_total",
+            "gqsa_engine_iterations_total",
+            "gqsa_engine_busy_seconds_total",
+            "gqsa_peak_active_seqs",
+            "gqsa_exec_chunks_total",
+            "gqsa_exec_fixup_reductions_total",
+            "gqsa_exec_worker_busy_seconds_total",
+            "gqsa_exec_parallel_calls_total",
+            "gqsa_exec_sequential_calls_total",
+            "gqsa_kv_blocks_total",
+            "gqsa_kv_blocks_in_use",
+            "gqsa_kv_evictions_total",
+            "gqsa_kv_admission_blocked_total",
+            "gqsa_kv_decode_deferred_total",
+            "gqsa_spec_rounds_total",
+            "gqsa_spec_drafted_total",
+            "gqsa_spec_accepted_total",
+            "gqsa_spec_fallbacks_total",
+            "gqsa_spec_verify_walks_total",
+            "gqsa_spec_batch_rounds_total",
+            "gqsa_spec_tier_hops_total",
+            "gqsa_prefix_hits_total",
+            "gqsa_prefix_misses_total",
+            "gqsa_ttft_seconds",
+            "gqsa_itl_seconds",
+            "gqsa_queue_seconds",
+            "gqsa_tick_seconds",
+            "gqsa_spec_verify_walk_seconds",
+            "gqsa_trace_spans_recorded_total",
+            "gqsa_http_keepalive_reuses_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+        }
+        // per-shard labels present for both shards
+        assert!(text.contains("gqsa_requests_completed_total{shard=\"0\"} 1"));
+        assert!(text.contains("gqsa_requests_completed_total{shard=\"1\"} 1"));
+        assert!(text.contains("gqsa_http_keepalive_reuses_total 3"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_count() {
+        let shards = vec![sample_metrics()];
+        let text = render(&shards, None);
+        // ttft 1500us lands in bucket [1024, 2048): every le >= 2048us
+        // (0.002048s) must read 1, +Inf must equal _count
+        assert!(text.contains("gqsa_ttft_seconds_bucket{shard=\"0\",le=\"0.002048\"} 1"));
+        assert!(text.contains("gqsa_ttft_seconds_bucket{shard=\"0\",le=\"+Inf\"} 1"));
+        assert!(text.contains("gqsa_ttft_seconds_count{shard=\"0\"} 1"));
+        let mut prev = 0i64;
+        for line in text.lines().filter(|l| l.starts_with("gqsa_ttft_seconds_bucket")) {
+            let v: i64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "buckets must be cumulative: {line}");
+            prev = v;
+        }
+        validate(&text).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_undeclared_series() {
+        assert!(validate("foo_total 3\n").is_err());
+        assert!(validate("").is_err());
+        let ok = "# HELP x_total h\n# TYPE x_total counter\nx_total 1\n";
+        validate(ok).unwrap();
+    }
+}

@@ -1,0 +1,166 @@
+//! Chrome trace-event JSON export — the snapshot of the span ring
+//! rendered as complete (`"ph":"X"`) events that load directly in
+//! Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Mapping: `pid` = shard + 1 (0 for spans recorded outside any shard
+//! loop, e.g. the HTTP/router threads), `tid` = sequence id (a stable
+//! per-request lane; engine-wide spans use tid 0), `ts`/`dur` in µs
+//! since the recorder epoch. Span ids and parent links ride in `args`
+//! so the hierarchy survives even when Perfetto's lane nesting is
+//! ambiguous.
+
+use crate::obs::{Span, NO_PARENT, NO_SEQ, NO_SHARD};
+
+fn pid(s: &Span) -> u64 {
+    if s.shard == NO_SHARD {
+        0
+    } else {
+        s.shard as u64 + 1
+    }
+}
+
+fn tid(s: &Span) -> u64 {
+    if s.seq_id == NO_SEQ {
+        0
+    } else {
+        s.seq_id
+    }
+}
+
+/// Render spans as a Chrome trace-event JSON document. Span names are
+/// `&'static str` identifiers from our own code (no user data), but we
+/// escape anyway so the output is valid JSON by construction.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut out = String::with_capacity(128 + spans.len() * 160);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |out: &mut String, ev: String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&ev);
+    };
+
+    // process_name metadata so Perfetto labels the lanes
+    let mut pids: Vec<u64> = spans.iter().map(pid).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for p in &pids {
+        let name = if *p == 0 { "frontend".to_string() } else { format!("shard-{}", p - 1) };
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{p},\"tid\":0,\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ),
+        );
+    }
+
+    for s in spans {
+        let parent = if s.parent == NO_PARENT { -1i64 } else { s.parent as i64 };
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{},\"tid\":{},\"args\":{{\"id\":{},\"parent\":{}}}}}",
+                escape(s.name),
+                s.kind.name(),
+                s.t_start_us,
+                s.dur_us,
+                pid(s),
+                tid(s),
+                s.id,
+                parent,
+            ),
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+fn escape(s: &str) -> String {
+    let mut o = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\r' => o.push_str("\\r"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+    use crate::util::Json;
+
+    fn span(name: &'static str, seq: u64, shard: u32, id: u32, parent: u32) -> Span {
+        Span {
+            name,
+            kind: SpanKind::Engine,
+            seq_id: seq,
+            shard,
+            t_start_us: 10,
+            dur_us: 5,
+            id,
+            parent,
+        }
+    }
+
+    #[test]
+    fn output_parses_as_json_with_expected_events() {
+        let spans = vec![
+            span("tick", NO_SEQ, 0, 1, NO_PARENT),
+            span("prefill_chunk", 7, 0, 2, 1),
+            span("route", 7, NO_SHARD, 3, NO_PARENT),
+        ];
+        let doc = Json::parse(&chrome_trace_json(&spans)).expect("valid JSON");
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        // 2 distinct pids (frontend + shard-0) → 2 metadata events + 3 spans
+        assert_eq!(evs.len(), 5);
+        let xs: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 3);
+        let tick = xs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("tick"))
+            .unwrap();
+        assert_eq!(tick.get("pid").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(tick.get("tid").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(tick.get("ts").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(tick.get("dur").and_then(Json::as_f64), Some(5.0));
+        let child = xs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("prefill_chunk"))
+            .unwrap();
+        let args = child.get("args").unwrap();
+        assert_eq!(args.get("parent").and_then(Json::as_f64), Some(1.0));
+        let route = xs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("route"))
+            .unwrap();
+        assert_eq!(route.get("pid").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(route.get("tid").and_then(Json::as_f64), Some(7.0));
+    }
+
+    #[test]
+    fn empty_snapshot_is_still_valid_json() {
+        let doc = Json::parse(&chrome_trace_json(&[])).expect("valid JSON");
+        assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).map(<[Json]>::len), Some(0));
+    }
+
+    #[test]
+    fn names_are_escaped() {
+        assert_eq!(escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+    }
+}

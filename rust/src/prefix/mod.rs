@@ -43,6 +43,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::model::kv_cache::{KvBlockPool, SharedKvBlock, KV_BLOCK};
+use crate::obs;
 
 /// Block-granular prompt-prefix fingerprint: an FNV-1a hash of the
 /// prompt's FIRST full [`KV_BLOCK`] of token ids — exactly the first
@@ -151,6 +152,7 @@ impl PrefixTree {
     /// request is about to adopt must not be the first thing that
     /// eviction reclaims.
     pub fn probe(&mut self, tokens: &[u32], max_blocks: usize) -> usize {
+        let _g = obs::span("prefix_probe", obs::SpanKind::Prefix, obs::NO_SEQ);
         let max = max_blocks.min(tokens.len() / KV_BLOCK);
         if max == 0 {
             return 0;
@@ -176,6 +178,7 @@ impl PrefixTree {
     /// cloned handles shaped `[block][layer]` — ready for
     /// [`crate::model::KvCache::adopt_prefix`].
     pub fn lookup(&mut self, tokens: &[u32], max_blocks: usize) -> Vec<Vec<SharedKvBlock>> {
+        let _g = obs::span("prefix_adopt", obs::SpanKind::Prefix, obs::NO_SEQ);
         let max = max_blocks.min(tokens.len() / KV_BLOCK);
         if max == 0 {
             // a sub-block prompt can never hit; don't count it as a miss
@@ -214,6 +217,7 @@ impl PrefixTree {
     /// Existing nodes keep their blocks (the bytes are identical by
     /// construction) and just refresh their LRU stamp.
     pub fn insert(&mut self, tokens: &[u32], chain: &[Vec<SharedKvBlock>]) {
+        let _g = obs::span("prefix_publish", obs::SpanKind::Prefix, obs::NO_SEQ);
         let clock = self.tick();
         let n_layers = self.n_layers;
         let mut published = 0usize;
@@ -369,6 +373,7 @@ impl PrefixCache {
     /// decode deferral, live-sequence eviction, or speculative
     /// fallback, so caching can never starve real work.
     pub fn ensure_free(&mut self, pool: &KvBlockPool, needed: usize) -> usize {
+        let _g = obs::span("prefix_ensure_free", obs::SpanKind::Prefix, obs::NO_SEQ);
         let mut freed = 0usize;
         while pool.free_blocks() < needed {
             // one DFS per tier gathers every currently evictable leaf;

@@ -51,7 +51,8 @@ use anyhow::Result;
 
 use crate::engine::executor::Executor;
 use crate::model::kv_cache::CacheFull;
-use crate::model::sampler::{argmax, dist_probs, sample_from_probs, Sampling};
+use crate::model::sampler::{argmax_biased, dist_probs_biased, sample_from_probs, Sampling};
+use crate::obs;
 use crate::model::transformer::ExecHandle;
 use crate::model::{BlockScratch, KvCache, Scratch, Transformer};
 use crate::spec::tier::DraftConfig;
@@ -87,6 +88,9 @@ pub struct FleetSeq<'a> {
     /// ladder index of this sequence's current draft tier
     pub tier: usize,
     pub mode: Sampling,
+    /// per-token logit offsets (`SamplingCfg::logit_bias`); applied to
+    /// draft AND verify logits so acceptance matches plain decode
+    pub bias: &'a [(u32, f32)],
 }
 
 /// Result of one fleet round: a per-sequence [`SpecRound`] (same
@@ -132,6 +136,9 @@ pub struct SpecController {
     dist_t: Vec<f32>,
     /// per-position draft distributions (rejection sampling)
     draft_dists: Vec<Vec<f32>>,
+    /// µs spent inside target verify weight walks since the last
+    /// [`Self::take_walk_us`] — feeds `Metrics::hist_verify_walk`
+    walk_us: u64,
 }
 
 impl SpecController {
@@ -160,7 +167,15 @@ impl SpecController {
             catch_chunk: t_max,
             dist_t: Vec::new(),
             draft_dists: Vec::new(),
+            walk_us: 0,
         }
+    }
+
+    /// Drain the µs spent in target verify walks since the last call
+    /// (the engine records one histogram sample per walk right after a
+    /// round, so reads are 1:1 with walks in practice).
+    pub fn take_walk_us(&mut self) -> u64 {
+        std::mem::take(&mut self.walk_us)
     }
 
     /// Append another draft tier to the ladder (cheapest → most
@@ -209,12 +224,14 @@ impl SpecController {
         k: usize,
         max_emit: usize,
         mode: Sampling,
+        bias: &[(u32, f32)],
         rng: &mut XorShift,
         verify: &mut BlockScratch,
     ) -> Result<SpecRound> {
         let tier = self.default_tier;
         self.round_tier(
-            tier, target, target_kv, draft_kv, prompt, generated, k, max_emit, mode, rng, verify,
+            tier, target, target_kv, draft_kv, prompt, generated, k, max_emit, mode, bias, rng,
+            verify,
         )
     }
 
@@ -231,6 +248,7 @@ impl SpecController {
         k: usize,
         max_emit: usize,
         mode: Sampling,
+        bias: &[(u32, f32)],
         rng: &mut XorShift,
         verify: &mut BlockScratch,
     ) -> Result<SpecRound> {
@@ -268,6 +286,7 @@ impl SpecController {
         // (prompt prefill on first use, accepted tokens after full-
         // accept rounds or plain-decode fallbacks)
         if gap > 0 {
+            let _g = obs::span("spec_catchup", obs::SpanKind::Spec, obs::NO_SEQ);
             let feed: Vec<u32> = (d_len..t_len)
                 .map(|pos| {
                     if pos < prompt.len() {
@@ -303,30 +322,39 @@ impl SpecController {
         }
         let mut drafts: Vec<u32> = Vec::with_capacity(k_eff);
         let mut cur = last;
-        for i in 0..k_eff {
-            match self.drafts[tier].decode_step(cur, draft_kv, &mut self.scratch) {
-                Ok(()) => {}
-                Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
-                    draft_kv.truncate(t_len);
-                    return Ok(SpecRound::Fallback);
+        {
+            let _g = obs::span("spec_draft", obs::SpanKind::Spec, obs::NO_SEQ);
+            for i in 0..k_eff {
+                match self.drafts[tier].decode_step(cur, draft_kv, &mut self.scratch) {
+                    Ok(()) => {}
+                    Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
+                        draft_kv.truncate(t_len);
+                        return Ok(SpecRound::Fallback);
+                    }
+                    Err(e) => return Err(e),
                 }
-                Err(e) => return Err(e),
+                let tok = if greedy {
+                    argmax_biased(&self.scratch.logits, bias) as u32
+                } else {
+                    dist_probs_biased(&self.scratch.logits, bias, mode, &mut self.draft_dists[i]);
+                    sample_from_probs(&self.draft_dists[i], rng)
+                };
+                drafts.push(tok);
+                cur = tok;
             }
-            let tok = if greedy {
-                argmax(&self.scratch.logits) as u32
-            } else {
-                dist_probs(&self.scratch.logits, mode, &mut self.draft_dists[i]);
-                sample_from_probs(&self.draft_dists[i], rng)
-            };
-            drafts.push(tok);
-            cur = tok;
         }
 
         // 3. verify all k_eff+1 positions in ONE target weight walk
         let mut vtok = Vec::with_capacity(k_eff + 1);
         vtok.push(last);
         vtok.extend_from_slice(&drafts);
-        match target.forward_block(&vtok, target_kv, verify) {
+        let walk_t0 = std::time::Instant::now();
+        let walk = {
+            let _g = obs::span("spec_verify", obs::SpanKind::Spec, obs::NO_SEQ);
+            target.forward_block(&vtok, target_kv, verify)
+        };
+        self.walk_us += walk_t0.elapsed().as_micros() as u64;
+        match walk {
             Ok(()) => {}
             Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
                 // forward_block pre-flights before mutating: target is
@@ -338,10 +366,11 @@ impl SpecController {
         }
 
         // 4. accept the longest valid prefix + one extra token
-        let (emitted, m) = self.accept(verify, 0, &drafts, 0, mode, rng);
+        let (emitted, m) = self.accept(verify, 0, &drafts, 0, mode, bias, rng);
 
         // 5. rewind rejected positions out of both caches and commit
         // the surviving prefix (drops rollback shadows)
+        let _g = obs::span("spec_rollback", obs::SpanKind::Spec, obs::NO_SEQ);
         let new_len = t_len + 1 + m;
         target_kv.truncate(new_len);
         draft_kv.truncate(new_len.min(draft_kv.len()));
@@ -364,6 +393,7 @@ impl SpecController {
         drafts: &[u32],
         dist_base: usize,
         mode: Sampling,
+        bias: &[(u32, f32)],
         rng: &mut XorShift,
     ) -> (Vec<u32>, usize) {
         let k_eff = drafts.len();
@@ -374,7 +404,7 @@ impl SpecController {
             // exact-match acceptance: every emitted token IS the greedy
             // target token, so output is identical to plain decode
             while m < k_eff {
-                let t_tok = argmax(verify.logits.row(row_base + m)) as u32;
+                let t_tok = argmax_biased(verify.logits.row(row_base + m), bias) as u32;
                 emitted.push(t_tok);
                 if drafts[m] != t_tok {
                     break;
@@ -382,13 +412,13 @@ impl SpecController {
                 m += 1;
             }
             if m == k_eff {
-                emitted.push(argmax(verify.logits.row(row_base + k_eff)) as u32);
+                emitted.push(argmax_biased(verify.logits.row(row_base + k_eff), bias) as u32);
             }
         } else {
             // rejection sampling: accept d ~ q with prob min(1, p/q);
             // on reject, sample the correction from max(p - q, 0)
             for i in 0..k_eff {
-                dist_probs(verify.logits.row(row_base + i), mode, &mut self.dist_t);
+                dist_probs_biased(verify.logits.row(row_base + i), bias, mode, &mut self.dist_t);
                 let d = drafts[i] as usize;
                 let p_t = self.dist_t[d] as f64;
                 let p_d = (self.draft_dists[dist_base + i][d] as f64).max(1e-12);
@@ -404,13 +434,13 @@ impl SpecController {
                 }
                 if residual_mass <= 0.0 {
                     // distributions coincide numerically: resample p
-                    dist_probs(verify.logits.row(row_base + i), mode, &mut self.dist_t);
+                    dist_probs_biased(verify.logits.row(row_base + i), bias, mode, &mut self.dist_t);
                 }
                 emitted.push(sample_from_probs(&self.dist_t, rng));
                 break;
             }
             if m == k_eff {
-                dist_probs(verify.logits.row(row_base + k_eff), mode, &mut self.dist_t);
+                dist_probs_biased(verify.logits.row(row_base + k_eff), bias, mode, &mut self.dist_t);
                 emitted.push(sample_from_probs(&self.dist_t, rng));
             }
         }
@@ -495,6 +525,7 @@ impl SpecController {
         }
 
         // catch-up + draft, per sequence on its own tier
+        let draft_guard = obs::span("spec_fleet_draft", obs::SpanKind::Spec, obs::NO_SEQ);
         let mut p = 0;
         while p < pending.len() {
             let (idx, t_len, k_eff, dist_base) = {
@@ -546,10 +577,10 @@ impl SpecController {
                     Err(e) => return Err(e),
                 }
                 let tok = if greedy {
-                    argmax(&self.scratch.logits) as u32
+                    argmax_biased(&self.scratch.logits, fs.bias) as u32
                 } else {
                     let dist = &mut self.draft_dists[dist_base + di];
-                    dist_probs(&self.scratch.logits, fs.mode, dist);
+                    dist_probs_biased(&self.scratch.logits, fs.bias, fs.mode, dist);
                     sample_from_probs(&self.draft_dists[dist_base + di], rng)
                 };
                 pending[p].drafts.push(tok);
@@ -561,6 +592,7 @@ impl SpecController {
                 p += 1;
             }
         }
+        drop(draft_guard);
 
         if pending.is_empty() {
             let rounds = rounds
@@ -591,7 +623,13 @@ impl SpecController {
                     kv_refs.push(&mut *fs.target_kv);
                 }
             }
-            match target.verify_batch(&vtok, &groups, &mut kv_refs, verify) {
+            let walk_t0 = std::time::Instant::now();
+            let walk = {
+                let _g = obs::span("spec_fleet_verify", obs::SpanKind::Spec, obs::NO_SEQ);
+                target.verify_batch(&vtok, &groups, &mut kv_refs, verify)
+            };
+            self.walk_us += walk_t0.elapsed().as_micros() as u64;
+            match walk {
                 Ok(()) => {}
                 Err(e) if e.downcast_ref::<CacheFull>().is_some() => {
                     // verify_batch pre-flights before mutating: targets
@@ -611,11 +649,13 @@ impl SpecController {
         }
 
         // per-sequence acceptance + rollback (independent scatters)
+        let _g = obs::span("spec_fleet_accept", obs::SpanKind::Spec, obs::NO_SEQ);
         let verified = pending.len() as u32;
         for pend in &pending {
             let mode = seqs[pend.idx].mode;
+            let bias = seqs[pend.idx].bias;
             let (emitted, m) =
-                self.accept(verify, pend.row_base, &pend.drafts, pend.dist_base, mode, rng);
+                self.accept(verify, pend.row_base, &pend.drafts, pend.dist_base, mode, bias, rng);
             let fs = &mut seqs[pend.idx];
             let new_len = pend.t_len + 1 + m;
             fs.target_kv.truncate(new_len);
@@ -636,6 +676,7 @@ impl SpecController {
 mod tests {
     use super::*;
     use crate::model::config::demo_config;
+    use crate::model::sampler::argmax;
     use crate::model::transformer::random_fp;
     use crate::model::{KvBlockPool, KvDtype};
     use crate::spec::tier::build_draft;
@@ -696,6 +737,7 @@ mod tests {
                     4,
                     left,
                     Sampling::Greedy,
+                    &[],
                     &mut rng,
                     &mut verify,
                 )
@@ -784,6 +826,7 @@ mod tests {
                     4,
                     16,
                     mode,
+                    &[],
                     &mut rng,
                     &mut verify,
                 )
@@ -828,6 +871,7 @@ mod tests {
                 8,
                 16,
                 Sampling::Greedy,
+                &[],
                 &mut rng,
                 &mut verify,
             )

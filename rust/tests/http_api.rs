@@ -4,7 +4,7 @@
 //! the ISSUE's e2e proof: token ids streamed over SSE are byte-identical
 //! to an in-process `Client` run against the same checkpoint.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 
@@ -49,8 +49,9 @@ fn start_stack(tag: &str, seed: u64) -> (PathBuf, Server, HttpServer, SocketAddr
     (path, srv, http, addr)
 }
 
-/// Minimal HTTP/1.1 client: send one request, read to EOF (the server
-/// closes every connection), split status / body.
+/// Minimal HTTP/1.1 client: send one request with `Connection: close`,
+/// read to EOF, split status / body. Keep-alive flows drive the socket
+/// directly with [`read_response`].
 fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
     let mut s = TcpStream::connect(addr).unwrap();
     let body = body.unwrap_or("");
@@ -70,6 +71,39 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16,
         .unwrap_or_else(|| panic!("no status line in: {text}"));
     let payload = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
     (status, payload)
+}
+
+/// Read one framed HTTP response off a kept-alive connection: status
+/// line, headers (keeping the `Connection` header, lowercased), then
+/// exactly `Content-Length` body bytes — never reads past the frame.
+fn read_response(r: &mut impl BufRead) -> (u16, String, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in: {line:?}"));
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).unwrap();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            } else if k.trim().eq_ignore_ascii_case("connection") {
+                connection = v.trim().to_ascii_lowercase();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).unwrap();
+    (status, connection, String::from_utf8_lossy(&body).into_owned())
 }
 
 /// Parse an SSE payload: every `data:` frame before `[DONE]`, each as
@@ -255,6 +289,170 @@ fn report_route_and_error_paths() {
     // unknown route
     let (status, _) = http(addr, "GET", "/nope", None);
     assert_eq!(status, 404);
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn keepalive_connection_serves_multiple_requests() {
+    let (path, srv, http_srv, addr) = start_stack("keep", 47);
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let body =
+        Json::obj(vec![("prompt", Json::str("!#")), ("max_tokens", Json::num(3.0))]).to_string();
+    for i in 0..3 {
+        write!(
+            out,
+            "POST /v1/completions HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let (status, conn, payload) = read_response(&mut reader);
+        assert_eq!(status, 200, "request {i}: {payload}");
+        assert_eq!(conn, "keep-alive", "request {i} did not keep the connection");
+        assert!(Json::parse(&payload).is_ok(), "request {i}: unparseable body");
+    }
+    // asking to close on the same socket ends it after the response
+    write!(out, "GET /report HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+    let (status, conn, report) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(conn, "close");
+    assert!(report.contains("requests="));
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server wrote past the closing response");
+
+    // the front end counted the reuses: requests 2..4 rode a kept
+    // socket (the one-shot /metrics scrape below does not)
+    let (status, metrics) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    let reuses: f64 = metrics
+        .lines()
+        .find(|l| l.starts_with("gqsa_http_keepalive_reuses_total "))
+        .and_then(|l| l.split_whitespace().last())
+        .unwrap_or_else(|| panic!("no keepalive counter in:\n{metrics}"))
+        .parse()
+        .unwrap();
+    assert!((reuses - 3.0).abs() < 1e-9, "expected 3 keep-alive reuses, saw {reuses}");
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn metrics_route_serves_valid_prometheus_text() {
+    let (path, srv, http_srv, addr) = start_stack("prom", 53);
+
+    let body =
+        Json::obj(vec![("prompt", Json::str("!#%")), ("max_tokens", Json::num(5.0))]).to_string();
+    let (status, _) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200);
+
+    let (status, text) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    gqsa::obs::prom::validate(&text)
+        .unwrap_or_else(|e| panic!("invalid Prometheus exposition: {e}\n{text}"));
+    for fam in [
+        "gqsa_requests_completed_total",
+        "gqsa_tokens_generated_total",
+        "gqsa_ttft_seconds_bucket",
+        "gqsa_itl_seconds_bucket",
+        "gqsa_queue_seconds_bucket",
+        "gqsa_tick_seconds_bucket",
+        "gqsa_spec_verify_walk_seconds_bucket",
+        "gqsa_http_connections_total",
+        "gqsa_http_requests_total",
+    ] {
+        assert!(text.contains(fam), "missing family {fam} in:\n{text}");
+    }
+    // the completion above landed on some shard of this stack
+    let completed: f64 = text
+        .lines()
+        .filter(|l| l.starts_with("gqsa_requests_completed_total{"))
+        .map(|l| l.split_whitespace().last().unwrap().parse::<f64>().unwrap())
+        .sum();
+    assert!(completed >= 1.0, "no completed requests in /metrics:\n{text}");
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn trace_route_exports_chrome_json_spanning_http_and_engine() {
+    let (path, srv, http_srv, addr) = start_stack("trace", 59);
+    // force the recorder on for this stack (process-global and safe to
+    // flip concurrently: tracing never changes tokens, and no other
+    // test in this binary asserts on the span ring)
+    gqsa::obs::force(true);
+    gqsa::obs::clear();
+
+    let body =
+        Json::obj(vec![("prompt", Json::str("&*")), ("max_tokens", Json::num(4.0))]).to_string();
+    let (status, _) = http(addr, "POST", "/v1/completions", Some(&body));
+    assert_eq!(status, 200);
+    let (status, text) = http(addr, "GET", "/trace", None);
+    gqsa::obs::reset();
+    assert_eq!(status, 200);
+
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("trace JSON unparseable: {e}\n{text}"));
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let has = |name: &str| {
+        events.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+                && e.get("name").and_then(Json::as_str) == Some(name)
+        })
+    };
+    // the request crossed the front end AND the engine: both layers
+    // show up in one export
+    assert!(has("http_completion"), "no http span in trace:\n{text}");
+    assert!(has("engine_tick"), "no engine span in trace:\n{text}");
+    assert!(
+        events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("M")),
+        "no process_name metadata events"
+    );
+
+    http_srv.shutdown();
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn logit_bias_steers_decoding_and_malformed_maps_are_400s() {
+    let (path, srv, http_srv, addr) = start_stack("bias", 61);
+
+    // +100 on token 33 ('!') dwarfs every logit this tiny model can
+    // emit, so greedy decoding must pick it at every step
+    let body = r#"{"prompt":"!#","max_tokens":6,"logit_bias":{"33":100}}"#;
+    let (status, payload) = http(addr, "POST", "/v1/completions", Some(body));
+    assert_eq!(status, 200, "{payload}");
+    let j = Json::parse(&payload).unwrap();
+    let ids: Vec<u64> = j
+        .get("choices")
+        .and_then(|c| c.idx(0))
+        .and_then(|c| c.get("token_ids"))
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_u64)
+        .collect();
+    assert_eq!(ids, vec![33; 6], "bias +100 must pin every greedy pick to token 33");
+
+    // malformed maps are typed 400s, not silent drops
+    for bad in [
+        r#"{"prompt":"x","logit_bias":[1,2]}"#,
+        r#"{"prompt":"x","logit_bias":{"a":1}}"#,
+        r#"{"prompt":"x","logit_bias":{"33":500}}"#,
+    ] {
+        let (status, payload) = http(addr, "POST", "/v1/completions", Some(bad));
+        assert_eq!(status, 400, "{bad} -> {payload}");
+        assert!(payload.contains("invalid_request_error"), "{payload}");
+    }
 
     http_srv.shutdown();
     srv.shutdown();

@@ -1,0 +1,239 @@
+//! Observability contract tests:
+//!
+//! * **bit-exactness** — greedy fleet output is TOKEN-IDENTICAL with the
+//!   span recorder forced on vs off, across shard counts {1, 2} and
+//!   speculative decoding {off, on}. Tracing observes the engine, it
+//!   never perturbs it;
+//! * **span surface** — one traced fleet run records spans at every
+//!   instrumented layer (router dispatch, queue wait, engine tick,
+//!   prefill, decode/spec), with parent links that resolve (a prefill
+//!   chunk nests under its engine tick);
+//! * **exports** — the Chrome trace JSON parses and carries shard pids;
+//!   Prometheus text rendered from live shard metrics passes the
+//!   exposition-format validator and includes the latency histograms.
+//!
+//! `obs::force`/`reset` are process-global, so every test here
+//! serializes on one mutex (this binary is its own process — the lib's
+//! unit tests can't interfere).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use gqsa::coordinator::{Backend, EngineConfig, EngineCore, Request, Router, RouterConfig};
+use gqsa::model::config::demo_config;
+use gqsa::model::transformer::{random_fp, Transformer};
+use gqsa::model::ModelConfig;
+use gqsa::obs;
+use gqsa::util::Json;
+
+static ENV_LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+
+fn lock() -> MutexGuard<'static, ()> {
+    ENV_LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg() -> ModelConfig {
+    let mut cfg = demo_config();
+    cfg.d_model = 64;
+    cfg.n_layers = 2;
+    cfg.n_heads = 2;
+    cfg.d_ff = 96;
+    cfg.vocab = 64;
+    cfg.max_seq = 96;
+    cfg
+}
+
+/// Run an 8-request greedy fleet on a fresh router; returns the sorted
+/// token outputs. Identical seeds per shard, so shard count can never
+/// change tokens.
+fn run_fleet(shards: usize, spec_k: usize) -> Vec<Vec<u32>> {
+    let cfg = Arc::new(cfg());
+    let cfg2 = Arc::clone(&cfg);
+    let router = Router::start(RouterConfig { shards }, move |_shard| {
+        let t = Transformer::from_fp_gqs_oneshot(&random_fp(&cfg2, 919), None, 4, 16, 0.5)?;
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg2,
+            EngineConfig {
+                max_batch: 4,
+                prefill_chunk: 8,
+                kv_capacity: 96,
+                spec_k,
+                ..Default::default()
+            },
+        )
+    });
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        let plen = 10 + (i as usize % 5);
+        let prompt: Vec<u32> =
+            (0..plen).map(|j| ((i * 7 + j as u64 * 3 + 1) % 60) as u32).collect();
+        rxs.push(router.submit(Request::new(i, prompt, 12)).unwrap());
+    }
+    let mut out: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    router.shutdown();
+    out.sort_by_key(|r| r.id);
+    out.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn tracing_never_changes_greedy_tokens() {
+    let _g = lock();
+    for shards in [1usize, 2] {
+        for spec_k in [0usize, 4] {
+            obs::force(false);
+            let off = run_fleet(shards, spec_k);
+            obs::force(true);
+            let on = run_fleet(shards, spec_k);
+            obs::reset();
+            assert_eq!(
+                off, on,
+                "tracing changed tokens (shards={shards}, spec_k={spec_k})"
+            );
+            assert_eq!(off.len(), 8);
+            assert!(off.iter().all(|t| t.len() == 12));
+        }
+    }
+}
+
+#[test]
+fn traced_run_covers_every_layer_with_resolving_parents() {
+    let _g = lock();
+    obs::force(true);
+    obs::clear();
+    // spec fleet for the speculative spans, plain fleet for decode_batch
+    let _ = run_fleet(2, 4);
+    let _ = run_fleet(1, 0);
+    let spans = obs::snapshot();
+    obs::reset();
+    assert!(!spans.is_empty(), "traced run recorded nothing");
+
+    let names: HashSet<&str> = spans.iter().map(|s| s.name).collect();
+    for expect in [
+        "route_dispatch",
+        "queue_wait",
+        "engine_tick",
+        "prefill_chunk",
+        "decode_batch",
+        "spec_draft",
+        "spec_verify",
+    ] {
+        assert!(names.contains(expect), "no '{expect}' span in {names:?}");
+    }
+
+    // shard tagging: engine-side spans carry a real shard index
+    assert!(
+        spans.iter().any(|s| s.name == "engine_tick" && s.shard != obs::NO_SHARD),
+        "engine ticks missing shard tags"
+    );
+
+    // linkage: some prefill chunk nests under an engine tick on record
+    let by_id: HashMap<u32, &str> =
+        spans.iter().map(|s| (s.id, s.name)).collect();
+    assert!(
+        spans.iter().any(|s| {
+            s.name == "prefill_chunk"
+                && s.parent != obs::NO_PARENT
+                && by_id.get(&s.parent) == Some(&"engine_tick")
+        }),
+        "no prefill chunk linked to its engine tick"
+    );
+
+    // queue_wait spans are tied to real request ids (not NO_SEQ)
+    assert!(
+        spans.iter().any(|s| s.name == "queue_wait" && s.seq_id < 8),
+        "queue waits not attributed to request ids"
+    );
+}
+
+#[test]
+fn disabled_recorder_stays_silent() {
+    let _g = lock();
+    obs::force(false);
+    obs::clear();
+    let before = obs::spans_recorded();
+    let _ = run_fleet(1, 4);
+    let after = obs::spans_recorded();
+    obs::reset();
+    assert_eq!(before, after, "spans recorded while tracing was off");
+}
+
+#[test]
+fn chrome_trace_export_parses_with_shard_pids() {
+    let _g = lock();
+    obs::force(true);
+    obs::clear();
+    let _ = run_fleet(2, 0);
+    let spans = obs::snapshot();
+    let json = gqsa::obs::trace::chrome_trace_json(&spans);
+    obs::reset();
+
+    let j = Json::parse(&json).unwrap_or_else(|e| panic!("trace JSON unparseable: {e}"));
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let complete: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect();
+    assert_eq!(complete.len(), spans.len(), "one X event per span");
+    // engine spans land in shard processes (pid = shard + 1), and the
+    // metadata events name them
+    assert!(
+        complete.iter().any(|e| e.get("pid").and_then(Json::as_u64) == Some(1)),
+        "no event attributed to shard 0"
+    );
+    assert!(
+        events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("M")),
+        "no process_name metadata events"
+    );
+}
+
+#[test]
+fn prometheus_render_of_live_fleet_validates() {
+    let _g = lock();
+    let cfg = Arc::new(cfg());
+    let cfg2 = Arc::clone(&cfg);
+    let router = Router::start(RouterConfig { shards: 2 }, move |_shard| {
+        let t = Transformer::from_fp_gqs_oneshot(&random_fp(&cfg2, 919), None, 4, 16, 0.5)?;
+        EngineCore::new(
+            Backend::Native(t),
+            &cfg2,
+            EngineConfig {
+                max_batch: 4,
+                prefill_chunk: 8,
+                kv_capacity: 96,
+                spec_k: 2,
+                ..Default::default()
+            },
+        )
+    });
+    for i in 0..6u64 {
+        let prompt: Vec<u32> = (0..12).map(|j| ((i * 5 + j * 3 + 1) % 60) as u32).collect();
+        router.generate(Request::new(i, prompt, 8)).unwrap();
+    }
+    let shard_metrics = router.shard_metrics();
+    router.shutdown();
+    assert_eq!(shard_metrics.len(), 2);
+
+    let text = gqsa::obs::prom::render(&shard_metrics, None);
+    gqsa::obs::prom::validate(&text).unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+    for fam in [
+        "gqsa_requests_completed_total",
+        "gqsa_tokens_generated_total",
+        "gqsa_ttft_seconds_bucket",
+        "gqsa_itl_seconds_bucket",
+        "gqsa_queue_seconds_bucket",
+        "gqsa_tick_seconds_bucket",
+        "gqsa_spec_verify_walk_seconds_bucket",
+    ] {
+        assert!(text.contains(fam), "missing family {fam} in:\n{text}");
+    }
+    // per-shard labels survive the render
+    assert!(text.contains("{shard=\"0\"}") && text.contains("{shard=\"1\"}"));
+    // 6 completed requests across the fleet
+    let total: f64 = text
+        .lines()
+        .filter(|l| l.starts_with("gqsa_requests_completed_total{"))
+        .map(|l| l.split_whitespace().last().unwrap().parse::<f64>().unwrap())
+        .sum();
+    assert!((total - 6.0).abs() < 1e-9, "requests_completed {total} != 6");
+}

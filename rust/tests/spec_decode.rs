@@ -145,7 +145,7 @@ fn temperature_spec_decode_completes_with_rejection_sampling() {
         for i in 0..3u64 {
             let mut req = Request::new(i, vec![(i as u32 % 50) + 2; 10], 20);
             req.sampling =
-                SamplingCfg { mode, temperature: 0.8, top_k: 20, top_p: 0.9 };
+                SamplingCfg { mode, temperature: 0.8, top_k: 20, top_p: 0.9, ..Default::default() };
             e.submit(req);
         }
         let out = e.run_to_completion().unwrap();
